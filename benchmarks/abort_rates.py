@@ -1,0 +1,44 @@
+"""Paper section 4.3 abort-rate numbers.
+
+    TPC-C coarse @64:  TicToc 9.79%  vs OCC 17.57%
+    TPC-C @128:        OCC coarse 30.91% -> fine 1.75% (largest drop)
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import one, save_rows, sweep
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--waves", type=int, default=400)
+    ap.add_argument("--json", default="reports/abort_rates.json")
+    args = ap.parse_args(argv)
+
+    scale = 1.0
+    rows = sweep("tpcc", lanes=[64, 128], waves=args.waves, scale=scale,
+                 quiet=True)
+    save_rows(rows, args.json)
+
+    print("lanes  cc        gran    abort%")
+    for T in (64, 128):
+        for cc in ("occ", "tictoc", "2pl", "swisstm", "adaptive"):
+            for g in (0, 1):
+                r = one(rows, cc=cc, granularity=g, lanes=T)
+                print(f"{T:5d}  {cc:9s} {'fine' if g else 'coarse':6s} "
+                      f"{100*r['abort_rate']:7.2f}")
+    o64c = one(rows, cc="occ", granularity=0, lanes=64)["abort_rate"]
+    t64c = one(rows, cc="tictoc", granularity=0, lanes=64)["abort_rate"]
+    o128c = one(rows, cc="occ", granularity=0, lanes=128)["abort_rate"]
+    o128f = one(rows, cc="occ", granularity=1, lanes=128)["abort_rate"]
+    print(f"\ncoarse @64: TicToc {100*t64c:.2f}% < OCC {100*o64c:.2f}% "
+          f"(paper: 9.79% vs 17.57%)")
+    print(f"OCC @128: coarse {100*o128c:.2f}% -> fine {100*o128f:.2f}% "
+          f"(paper: 30.91% -> 1.75%)")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Shared sweep machinery for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+CCS = ["occ", "tictoc", "2pl", "swisstm", "adaptive"]
+LANES = [8, 16, 32, 64, 96, 128]
+
+
+def sweep(workload: str, *, ccs=None, lanes=None, grans=(0, 1), waves=300,
+          scale=1.0, n_keys=1_000_000, seed=1, quiet=False):
+    from repro.launch.txn_bench import run_one
+    rows = []
+    for gran in grans:
+        for cc in (ccs or CCS):
+            for T in (lanes or LANES):
+                r = run_one(workload, cc, gran, T, waves, scale=scale,
+                            n_keys=n_keys, seed=seed)
+                rows.append(r)
+                if not quiet:
+                    print(f"  {workload} {cc:9s} "
+                          f"{'fine' if gran else 'coarse'} T={T:4d}  "
+                          f"thpt={r['throughput']:8.3f}  "
+                          f"abort={100*r['abort_rate']:6.2f}%")
+    return rows
+
+
+def save_rows(rows, path):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"[saved] {path}")
+
+
+def by(rows, **kv):
+    out = [r for r in rows
+           if all(r.get(k) == v for k, v in kv.items())]
+    return out
+
+
+def one(rows, **kv):
+    m = by(rows, **kv)
+    assert len(m) == 1, (kv, len(m))
+    return m[0]

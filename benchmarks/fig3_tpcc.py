@@ -1,0 +1,53 @@
+"""Paper Figure 3: TPC-C, 8 warehouses fixed (contention grows with thread
+count), coarse (3a) vs fine (3b) timestamps.
+
+    PYTHONPATH=src python -m benchmarks.fig3_tpcc [--ratios] [--full]
+
+Validated claims (paper section 4.3):
+  3a: TicToc gains over OCC as contention increases (through T=96);
+      TicToc degrades at 128 threads, losing to 2PL.
+  3b: OCC fastest at almost all core counts; fine granularity lifts all.
+  ratios: OCC+fine >= 1.37x TicToc+coarse @ 96;
+          OCC+fine >= 1.14x TicToc+fine  @ 128.
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import LANES, one, save_rows, sweep
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale TPC-C tables")
+    ap.add_argument("--waves", type=int, default=300)
+    ap.add_argument("--ratios", action="store_true")
+    ap.add_argument("--json", default="reports/fig3_tpcc.json")
+    args = ap.parse_args(argv)
+
+    scale = 1.0
+    print(f"# Fig 3a (coarse) + 3b (fine), 8 warehouses, scale={scale}")
+    rows = sweep("tpcc", waves=args.waves, scale=scale)
+    save_rows(rows, args.json)
+
+    occ96f = one(rows, cc="occ", granularity=1, lanes=96)["throughput"]
+    tic96c = one(rows, cc="tictoc", granularity=0, lanes=96)["throughput"]
+    occ128f = one(rows, cc="occ", granularity=1, lanes=128)["throughput"]
+    tic128f = one(rows, cc="tictoc", granularity=1, lanes=128)["throughput"]
+    occ64c = one(rows, cc="occ", granularity=0, lanes=64)["throughput"]
+    tic64c = one(rows, cc="tictoc", granularity=0, lanes=64)["throughput"]
+    tic128c = one(rows, cc="tictoc", granularity=0, lanes=128)["throughput"]
+    tpl128c = one(rows, cc="2pl", granularity=0, lanes=128)["throughput"]
+
+    print(f"3a: TicToc/OCC coarse @64: {tic64c/occ64c:.2f}x (paper: >1)")
+    print(f"3a: 2PL/TicToc coarse @128: {tpl128c/tic128c:.2f}x (paper: >1)")
+    print(f"ratio: OCC-fine@96 / TicToc-coarse@96 = "
+          f"{occ96f/tic96c:.2f}x (paper: 1.37x)")
+    print(f"ratio: OCC-fine@128 / TicToc-fine@128 = "
+          f"{occ128f/tic128f:.2f}x (paper: 1.14x)")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""Roofline table: one row per (arch x shape x mesh) from the dry-run
+reports + the analytic model (EXPERIMENTS.md section Roofline).
+
+    PYTHONPATH=src python -m benchmarks.roofline_table \
+        --reports reports/dryrun --out reports/roofline.md
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:7.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:6.2f}ms"
+    return f"{x*1e6:6.1f}us"
+
+
+def build_table(report_dir: str):
+    from repro import configs
+    from repro.analysis.roofline import analytic_cell
+    from repro.configs.base import SHAPES
+
+    rows = []
+    for path in sorted(glob.glob(os.path.join(report_dir, "*.json"))):
+        rec = json.load(open(path))
+        if rec.get("status") == "skip":
+            rows.append({**rec, "skip": True})
+            continue
+        if rec.get("status") != "ok" or rec["arch"] == "txn-engine":
+            if rec.get("arch") == "txn-engine" and rec.get("status") == "ok":
+                rows.append({**rec, "engine": True})
+            continue
+        cfg = configs.get(rec["arch"])
+        shape = SHAPES[rec["shape"]]
+        chips = 512 if rec["mesh"] == "multi" else 256
+        cell = analytic_cell(cfg, shape, chips, tp=16,
+                             coll_bytes=rec.get("collective_bytes", 0.0),
+                             arch=rec["arch"])
+        rows.append({
+            "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+            "chips": chips,
+            "compute_s": cell.compute_s, "memory_s": cell.memory_s,
+            "collective_s": cell.collective_s,
+            "bottleneck": cell.bottleneck,
+            "usefulness": cell.usefulness,
+            "roofline_frac": cell.roofline_frac,
+            "flops": cell.flops, "model_flops": cell.model_flops,
+            "hlo_flops": rec.get("flops", 0.0),
+            "coll_bytes": rec.get("collective_bytes", 0.0),
+            "mem_gib": (rec.get("memory", {}).get("temp_size_in_bytes", 0)
+                        or 0) / 2 ** 30,
+        })
+    return rows
+
+
+def render(rows, out_path=None):
+    hdr = (f"| {'arch':26s} | {'shape':11s} | mesh   | compute | memory  "
+           f"| collect | bottleneck | useful | roofline% | temp GiB |")
+    sep = "|" + "-" * (len(hdr) - 2) + "|"
+    lines = [hdr, sep]
+    for r in rows:
+        if r.get("skip"):
+            lines.append(f"| {r['arch']:26s} | {r['shape']:11s} | "
+                         f"{r['mesh']:6s} | skip (see DESIGN.md "
+                         f"Arch-applicability) |")
+            continue
+        if r.get("engine"):
+            lines.append(f"| {'txn-engine':26s} | {'wave':11s} | "
+                         f"{r['mesh']:6s} | collective bytes "
+                         f"{r.get('collective_bytes', 0)/2**20:.1f} MiB/dev |")
+            continue
+        lines.append(
+            f"| {r['arch']:26s} | {r['shape']:11s} | {r['mesh']:6s} "
+            f"| {fmt_s(r['compute_s'])} | {fmt_s(r['memory_s'])} "
+            f"| {fmt_s(r['collective_s'])} | {r['bottleneck']:10s} "
+            f"| {r['usefulness']:5.2f}  | {100*r['roofline_frac']:6.1f}%   "
+            f"| {r['mem_gib']:7.2f}  |")
+    text = "\n".join(lines)
+    if out_path:
+        os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+        with open(out_path, "w") as f:
+            f.write(text + "\n")
+        print(f"[saved] {out_path}")
+    return text
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--reports", default="reports/dryrun")
+    ap.add_argument("--out", default="reports/roofline.md")
+    args = ap.parse_args(argv)
+    rows = build_table(args.reports)
+    print(render(rows, args.out))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Benchmark aggregator: one entry per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Prints ``name,wall_s,headline`` CSV at the end.  --full uses paper-scale
+table sizes (slower); the default is a reduced but structurally identical
+configuration (orderings, not absolute numbers, are the claims).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--waves", type=int, default=None)
+    args = ap.parse_args(argv)
+
+    from benchmarks import (abort_rates, auto_granularity, fig2_ycsb,
+                            fig3_tpcc)
+    from benchmarks.common import one
+
+    results = []
+
+    def timed(name, fn, argv):
+        t0 = time.time()
+        rows = fn(argv)
+        results.append((name, time.time() - t0, rows))
+        return rows
+
+    waves = args.waves or (300 if args.full else 150)
+    full = ["--full"] if args.full else []
+
+    print("== Fig 2: YCSB coarse/fine ==", flush=True)
+    r2 = timed("fig2_ycsb", fig2_ycsb.main, ["--waves", str(waves)] + full)
+    print("\n== Fig 3: TPC-C coarse/fine ==", flush=True)
+    r3 = timed("fig3_tpcc", fig3_tpcc.main,
+               ["--waves", str(waves), "--ratios"] + full)
+    print("\n== Abort rates (section 4.3) ==", flush=True)
+    ra = timed("abort_rates", abort_rates.main,
+               ["--waves", str(waves)] + full)
+    print("\n== Auto-granularity (beyond paper) ==", flush=True)
+    rg = timed("auto_granularity", auto_granularity.main,
+               ["--waves", str(waves)])
+
+    print("\n== CSV summary ==")
+    print("name,wall_s,headline")
+    occ128f = one(r3, cc="occ", granularity=1, lanes=128)["throughput"]
+    tic128f = one(r3, cc="tictoc", granularity=1, lanes=128)["throughput"]
+    heads = {
+        "fig2_ycsb": "see orderings above",
+        "fig3_tpcc": f"OCCfine/TicTocfine@128={occ128f/tic128f:.2f}x",
+        "abort_rates": "see table above",
+        "auto_granularity": "see recovery above",
+    }
+    for name, wall, _rows in results:
+        print(f"{name},{wall:.1f},{heads[name]}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,83 @@
+"""Beyond-paper: distributed txn-engine scaling (the paper's section 5:
+"perform similar evaluations on distributed CC mechanisms").
+
+Runs the shard_map OCC wave on 1/2/4/8 host devices (same *global* lane and
+record counts), measuring committed txns per second of wall time and the
+per-wave collective bytes — the weak-scaling story of the routed engine.
+
+    PYTHONPATH=src python -m benchmarks.txn_scaling
+"""
+from __future__ import annotations
+
+import json
+import subprocess
+import sys
+import textwrap
+
+PROG = textwrap.dedent("""
+    import os, sys, time, json
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    sys.path.insert(0, "src")
+    from repro.core import distributed as D, types as t
+    from repro.analysis.roofline import collective_bytes_from_hlo
+
+    GLOBAL_LANES, K, N, WAVES = 256, 16, 1_000_000, 30
+    rows = []
+    for ns in (1, 2, 4, 8):
+        mesh = jax.make_mesh((ns,), ("data",))
+        cfg = D.DistConfig(n_records=N, n_groups=2,
+                           lanes_per_shard=GLOBAL_LANES // ns, slots=K)
+        wave = jax.jit(D.make_wave_fn(cfg, mesh))
+        rng = np.random.default_rng(0)
+        keys = jnp.asarray(rng.integers(0, N, (GLOBAL_LANES, K),
+                                        dtype=np.int32))
+        groups = jnp.asarray(rng.integers(0, 2, (GLOBAL_LANES, K),
+                                          dtype=np.int32))
+        kinds = jnp.asarray(rng.choice([t.READ, t.WRITE],
+                                       (GLOBAL_LANES, K)).astype(np.int32))
+        wts, cw = D.init_tables(cfg, mesh)
+        coll = collective_bytes_from_hlo(
+            jax.jit(D.make_wave_fn(cfg, mesh)).lower(
+                keys, groups, kinds,
+                jnp.zeros((GLOBAL_LANES,), jnp.uint32), wts, cw,
+                jnp.uint32(0)).compile().as_text())
+        # timed waves (fresh priorities per wave)
+        commits = 0
+        t0 = time.time()
+        for w in range(WAVES):
+            prio = jnp.asarray(
+                np.random.default_rng(w).permutation(GLOBAL_LANES)
+                .astype(np.uint32))
+            c, wts, cw, stats = wave(keys, groups, kinds, prio, wts, cw,
+                                     jnp.uint32(w))
+            commits += int(c.sum())
+        jax.block_until_ready(wts)
+        dt = time.time() - t0
+        rows.append({"shards": ns, "commits": commits,
+                     "waves_per_s": WAVES / dt,
+                     "coll_bytes_per_wave": coll})
+        print(f"shards={ns}: {WAVES/dt:6.1f} waves/s  "
+              f"{commits} commits  coll/wave={coll/1024:.1f} KiB")
+    print("JSON:" + json.dumps(rows))
+""")
+
+
+def main(argv=None):
+    r = subprocess.run([sys.executable, "-c", PROG], capture_output=True,
+                       text=True, cwd=".", timeout=1200)
+    print(r.stdout)
+    if r.returncode:
+        print(r.stderr[-2000:], file=sys.stderr)
+        return 1
+    for line in r.stdout.splitlines():
+        if line.startswith("JSON:"):
+            rows = json.loads(line[5:])
+            with open("reports/txn_scaling.json", "w") as f:
+                json.dump(rows, f, indent=1)
+            print("[saved] reports/txn_scaling.json")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,48 @@
+"""Quickstart: the paper's central result in one minute.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Runs TPC-C (8 warehouses, 96 simulated threads) under OCC with coarse
+(one timestamp per row) vs fine (the paper's two-timestamp split) version
+timestamps, and under TicToc with coarse timestamps — showing that plain OCC
+with fine-grained timestamps beats the fancier mechanism.
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import types as t
+from repro.core.engine import run
+from repro.workloads import TPCCWorkload
+
+
+def main():
+    wl = TPCCWorkload.make(n_warehouses=8, scale=0.5)
+    T, waves = 96, 200
+
+    def go(cc, gran):
+        cfg = t.EngineConfig(
+            cc=cc, lanes=T, slots=wl.slots, n_records=wl.n_records,
+            n_groups=wl.n_groups, n_cols=wl.n_cols,
+            n_txn_types=wl.n_txn_types, granularity=gran,
+            n_rings=wl.n_rings)
+        return run(cfg, wl, n_waves=waves, seed=0)
+
+    print(f"TPC-C, 8 warehouses, {T} simulated threads, {waves} waves\n")
+    occ_c = go(t.CC_OCC, 0)
+    occ_f = go(t.CC_OCC, 1)
+    tic_c = go(t.CC_TICTOC, 0)
+    rows = [("OCC, coarse timestamps", occ_c),
+            ("OCC, fine timestamps  ", occ_f),
+            ("TicToc, coarse        ", tic_c)]
+    for name, r in rows:
+        print(f"  {name}: {r.throughput:7.2f} txn/us   "
+              f"abort rate {100*r.abort_rate:5.2f}%")
+    print(f"\nfine-grained timestamps cut OCC's abort rate "
+          f"{occ_c.abort_rate/max(occ_f.abort_rate,1e-9):.0f}x and "
+          f"outperform TicToc by {occ_f.throughput/tic_c.throughput:.2f}x "
+          f"(the paper's headline: 1.37x at 96 threads).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""Serving with a versioned session store — the paper's mechanism in the
+serving control plane.
+
+    PYTHONPATH=src python examples/serve_lm.py
+
+The server keeps a *session directory*: one row per session with columns
+split exactly like the paper's District rows:
+
+  group 0 (rarely updated): model id, adapter id, priority class — read by
+          every routing/admission decision;
+  group 1 (hot):            decode cursor, kv-page head, token count —
+          written by every decode batch.
+
+Admission control runs as optimistic transactions against this table while
+decode batches bump the hot columns.  With one timestamp per row, every
+admission read conflicts falsely with concurrent cursor bumps; with the
+paper's two-group timestamps the conflicts vanish.  The demo measures both,
+then serves real tokens through the prefill/decode path of a smoke-size LM.
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.core import types as t
+from repro.core.engine import run as engine_run
+from repro.core.types import StoreState, TxnBatch, store_init
+from repro.launch.mesh import make_host_mesh
+from repro.launch.serve import serve
+
+G_IDENTITY, G_CURSOR = 0, 1
+
+
+@dataclasses.dataclass(frozen=True)
+class SessionStoreWorkload:
+    """Admission reads identity columns; decode batches ADD to cursors."""
+    n_sessions: int = 4096
+    ops_per_txn: int = 8
+    n_groups: int = 2
+    n_rings: int = 1
+    n_txn_types: int = 2          # 0 = admission/routing, 1 = decode bump
+
+    @property
+    def n_records(self):
+        return self.n_sessions
+
+    @property
+    def n_cols(self):
+        return 4
+
+    @property
+    def slots(self):
+        return self.ops_per_txn
+
+    def init_store(self, track_values=False) -> StoreState:
+        return store_init(self.n_records, self.n_groups,
+                          self.n_cols if track_values else 0)
+
+    def gen(self, rng, wave, lanes, ring_tails):
+        K = self.ops_per_txn
+        r1, r2, r3 = jax.random.split(rng, 3)
+        # hot sessions: decode batches hammer a small active set
+        active = 64
+        sess = jax.random.randint(r1, (lanes, K), 0, active)
+        is_decode = (jax.random.uniform(r2, (lanes,)) < 0.5)
+        kind = jnp.where(is_decode[:, None], t.ADD, t.READ)
+        group = jnp.where(is_decode[:, None], G_CURSOR, G_IDENTITY)
+        batch = TxnBatch(
+            op_key=sess.astype(jnp.int32),
+            op_group=group.astype(jnp.int32),
+            op_col=jnp.zeros((lanes, K), jnp.int32),
+            op_kind=kind.astype(jnp.int32),
+            op_val=jnp.ones((lanes, K), jnp.float32),
+            txn_type=is_decode.astype(jnp.int32),
+            n_ops=jnp.full((lanes,), K, jnp.int32))
+        return batch, ring_tails
+
+
+def main():
+    wl = SessionStoreWorkload()
+    print("== session directory: OCC coarse vs fine timestamps ==")
+    for gran, name in ((0, "coarse (1 ts/row) "), (1, "fine (2 ts/row)  ")):
+        cfg = t.EngineConfig(
+            cc=t.CC_OCC, lanes=64, slots=wl.slots, n_records=wl.n_records,
+            n_groups=wl.n_groups, n_cols=wl.n_cols,
+            n_txn_types=wl.n_txn_types, granularity=gran)
+        r = engine_run(cfg, wl, n_waves=150, seed=0)
+        print(f"  {name}: {r.throughput:7.2f} txn/us, "
+              f"abort {100*r.abort_rate:5.2f}%  "
+              f"(admission commits: {r.commits_by_type[0]})")
+    print("  -> identity reads never truly conflict with cursor bumps; "
+          "fine timestamps remove the false aborts.\n")
+
+    print("== serving tokens (smoke-size qwen3 backbone) ==")
+    cfg = configs.get_smoke("qwen3-32b")
+    mesh = make_host_mesh()
+    tokens, tp, td = serve(cfg, mesh, n_requests=4, prompt_len=24, gen=12)
+    print(f"  prefill {tp*1e3:.0f}ms, 12 tokens/req in {td*1e3:.0f}ms")
+    print(f"  request 0 continuation: {tokens[0].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,420 @@
+"""Roofline terms per (arch x shape x mesh) from the compiled dry-run.
+
+Three terms (seconds, per step):
+
+  compute    = FLOPs / (chips x 197e12 bf16 FLOP/s)      [TPU v5e]
+  memory     = HBM bytes per device / 819e9 B/s
+  collective = per-device collective bytes / 50e9 B/s (one ICI link,
+               conservative; v5e has more links — see EXPERIMENTS.md)
+
+Accounting sources (DESIGN.md section 7):
+
+  - collective bytes: parsed from the *optimized, SPMD-partitioned* HLO —
+    the program is per-device, so summed operand sizes of all-gather /
+    all-reduce / reduce-scatter / all-to-all / collective-permute are
+    per-device bytes.  Collectives inside while bodies multiply by the
+    loop trip count (parsed from the loop condition).
+  - FLOPs and HBM bytes: *analytic*, from the config and shape.  XLA's
+    ``cost_analysis`` counts a ``lax.scan`` body ONCE regardless of trip
+    count (verified in this container; all layer stacks, microbatch loops,
+    flash-attention inner loops and recurrences here are scans), so the
+    compiled number under-counts by the layer count; we report it only as a
+    cross-check column.  The analytic model knows the exact graph structure
+    (head padding, MoE capacity slots, remat recompute, causal/window
+    visibility) so it also feeds the usefulness ratio.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+
+# ---------------------------------------------------------- hardware model
+PEAK_FLOPS = 197e12         # bf16 FLOP/s per v5e chip
+HBM_BW = 819e9              # B/s per chip
+LINK_BW = 50e9              # B/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+# ------------------------------------------------------------- HLO parsing
+def _shape_bytes(type_str: str) -> int:
+    """bytes of 'bf16[8,128]{1,0}' or tuple '(f32[2], s32[])'."""
+    total = 0
+    for m in re.finditer(r"(\w+)\[([\d,]*)\]", type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_computations(hlo: str) -> dict:
+    """comp name -> list of instruction lines.
+
+    Computation headers look like
+      %name (params...: types...) -> result_type {
+      ENTRY %main.3_spmd (param.2: f32[...]) -> f32[...] {
+    (parameter types may nest parentheses — match on the trailing '{' plus
+    '->' rather than balancing parens)."""
+    comps = {}
+    cur = None
+    for line in hlo.splitlines():
+        s = line.strip()
+        if s.endswith("{") and " -> " in s and "=" not in s.split("(")[0]:
+            m = re.match(r"^(?:ENTRY\s+)?%([\w\.\-]+)\s*\(", s)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                continue
+        if s == "}":
+            cur = None
+            continue
+        if cur is not None and s:
+            comps[cur].append(s)
+    return comps
+
+
+def _trip_count(cond_lines) -> int:
+    """Trip count of a canonical XLA counted loop condition."""
+    consts = {}
+    for ln in cond_lines:
+        m = re.match(r"%?([\w\.\-]+)\s*=\s*\w+\[\]\s*constant\((\d+)\)", ln)
+        if m:
+            consts[m.group(1)] = int(m.group(2))
+    for ln in cond_lines:
+        if "compare(" not in ln:
+            continue
+        m = re.search(r"compare\(([^)]*)\)", ln)
+        if not m:
+            continue
+        args = [a.strip().lstrip("%") for a in m.group(1).split(",")]
+        args = [a.split(" ")[-1].lstrip("%") for a in args]
+        dirn = re.search(r"direction=(\w+)", ln)
+        dirn = dirn.group(1) if dirn else "LT"
+        for a in args:
+            if a in consts:
+                n = consts[a]
+                return n + 1 if dirn == "LE" else n
+    return 1
+
+
+# The CPU backend legalizes every bf16 dot to an f32 dot (verified in this
+# container: `%all-reduce = f32[...] all-reduce(%dot)` for a bf16 einsum), so
+# dot-partial all-reduces and weight all-gathers appear at twice their TPU
+# byte width.  Collectives whose metadata ties them to a dot (forward, jvp,
+# transpose or checkpointed recompute) are therefore counted at bf16 when
+# dtype_correct=True (the default for the roofline reports; raw counts are
+# recorded alongside).  Genuinely-f32 collectives (f32 gradient reductions,
+# optimizer state) carry no such metadata and stay full-width.
+_DOT_META = re.compile(r"dot_general|jvp\(|transpose\(|checkpoint")
+
+
+def _corrected_bytes(result_type: str, line: str, dtype_correct: bool):
+    b = _shape_bytes(result_type)
+    if not dtype_correct:
+        return b
+    om = re.search(r'op_name="([^"]+)"', line)
+    if om and _DOT_META.search(om.group(1)) and "f32[" in result_type:
+        return b / 2
+    return b
+
+
+def collective_bytes_from_hlo(hlo: str, dtype_correct: bool = True) -> float:
+    """Per-device collective operand bytes, while-loop trip-count aware."""
+    comps = _split_computations(hlo)
+
+    # collective operand bytes directly inside each computation
+    direct = {}
+    # (while body, cond) pairs per computation
+    whiles = {}
+    coll_re = re.compile(
+        r"=\s*(.*?)\s(" + "|".join(COLLECTIVES) + r")(?:-start)?\(")
+    for name, lines in comps.items():
+        tot = 0.0
+        wl = []
+        for ln in lines:
+            if "-done(" in ln:                 # async pair: count -start only
+                continue
+            cm_ = coll_re.search(ln)
+            if cm_:
+                # result-type bytes = bytes received per device (for
+                # all-gather that is the gathered buffer; for the others it
+                # equals the operand size)
+                tot += _corrected_bytes(cm_.group(1), ln, dtype_correct)
+            if " while(" in ln and "condition=" in ln:
+                bm = re.search(r"body=%?([\w\.\-]+)", ln)
+                cnd = re.search(r"condition=%?([\w\.\-]+)", ln)
+                # XLA annotates counted loops:
+                # backend_config={"known_trip_count":{"n":"5"},...}
+                tm = re.search(r'known_trip_count[^0-9]*(\d+)', ln)
+                if bm and cnd:
+                    wl.append((bm.group(1), cnd.group(1),
+                               int(tm.group(1)) if tm else None))
+        direct[name] = tot
+        whiles[name] = wl
+
+    memo = {}
+
+    def total(name, depth=0):
+        if name in memo:
+            return memo[name]
+        if depth > 12 or name not in direct:
+            return 0.0
+        t = direct[name]
+        for body, cond, known in whiles.get(name, ()):
+            trips = known if known is not None else _trip_count(
+                comps.get(cond, []))
+            t += trips * total(body, depth + 1)
+        # calls/fusions into other computations that contain collectives
+        memo[name] = t
+        return t
+
+    entry = None
+    for name in comps:
+        if "main" in name:
+            entry = name
+            break
+    if entry is None and comps:
+        entry = list(comps)[0]
+    return total(entry) if entry else 0.0
+
+
+# --------------------------------------------------------- analytic model
+@dataclasses.dataclass
+class CellRoofline:
+    arch: str
+    shape: str
+    chips: int
+    flops: float                 # executed (analytic, incl. padding/remat)
+    model_flops: float           # 6 N_active D (the brief's usefulness ref)
+    hbm_bytes_per_dev: float
+    coll_bytes_per_dev: float
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+
+    def finalize(self):
+        self.compute_s = self.flops / (self.chips * PEAK_FLOPS)
+        self.memory_s = self.hbm_bytes_per_dev / HBM_BW
+        self.collective_s = self.coll_bytes_per_dev / LINK_BW
+        return self
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def usefulness(self) -> float:
+        return self.model_flops / max(self.flops, 1.0)
+
+    @property
+    def step_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_frac(self) -> float:
+        """Fraction of the compute roofline this step achieves if it runs at
+        max(terms): compute_s / step_s."""
+        return self.compute_s / max(self.step_s, 1e-30)
+
+
+def _attn_visible(S: int, window) -> float:
+    """Average visible keys per query under causal (+ window) masking, as
+    the *blocked* schedule computes it (block 512 granularity)."""
+    if window is not None and window < S:
+        return min(window + 256, S)      # window + half-block slack
+    return (S + 1) / 2 + 256             # triangle + half-block slack
+
+
+def analytic_cell(cfg, shape, mesh_chips: int, tp: int = 16,
+                  coll_bytes: float = 0.0, *, arch: str = "",
+                  overrides: dict | None = None) -> CellRoofline:
+    """Closed-form flop/byte model of one grid cell.
+
+    overrides: perf-iteration knobs {'remat': bool, 'cap_factor': float,
+    'grad_bytes': int, ...} so hillclimb variants reuse one model.
+    """
+    o = overrides or {}
+    B, S = shape.global_batch, shape.seq_len
+    kind = shape.kind
+    D, V = cfg.d_model, cfg.vocab
+    H, Dh, kv = cfg.n_heads, cfg.d_head, cfg.n_kv
+    L = cfg.n_layers
+    ltypes = cfg.layer_types()
+    n_attn = sum(1 for t in ltypes if t == "attn")
+    n_rec = sum(1 for t in ltypes if t == "rec")
+    n_rwkv = sum(1 for t in ltypes if t == "rwkv")
+
+    pbytes = 2 if cfg.param_dtype == "bfloat16" else 4
+    cap = o.get("cap_factor", cfg.moe_cap_factor)
+    remat = o.get("remat", cfg.remat)
+
+    # --- per-token matmul params actually multiplied (padded, capacity) ---
+    def attn_p():
+        n = D * (H + 2 * kv) * Dh + H * Dh * D
+        return n
+
+    mlp_p = D * cfg.d_ff * (3 if cfg.mlp == "swiglu" else 2)
+    if cfg.n_experts:
+        ffn_p = cfg.top_k * cap * 3 * D * cfg.d_ff   # capacity slots computed
+    else:
+        ffn_p = mlp_p
+    rec_p = 3 * D * cfg.d_lru + cfg.d_lru * D
+    rwkv_p = 6 * D * (H * Dh) + 2 * D * cfg.d_ff + D * D
+
+    per_tok = 0.0
+    for t in ltypes:
+        if t == "attn":
+            per_tok += attn_p() + ffn_p
+        elif t == "rec":
+            per_tok += rec_p + mlp_p
+        elif t == "rwkv":
+            per_tok += rwkv_p
+    per_tok_enc = cfg.enc_layers * (attn_p() + mlp_p)
+    if cfg.enc_layers:
+        per_tok += attn_p()          # decoder cross-attention projections
+    logits_p = V * D
+
+    # --- token counts ---
+    if kind == "train":
+        T = B * S
+    elif kind == "prefill":
+        T = B * S
+    else:
+        T = B                        # one token per sequence
+
+    T_enc = B * cfg.n_frames if cfg.enc_layers else 0
+
+    # --- attention score flops (q@k + p@v) ---
+    def attn_score_flops(T_q, S_kv):
+        return 4 * T_q * H * Dh * S_kv
+
+    if kind in ("train", "prefill"):
+        vis = _attn_visible(S, cfg.window)
+        score = n_attn * attn_score_flops(T, vis)
+        if cfg.enc_layers:
+            score += cfg.enc_layers * attn_score_flops(T_enc, cfg.n_frames)
+            score += L * attn_score_flops(T, cfg.n_frames)   # cross
+        # rwkv/rec recurrences: elementwise, O(T x width) — matmul-free
+        seq_ops = (n_rec * 6 * T * cfg.d_lru
+                   + n_rwkv * 4 * T * H * Dh * Dh)
+    else:
+        s_kv = min(S, cfg.window) if cfg.window else S
+        score = n_attn * attn_score_flops(T, s_kv)
+        if cfg.enc_layers:
+            score += L * attn_score_flops(T, cfg.n_frames)
+        seq_ops = n_rec * 6 * T * cfg.d_lru + n_rwkv * 4 * T * H * Dh * Dh
+
+    fwd = 2 * T * (per_tok + logits_p) + 2 * T_enc * per_tok_enc + score \
+        + seq_ops
+    if kind == "train":
+        factor = 4.0 if remat else 3.0   # fwd + 2x bwd (+1x remat refwd)
+        flops = factor * fwd
+    else:
+        flops = fwd
+
+    # --- usefulness reference: 6 N_active D on true (unpadded) config ---
+    n_active = cfg.active_param_count(padded=False)
+    if kind == "train":
+        model_flops = 6.0 * n_active * T
+    else:
+        model_flops = 2.0 * n_active * T
+
+    # --- HBM bytes per device ---
+    n_params = cfg.param_count(padded=True)
+    # Every device streams its TP slice of the weights per use (after the
+    # FSDP all-gather the gathered layer is read from HBM on each device).
+    w_read = n_params * pbytes / tp
+    uses = (3 if remat else 2) if kind == "train" else 1
+    hbm = uses * w_read
+    if kind == "train":
+        gb = o.get("grad_bytes", 4 if cfg.grad_dtype == "float32" else 2)
+        mb = 2 if cfg.adam_moment_dtype == "bfloat16" else 4
+        mast = 4 if cfg.adam_master_f32 else 0
+        opt_bytes = n_params * (2 * mb + mast + gb)
+        hbm += 2.0 * opt_bytes / mesh_chips          # read+write, ZeRO-shard
+        hbm += cfg.n_micro * 2.0 * n_params * gb / mesh_chips  # grad accum
+    # activations (coarse): ~10 x L x tokens-per-device x D x bytes
+    act_bytes = 2 if cfg.param_dtype == "bfloat16" else 4
+    hbm += 10.0 * L * (T / mesh_chips) * D * act_bytes * \
+        (2 if kind == "train" else 1)
+    if kind == "decode":
+        # the whole KV cache (or recurrent state) streams once per token;
+        # it is sharded over (batch-shards x kv-head shards) devices.
+        s_c = min(S, cfg.window) if cfg.window else S
+        G = cfg.kv_eff(tp)
+        cache = n_attn * 2 * B * G * s_c * Dh * 2
+        if cfg.enc_layers:
+            cache += L * 2 * B * G * cfg.n_frames * Dh * 2
+        cache += n_rwkv * B * H * Dh * Dh * 4 + n_rec * B * cfg.d_lru * 4
+        cache_shards = max(min(B, mesh_chips // tp), 1) * tp
+        hbm += cache / cache_shards
+
+    return CellRoofline(
+        arch=arch or cfg.name, shape=shape.name, chips=mesh_chips,
+        flops=flops, model_flops=model_flops, hbm_bytes_per_dev=hbm,
+        coll_bytes_per_dev=coll_bytes).finalize()
+
+
+def top_collectives(hlo: str, k: int = 15):
+    """(bytes x trips, op, shape, metadata-op-name) of the largest
+    collectives — the perf loop's profile view."""
+    comps = _split_computations(hlo)
+    # computation -> multiplier (product of enclosing loop trips)
+    mult = {name: 0.0 for name in comps}
+
+    entry = next((n for n in comps if "main" in n), None)
+    if entry is None:
+        return []
+    mult[entry] = 1.0
+    # propagate trip counts breadth-first through while nests
+    frontier = [entry]
+    while frontier:
+        nxt = []
+        for name in frontier:
+            for ln in comps[name]:
+                if " while(" in ln and "condition=" in ln:
+                    bm = re.search(r"body=%?([\w\.\-]+)", ln)
+                    cm = re.search(r"condition=%?([\w\.\-]+)", ln)
+                    tm = re.search(r'known_trip_count[^0-9]*(\d+)', ln)
+                    if bm and bm.group(1) in comps:
+                        trips = int(tm.group(1)) if tm else _trip_count(
+                            comps.get(cm.group(1), []))
+                        if mult[bm.group(1)] == 0.0:
+                            nxt.append(bm.group(1))
+                        mult[bm.group(1)] += mult[name] * trips
+        frontier = nxt
+
+    coll_re = re.compile(
+        r"=\s*(.*?)\s(" + "|".join(COLLECTIVES) + r")(?:-start)?\(")
+    rows = []
+    for name, lines in comps.items():
+        if mult.get(name, 0.0) == 0.0:
+            continue
+        for ln in lines:
+            if "-done(" in ln:
+                continue
+            m = coll_re.search(ln)
+            if not m:
+                continue
+            b = _corrected_bytes(m.group(1), ln, True) * mult[name]
+            om = re.search(r'op_name="([^"]+)"', ln)
+            rows.append((b, m.group(2), m.group(1)[:48],
+                         (om.group(1) if om else "")[:90]))
+    rows.sort(reverse=True)
+    return rows[:k]

@@ -1,0 +1,37 @@
+"""Concurrency-control mechanisms, vectorized over a wave of transactions.
+
+Each mechanism implements
+
+    wave_validate(store, batch, prio, wave, cfg) -> (store, ValidationResult)
+
+scattering its claims into the wave-scoped claim tables, probing them, and
+producing the wave's commit mask plus mechanism-specific bookkeeping (version
+bumps, contention-manager state, adaptivity state machines).
+
+The mechanisms mirror the paper's section 3.2 set: OCC (STO's default),
+TicToc, 2PL, SwissTM contention management, our Adaptive reader-writer lock —
+plus the beyond-paper Auto-granularity mechanism sketched in the paper's
+section 5.
+"""
+from repro.core.cc.base import ValidationResult
+from repro.core.cc.occ import wave_validate as occ_validate
+from repro.core.cc.tictoc import wave_validate as tictoc_validate
+from repro.core.cc.two_pl import wave_validate as two_pl_validate
+from repro.core.cc.swisstm import wave_validate as swisstm_validate
+from repro.core.cc.adaptive import wave_validate as adaptive_validate
+from repro.core.cc.autogran import wave_validate as autogran_validate
+
+from repro.core import types as _t
+
+VALIDATORS = {
+    _t.CC_OCC: occ_validate,
+    _t.CC_TICTOC: tictoc_validate,
+    _t.CC_2PL: two_pl_validate,
+    _t.CC_SWISS: swisstm_validate,
+    _t.CC_ADAPTIVE: adaptive_validate,
+    _t.CC_AUTOGRAN: autogran_validate,
+}
+
+__all__ = ["ValidationResult", "VALIDATORS", "occ_validate", "tictoc_validate",
+           "two_pl_validate", "swisstm_validate", "adaptive_validate",
+           "autogran_validate"]

@@ -1,0 +1,84 @@
+"""Adaptive reader-writer locking — the paper's own mixed-CC design
+(section 3.2): an adaptive rw-lock per record that switches between an
+optimistic mode (reads observe versions, OCC rule) and a pessimistic mode
+(strict reader-writer locking, 2PL rule) based on observed contention, with a
+unified commit protocol evaluating both rules inside one transaction.
+
+Per-record state machine: ``pess_mode`` flips pessimistic when the record's
+abort-heat EWMA exceeds ``adapt_up`` and relaxes back when it decays below
+``adapt_down``.  Heat decay is lazy (claims.lazy_decayed) so the state machine
+costs O(touched records), not O(table), per wave.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core import claims
+from repro.core.cc import base
+from repro.core.types import OOB_KEY, EngineConfig, StoreState, TxnBatch
+
+
+def wave_validate(store: StoreState, batch: TxnBatch, prio, wave,
+                  cfg: EngineConfig):
+    fine = base.is_fine(cfg)
+    live = batch.live()
+    rd = batch.is_read() & live
+    wr = batch.is_write() & live
+    myp = base.my_prio_per_op(batch, prio)
+
+    kp = jnp.where(batch.op_key >= 0, batch.op_key, OOB_KEY)
+    pess = store.pess_mode.at[kp].get(mode="fill",
+                                      fill_value=False)  # [T, K]
+
+    store = base.write_claims(store, batch, prio, wave)
+    # Visible (lock-acquiring) reads only on pessimistic records.
+    store = base.read_claims(store, batch, prio, wave, mask=pess)
+
+    wprio = claims.effective_probe(store.claim_w, batch.op_key,
+                                   batch.op_group, wave, fine)
+    rprio = claims.effective_probe(store.claim_r, batch.op_key,
+                                   batch.op_group, wave, fine)
+
+    T, K = batch.op_key.shape
+    u = claims.hash01(wave, claims.lane_op_ids(T, K))
+    lock_ok = u < cfg.cost.phase_overlap     # phase-overlap thinning
+    uo = claims.hash01(wave + jnp.uint32(77),
+                       claims.lane_op_ids(T, K))
+    conflict = ((rd & ~pess & (wprio < myp) & (uo < cfg.cost.opt_overlap))
+                | (rd & pess & (wprio < myp) & lock_ok)   # r-lock vs w-lock
+                | (wr & pess & (wprio < myp) & lock_ok)   # w-lock vs w-lock
+                | (wr & pess & (rprio < myp) & lock_ok))  # w-lock vs r-lock
+    res = base.result_from_conflicts(batch, conflict, eager=True)
+    # Eager detection only on pessimistic ops; optimistic conflicts surface at
+    # commit-time validation (full work wasted).
+    K = batch.slots
+    first_pess = claims.first_true_index(conflict & pess, K)
+    res = dataclasses.replace(
+        res,
+        first_conflict=first_pess,
+        pess_frac=(pess & live).sum(axis=1) /
+                  jnp.maximum(batch.n_ops, 1).astype(jnp.float32))
+
+    # --- contention state machine (touched records only) -------------------
+    touched = conflict  # records involved in a conflict this wave heat up
+    heat, heat_wave = claims.touch_heat(
+        store.abort_heat, store.heat_wave, batch.op_key,
+        jnp.ones_like(batch.op_val), wave, cfg.adapt_decay, touched)
+    # Re-evaluate mode for every record accessed this wave (hot -> pess,
+    # decayed-cold -> opt).  Heat for non-conflicting accesses is the lazily
+    # decayed current value.
+    acc = live
+    cur = claims.lazy_decayed(heat, heat_wave, batch.op_key, wave,
+                              cfg.adapt_decay)
+    new_mode = jnp.where(cur > cfg.adapt_up, True,
+                         jnp.where(cur < cfg.adapt_down, False,
+                                   pess))
+    k = jnp.where(acc, batch.op_key, OOB_KEY).reshape(-1)
+    pess_mode = store.pess_mode.at[k].set(new_mode.reshape(-1), mode="drop")
+
+    store = dataclasses.replace(store, abort_heat=heat, heat_wave=heat_wave,
+                                pess_mode=pess_mode)
+    store = base.bump_versions(store, batch, res.commit)
+    return store, res

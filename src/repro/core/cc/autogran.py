@@ -1,0 +1,64 @@
+"""Auto-granularity OCC — beyond-paper mechanism from the paper's section 5:
+
+    "We would be interested in designing a CC scheme that can automatically
+     detect false conflicts due to coarse-grained timestamps and address them
+     by dynamically increasing timestamp granularity."
+
+This is that scheme.  Every record starts with a coarse (whole-row) timestamp.
+When a read aborts under the coarse rule but would NOT have conflicted under
+the fine rule (the writer hit a different column group) — the definition of a
+false conflict — the record accumulates false-conflict heat; past
+``autogran_up`` the record is promoted to fine-grained timestamps.  Promotion
+is monotone per the paper's wording ("dynamically increasing"); heat decays
+lazily so cold records stop accumulating.
+
+The physical version table is always fine-width (G=2); promotion only changes
+the probe width per record, so promotion is a metadata bit flip — no copy.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core import claims
+from repro.core.cc import base
+from repro.core.types import OOB_KEY, EngineConfig, StoreState, TxnBatch
+
+
+def wave_validate(store: StoreState, batch: TxnBatch, prio, wave,
+                  cfg: EngineConfig):
+    live = batch.live()
+    rd = batch.is_read() & live
+    myp = base.my_prio_per_op(batch, prio)
+
+    store = base.write_claims(store, batch, prio, wave)
+    fine_probe = claims.probe(store.claim_w, batch.op_key, batch.op_group,
+                              wave)
+    coarse_probe = claims.probe_any_group(store.claim_w, batch.op_key, wave)
+
+    conflict_fine = rd & (fine_probe < myp)
+    conflict_coarse = rd & (coarse_probe < myp)
+
+    kf = jnp.where(batch.op_key >= 0, batch.op_key, OOB_KEY)
+    is_fine_rec = store.fine_mode.at[kf].get(mode="fill", fill_value=False)
+    conflict = jnp.where(is_fine_rec, conflict_fine, conflict_coarse)
+    u = claims.hash01(wave, claims.lane_op_ids(*batch.op_key.shape))
+    conflict = conflict & (u < cfg.cost.opt_overlap)   # window thinning
+    res = base.result_from_conflicts(batch, conflict, eager=False)
+
+    # False-conflict evidence: aborted under coarse, clean under fine.
+    false_ev = conflict_coarse & ~conflict_fine & ~is_fine_rec
+    heat, heat_wave = claims.touch_heat(
+        store.false_heat, store.heat_wave, batch.op_key,
+        jnp.ones_like(batch.op_val), wave, cfg.autogran_decay, false_ev)
+    cur = claims.lazy_decayed(heat, heat_wave, batch.op_key, wave,
+                              cfg.autogran_decay)
+    promote = false_ev & (cur > cfg.autogran_up)
+    k = jnp.where(promote, batch.op_key, OOB_KEY).reshape(-1)
+    fine_mode = store.fine_mode.at[k].set(True, mode="drop")
+
+    store = dataclasses.replace(store, false_heat=heat, heat_wave=heat_wave,
+                                fine_mode=fine_mode)
+    store = base.bump_versions(store, batch, res.commit)
+    return store, res

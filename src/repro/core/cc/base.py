@@ -1,0 +1,88 @@
+"""Shared pieces of the CC mechanism implementations."""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import claims
+from repro.core.types import OOB_KEY, EngineConfig, StoreState, TxnBatch
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["commit", "conflict_op", "first_conflict",
+                      "ext_penalty", "ext_count", "pess_frac", "ext_mask"],
+         meta_fields=["eager"])
+@dataclasses.dataclass
+class ValidationResult:
+    commit: jax.Array          # bool[T]
+    conflict_op: jax.Array     # bool[T, K] per-op conflict flags
+    first_conflict: jax.Array  # int32[T] op index of first conflict (K if none)
+    ext_penalty: jax.Array     # f32[T] extra simulated time (TicToc CAS chains)
+    ext_count: jax.Array       # int32 scalar: rts-extension events this wave
+    pess_frac: jax.Array       # f32[T] fraction of ops on pessimistic records
+    ext_mask: jax.Array        # bool[T, K] rts-extension CASes: writes to
+                               #   shared lines, so they join the install
+                               #   contention chain (TicToc only)
+    eager: bool                # aborts cut work at first_conflict (2PL/Swiss)
+
+
+def result_from_conflicts(batch: TxnBatch, conflict_op: jax.Array,
+                          eager: bool) -> ValidationResult:
+    T, K = batch.op_key.shape
+    commit = ~conflict_op.any(axis=1)
+    return ValidationResult(
+        commit=commit,
+        conflict_op=conflict_op,
+        first_conflict=claims.first_true_index(conflict_op, K),
+        ext_penalty=jnp.zeros((T,), jnp.float32),
+        ext_count=jnp.int32(0),
+        pess_frac=jnp.zeros((T,), jnp.float32),
+        ext_mask=jnp.zeros((T, K), jnp.bool_),
+        eager=eager,
+    )
+
+
+def bump_versions(store: StoreState, batch: TxnBatch,
+                  commit: jax.Array) -> StoreState:
+    """Advance write timestamps for committed write-set ops.
+
+    OCC-family version semantics: any committed modification of a (record,
+    group) invalidates concurrent readers; the absolute value only needs to be
+    monotone, so a scatter-add of 1 per committed write op is sufficient
+    (duplicates simply advance the clock further)."""
+    w = batch.is_write() & batch.live() & commit[:, None]
+    k = jnp.where(w, batch.op_key, OOB_KEY).reshape(-1)
+    g = batch.op_group.reshape(-1)
+    wts = store.wts.at[k, g].add(jnp.uint32(1), mode="drop")
+    return dataclasses.replace(store, wts=wts)
+
+
+def my_prio_per_op(batch: TxnBatch, prio: jax.Array) -> jax.Array:
+    return jnp.broadcast_to(prio[:, None].astype(jnp.uint32),
+                            batch.op_key.shape)
+
+
+def write_claims(store: StoreState, batch: TxnBatch, prio: jax.Array,
+                 wave: jax.Array) -> StoreState:
+    words = claims.claim_word(wave, my_prio_per_op(batch, prio))
+    cw = claims.scatter_claims(store.claim_w, batch.op_key, batch.op_group,
+                               words, batch.is_write() & batch.live())
+    return dataclasses.replace(store, claim_w=cw)
+
+
+def read_claims(store: StoreState, batch: TxnBatch, prio: jax.Array,
+                wave: jax.Array, mask=None) -> StoreState:
+    m = batch.is_read() & batch.live()
+    if mask is not None:
+        m = m & mask
+    words = claims.claim_word(wave, my_prio_per_op(batch, prio))
+    cr = claims.scatter_claims(store.claim_r, batch.op_key, batch.op_group,
+                               words, m)
+    return dataclasses.replace(store, claim_r=cr)
+
+
+def is_fine(cfg: EngineConfig) -> bool:
+    return cfg.n_groups > 1 and cfg.granularity == 1

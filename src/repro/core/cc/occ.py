@@ -1,0 +1,35 @@
+"""OCC — Silo/STO-style optimistic concurrency control.
+
+Reads never write shared memory during execution; at commit the read set is
+validated against record versions.  In the wave model (DESIGN.md section 2):
+every lane's write set claims its (record, group) cells with the lane's
+priority, then every read op probes the writer-claim table — a read conflicts
+iff a strictly-higher-priority lane wrote the cell this wave.  Write-write
+pairs do not abort (commit-time locks serialize the installs).
+
+Timestamp granularity is the probe width: coarse probes treat a claim on any
+column group of the record as a conflict (one timestamp per row), fine probes
+look only at the op's own group — the paper's mechanism.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import claims
+from repro.core.cc import base
+from repro.core.types import EngineConfig, StoreState, TxnBatch
+
+
+def wave_validate(store: StoreState, batch: TxnBatch, prio, wave,
+                  cfg: EngineConfig):
+    store = base.write_claims(store, batch, prio, wave)
+    wprio = claims.effective_probe(store.claim_w, batch.op_key,
+                                   batch.op_group, wave, base.is_fine(cfg))
+    conflict = (batch.is_read() & batch.live()
+                & (wprio < base.my_prio_per_op(batch, prio)))
+    T, K = batch.op_key.shape
+    u = claims.hash01(wave, claims.lane_op_ids(T, K))
+    conflict = conflict & (u < cfg.cost.opt_overlap)   # window thinning
+    res = base.result_from_conflicts(batch, conflict, eager=False)
+    store = base.bump_versions(store, batch, res.commit)
+    return store, res

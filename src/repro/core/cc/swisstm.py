@@ -1,0 +1,53 @@
+"""SwissTM-style CC: eager write locking, invisible reads with commit-time
+validation, and a timestamp-based contention manager (Dragojevic et al.,
+PLDI'09; paper section 3.2).
+
+The contention manager favors the transaction that has been running (retrying)
+longer: priority encodes transaction age in its high bits (claims.prio16 with
+use_age=True, supplied by the engine), so when two lanes conflict the *younger*
+one aborts regardless of lane order.  Write-write conflicts are detected
+eagerly (at the op acquiring the write lock); read-write conflicts are found
+at commit-time validation like OCC, so a read-invalidated lane wastes its full
+execution.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core import claims
+from repro.core.cc import base
+from repro.core.types import EngineConfig, StoreState, TxnBatch
+
+
+def wave_validate(store: StoreState, batch: TxnBatch, prio, wave,
+                  cfg: EngineConfig):
+    fine = base.is_fine(cfg)
+    live = batch.live()
+    rd = batch.is_read() & live
+    wr = batch.is_write() & live
+    myp = base.my_prio_per_op(batch, prio)
+
+    store = base.write_claims(store, batch, prio, wave)
+    wprio = claims.effective_probe(store.claim_w, batch.op_key,
+                                   batch.op_group, wave, fine)
+
+    ww = wr & (wprio < myp)   # eager: lost the write lock to an older txn
+    rw = rd & (wprio < myp)   # late: read invalidated at commit validation
+    uo = claims.hash01(wave + jnp.uint32(77),
+                       claims.lane_op_ids(*batch.op_key.shape))
+    rw = rw & (uo < cfg.cost.opt_overlap)              # window thinning
+    # Phase-overlap thinning on the eager lock part (see two_pl.py).
+    T, K = batch.op_key.shape
+    u = claims.hash01(wave, claims.lane_op_ids(T, K))
+    ww = ww & (u < cfg.cost.phase_overlap)
+    conflict = ww | rw
+    res = base.result_from_conflicts(batch, conflict, eager=True)
+    # Only write conflicts cut work early; a lane whose first conflict is a
+    # read conflict wastes the whole execution (commit-time validation).
+    K = batch.slots
+    first_ww = claims.first_true_index(ww, K)
+    res = dataclasses.replace(res, first_conflict=first_ww)
+    store = base.bump_versions(store, batch, res.commit)
+    return store, res

@@ -1,0 +1,137 @@
+"""TicToc — time-traveling OCC (Yu et al., SIGMOD'16), wave-vectorized.
+
+Each (record, group) carries a write timestamp ``wts`` and a read timestamp
+``rts`` (rts >= wts).  A transaction computes
+
+    commit_ts = max( max_{reads} wts,  max_{writes} rts + 1 )
+
+and can serialize *before* a concurrent writer of a record it read, as long as
+commit_ts <= that record's rts — the paper's Figure 1 reordering.  A read only
+aborts when a higher-priority lane writes its cell this wave AND the reader's
+commit_ts exceeds the cell's rts (no room to time-travel).
+
+Costs the paper highlights: extending rts is a CAS on shared metadata of a
+record that was merely read — undermining OCC's silent-read property.  We
+count extension events and charge a serialization penalty when several lanes
+extend the same cell in one wave (the many-core degradation of the paper's
+Figures 2a/3a).  Per the paper's section 3.2 we model the 128-bit
+(non-compressed) timestamp variant — their 64-bit compressed variant aborted
+more than OCC due to overflow — and STO's non-waiting deadlock prevention.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core import claims
+from repro.core.cc import base
+from repro.core.types import OOB_KEY, EngineConfig, StoreState, TxnBatch
+
+
+def _gather_ts(table, batch: TxnBatch, fine: bool):
+    """Per-op timestamp observation honoring granularity.
+
+    Coarse granularity sees one timestamp per record = the row max (any group
+    modification invalidates/constrains the whole row)."""
+    k = jnp.where(batch.op_key >= 0, batch.op_key, OOB_KEY)
+    if fine:
+        return table.at[k, batch.op_group].get(mode="fill", fill_value=0)
+    rows = table.at[k, :].get(mode="fill", fill_value=0)
+    return rows.max(axis=-1)
+
+
+def wave_validate(store: StoreState, batch: TxnBatch, prio, wave,
+                  cfg: EngineConfig):
+    fine = base.is_fine(cfg)
+    live = batch.live()
+    rd = batch.is_read() & live
+    wr = batch.is_write() & live
+    myp = base.my_prio_per_op(batch, prio)
+
+    store = base.write_claims(store, batch, prio, wave)
+    wprio = claims.effective_probe(store.claim_w, batch.op_key,
+                                   batch.op_group, wave, fine)
+
+    wts_op = _gather_ts(store.wts, batch, fine)
+    rts_op = _gather_ts(store.rts, batch, fine)
+
+    # commit_ts over live ops (uint32; 0 when no ops).
+    ts_term = jnp.where(wr, rts_op + 1, jnp.where(rd, wts_op, 0))
+    commit_ts = ts_term.max(axis=1)  # [T]
+
+    # Read validation: a concurrent (same-wave, earlier-priority) writer bumps
+    # wts past rts; the read survives iff it can serialize at commit_ts <= rts.
+    conflict = rd & (wprio < myp) & (commit_ts[:, None] > rts_op)
+    u = claims.hash01(wave, claims.lane_op_ids(*batch.op_key.shape))
+    conflict = conflict & (u < cfg.cost.opt_overlap)   # window thinning
+
+    # Extension failure: extending rts requires a CAS on the version word;
+    # if another transaction holds the cell's write lock at that moment the
+    # non-waiting policy aborts the reader ("leading to more aborts",
+    # paper section 4.2).  This is what collapses TicToc under high
+    # contention: the hotter the cell, the likelier its lock is held.
+    ext_need = rd & (commit_ts[:, None] > rts_op)
+    other_writer = (wprio != claims.NO_PRIO) & (wprio != myp)
+    u2 = claims.hash01(wave + jnp.uint32(131),
+                       claims.lane_op_ids(*batch.op_key.shape))
+    ext_fail = ext_need & other_writer & (u2 < cfg.cost.phase_overlap)
+    conflict = conflict | ext_fail
+    res = base.result_from_conflicts(batch, conflict, eager=False)
+    commit = res.commit
+
+    # rts extension: committed reads whose commit_ts > rts CAS rts upward.
+    ext = ext_need & commit[:, None]
+    ext_count = ext.sum().astype(jnp.int32)
+
+    # Extension contention: n lanes CASing the same (record, group) rts
+    # serialize on its cacheline; with retries the expected cost per
+    # extender grows with the number of contenders (each failed CAS
+    # re-reads the line) — the many-core collapse of the paper's Fig 2a/3a.
+    # Count same-cell extenders in-wave via a sort (no O(n_records) table).
+    T, K = batch.op_key.shape
+    G = store.wts.shape[1]
+    cell = jnp.where(ext, batch.op_key * G + batch.op_group,
+                     jnp.int32(0x7FFFFFFF)).reshape(-1)
+    scell = jnp.sort(cell)
+    lo = jnp.searchsorted(scell, cell, side="left")
+    hi = jnp.searchsorted(scell, cell, side="right")
+    n_ext = jnp.where(ext.reshape(-1), (hi - lo).astype(jnp.float32), 0.0)
+    # Every extension pays the base CAS (c_ext); same-cell extenders
+    # additionally serialize on the line — each waits on average for half
+    # the contenders ahead of it (the high-contention collapse of Fig 2a).
+    per_op = jnp.where(
+        n_ext > 0,
+        jnp.float32(cfg.cost.c_ext)
+        + 0.5 * jnp.float32(cfg.cost.lam_ext) * jnp.maximum(n_ext - 1.0, 0.0),
+        0.0)
+    ext_penalty = per_op.reshape(T, K).sum(axis=1)
+
+    # Timestamp installs (vs the snapshot; monotone scatter-max).
+    # Within-wave cts chaining: n same-cell writers serialize their installs
+    # (each holds the write lock in turn), so the surviving wts/rts advance
+    # by ~n per wave, not 1 — hot-row timestamps inflate with contention and
+    # cross-row skew grows, which is what aborts multi-hot-row readers at
+    # high thread counts (TicToc's own high-core degradation, paper Fig 3a).
+    cts = jnp.broadcast_to(commit_ts[:, None], batch.op_key.shape)
+    wmask = wr & commit[:, None]
+    n_wcell = claims.cell_counts(batch.op_key, batch.op_group,
+                                 store.wts.shape[1], wmask)
+    cts = cts + 2 * (jnp.maximum(n_wcell, 1.0).astype(jnp.uint32) - 1)
+    kw = jnp.where(wmask, batch.op_key, OOB_KEY).reshape(-1)
+    ke = jnp.where(ext, batch.op_key, OOB_KEY).reshape(-1)
+    g = batch.op_group.reshape(-1)
+    ctsf = cts.reshape(-1)
+    wts = store.wts.at[kw, g].max(ctsf, mode="drop")
+    rts = store.rts.at[kw, g].max(ctsf, mode="drop")
+    if fine:
+        rts = rts.at[ke, g].max(ctsf, mode="drop")
+    else:
+        # Coarse extension raises the whole row's read horizon.
+        for gg in range(store.rts.shape[1]):
+            rts = rts.at[ke, gg].max(ctsf, mode="drop")
+    store = dataclasses.replace(store, wts=wts, rts=rts)
+
+    res = dataclasses.replace(res, ext_penalty=ext_penalty,
+                              ext_count=ext_count, ext_mask=ext)
+    return store, res

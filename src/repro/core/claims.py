@@ -1,0 +1,189 @@
+"""Wave-scoped claim tables: the vectorized replacement for CAS races.
+
+On the paper's x86 platform, N threads race compare-and-swap instructions on
+per-record version words; the cache-coherence protocol serializes them and one
+winner emerges.  On a TPU there is no CAS — but an XLA ``scatter`` with a
+``min`` combiner over duplicate indices computes exactly "the strongest
+claimant per (record, group)" in one vectorized pass.  That is the only
+primitive every CC mechanism in this package needs.
+
+Reset-free tables via a monotone wave tag
+-----------------------------------------
+Claim tables are as large as the database (10M+ records); memsetting them every
+wave would cost O(n_records) memory traffic per wave.  Instead each claim word
+embeds the wave number, arranged to be *monotonically decreasing*:
+
+    word = ((MAX_WAVE - wave) << 16) | prio16          (uint32)
+
+A claim from wave w is numerically smaller than every claim from waves < w, so
+``scatter-min`` makes the current wave always win and stale entries are simply
+ignored at probe time (their tag mismatches).  No reset, ever.
+
+``prio16`` is the in-wave priority: ``(inv_age << PRIO_LANE_BITS) | lane_rank``
+— lower value = earlier in the wave's serialization order.  Contention-managed
+mechanisms (SwissTM) put transaction age in the high bits so starved
+transactions win conflicts; the rest use a per-wave random permutation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import OOB_KEY, PRIO_LANE_BITS
+
+MAX_WAVE = jnp.uint32(0xFFFF)
+PRIO16_MASK = jnp.uint32(0xFFFF)
+NO_PRIO = jnp.uint32(0xFFFF)  # probe result when nobody claims
+
+
+def inv_wave(wave: jax.Array) -> jax.Array:
+    """Monotone-decreasing wave tag."""
+    return MAX_WAVE - (wave.astype(jnp.uint32) & MAX_WAVE)
+
+
+def prio16(age: jax.Array, lane_rank: jax.Array,
+           use_age: bool = False) -> jax.Array:
+    """In-wave priority; lower wins.  ``use_age`` enables the SwissTM-style
+    contention manager (older transactions win claims)."""
+    max_age = (1 << (16 - PRIO_LANE_BITS)) - 1  # 63
+    if use_age:
+        inv_age = max_age - jnp.clip(age, 0, max_age)
+    else:
+        inv_age = jnp.full_like(age, max_age)
+    return (inv_age.astype(jnp.uint32) << PRIO_LANE_BITS) | (
+        lane_rank.astype(jnp.uint32) & ((1 << PRIO_LANE_BITS) - 1))
+
+
+def claim_word(wave: jax.Array, prio: jax.Array) -> jax.Array:
+    return (inv_wave(wave) << 16) | prio.astype(jnp.uint32)
+
+
+def scatter_claims(table: jax.Array, keys: jax.Array, groups: jax.Array,
+                   words: jax.Array, mask: jax.Array) -> jax.Array:
+    """scatter-min claim words into table[record, group].
+
+    keys/groups/words/mask: int32/uint32/bool arrays of identical shape
+    (typically [T, K]).  Masked-out entries are dropped via an out-of-bounds
+    key (OOB_KEY — negative keys would *wrap*, see types.OOB_KEY).
+    """
+    k = jnp.where(mask & (keys >= 0), keys, OOB_KEY)
+    return table.at[k.reshape(-1), groups.reshape(-1)].min(
+        words.reshape(-1), mode="drop")
+
+
+def probe(table: jax.Array, keys: jax.Array, groups: jax.Array,
+          wave: jax.Array) -> jax.Array:
+    """Strongest current-wave claimant priority for each (key, group).
+
+    Returns uint16-valued uint32 array shaped like ``keys``; NO_PRIO when no
+    live claim exists.  Negative (masked) keys are remapped out-of-bounds so
+    the fill value applies (negative gathers would wrap to the last record).
+    """
+    k = jnp.where(keys >= 0, keys, OOB_KEY)
+    words = table.at[k, groups].get(mode="fill",
+                                    fill_value=0xFFFFFFFF)
+    live = (words >> 16) == inv_wave(wave)
+    return jnp.where(live, words & PRIO16_MASK, NO_PRIO)
+
+
+def probe_any_group(table: jax.Array, keys: jax.Array,
+                    wave: jax.Array) -> jax.Array:
+    """Strongest current-wave claimant on *any* group of the record.
+
+    This is how coarse granularity is expressed: a coarse-grained probe treats
+    a claim on any column group as a conflict with the whole record, while a
+    fine-grained probe (``probe``) only looks at the op's own group.  Claims
+    are always scattered at fine granularity; granularity is purely a probe
+    width (see DESIGN.md section 2).
+    """
+    # table: [n_records, G]; gather whole rows then reduce.
+    k = jnp.where(keys >= 0, keys, OOB_KEY)
+    rows = table.at[k, :].get(mode="fill",
+                              fill_value=0xFFFFFFFF)  # [..., G]
+    live = (rows >> 16) == inv_wave(wave)
+    pr = jnp.where(live, rows & PRIO16_MASK, NO_PRIO)
+    return pr.min(axis=-1)
+
+
+def effective_probe(table: jax.Array, keys: jax.Array, groups: jax.Array,
+                    wave: jax.Array, fine: jax.Array) -> jax.Array:
+    """Per-op probe honoring a per-op granularity selector ``fine`` (bool).
+
+    ``fine`` may be a scalar python bool (static granularity config) or a
+    per-op boolean array (auto-granularity: per-record fine_mode gathered for
+    each op)."""
+    if isinstance(fine, bool):
+        return (probe(table, keys, groups, wave) if fine
+                else probe_any_group(table, keys, wave))
+    f = probe(table, keys, groups, wave)
+    c = probe_any_group(table, keys, wave)
+    return jnp.where(fine, f, c)
+
+
+def lazy_decayed(heat: jax.Array, heat_wave: jax.Array, keys: jax.Array,
+                 wave: jax.Array, decay: float) -> jax.Array:
+    """Gather heat[keys] with exponential decay applied lazily.
+
+    heat semantics: an EWMA that would be multiplied by ``decay`` every wave.
+    Rather than touching the whole table each wave, we record the wave of the
+    last touch and apply decay**(now - last) at gather time.
+    """
+    k = jnp.where(keys >= 0, keys, OOB_KEY)
+    h = heat.at[k].get(mode="fill", fill_value=0.0)
+    lw = heat_wave.at[k].get(mode="fill", fill_value=0)
+    dt = jnp.maximum(wave.astype(jnp.int32) - lw, 0).astype(jnp.float32)
+    return h * jnp.power(jnp.float32(decay), dt)
+
+
+def touch_heat(heat: jax.Array, heat_wave: jax.Array, keys: jax.Array,
+               add: jax.Array, wave: jax.Array, decay: float,
+               mask: jax.Array):
+    """Scatter-update heats for touched records: decayed + add.
+
+    Duplicate keys within the same wave: adds accumulate on top of one decayed
+    base (scatter-add after a scatter of the decayed base).  Returns (heat,
+    heat_wave)."""
+    k = jnp.where(mask, keys, OOB_KEY).reshape(-1)
+    decayed = lazy_decayed(heat, heat_wave, keys, wave, decay).reshape(-1)
+    # First settle the decayed base for every touched record (duplicates write
+    # the same value; unordered scatter is fine), then accumulate adds.
+    heat = heat.at[k].set(jnp.where(mask.reshape(-1), decayed, 0.0),
+                          mode="drop")
+    heat = heat.at[k].add(jnp.where(mask.reshape(-1), add.reshape(-1), 0.0),
+                          mode="drop")
+    heat_wave = heat_wave.at[k].set(wave.astype(jnp.int32), mode="drop")
+    return heat, heat_wave
+
+
+def hash01(wave: jax.Array, lane_op_ids: jax.Array) -> jax.Array:
+    """Deterministic per-(wave, lane, op) uniform in [0, 1) — the stateless
+    randomness used by the phase-overlap thinning (no PRNG threading)."""
+    h = (lane_op_ids.astype(jnp.uint32) * jnp.uint32(0x9E3779B9)
+         + wave.astype(jnp.uint32) * jnp.uint32(0x85EBCA6B))
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(0x45D9F3B)
+    h = h ^ (h >> 16)
+    return h.astype(jnp.float32) / jnp.float32(2 ** 32)
+
+
+def lane_op_ids(T: int, K: int) -> jax.Array:
+    return (jnp.arange(T * K, dtype=jnp.uint32)).reshape(T, K)
+
+
+def cell_counts(keys: jax.Array, groups: jax.Array, G: int,
+                mask: jax.Array) -> jax.Array:
+    """#ops in this wave hitting the same (record, group), per op (0 where
+    masked).  Sort-based — no O(n_records) table."""
+    cell = jnp.where(mask, keys * G + groups, jnp.int32(0x7FFFFFFF))
+    flat = cell.reshape(-1)
+    s = jnp.sort(flat)
+    lo = jnp.searchsorted(s, flat, side="left")
+    hi = jnp.searchsorted(s, flat, side="right")
+    return jnp.where(mask.reshape(-1), (hi - lo),
+                     0).reshape(keys.shape).astype(jnp.float32)
+
+
+def first_true_index(flags: jax.Array, size: int) -> jax.Array:
+    """Index of first True along the last axis, or ``size`` if none."""
+    idx = jnp.arange(size, dtype=jnp.int32)
+    return jnp.min(jnp.where(flags, idx, size), axis=-1).astype(jnp.int32)

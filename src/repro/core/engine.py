@@ -1,0 +1,231 @@
+"""The wave executor: generation -> validation -> commit -> retry, under scan.
+
+One *wave* simulates all T threads each running one transaction concurrently
+(DESIGN.md section 2).  The executor is a single jitted ``lax.scan`` whose
+carry is the whole engine state (store, retry buffer, metrics), so a full
+benchmark datapoint (thousands of waves) is one XLA program.
+
+Throughput model
+----------------
+Each lane accrues simulated microseconds from the CostModel: committed
+transactions cost their full execution; aborted optimistic transactions waste
+their full execution (validation is at the end); aborted eager mechanisms
+(2PL, SwissTM write conflicts, Adaptive's pessimistic records) cut losses at
+the first conflicting op.  Reported throughput = commits / (sum(lane_time)/T),
+i.e. committed transactions per simulated wall-microsecond with T threads.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Optional, Protocol
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import claims
+from repro.core import types as t
+from repro.core.cc import VALIDATORS, ValidationResult
+from repro.core.types import (EngineConfig, EngineState, StoreState, TxnBatch,
+                              engine_state_init)
+
+
+class Workload(Protocol):
+    """What the engine needs from a workload (YCSB, TPC-C, ...)."""
+    n_records: int
+    n_groups: int
+    n_cols: int
+    n_rings: int
+    n_txn_types: int
+    slots: int
+
+    def init_store(self, track_values: bool) -> StoreState: ...
+
+    def gen(self, rng: jax.Array, wave: jax.Array, lanes: int,
+            ring_tails: jax.Array) -> tuple[TxnBatch, jax.Array]: ...
+
+
+def _kappa(cfg: EngineConfig, res: ValidationResult) -> jax.Array:
+    c = cfg.cost
+    if cfg.cc == t.CC_OCC or cfg.cc == t.CC_AUTOGRAN:
+        return jnp.float32(c.kappa_occ)
+    if cfg.cc == t.CC_TICTOC:
+        return jnp.float32(c.kappa_tictoc)
+    if cfg.cc == t.CC_2PL:
+        return jnp.float32(c.kappa_2pl)
+    if cfg.cc == t.CC_SWISS:
+        return jnp.float32(c.kappa_swiss)
+    if cfg.cc == t.CC_ADAPTIVE:
+        return (c.kappa_adaptive_opt
+                + res.pess_frac * (c.kappa_adaptive_pess
+                                   - c.kappa_adaptive_opt))
+    raise ValueError(f"unknown cc {cfg.cc}")
+
+
+def _optimistic(cfg: EngineConfig) -> bool:
+    return cfg.cc in (t.CC_OCC, t.CC_TICTOC, t.CC_SWISS, t.CC_AUTOGRAN,
+                      t.CC_ADAPTIVE)
+
+
+def apply_values(values: jax.Array, batch: TxnBatch, commit: jax.Array,
+                 prio: jax.Array) -> jax.Array:
+    """Install committed writes in wave-serialization (ascending prio) order.
+
+    Exactness over speed: lanes are applied sequentially in priority order and
+    a lane's ops in slot order, so the result matches a serial execution of
+    the committed transactions — this is what the serializability property
+    tests check the CC mechanisms against.  Only used when track_values=True
+    (correctness tests / semantic demos), never in the throughput benchmarks.
+    """
+    order = jnp.argsort(prio)
+    K = batch.slots
+
+    def lane_step(vals, i):
+        ok = commit[i]
+        for k in range(K):
+            key, col = batch.op_key[i, k], batch.op_col[i, k]
+            kind, v = batch.op_kind[i, k], batch.op_val[i, k]
+            kk = jnp.where(ok & (kind == t.WRITE) & (key >= 0), key,
+                           t.OOB_KEY)
+            vals = vals.at[kk, col].set(v, mode="drop")
+            ka = jnp.where(ok & (kind == t.ADD) & (key >= 0), key, t.OOB_KEY)
+            vals = vals.at[ka, col].add(v, mode="drop")
+        return vals, None
+
+    values, _ = jax.lax.scan(lane_step, values, order)
+    return values
+
+
+def make_wave_step(cfg: EngineConfig, workload: Workload) -> Callable:
+    validator = VALIDATORS[cfg.cc]
+    c = cfg.cost
+    T = cfg.lanes
+
+    def wave_step(state: EngineState, _):
+        rng, rng_gen, rng_perm = jax.random.split(state.rng, 3)
+        wave = state.wave
+
+        fresh, tails = workload.gen(rng_gen, wave, T, state.store.ring_tails)
+        # Lanes with an aborted transaction retry it; the rest draw fresh.
+        sel = state.pending_live
+        batch = jax.tree.map(
+            lambda p, f: jnp.where(
+                sel.reshape((T,) + (1,) * (p.ndim - 1)), p, f),
+            state.pending, fresh)
+        age = jnp.where(sel, state.age, 0)
+        store = dataclasses.replace(state.store, ring_tails=tails)
+
+        perm = jax.random.permutation(rng_perm, T).astype(jnp.uint32)
+        prio = claims.prio16(age, perm, use_age=(cfg.cc == t.CC_SWISS))
+
+        store, res = validator(store, batch, prio, wave, cfg)
+        commit = res.commit
+
+        if cfg.track_values:
+            vals = apply_values(store.values, batch, commit, prio)
+            store = dataclasses.replace(store, values=vals)
+
+        # ---- cost model ----
+        kappa = _kappa(cfg, res)
+        n_ops = batch.n_ops.astype(jnp.float32)
+        n_reads = (batch.is_read() & batch.live()).sum(axis=1).astype(
+            jnp.float32)
+        t_exec = c.c_txn + n_ops * c.c_op * kappa
+        if _optimistic(cfg):
+            t_exec = t_exec + n_reads * c.c_validate
+        # Install contention: committed writers of the same *row* serialize
+        # on its cacheline (lock + version + data write): quadratic chain in
+        # the number of same-row committers.  Mechanism-agnostic, and
+        # granularity-independent — a row's version words share a cacheline
+        # whether there are one or two of them (the paper's "fine-grained
+        # timestamps show no measurable slowdown").
+        wmask = batch.is_write() & batch.live() & commit[:, None]
+        n_w = claims.cell_counts(batch.op_key,
+                                 jnp.zeros_like(batch.op_group), 1, wmask)
+        # Concurrent readers of the line interleave their probes with the
+        # writer chain, stretching each hold (the 8-socket effect that bends
+        # every optimistic curve past ~96 threads in the paper's Fig 3a).
+        rmask = batch.is_read() & batch.live()
+        n_r = claims.cell_counts(batch.op_key,
+                                 jnp.zeros_like(batch.op_group), 1, rmask)
+        install_pen = (0.5 * jnp.float32(c.lam_w)
+                       * jnp.maximum(n_w - 1.0, 0.0)
+                       * (1.0 + 0.15 * n_r)).sum(axis=1)
+        t_commit = t_exec + res.ext_penalty + install_pen
+        if res.eager:
+            done = jnp.minimum(res.first_conflict.astype(jnp.float32), n_ops)
+            t_abort = c.c_txn + done * c.c_op * kappa + c.c_abort + c.backoff
+        else:
+            t_abort = t_exec + c.c_abort + c.backoff
+        lane_dt = jnp.where(commit, t_commit, t_abort)
+
+        # ---- metrics + retry bookkeeping ----
+        commits_by_type = state.commits_by_type.at[batch.txn_type].add(
+            commit.astype(state.commits_by_type.dtype))
+        new_state = EngineState(
+            rng=rng,
+            wave=wave + 1,
+            store=store,
+            pending=batch,
+            pending_live=~commit,
+            age=jnp.where(commit, 0, age + 1),
+            lane_time=state.lane_time + lane_dt,
+            commits=state.commits + commit.sum().astype(state.commits.dtype),
+            aborts=state.aborts + (~commit).sum().astype(state.aborts.dtype),
+            commits_by_type=commits_by_type,
+            wasted_time=state.wasted_time
+                        + jnp.where(commit, 0.0, lane_dt).sum(),
+            ext_events=state.ext_events + res.ext_count,
+        )
+        ys = (commit.sum().astype(jnp.int32),
+              (~commit).sum().astype(jnp.int32))
+        return new_state, ys
+
+    return wave_step
+
+
+@dataclasses.dataclass
+class SimResult:
+    commits: int
+    aborts: int
+    abort_rate: float
+    throughput: float          # committed txns per simulated microsecond
+    sim_time_us: float
+    commits_by_type: list
+    ext_events: int
+    lanes: int
+    waves: int
+    per_wave_commits: Optional[jax.Array] = None
+    final_state: Optional[EngineState] = None
+
+
+def run(cfg: EngineConfig, workload: Workload, n_waves: int,
+        seed: int = 0, keep_state: bool = False) -> SimResult:
+    """Run a simulation: jit(scan(wave_step)) and summarize."""
+    rng = jax.random.PRNGKey(seed)
+    store = workload.init_store(cfg.track_values)
+    state0 = engine_state_init(cfg, rng, store)
+    step = make_wave_step(cfg, workload)
+
+    @jax.jit
+    def go(state0):
+        return jax.lax.scan(step, state0, None, length=n_waves)
+
+    state, (cw, aw) = go(state0)
+    commits = int(state.commits)
+    aborts = int(state.aborts)
+    total_time = float(state.lane_time.sum())
+    wall = total_time / cfg.lanes if cfg.lanes else 0.0
+    return SimResult(
+        commits=commits,
+        aborts=aborts,
+        abort_rate=aborts / max(commits + aborts, 1),
+        throughput=commits / max(wall, 1e-9),
+        sim_time_us=wall,
+        commits_by_type=[int(x) for x in state.commits_by_type],
+        ext_events=int(state.ext_events),
+        lanes=cfg.lanes,
+        waves=n_waves,
+        per_wave_commits=cw,
+        final_state=state if keep_state else None,
+    )

@@ -1,0 +1,305 @@
+"""Core pytree types for the wave-based transaction engine.
+
+The engine executes transactions in *waves*: a wave is a batch of T lanes, each
+lane running one transaction in lockstep (the TPU analogue of T hardware
+threads).  Everything is a fixed-shape array so the whole simulator jits and
+scans.
+
+Operation encoding
+------------------
+Each transaction is a fixed-length list of K operation slots:
+
+  op_key   int32[T, K]   flat record id (see workloads), -1 or masked = unused
+  op_group int32[T, K]   conflict-unit (timestamp) group within the record.
+                         THIS is where timestamp granularity enters: coarse
+                         granularity maps every column to group 0, fine
+                         granularity maps disjoint column sets to distinct
+                         groups (the paper's contribution).
+  op_col   int32[T, K]   column index (only used when values are tracked)
+  op_kind  int32[T, K]   NOP / READ / WRITE / ADD (ADD = blind commutative
+                         increment; in the write set for versioning purposes
+                         but never aborts against other ADDs)
+  op_val   f32[T, K]     value or delta for WRITE/ADD
+
+Priorities
+----------
+`prio` is a uint32 per lane; *lower wins*.  The in-wave serialization order is
+ascending priority.  Contention managers (SwissTM) encode age in high bits so
+starved transactions win claims.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+# Operation kinds.
+NOP: int = 0
+READ: int = 1
+WRITE: int = 2
+ADD: int = 3  # blind commutative increment (STO-style commutative update)
+
+# Concurrency-control mechanism ids (used by lax.switch in the engine).
+CC_OCC: int = 0
+CC_TICTOC: int = 1
+CC_2PL: int = 2
+CC_SWISS: int = 3
+CC_ADAPTIVE: int = 4
+CC_AUTOGRAN: int = 5
+
+CC_NAMES = {
+    CC_OCC: "occ",
+    CC_TICTOC: "tictoc",
+    CC_2PL: "2pl",
+    CC_SWISS: "swisstm",
+    CC_ADAPTIVE: "adaptive",
+    CC_AUTOGRAN: "autogran",
+}
+CC_IDS = {v: k for k, v in CC_NAMES.items()}
+
+# Priority layout: (inverse-age << AGE_SHIFT) | lane-permutation rank.
+# Lower priority value = earlier in the wave serialization order.
+PRIO_LANE_BITS = 10  # up to 1024 lanes
+PRIO_LANE_MASK = (1 << PRIO_LANE_BITS) - 1
+NO_CLAIM = jnp.uint32(0xFFFFFFFF)
+
+# Masked-op scatter sentinel.  JAX wraps *negative* indices Python-style even
+# under mode="drop"/"fill" (verified in this container: x.at[-1].add(1,
+# mode="drop") hits x[-1]).  A large positive out-of-bounds index is the only
+# value that actually drops on scatter and fills on gather, so every scatter
+# site masks keys to OOB_KEY, never to -1.  (-1 remains the *marker* for an
+# unused op slot in op_key; TxnBatch.live() screens it out of semantics.)
+OOB_KEY: int = 0x7F000000
+
+
+def field(**kw):
+    return dataclasses.field(**kw)
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["op_key", "op_group", "op_col", "op_kind", "op_val",
+                      "txn_type", "n_ops"],
+         meta_fields=[])
+@dataclasses.dataclass
+class TxnBatch:
+    """A wave's worth of transactions (T lanes x K op slots)."""
+    op_key: jax.Array    # int32[T, K]
+    op_group: jax.Array  # int32[T, K]
+    op_col: jax.Array    # int32[T, K]
+    op_kind: jax.Array   # int32[T, K]
+    op_val: jax.Array    # f32[T, K]
+    txn_type: jax.Array  # int32[T]      workload-defined transaction type
+    n_ops: jax.Array     # int32[T]      number of live ops (for the cost model)
+
+    @property
+    def lanes(self) -> int:
+        return self.op_key.shape[0]
+
+    @property
+    def slots(self) -> int:
+        return self.op_key.shape[1]
+
+    def is_read(self) -> jax.Array:
+        return self.op_kind == READ
+
+    def is_write(self) -> jax.Array:
+        """Version-bumping accesses (WRITE and ADD)."""
+        return (self.op_kind == WRITE) | (self.op_kind == ADD)
+
+    def is_plain_write(self) -> jax.Array:
+        return self.op_kind == WRITE
+
+    def is_add(self) -> jax.Array:
+        return self.op_kind == ADD
+
+    def live(self) -> jax.Array:
+        return (self.op_kind != NOP) & (self.op_key >= 0)
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["values", "wts", "rts", "claim_w", "claim_r",
+                      "pess_mode", "abort_heat", "fine_mode", "false_heat",
+                      "heat_wave", "ring_tails"],
+         meta_fields=[])
+@dataclasses.dataclass
+class StoreState:
+    """The database: values + version metadata + CC bookkeeping tables.
+
+    All tables are flat over a unified record space (workloads lay out their
+    tables at offsets inside [0, n_records)).
+
+    wts/rts are the paper's version timestamps, shape [n_records, G] where G is
+    the max number of timestamp groups per record (1 = coarse, 2 = the paper's
+    fine granularity).  `claim_*` are wave-scoped claim tables (see claims.py)
+    that never need resetting thanks to a monotone wave tag.
+    """
+    values: jax.Array      # f32[n_records, n_cols] (may be zero-width when untracked)
+    wts: jax.Array         # uint32[n_records, G]   write timestamps
+    rts: jax.Array         # uint32[n_records, G]   read timestamps (TicToc only)
+    claim_w: jax.Array     # uint32[n_records, G]   writer claim table
+    claim_r: jax.Array     # uint32[n_records, G]   reader claim table (2PL/Swiss)
+    pess_mode: jax.Array   # bool[n_records]        Adaptive: pessimistic mode
+    abort_heat: jax.Array  # f32[n_records]         Adaptive: abort EWMA
+    fine_mode: jax.Array   # bool[n_records]        AutoGran: fine granularity on
+    false_heat: jax.Array  # f32[n_records]         AutoGran: false-conflict EWMA
+    heat_wave: jax.Array   # int32[n_records]       last wave a heat was touched
+                           #   (lazy exponential decay: full-table decay per wave
+                           #    would be O(n_records) memory traffic; instead decay
+                           #    decay**(wave - heat_wave) is applied at touch time)
+    ring_tails: jax.Array  # int32[n_rings]         append-ring cursors (inserts)
+
+    @property
+    def n_records(self) -> int:
+        return self.wts.shape[0]
+
+    @property
+    def n_groups(self) -> int:
+        return self.wts.shape[1]
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["rng", "wave", "store", "pending", "pending_live",
+                      "age", "lane_time", "commits", "aborts",
+                      "commits_by_type", "wasted_time", "ext_events"],
+         meta_fields=[])
+@dataclasses.dataclass
+class EngineState:
+    """Carried state of the wave scan."""
+    rng: jax.Array          # PRNG key
+    wave: jax.Array         # uint32 scalar, current wave index
+    store: StoreState
+    pending: TxnBatch       # retry buffer: aborted txns re-run next wave
+    pending_live: jax.Array  # bool[T] lane has a pending (aborted) txn
+    age: jax.Array          # int32[T] retry count of the lane's current txn
+    lane_time: jax.Array    # f32[T]   simulated microseconds consumed per lane
+    commits: jax.Array      # int64 scalar
+    aborts: jax.Array       # int64 scalar
+    commits_by_type: jax.Array  # int64[n_txn_types]
+    wasted_time: jax.Array  # f32 scalar, simulated time lost to aborts
+    ext_events: jax.Array   # int64 scalar, TicToc rts-extension CAS events
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    """Simulated-time constants (microseconds).  See DESIGN.md section 4.
+
+    The paper measures wall-clock throughput of a C++ STM on a 192-core Xeon;
+    we reproduce the *structure* of those curves with a calibrated per-op cost
+    model.  All constants live here so the calibration is auditable.
+    """
+    c_op: float = 0.12          # base cost of one record access
+    c_txn: float = 0.80         # per-transaction fixed overhead (setup/commit)
+    c_validate: float = 0.03    # OCC per-read-op validation pass cost
+    kappa_occ: float = 1.0
+    kappa_tictoc: float = 1.12  # TicToc read-timestamp maintenance: the
+                                # paper runs the 128-bit (uncompressed)
+                                # variant (their section 3.2) — a two-word
+                                # atomic per tracked read
+    kappa_2pl: float = 1.38     # rw-lock acquire/release writes shared cachelines
+    kappa_swiss: float = 1.18   # eager w-locks + CM table updates
+    kappa_adaptive_opt: float = 1.12   # mode check on the optimistic path
+    kappa_adaptive_pess: float = 1.42  # rw-lock path
+    c_ext: float = 0.04        # uncontended rts-extension CAS (+fence); the
+                                # 128-bit two-word variant the paper runs
+    lam_ext: float = 1.35       # TicToc rts-extension contention: extra cost per
+                                # concurrent extender of the same (record, group)
+    lam_w: float = 0.55         # install contention: committed writers of the
+                                # same (record, group) serialize on its
+                                # cacheline (all mechanisms; the universal
+                                # optimistic degradation at high core counts)
+    opt_overlap: float = 0.60    # an optimistic read is vulnerable between
+                                 # first read and commit-time validation; a
+                                 # concurrent writer's install lands in that
+                                 # window with this probability (lockstep
+                                 # waves over-align the windows)
+    phase_overlap: float = 0.55  # eager-lock conflicts require temporal
+                                 # overlap of hold windows; the lockstep wave
+                                 # over-aligns them — conflicts are thinned
+                                 # to this probability (2PL/Swiss/Adaptive-
+                                 # pessimistic only; see DESIGN.md section 4)
+    c_abort: float = 0.35       # abort bookkeeping + backoff
+    backoff: float = 0.25       # inter-retry backoff
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Static configuration of a simulation run."""
+    cc: int                     # CC_* mechanism id
+    lanes: int                  # T: number of simulated threads
+    slots: int                  # K: op slots per transaction
+    n_records: int
+    n_groups: int               # G: timestamp groups per record (physical width)
+    n_cols: int                 # value columns (0 = untracked)
+    n_txn_types: int
+    granularity: int = 1        # 0 = coarse (one timestamp per row),
+                                # 1 = fine (the paper's mechanism).
+                                # Claims are always scattered at fine group
+                                # resolution; granularity selects the probe
+                                # width (see claims.effective_probe).
+    n_rings: int = 1
+    track_values: bool = False
+    cost: CostModel = dataclasses.field(default_factory=CostModel)
+    # Adaptive CC state machine:
+    adapt_up: float = 0.20      # abort-heat threshold -> pessimistic
+    adapt_down: float = 0.02    # decay floor -> back to optimistic
+    adapt_decay: float = 0.95
+    # Auto-granularity (beyond-paper, paper section 5 future work):
+    autogran_up: float = 0.10
+    autogran_decay: float = 0.97
+    use_pallas: bool = False    # route validate/commit through Pallas kernels
+
+
+def txn_batch_zeros(lanes: int, slots: int) -> TxnBatch:
+    zi = jnp.zeros((lanes, slots), jnp.int32)
+    return TxnBatch(
+        op_key=jnp.full((lanes, slots), -1, jnp.int32),
+        op_group=zi, op_col=zi, op_kind=zi,
+        op_val=jnp.zeros((lanes, slots), jnp.float32),
+        txn_type=jnp.zeros((lanes,), jnp.int32),
+        n_ops=jnp.zeros((lanes,), jnp.int32),
+    )
+
+
+def store_init(n_records: int, n_groups: int, n_cols: int,
+               n_rings: int = 1, values: Optional[jax.Array] = None,
+               need_rts: bool = True) -> StoreState:
+    G = n_groups
+    if values is None:
+        values = jnp.zeros((n_records, max(n_cols, 1)), jnp.float32)
+    return StoreState(
+        values=values,
+        wts=jnp.zeros((n_records, G), jnp.uint32),
+        rts=(jnp.zeros((n_records, G), jnp.uint32) if need_rts
+             else jnp.zeros((1, 1), jnp.uint32)),
+        claim_w=jnp.full((n_records, G), NO_CLAIM, jnp.uint32),
+        claim_r=jnp.full((n_records, G), NO_CLAIM, jnp.uint32),
+        pess_mode=jnp.zeros((n_records,), jnp.bool_),
+        abort_heat=jnp.zeros((n_records,), jnp.float32),
+        fine_mode=jnp.zeros((n_records,), jnp.bool_),
+        false_heat=jnp.zeros((n_records,), jnp.float32),
+        heat_wave=jnp.zeros((n_records,), jnp.int32),
+        ring_tails=jnp.zeros((n_rings,), jnp.int32),
+    )
+
+
+def engine_state_init(cfg: EngineConfig, rng: jax.Array,
+                      store: StoreState) -> EngineState:
+    T = cfg.lanes
+    return EngineState(
+        rng=rng,
+        wave=jnp.uint32(0),
+        store=store,
+        pending=txn_batch_zeros(T, cfg.slots),
+        pending_live=jnp.zeros((T,), jnp.bool_),
+        age=jnp.zeros((T,), jnp.int32),
+        lane_time=jnp.zeros((T,), jnp.float32),
+        commits=jnp.int64(0) if jax.config.jax_enable_x64 else jnp.int32(0),
+        aborts=jnp.int64(0) if jax.config.jax_enable_x64 else jnp.int32(0),
+        commits_by_type=jnp.zeros((cfg.n_txn_types,),
+                                  jnp.int64 if jax.config.jax_enable_x64 else jnp.int32),
+        wasted_time=jnp.float32(0),
+        ext_events=jnp.int32(0),
+    )

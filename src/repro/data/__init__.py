@@ -1,0 +1,3 @@
+from repro.data.pipeline import make_batch
+
+__all__ = ["make_batch"]

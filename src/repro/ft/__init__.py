@@ -1,0 +1,3 @@
+from repro.ft.failures import FailureInjector
+
+__all__ = ["FailureInjector"]

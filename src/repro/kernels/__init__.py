@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the system's compute hot spots.
+
+Layout per the repo convention: one ``<name>.py`` per kernel containing the
+``pl.pallas_call`` + BlockSpec tiling, ``ops.py`` with the jit'd public
+wrappers (auto-selecting kernel vs reference by backend), and ``ref.py`` with
+the pure-jnp oracles every kernel is validated against (interpret mode on CPU,
+shape/dtype sweeps in tests/test_kernels.py).
+
+Kernels:
+  occ_validate    OCC read-set validation: scalar-prefetch row gather + compare
+  occ_commit      version-bump scatter with aliased output
+  flash_attention blocked causal attention (GQA, optional sliding window)
+  rglru_scan      RG-LRU linear recurrence (recurrentgemma)
+  rwkv6_scan      RWKV-6 wkv state recurrence (data-dependent decay)
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

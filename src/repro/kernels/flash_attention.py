@@ -1,0 +1,125 @@
+"""Blocked (flash) attention kernel: causal, GQA, optional sliding window.
+
+Grid (B*Hq, Sq/bq, Sk/bk) with the key dimension innermost ("arbitrary"
+semantics); running max/denominator live in VMEM scratch and the output block
+is finalized on the last key step.  K/V BlockSpec index maps fold the GQA
+head mapping (kv_head = q_head // (Hq/Hkv)) so grouped heads share K/V DMAs.
+Block shapes are MXU-aligned (q/k blocks 128x128 by default, head_dim padded
+to a lane multiple by the wrapper in ops.py).
+
+Sliding-window support masks per-element and skips key blocks that fall
+entirely outside [q - window + 1, q] — with window << Sk (mixtral-style SWA)
+the skipped blocks make long-context prefill linear in Sk.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(causal: bool, window: int | None, scale: float, sk_valid: int,
+            delta: int, bq: int, bk: int, nk: int,
+            q_ref, k_ref, v_ref, o_ref, acc, m_s, l_s):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + delta
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+
+    # Whole-block skip tests (static grid; dynamic predicate).
+    oob = jnp.bool_(False)
+    if causal:
+        oob |= ki * bk > qi * bq + (bq - 1) + delta          # strictly above
+    if window is not None:
+        oob |= (ki + 1) * bk - 1 <= qi * bq + delta - window  # all expired
+
+    @pl.when(~oob)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                     # [bq, D]
+        k = k_ref[0].astype(jnp.float32)                     # [bk, D]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        mask = k_pos < sk_valid
+        if causal:
+            mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_s[:, 0]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        l_new = l_s[:, 0] * alpha + p.sum(axis=1)
+        v = v_ref[0].astype(jnp.float32)                     # [bk, D]
+        acc[...] = acc[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_s[:, 0] = m_new
+        l_s[:, 0] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_s[:, 0], 1e-30)
+        o_ref[0] = (acc[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, window: int | None = None,
+                           scale: float | None = None, sq_valid: int,
+                           sk_valid: int, block_q: int = 128,
+                           block_k: int = 128,
+                           interpret: bool = False) -> jax.Array:
+    """q: [B, Hq, Sq, D] (Sq, Sk already padded to block multiples);
+    k, v: [B, Hkv, Sk, D].  sq_valid/sk_valid = unpadded lengths; query row i
+    (i < sq_valid) sits at absolute position i + (sk_valid - sq_valid),
+    end-aligned with the keys (prefill and decode conventions agree)."""
+    B, Hq, Sq, D = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    rep = Hq // Hkv
+    bq, bk = min(block_q, Sq), min(block_k, Sk)
+    nq, nk = Sq // bq, Sk // bk
+    delta = sk_valid - sq_valid  # end-aligned absolute positions
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+
+    qr = q.reshape(B * Hq, Sq, D)
+    kr = k.reshape(B * Hkv, Sk, D)
+    vr = v.reshape(B * Hkv, Sk, D)
+
+    def kv_index(bh, qi, ki, *_):
+        b, h = bh // Hq, bh % Hq
+        return (b * Hkv + h // rep, ki, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, causal, window, scale, sk_valid, delta,
+                          bq, bk, nk),
+        grid=(B * Hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, D), kv_index),
+            pl.BlockSpec((1, bk, D), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(B, Hq, Sq, D)

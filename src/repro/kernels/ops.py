@@ -1,0 +1,151 @@
+"""Public kernel entry points.
+
+Each op auto-selects the execution path:
+  - on TPU: the Pallas kernel (compiled);
+  - elsewhere (this CPU container, tests): either the jnp reference (fast,
+    used inside jitted models) or the Pallas kernel in interpret mode
+    (tests/test_kernels.py validates kernel == reference across shape/dtype
+    sweeps).
+
+Set ``FORCE`` ("pallas" | "ref") or pass use_pallas/interpret explicitly to
+override; models route through these wrappers so the same model code runs on
+both backends.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.occ_commit import occ_commit_pallas
+from repro.kernels.occ_validate import occ_validate_pallas
+from repro.kernels.rglru_scan import rglru_pallas
+from repro.kernels.rwkv6_scan import rwkv6_pallas
+
+FORCE = os.environ.get("REPRO_KERNELS", "")  # "", "pallas", "ref"
+
+
+def _use_pallas(use_pallas) -> bool:
+    if use_pallas is not None:
+        return use_pallas
+    if FORCE == "pallas":
+        return True
+    if FORCE == "ref":
+        return False
+    return jax.default_backend() == "tpu"
+
+
+def _interp() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+# ------------------------------------------------------------------ OCC
+def occ_validate(claim_w, keys, groups, myprio, check, inv_wave, fine: bool,
+                 use_pallas=None):
+    if _use_pallas(use_pallas):
+        return occ_validate_pallas(claim_w, keys, groups,
+                                   myprio.astype(jnp.uint32), check,
+                                   inv_wave, fine, interpret=_interp())
+    return ref.occ_validate(claim_w, keys, groups, myprio, check,
+                            inv_wave, fine)
+
+
+def occ_commit(wts, keys, groups, do, use_pallas=None):
+    if _use_pallas(use_pallas):
+        return occ_commit_pallas(wts, keys, groups, do, interpret=_interp())
+    return ref.occ_commit(wts, keys, groups, do)
+
+
+# ------------------------------------------------------- flash attention
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: int | None = None, scale: float | None = None,
+                    block_q: int = 128, block_k: int = 128, use_pallas=None):
+    """q: [B, Hq, Sq, D]; k, v: [B, Hkv, Sk, D].  See ref.attention."""
+    if not _use_pallas(use_pallas):
+        return ref.attention(q, k, v, causal=causal, window=window,
+                             scale=scale)
+    B, Hq, Sq, D = q.shape
+    Sk = k.shape[2]
+    bq, bk = min(block_q, max(Sq, 8)), min(block_k, max(Sk, 8))
+    qp = _pad_to(q, 2, bq)
+    kp = _pad_to(k, 2, bk)
+    vp = _pad_to(v, 2, bk)
+    out = flash_attention_pallas(qp, kp, vp, causal=causal, window=window,
+                                 scale=scale, sq_valid=Sq, sk_valid=Sk,
+                                 block_q=bq, block_k=bk,
+                                 interpret=_interp())
+    return out[:, :, :Sq, :]
+
+
+# ------------------------------------------------------------- RG-LRU
+def rglru(log_a, x, h0=None, chunk: int = 2048, use_pallas=None):
+    """See ref.rglru.  Chunks long sequences, carrying h between chunks."""
+    B, S, D = x.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, D), jnp.float32)
+    if not _use_pallas(use_pallas):
+        return ref.rglru(log_a, x, h0)
+    if S <= chunk:
+        return rglru_pallas(log_a, x, h0, interpret=_interp())
+    n = -(-S // chunk)
+    la = _pad_to(log_a, 1, chunk).reshape(B, n, chunk, D)
+    xx = _pad_to(x, 1, chunk).reshape(B, n, chunk, D)
+
+    def step(h, inp):
+        la_c, x_c = inp
+        hs, h = rglru_pallas(la_c, x_c, h, interpret=_interp())
+        return h, hs
+
+    h_last, hs = jax.lax.scan(
+        step, h0, (jnp.moveaxis(la, 1, 0), jnp.moveaxis(xx, 1, 0)))
+    hs = jnp.moveaxis(hs, 0, 1).reshape(B, n * chunk, D)[:, :S]
+    return hs, h_last
+
+
+# ------------------------------------------------------------- RWKV-6
+def rwkv6(r, k, v, w, u, s0=None, chunk: int = 2048, use_pallas=None):
+    """See ref.rwkv6.  Chunks long sequences, carrying the state."""
+    B, H, S, Dk = r.shape
+    Dv = v.shape[-1]
+    if s0 is None:
+        s0 = jnp.zeros((B, H, Dk, Dv), jnp.float32)
+    if not _use_pallas(use_pallas):
+        return ref.rwkv6(r, k, v, w, u, s0)
+    if S <= chunk:
+        return rwkv6_pallas(r, k, v, w, u, s0, interpret=_interp())
+    n = -(-S // chunk)
+
+    def pad(x, const=0.0):
+        p = (-S) % chunk
+        if p:
+            widths = [(0, 0)] * x.ndim
+            widths[2] = (0, p)
+            x = jnp.pad(x, widths, constant_values=const)
+        return x.reshape(B, H, n, chunk, x.shape[-1])
+
+    # Padded steps must be identity on the state: w=1 (keep), k=0 (no add).
+    rr, kk, vv, ww = pad(r), pad(k), pad(v), pad(w, const=1.0)
+
+    def step(s, inp):
+        r_c, k_c, v_c, w_c = inp
+        out, s = rwkv6_pallas(r_c, k_c, v_c, w_c, u, s, interpret=_interp())
+        return s, out
+
+    s_last, outs = jax.lax.scan(
+        step, s0, tuple(jnp.moveaxis(t, 2, 0) for t in (rr, kk, vv, ww)))
+    outs = jnp.moveaxis(outs, 0, 2).reshape(B, H, n * chunk, Dv)[:, :, :S]
+    return outs, s_last

@@ -1,0 +1,126 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------- OCC kernels
+OOB_KEY = 0x7F000000  # see core/types.py — negative indices wrap, OOB drops
+
+
+def occ_validate(claim_w: jax.Array, keys: jax.Array, groups: jax.Array,
+                 myprio: jax.Array, check: jax.Array,
+                 inv_wave: jax.Array, fine: bool) -> jax.Array:
+    """Conflict flags for read-set validation (see core/claims.py probe)."""
+    k = jnp.where(keys >= 0, keys, OOB_KEY)
+    rows = claim_w.at[k, :].get(mode="fill", fill_value=0xFFFFFFFF)
+    live = (rows >> 16) == inv_wave
+    pr = jnp.where(live, rows & 0xFFFF, jnp.uint32(0xFFFF))
+    if fine:
+        g1 = jnp.take_along_axis(pr, groups[..., None], axis=-1)[..., 0]
+        wprio = g1
+    else:
+        wprio = pr.min(axis=-1)
+    return check & (wprio < myprio)
+
+
+def occ_commit(wts: jax.Array, keys: jax.Array, groups: jax.Array,
+               do: jax.Array) -> jax.Array:
+    """Bump version of each (key, group) once per committed write op."""
+    k = jnp.where(do & (keys >= 0), keys, OOB_KEY)
+    return wts.at[k.reshape(-1), groups.reshape(-1)].add(jnp.uint32(1),
+                                                         mode="drop")
+
+
+# ------------------------------------------------------------ flash attention
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, window: int | None = None,
+              scale: float | None = None) -> jax.Array:
+    """Reference attention.
+
+    q: [B, Hq, Sq, D]; k, v: [B, Hkv, Sk, D] with Hq % Hkv == 0 (GQA).
+    window: sliding-window size (keys within [i - window + 1, i]).
+    For decode (Sq=1 with a cache of Sk), pass causal=False and window=None
+    (the cache is already the visible set).
+    """
+    B, Hq, Sq, D = q.shape
+    Hkv = k.shape[1]
+    rep = Hq // Hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    s = scale if scale is not None else 1.0 / (D ** 0.5)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * s
+    Sk = k.shape[2]
+    qi = jnp.arange(Sq)[:, None] + (Sk - Sq)  # align ends (prefill/decode)
+    ki = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= ki <= qi
+    if window is not None:
+        mask &= ki > qi - window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+# ----------------------------------------------------------------- RG-LRU
+def rglru(log_a: jax.Array, x: jax.Array,
+          h0: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+    """RG-LRU linear recurrence (Griffin/recurrentgemma):
+
+        h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * x_t,   a_t = exp(log_a_t)
+
+    log_a, x: [B, S, D] (log_a <= 0).  Returns (h [B,S,D], h_last [B,D]).
+    """
+    a = jnp.exp(log_a.astype(jnp.float32))
+    gx = jnp.sqrt(jnp.clip(1.0 - a * a, 0.0, None)) * x.astype(jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros(x.shape[:1] + x.shape[2:], jnp.float32)
+
+    def step(h, inp):
+        at, gxt = inp
+        h = at * h + gxt
+        return h, h
+
+    aT = jnp.moveaxis(a, 1, 0)
+    gT = jnp.moveaxis(gx, 1, 0)
+    h_last, hs = jax.lax.scan(step, h0.astype(jnp.float32), (aT, gT))
+    return jnp.moveaxis(hs, 0, 1).astype(x.dtype), h_last
+
+
+# ----------------------------------------------------------------- RWKV-6
+def rwkv6(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+          u: jax.Array, s0: jax.Array | None = None
+          ) -> tuple[jax.Array, jax.Array]:
+    """RWKV-6 ("Finch") wkv recurrence with data-dependent decay.
+
+    r,k,w: [B, H, S, Dk]; v: [B, H, S, Dv]; u: [H, Dk] (bonus).
+    State S_t [Dk, Dv]:  out_t = (S_{t-1} + (u*k_t) v_t^T)^T r_t
+                         S_t   = diag(w_t) S_{t-1} + k_t v_t^T
+    w in (0,1).  Returns (out [B,H,S,Dv], S_last [B,H,Dk,Dv]).
+    """
+    B, H, S, Dk = r.shape
+    Dv = v.shape[-1]
+    if s0 is None:
+        s0 = jnp.zeros((B, H, Dk, Dv), jnp.float32)
+
+    def step(state, inp):
+        rt, kt, vt, wt, uu = inp
+        kv = kt[:, :, :, None] * vt[:, :, None, :]          # [B,H,Dk,Dv]
+        out = jnp.einsum("bhkv,bhk->bhv",
+                         state + uu[None, :, :, None] * kv, rt)
+        state = wt[:, :, :, None] * state + kv
+        return state, out
+
+    rs = jnp.moveaxis(r.astype(jnp.float32), 2, 0)
+    ks = jnp.moveaxis(k.astype(jnp.float32), 2, 0)
+    vs = jnp.moveaxis(v.astype(jnp.float32), 2, 0)
+    ws = jnp.moveaxis(w.astype(jnp.float32), 2, 0)
+    us = jnp.broadcast_to(u.astype(jnp.float32), (S, H, Dk))
+    s_last, outs = jax.lax.scan(step, s0.astype(jnp.float32),
+                                (rs, ks, vs, ws, us))
+    return jnp.moveaxis(outs, 0, 2).astype(r.dtype), s_last

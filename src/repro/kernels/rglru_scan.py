@@ -1,0 +1,62 @@
+"""RG-LRU recurrence kernel (Griffin / recurrentgemma-9b recurrent blocks).
+
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * x_t,    a_t = exp(log_a_t) in (0,1]
+
+The recurrence is elementwise over the channel dim, so the natural TPU tiling
+is (batch, channel-block): grid (B, D/bd), each step holding a [S, bd] tile of
+log_a and x in VMEM and walking time sequentially on the VPU while the next
+tile's DMA overlaps.  The time loop is VMEM-resident — no HBM traffic inside —
+so the kernel is bandwidth-bound at exactly 2 reads + 1 write per element,
+the roofline optimum for a first-order recurrence.
+
+Long sequences (S > chunk) are chunked by the ops.py wrapper, carrying h
+between chunks; decode (S=1) takes the reference path (a single fma).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(S: int, loga_ref, x_ref, h0_ref, h_ref, hlast_ref):
+    def step(t, h):
+        a = jnp.exp(loga_ref[0, t, :].astype(jnp.float32))
+        gx = jnp.sqrt(jnp.clip(1.0 - a * a, 0.0, None)) \
+            * x_ref[0, t, :].astype(jnp.float32)
+        h = a * h + gx
+        h_ref[0, t, :] = h.astype(h_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, S, step, h0_ref[0, :].astype(jnp.float32))
+    hlast_ref[0, :] = h
+
+
+def rglru_pallas(log_a: jax.Array, x: jax.Array, h0: jax.Array,
+                 block_d: int = 128, interpret: bool = False):
+    """log_a, x: [B, S, D]; h0: [B, D] f32.  Returns (h [B,S,D], h_last)."""
+    B, S, D = x.shape
+    bd = min(block_d, D)
+    grid = (B, D // bd)
+    h, h_last = pl.pallas_call(
+        functools.partial(_kernel, S),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, S, bd), lambda b, di: (b, 0, di)),
+            pl.BlockSpec((1, S, bd), lambda b, di: (b, 0, di)),
+            pl.BlockSpec((1, bd), lambda b, di: (b, di)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, S, bd), lambda b, di: (b, 0, di)),
+            pl.BlockSpec((1, bd), lambda b, di: (b, di)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, D), x.dtype),
+            jax.ShapeDtypeStruct((B, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(log_a, x, h0)
+    return h, h_last

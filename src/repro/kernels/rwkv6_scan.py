@@ -1,0 +1,79 @@
+"""RWKV-6 ("Finch") wkv kernel — data-dependent-decay linear attention.
+
+Per head, the state is a [Dk, Dv] matrix updated per token:
+
+    out_t = (S_{t-1} + (u * k_t) v_t^T)^T r_t
+    S_t   = diag(w_t) S_{t-1} + k_t v_t^T
+
+Grid (B*H,): each step keeps the whole [S, Dk] r/k/w tiles, the [S, Dv] v
+tile, and the [Dk, Dv] state in VMEM and walks time on the VPU (rank-1 update
++ matvec per token).  Head dims are small (64) so the state is 16 KB — the
+VMEM working set is dominated by the sequence tiles, which is why ops.py
+chunks long sequences and carries the state between chunks (this is also the
+decode path: chunk length 1).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(S: int, H: int, r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref,
+            out_ref, slast_ref):
+    u = u_ref[0, :].astype(jnp.float32)                    # [Dk]
+
+    def step(t, state):
+        rt = r_ref[0, t, :].astype(jnp.float32)            # [Dk]
+        kt = k_ref[0, t, :].astype(jnp.float32)
+        vt = v_ref[0, t, :].astype(jnp.float32)            # [Dv]
+        wt = w_ref[0, t, :].astype(jnp.float32)
+        kv = kt[:, None] * vt[None, :]                     # [Dk, Dv]
+        out = ((state + u[:, None] * kv) * rt[:, None]).sum(axis=0)
+        out_ref[0, t, :] = out.astype(out_ref.dtype)
+        return wt[:, None] * state + kv
+
+    s = jax.lax.fori_loop(0, S, step, s0_ref[0].astype(jnp.float32))
+    slast_ref[0] = s
+
+
+def rwkv6_pallas(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+                 u: jax.Array, s0: jax.Array, interpret: bool = False):
+    """r,k,w: [B,H,S,Dk]; v: [B,H,S,Dv]; u: [H,Dk]; s0: [B,H,Dk,Dv] f32.
+    Returns (out [B,H,S,Dv], s_last [B,H,Dk,Dv])."""
+    B, H, S, Dk = r.shape
+    Dv = v.shape[-1]
+    rr = r.reshape(B * H, S, Dk)
+    kk = k.reshape(B * H, S, Dk)
+    vv = v.reshape(B * H, S, Dv)
+    ww = w.reshape(B * H, S, Dk)
+    ss = s0.reshape(B * H, Dk, Dv)
+
+    def head_index(bh):
+        return (bh % H, 0)
+
+    out, s_last = pl.pallas_call(
+        functools.partial(_kernel, S, H),
+        grid=(B * H,),
+        in_specs=[
+            pl.BlockSpec((1, S, Dk), lambda bh: (bh, 0, 0)),
+            pl.BlockSpec((1, S, Dk), lambda bh: (bh, 0, 0)),
+            pl.BlockSpec((1, S, Dv), lambda bh: (bh, 0, 0)),
+            pl.BlockSpec((1, S, Dk), lambda bh: (bh, 0, 0)),
+            pl.BlockSpec((1, Dk), head_index),
+            pl.BlockSpec((1, Dk, Dv), lambda bh: (bh, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, S, Dv), lambda bh: (bh, 0, 0)),
+            pl.BlockSpec((1, Dk, Dv), lambda bh: (bh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, S, Dv), r.dtype),
+            jax.ShapeDtypeStruct((B * H, Dk, Dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(rr, kk, vv, ww, u, ss)
+    return out.reshape(B, H, S, Dv), s_last.reshape(B, H, Dk, Dv)

@@ -1,0 +1,150 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell on 512 placeholder devices, and record the evidence.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-32b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out reports/
+
+Per cell this prints/records:
+  - compiled.memory_analysis()   bytes per device (does it fit 16G v5e HBM?)
+  - compiled.cost_analysis()     HLO flops/bytes (scan bodies counted once —
+                                 see analysis/roofline.py for the corrected
+                                 accounting)
+  - collective bytes parsed from the optimized HLO (trip-count aware)
+
+The txn-engine distributed cell (the paper's system) runs under
+``--arch txn-engine``.
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool) -> dict:
+    import jax
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    if arch == "txn-engine":
+        from repro.core.distributed import (DistConfig, abstract_args,
+                                            make_wave_fn)
+        cfg = DistConfig(n_records=10_000_000, n_groups=2,
+                         lanes_per_shard=64, slots=16)
+        fn = make_wave_fn(cfg, mesh)
+        args = abstract_args(cfg, mesh)
+        lowered = jax.jit(fn).lower(*args)
+    else:
+        from repro import configs
+        from repro.models import steps
+        cfg = configs.get(arch)
+        if shape_name not in cfg.shapes:
+            return {"arch": arch, "shape": shape_name,
+                    "mesh": "multi" if multi_pod else "single",
+                    "status": "skip", "note": cfg.skip_notes}
+        fn, args = steps.build_cell(cfg, shape_name, mesh)
+        lowered = jax.jit(fn).lower(*args)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "status": "ok",
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "flops": cost.get("flops", 0.0),
+        "bytes_accessed": cost.get("bytes accessed", 0.0),
+        "memory": {
+            k: getattr(mem, k, None)
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes")
+        },
+    }
+    try:
+        from repro.analysis.roofline import collective_bytes_from_hlo
+        hlo = compiled.as_text()
+        rec["collective_bytes"] = collective_bytes_from_hlo(hlo)
+        rec["collective_bytes_raw"] = collective_bytes_from_hlo(
+            hlo, dtype_correct=False)
+    except Exception as e:  # HLO text may be huge / parse edge cases
+        rec["collective_bytes_error"] = repr(e)
+    print(f"[dryrun] {arch} x {shape_name} x {rec['mesh']}: "
+          f"lower {t_lower:.1f}s compile {t_compile:.1f}s "
+          f"mem/dev={mem.temp_size_in_bytes/2**30:.2f}GiB temp "
+          f"+ {mem.argument_size_in_bytes/2**30:.2f}GiB args")
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="reports/dryrun")
+    args = ap.parse_args(argv)
+
+    from repro import configs
+
+    cells = []
+    if args.all:
+        for name, cfg in configs.ARCHS.items():
+            for shape in ("train_4k", "prefill_32k", "decode_32k",
+                          "long_500k"):
+                cells.append((name, shape))
+        cells.append(("txn-engine", "wave"))
+    else:
+        cells.append((args.arch, args.shape or "train_4k"))
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            tag = f"{arch}__{shape}__{'multi' if mp else 'single'}"
+            if args.all:
+                # one subprocess per cell: isolates failures and keeps the
+                # 80-cell sweep's memory bounded
+                import subprocess
+                r = subprocess.run(
+                    [sys.executable, "-m", "repro.launch.dryrun",
+                     "--arch", arch, "--shape", shape,
+                     "--mesh", "multi" if mp else "single",
+                     "--out", args.out],
+                    env={**os.environ},
+                )
+                if r.returncode:
+                    failures += 1
+                    print(f"[dryrun] FAIL {tag}", file=sys.stderr)
+                continue
+            try:
+                rec = run_cell(arch, shape, mp)
+            except Exception:
+                rec = {"arch": arch, "shape": shape,
+                       "mesh": "multi" if mp else "single",
+                       "status": "fail",
+                       "error": traceback.format_exc(limit=20)}
+                failures += 1
+                print(f"[dryrun] FAIL {tag}", file=sys.stderr)
+            with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                json.dump(rec, f, indent=1)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

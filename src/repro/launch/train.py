@@ -1,0 +1,159 @@
+"""Fault-tolerant training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-32b --smoke \
+        --steps 50 --ckpt-dir /tmp/ckpt
+
+Structure (the 1000-node story, exercised at CPU scale):
+  - supervisor loop: any step failure (injected or real) rolls back to the
+    last durable checkpoint and resumes — `run_supervised` is the API the
+    fault-tolerance tests drive;
+  - checkpointing: interval + async + atomic (repro.checkpoint), config
+    fingerprint guards against restoring the wrong architecture;
+  - data: stateless `make_batch(step)` — restart/elastic-resume replays the
+    exact stream;
+  - preemption: SIGTERM flushes a checkpoint before exit.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import signal
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class TrainRun:
+    """Everything the supervisor needs to (re)build step state."""
+    cfg: object
+    mesh: object
+    optimizer: object
+    shape: object
+    ckpt: object                    # CheckpointManager
+    injector: object = None
+    log_every: int = 10
+
+    def build(self):
+        from repro.models import model as model_mod
+        from repro.models import steps
+        ts = steps.build_train_step(self.cfg, self.mesh, self.optimizer)
+        return jax.jit(ts, donate_argnums=(0, 1))
+
+    def fresh_state(self, seed: int = 0):
+        from repro.models import model as model_mod
+        params = model_mod.init_params(self.cfg, jax.random.PRNGKey(seed))
+        opt_state = self.optimizer.init(params)
+        return params, opt_state
+
+
+def run_supervised(run: TrainRun, total_steps: int, *, seed: int = 0,
+                   max_restarts: int = 20):
+    """Supervisor loop: train to total_steps surviving failures."""
+    from repro.data import make_batch
+    from repro.ft.failures import SimulatedFailure
+
+    step_fn = run.build()
+    params, opt_state = run.fresh_state(seed)
+    start = 0
+    restored, manifest = run.ckpt.restore_latest(
+        {"params": params, "opt": opt_state})
+    if restored is not None:
+        params, opt_state = restored["params"], restored["opt"]
+        start = manifest["step"]
+        print(f"[train] resumed from step {start}")
+
+    restarts = 0
+    metrics = {}
+    step = start
+    losses = []
+    while step < total_steps:
+        try:
+            batch = make_batch(run.cfg, run.shape, step)
+            params, opt_state, metrics = step_fn(
+                params, opt_state, batch, jnp.int32(step))
+            if run.injector is not None:
+                run.injector.maybe_fail(step)
+            step += 1
+            run.ckpt.maybe_save(step, {"params": params, "opt": opt_state})
+            if step % run.log_every == 0 or step == total_steps:
+                loss = float(metrics["loss"])
+                losses.append((step, loss))
+                print(f"[train] step {step:5d} loss {loss:.4f} "
+                      f"gnorm {float(metrics['gnorm']):.3f}")
+        except SimulatedFailure as e:
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            print(f"[train] {e} -> restart {restarts}")
+            # tear down and restore from the last durable checkpoint
+            run.ckpt.wait()
+            params, opt_state = run.fresh_state(seed)
+            restored, manifest = run.ckpt.restore_latest(
+                {"params": params, "opt": opt_state})
+            if restored is not None:
+                params, opt_state = restored["params"], restored["opt"]
+                step = manifest["step"]
+            else:
+                step = 0
+    run.ckpt.maybe_save(step, {"params": params, "opt": opt_state},
+                        force=True)
+    run.ckpt.wait()
+    return params, opt_state, losses, restarts
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--fail-at", type=int, nargs="*", default=[])
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--data", type=int, default=1,
+                    help="data mesh axis (local devices)")
+    ap.add_argument("--model", type=int, default=1)
+    args = ap.parse_args(argv)
+
+    from repro import configs
+    from repro.checkpoint import CheckpointManager
+    from repro.configs.base import ShapeSpec
+    from repro.ft import FailureInjector
+    from repro.launch.mesh import make_host_mesh
+    from repro.optim import AdamW
+
+    cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(
+        args.arch)
+    mesh = make_host_mesh(args.data, args.model)
+    seq = args.seq + (cfg.n_patches or 0)
+    shape = ShapeSpec("cli", "train", seq, args.batch)
+    opt = AdamW.from_config(cfg, peak_lr=args.lr, total_steps=args.steps,
+                            warmup_steps=max(args.steps // 20, 1))
+    ckpt = CheckpointManager(args.ckpt_dir, interval=args.ckpt_every,
+                             fingerprint=f"{cfg.name}-smoke={args.smoke}")
+    run = TrainRun(cfg=cfg, mesh=mesh, optimizer=opt, shape=shape,
+                   ckpt=ckpt,
+                   injector=FailureInjector(at_steps=tuple(args.fail_at)))
+
+    def flush(sig, frame):
+        print("[train] SIGTERM: flushing checkpoint")
+        ckpt.wait()
+        sys.exit(0)
+
+    signal.signal(signal.SIGTERM, flush)
+
+    t0 = time.time()
+    _, _, losses, restarts = run_supervised(run, args.steps)
+    dt = time.time() - t0
+    print(f"[train] done: {args.steps} steps in {dt:.1f}s, "
+          f"{restarts} restarts, final loss {losses[-1][1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

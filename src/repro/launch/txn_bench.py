@@ -1,0 +1,73 @@
+"""Transaction-engine benchmark CLI (the paper's experiments).
+
+    PYTHONPATH=src python -m repro.launch.txn_bench --workload tpcc \
+        --cc occ tictoc --granularity both --lanes 16 64 128 --waves 300
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+
+def run_one(workload: str, cc_name: str, gran: int, lanes: int, waves: int,
+            *, scale: float = 1.0, n_keys: int = 1_000_000, seed: int = 0):
+    from repro.core import types as t
+    from repro.core.engine import run
+    from repro.workloads import TPCCWorkload, YCSBWorkload
+
+    if workload == "tpcc":
+        wl = TPCCWorkload.make(n_warehouses=8, scale=scale)
+    else:
+        wl = YCSBWorkload.make(n_keys=n_keys)
+    cfg = t.EngineConfig(
+        cc=t.CC_IDS[cc_name], lanes=lanes, slots=wl.slots,
+        n_records=wl.n_records, n_groups=wl.n_groups, n_cols=wl.n_cols,
+        n_txn_types=wl.n_txn_types, granularity=gran, n_rings=wl.n_rings)
+    t0 = time.time()
+    res = run(cfg, wl, n_waves=waves, seed=seed)
+    wall = time.time() - t0
+    return {
+        "workload": workload, "cc": cc_name, "granularity": gran,
+        "lanes": lanes, "waves": waves,
+        "commits": res.commits, "aborts": res.aborts,
+        "abort_rate": round(res.abort_rate, 4),
+        "throughput": round(res.throughput, 4),
+        "ext_events": res.ext_events,
+        "wall_s": round(wall, 2),
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workload", choices=("tpcc", "ycsb"), default="tpcc")
+    ap.add_argument("--cc", nargs="+",
+                    default=["occ", "tictoc", "2pl", "swisstm", "adaptive"])
+    ap.add_argument("--granularity", choices=("coarse", "fine", "both"),
+                    default="both")
+    ap.add_argument("--lanes", type=int, nargs="+", default=[16, 64, 128])
+    ap.add_argument("--waves", type=int, default=300)
+    ap.add_argument("--scale", type=float, default=1.0)
+    ap.add_argument("--n-keys", type=int, default=1_000_000)
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args(argv)
+
+    grans = {"coarse": [0], "fine": [1], "both": [0, 1]}[args.granularity]
+    rows = []
+    for gran in grans:
+        for cc in args.cc:
+            for lanes in args.lanes:
+                r = run_one(args.workload, cc, gran, lanes, args.waves,
+                            scale=args.scale, n_keys=args.n_keys)
+                rows.append(r)
+                print(f"{r['workload']} {r['cc']:9s} "
+                      f"{'fine' if gran else 'coarse'} T={lanes:4d}: "
+                      f"thpt={r['throughput']:8.3f} txn/us  "
+                      f"abort={100*r['abort_rate']:6.2f}%")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

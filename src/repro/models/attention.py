@@ -1,0 +1,282 @@
+"""GQA attention: RoPE / qk-norm / QKV-bias / sliding-window flavors, with a
+memory-bounded blocked softmax ("jnp-flash") for long sequences.
+
+TPU adaptation notes (DESIGN.md):
+  - Heads are the TP unit.  KV heads are *replicated* up to the model-axis
+    width when n_kv < TP (``cfg.kv_eff``) — each rank keeps its head-group's
+    copy, the standard TP resolution — so every einsum below contracts
+    locally under the production mesh.
+  - Long sequences use a static python loop over query blocks and a
+    ``lax.scan`` over key blocks with an online softmax: O(bq*bk) live
+    memory, causal/window block skipping is *static* (the loop bounds), so
+    sliding-window prefill is linear in sequence length.
+  - The Pallas flash kernel (kernels/flash_attention.py) implements the same
+    schedule for the TPU serving path; this jnp version is the differentiable
+    reference the kernel is tested against, and what CPU smoke tests run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.common import ParamSpec
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelCtx:
+    """Per-call context: mesh widths + execution mode.  ``pos`` may hold a
+    traced decode position; the ctx never crosses a jit boundary itself."""
+    tp: int = 1                 # model-axis width (head sharding / kv_eff)
+    n_groups: int = 1           # batch shards (MoE dispatch groups)
+    mode: str = "train"         # train | prefill | decode
+    pos: object = None          # decode position (scalar int32 tracer)
+    mesh: object = None         # jax Mesh (shard_map EP dispatch); None =
+                                # single-device / constraint-only paths
+
+
+# ------------------------------------------------------------------- schema
+def attn_schema(cfg, cross: bool = False) -> dict:
+    D, H, kv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.d_head
+    pd = cfg.param_dtype
+    zr = (1, cfg.n_heads_raw) if cfg.n_heads_raw < H else None
+    s = {
+        "wq": ParamSpec((D, H, Dh), ("embed", "heads", "head"), dtype=pd,
+                        fan_in_dims=(0,), zero_rows=zr),
+        "wk": ParamSpec((D, kv, Dh), ("embed", "kv", "head"), dtype=pd,
+                        fan_in_dims=(0,)),
+        "wv": ParamSpec((D, kv, Dh), ("embed", "kv", "head"), dtype=pd,
+                        fan_in_dims=(0,)),
+        "wo": ParamSpec((H, Dh, D), ("heads", "head", "embed"), dtype=pd,
+                        fan_in_dims=(0, 1),
+                        zero_rows=(0, cfg.n_heads_raw) if zr else None),
+    }
+    if cfg.qkv_bias and not cross:
+        s["bq"] = ParamSpec((H, Dh), ("heads", "head"), "zeros", pd)
+        s["bk"] = ParamSpec((kv, Dh), ("kv", "head"), "zeros", pd)
+        s["bv"] = ParamSpec((kv, Dh), ("kv", "head"), "zeros", pd)
+    if cfg.qk_norm and not cross:
+        s["q_norm"] = ParamSpec((Dh,), ("none",), "zeros", "float32")
+        s["k_norm"] = ParamSpec((Dh,), ("none",), "zeros", "float32")
+    return s
+
+
+def cache_schema(cfg, batch: int, s_cache: int, tp: int) -> dict:
+    G = cfg.kv_eff(tp)
+    Dh = cfg.d_head
+    shp = (batch, G, s_cache, Dh)
+    return {"k": jnp.zeros(shp, jnp.bfloat16),
+            "v": jnp.zeros(shp, jnp.bfloat16)}
+
+
+# ------------------------------------------------------------- inner softmax
+def _dense(q, k, v, mask):
+    """q: [B,G,R,Sq,Dh]; k,v: [B,G,Sk,Dh]; mask broadcastable [Sq,Sk]."""
+    s = jnp.einsum("bgrqd,bgkd->bgrqk", q, k,
+                   preferred_element_type=jnp.float32)
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bgrqk,bgkd->bgrqd", p.astype(v.dtype), v,
+                      preferred_element_type=jnp.float32).astype(q.dtype)
+
+
+def _flash(q, k, v, *, causal: bool, window: Optional[int],
+           block_q: int = 512, block_k: int = 512):
+    """Blocked online-softmax attention, linear memory; static block skip."""
+    B, G, R, Sq, Dh = q.shape
+    Sk = k.shape[2]
+    scale = Dh ** -0.5
+    if Sq * Sk <= 2048 * 2048 or Sq % block_q or Sk % block_k:
+        qpos = jnp.arange(Sq)[:, None] + (Sk - Sq)
+        kpos = jnp.arange(Sk)[None, :]
+        mask = jnp.ones((Sq, Sk), bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        return _dense(q * scale, k, v, mask)
+
+    bq, bk = block_q, block_k
+    out = []
+    for qi in range(Sq // bq):
+        qb = q[:, :, :, qi * bq:(qi + 1) * bq] * scale
+        q0 = qi * bq + (Sk - Sq)
+        k_end = min(Sk, q0 + bq) if causal else Sk
+        k_end = -(-k_end // bk) * bk
+        k_start = 0
+        if window is not None:
+            k_start = max(0, (q0 - window + 1) // bk * bk)
+        n_blk = (k_end - k_start) // bk
+        ks = k[:, :, k_start:k_end].reshape(B, G, n_blk, bk, Dh)
+        vs = v[:, :, k_start:k_end].reshape(B, G, n_blk, bk, Dh)
+        starts = k_start + jnp.arange(n_blk) * bk
+
+        def body(carry, xs):
+            m, l, acc = carry
+            kb, vb, st = xs
+            s = jnp.einsum("bgrqd,bgkd->bgrqk", qb, kb,
+                           preferred_element_type=jnp.float32)
+            kpos = st + jnp.arange(bk)[None, :]
+            qpos = q0 + jnp.arange(bq)[:, None]
+            msk = jnp.ones((bq, bk), bool)
+            if causal:
+                msk &= kpos <= qpos
+            if window is not None:
+                msk &= kpos > qpos - window
+            s = jnp.where(msk, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bgrqk,bgkd->bgrqd", p.astype(vb.dtype), vb,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, G, R, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, G, R, bq), jnp.float32)
+        a0 = jnp.zeros((B, G, R, bq, Dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            body, (m0, l0, a0),
+            (jnp.moveaxis(ks, 2, 0), jnp.moveaxis(vs, 2, 0), starts))
+        out.append((acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype))
+    return jnp.concatenate(out, axis=3)
+
+
+# ------------------------------------------------------------------ the op
+def _group(q, kv_eff):
+    B, S, H, Dh = q.shape
+    rep = H // kv_eff
+    return q.reshape(B, S, kv_eff, rep, Dh).transpose(0, 2, 3, 1, 4)
+
+
+def _repeat_kv(k, kv_eff):
+    B, S, kv, Dh = k.shape
+    if kv == kv_eff:
+        return k.transpose(0, 2, 1, 3)
+    return jnp.repeat(k.transpose(0, 2, 1, 3), kv_eff // kv, axis=1)
+
+
+def attention(p, x, cfg, ctx: ModelCtx, *, causal: bool = True,
+              window: Optional[int] = None, kv_src=None, use_rope=True,
+              cache=None, pos=None, is_cross: bool = False):
+    """Returns (out [B,S,D], new_cache).
+
+    is_cross: cross-attention.  Train: K/V projected from ``kv_src``
+    (encoder output).  Prefill: projected from ``kv_src`` and written to
+    ``cache``.  Decode: read from ``cache`` (kv_src absent), cache unchanged.
+    cache:  {"k","v"} [B, kv_eff, S_c, Dh]; self-decode updates slot pos
+    (rolling when S_c == window).
+    """
+    B, S, D = x.shape
+    H, kv, Dh = cfg.n_heads, cfg.n_kv, cfg.d_head
+    G = cfg.kv_eff(ctx.tp)
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if "bq" in p:
+        q = q + p["bq"]
+    if "q_norm" in p:
+        q = common.rmsnorm(q, p["q_norm"], cfg.norm_eps)
+
+    if is_cross:
+        if kv_src is not None:
+            kc = jnp.einsum("bsd,dhk->bshk", kv_src, p["wk"])
+            vc = jnp.einsum("bsd,dhk->bshk", kv_src, p["wv"])
+            kg, vg = _repeat_kv(kc, G), _repeat_kv(vc, G)
+            o = _flash(_group(q, G), kg, vg, causal=False, window=None)
+            new_cache = None
+            if cache is not None:        # prefill: persist encoder K/V
+                new_cache = {"k": kg.astype(cache["k"].dtype),
+                             "v": vg.astype(cache["v"].dtype)}
+        else:                            # decode: cached encoder K/V
+            qg = _group(q, G)
+            o = _dense(qg * Dh ** -0.5, cache["k"].astype(qg.dtype),
+                       cache["v"].astype(qg.dtype), jnp.bool_(True))
+            new_cache = cache
+        B_, G_, R_, S_, Dh_ = o.shape
+        o = o.transpose(0, 3, 1, 2, 4).reshape(B_, S_, G_ * R_, Dh_)
+        return jnp.einsum("bshk,hkd->bsd", o, p["wo"]), new_cache
+
+    if cache is not None and ctx.mode == "decode":
+        # self-attention decode: project this token, append to cache
+        knew = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+        vnew = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+        if "bk" in p:
+            knew, vnew = knew + p["bk"], vnew + p["bv"]
+        if "k_norm" in p:
+            knew = common.rmsnorm(knew, p["k_norm"], cfg.norm_eps)
+        if use_rope:
+            pp = jnp.full((B, S), pos, jnp.int32)
+            q = common.rope(q, pp, cfg.rope_theta)
+            knew = common.rope(knew, pp, cfg.rope_theta)
+        knew = _repeat_kv(knew, G)[:, :, 0]          # [B, G, Dh]
+        vnew = _repeat_kv(vnew, G)[:, :, 0]
+        S_c = cache["k"].shape[2]
+        slot = pos % S_c if (window is not None and S_c == window) \
+            else jnp.minimum(pos, S_c - 1)
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], knew[:, :, None].astype(cache["k"].dtype),
+            (0, 0, slot, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], vnew[:, :, None].astype(cache["v"].dtype),
+            (0, 0, slot, 0))
+        valid = (jnp.arange(S_c) <= pos) | (pos >= S_c)
+        qg = _group(q, G)                             # [B,G,R,1,Dh]
+        o = _dense(qg * Dh ** -0.5, ck.astype(qg.dtype),
+                   cv.astype(qg.dtype), valid[None, :])
+        new_cache = {"k": ck, "v": cv}
+    elif cache is not None:
+        # prefill: compute K/V for the whole prompt, fill cache
+        o, kr, vr = _self_attn(p, x, q, cfg, G, causal, window, use_rope)
+        S_c = cache["k"].shape[2]
+        if window is not None and S_c == window:
+            # rolling cache: absolute position p lives at slot p % S_c
+            # (matches the decode write rule); keep the last S_c keys.
+            if S >= S_c:
+                base = S - S_c
+                take = base + ((jnp.arange(S_c) - base) % S_c)
+                ck = kr[:, :, take].astype(cache["k"].dtype)
+                cv = vr[:, :, take].astype(cache["v"].dtype)
+            else:         # partially-filled rolling cache: slot p = p
+                take = jnp.clip(jnp.arange(S_c), 0, S - 1)
+                keep = (jnp.arange(S_c) < S)[None, None, :, None]
+                ck = jnp.where(keep, kr[:, :, take], 0).astype(
+                    cache["k"].dtype)
+                cv = jnp.where(keep, vr[:, :, take], 0).astype(
+                    cache["v"].dtype)
+        else:
+            pad = S_c - S
+            ck = jnp.pad(kr, ((0, 0), (0, 0), (0, pad), (0, 0))).astype(
+                cache["k"].dtype)
+            cv = jnp.pad(vr, ((0, 0), (0, 0), (0, pad), (0, 0))).astype(
+                cache["v"].dtype)
+        new_cache = {"k": ck, "v": cv}
+    else:
+        o, _, _ = _self_attn(p, x, q, cfg, G, causal, window, use_rope)
+        new_cache = None
+
+    B_, G_, R_, S_, Dh_ = o.shape
+    o = o.transpose(0, 3, 1, 2, 4).reshape(B_, S_, G_ * R_, Dh_)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"]), new_cache
+
+
+def _self_attn(p, x, q, cfg, G, causal, window, use_rope):
+    B, S, _ = x.shape
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if "bk" in p:
+        k, v = k + p["bk"], v + p["bv"]
+    if "k_norm" in p:
+        k = common.rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    if use_rope:
+        pp = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        q = common.rope(q, pp, cfg.rope_theta)
+        k = common.rope(k, pp, cfg.rope_theta)
+    kg, vg = _repeat_kv(k, G), _repeat_kv(v, G)
+    o = _flash(_group(q, G), kg, vg, causal=causal, window=window)
+    return o, kg, vg

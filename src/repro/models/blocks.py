@@ -1,0 +1,147 @@
+"""Transformer layer assembly: per-type schemas, caches, and apply fns.
+
+Layer types (config.pattern entries):
+  attn  pre-norm GQA attention + FFN (dense MLP or MoE per config)
+  rec   pre-norm RG-LRU recurrent block + MLP (recurrentgemma)
+  rwkv  RWKV-6 time mix + channel mix
+
+Encoder layers and cross-attention decoder layers (whisper) reuse ``attn``
+with ``causal=False`` / an extra cross sub-block.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import recurrent as rec_mod
+from repro.models.attention import ModelCtx
+from repro.models.common import ParamSpec, apply_norm, norm_schema
+
+
+# ---------------------------------------------------------------------- MLP
+def mlp_schema(cfg) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    pd = cfg.param_dtype
+    s = {"w_in": ParamSpec((D, F), ("embed", "mlp"), dtype=pd,
+                           fan_in_dims=(0,)),
+         "w_out": ParamSpec((F, D), ("mlp", "embed"), dtype=pd,
+                            fan_in_dims=(0,))}
+    if cfg.mlp == "swiglu":
+        s["w_gate"] = ParamSpec((D, F), ("embed", "mlp"), dtype=pd,
+                                fan_in_dims=(0,))
+    else:
+        s["b_in"] = ParamSpec((F,), ("mlp",), "zeros", pd)
+        s["b_out"] = ParamSpec((D,), ("none",), "zeros", pd)
+    return s
+
+
+def mlp_apply(p, x, cfg):
+    h = jnp.einsum("bsd,df->bsf", x, p["w_in"])
+    if cfg.mlp == "swiglu":
+        h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["w_gate"])) * h
+    else:
+        h = jax.nn.gelu(h + p["b_in"])
+    out = jnp.einsum("bsf,fd->bsd", h, p["w_out"])
+    if "b_out" in p:
+        out = out + p["b_out"]
+    return out
+
+
+# -------------------------------------------------------------------- layer
+def layer_schema(cfg, ltype: str, cross: bool = False) -> dict:
+    if ltype == "attn":
+        s = {"norm1": norm_schema(cfg),
+             "attn": attn_mod.attn_schema(cfg),
+             "norm2": norm_schema(cfg),
+             "ffn": (moe_mod.moe_schema(cfg) if cfg.n_experts
+                     else mlp_schema(cfg))}
+        if cross:
+            s["norm_x"] = norm_schema(cfg)
+            s["xattn"] = attn_mod.attn_schema(cfg, cross=True)
+        return s
+    if ltype == "rec":
+        return {"norm1": norm_schema(cfg),
+                "rec": rec_mod.rec_schema(cfg),
+                "norm2": norm_schema(cfg),
+                "ffn": mlp_schema(cfg)}
+    if ltype == "rwkv":
+        return {"norm1": norm_schema(cfg),
+                "time": rec_mod.rwkv_schema(cfg),
+                "norm2": norm_schema(cfg)}
+    raise ValueError(f"unknown layer type {ltype}")
+
+
+def layer_cache(cfg, ltype: str, batch: int, s_cache: int, tp: int,
+                enc_len: int = 0):
+    """Zero cache pytree for one layer (None entries for stateless parts)."""
+    if ltype == "attn":
+        s_c = min(s_cache, cfg.window) if cfg.window else s_cache
+        c = {"self": attn_mod.cache_schema(cfg, batch, s_c, tp)}
+        if enc_len:
+            c["cross"] = attn_mod.cache_schema(cfg, batch, enc_len, tp)
+        return c
+    if ltype == "rec":
+        return rec_mod.rec_cache(cfg, batch)
+    if ltype == "rwkv":
+        return rec_mod.rwkv_cache(cfg, batch)
+    raise ValueError(ltype)
+
+
+def apply_layer(p, x, ltype: str, cfg, ctx: ModelCtx, *, cache=None,
+                enc_out=None, causal: bool = True, constrain=None):
+    """One layer.  Returns (x, new_cache, aux_loss)."""
+    aux = jnp.float32(0.0)
+    use_rope = cfg.pos == "rope"
+    if ltype == "attn":
+        h = apply_norm(p["norm1"], x, cfg)
+        a, self_cache = attn_mod.attention(
+            p["attn"], h, cfg, ctx, causal=causal, window=cfg.window,
+            use_rope=use_rope,
+            cache=None if cache is None else cache["self"],
+            pos=ctx_pos(ctx))
+        x = x + a
+        new_cache = None if cache is None else {"self": self_cache}
+        if "xattn" in p:
+            h = apply_norm(p["norm_x"], x, cfg)
+            xa, xc = attn_mod.attention(
+                p["xattn"], h, cfg, ctx, causal=False, use_rope=False,
+                kv_src=enc_out, is_cross=True,
+                cache=None if cache is None else cache.get("cross"),
+                pos=ctx_pos(ctx))
+            x = x + xa
+            if new_cache is not None:
+                new_cache["cross"] = xc
+        h = apply_norm(p["norm2"], x, cfg)
+        if cfg.n_experts and cfg.moe_mode == "ep" and ctx.mesh is not None:
+            f, aux = moe_mod.moe_ffn_ep(p["ffn"], h, cfg, ctx.mesh,
+                                        constrain=constrain)
+        elif cfg.n_experts:
+            f, aux = moe_mod.moe_ffn(p["ffn"], h, cfg, ctx.n_groups,
+                                     constrain=constrain)
+        else:
+            f = mlp_apply(p["ffn"], h, cfg)
+        return x + f, new_cache, aux
+    if ltype == "rec":
+        h = apply_norm(p["norm1"], x, cfg)
+        r, new_cache = rec_mod.rec_apply(p["rec"], h, cfg, cache=cache)
+        x = x + r
+        h = apply_norm(p["norm2"], x, cfg)
+        return x + mlp_apply(p["ffn"], h, cfg), new_cache, aux
+    if ltype == "rwkv":
+        h = apply_norm(p["norm1"], x, cfg)
+        t, tc = rec_mod.rwkv_time_mix(p["time"], h, cfg, cache=cache)
+        x = x + t
+        h = apply_norm(p["norm2"], x, cfg)
+        c, cc = rec_mod.rwkv_channel_mix(p["time"], h, cfg, cache=cache)
+        x = x + c
+        new_cache = None
+        if cache is not None:
+            new_cache = {**tc, **cc}
+        return x, new_cache, aux
+    raise ValueError(ltype)
+
+
+def ctx_pos(ctx):
+    return ctx.pos

@@ -1,0 +1,145 @@
+"""Shared model machinery: parameter schemas, norms, RoPE, initializers.
+
+Parameters are declared as a *schema* — a pytree of ``ParamSpec`` leaves, each
+carrying shape, dtype, logical axis names, and an init rule.  One schema
+drives three materializations:
+
+  init_from_schema     real arrays (seeded, fan-in-scaled)
+  abstract_from_schema ShapeDtypeStructs (dry-run lowering; no allocation)
+  axes_from_schema     logical-axes pytree (models/sharding.py maps these to
+                       PartitionSpecs for a given mesh)
+
+Logical axis names: vocab, embed (d_model), heads, kv, head (d_head), mlp
+(d_ff), experts, lru, pos, stack (scan dim), none.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple
+    axes: tuple                 # logical axis names, len == len(shape)
+    init: str = "normal"        # normal | zeros | ones | lambda_lru
+    dtype: str = "bfloat16"
+    fan_in_dims: tuple = ()     # dims whose product scales the normal init
+    zero_rows: Optional[tuple] = None  # (dim, start): zero slices >= start
+                                       # (padded attention heads)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def stack(schema, n: int):
+    """Prepend a scan (layer-stack) dimension to every spec in ``schema``."""
+    def one(spec: ParamSpec) -> ParamSpec:
+        return dataclasses.replace(
+            spec, shape=(n,) + spec.shape, axes=("stack",) + spec.axes,
+            zero_rows=(None if spec.zero_rows is None
+                       else (spec.zero_rows[0] + 1, spec.zero_rows[1])))
+
+    return jax.tree.map(one, schema,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def _init_leaf(spec: ParamSpec, key) -> jax.Array:
+    dtype = jnp.dtype(spec.dtype)
+    if spec.init == "zeros":
+        x = jnp.zeros(spec.shape, dtype)
+    elif spec.init == "ones":
+        x = jnp.ones(spec.shape, dtype)
+    elif spec.init == "decay_bias":
+        # RWKV-6 decay bias: spread channel half-lives across the spectrum
+        n = 1
+        for d in spec.shape:
+            n *= d
+        x = jnp.linspace(-6.0, 1.0, n).reshape(spec.shape).astype(dtype)
+    elif spec.init == "lambda_lru":
+        # RG-LRU Lambda: a = exp(-8 softplus(lam) * gate) ~ U[0.9, 0.999]
+        u = jax.random.uniform(key, spec.shape, jnp.float32, 0.9, 0.999)
+        lam = jnp.log(jnp.expm1(-jnp.log(u) / 8.0))
+        x = lam.astype(dtype)
+    else:
+        dims = spec.fan_in_dims or tuple(range(max(len(spec.shape) - 1, 0)))
+        fan_in = 1
+        for i in dims:
+            fan_in *= spec.shape[i]
+        std = min(0.02, (1.0 / max(fan_in, 1)) ** 0.5)
+        x = (jax.random.normal(key, spec.shape, jnp.float32) * std
+             ).astype(dtype)
+    if spec.zero_rows is not None:
+        dim, start = spec.zero_rows
+        idx = jnp.arange(spec.shape[dim])
+        shape = [1] * len(spec.shape)
+        shape[dim] = spec.shape[dim]
+        x = jnp.where(idx.reshape(shape) < start, x, jnp.zeros_like(x))
+    return x
+
+
+def init_from_schema(schema, rng) -> dict:
+    leaves, treedef = jax.tree.flatten(
+        schema, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(rng, len(leaves))
+    return jax.tree.unflatten(
+        treedef, [_init_leaf(s, k) for s, k in zip(leaves, keys)])
+
+
+def abstract_from_schema(schema):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype)),
+        schema, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def axes_from_schema(schema):
+    return jax.tree.map(lambda s: s.axes, schema,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+# --------------------------------------------------------------------- norms
+def rmsnorm(x, scale, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) \
+        * (1.0 + scale.astype(x.dtype))
+
+
+def layernorm(x, scale, bias, eps):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * scale.astype(x.dtype) + bias.astype(x.dtype)
+
+
+def norm_schema(cfg, d: Optional[int] = None) -> dict:
+    d = d or cfg.d_model
+    if cfg.norm == "layernorm":
+        return {"scale": ParamSpec((d,), ("none",), "ones", "float32"),
+                "bias": ParamSpec((d,), ("none",), "zeros", "float32")}
+    return {"scale": ParamSpec((d,), ("none",), "zeros", "float32")}
+
+
+def apply_norm(p, x, cfg):
+    if cfg.norm == "layernorm":
+        return layernorm(x, p["scale"], p["bias"], cfg.norm_eps)
+    return rmsnorm(x, p["scale"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------- RoPE
+def rope(x, positions, theta: float):
+    """x: [..., S, n, d_head]; positions: broadcastable to [..., S]."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq   # [..., S, half]
+    cos = jnp.cos(ang)[..., None, :]                        # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(
+        jnp.float32)
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)

@@ -1,0 +1,209 @@
+"""The composable LM: schema, forward (train / prefill / decode), caches.
+
+One decoder family covers all 10 assigned architectures; whisper adds an
+encoder stack + cross-attention, llava a patch-embedding prefix (both
+frontends are stubs per the brief — ``input_specs`` provides precomputed
+embeddings).
+
+Layers run as ``lax.scan`` over stacked per-stage parameters (HLO size and
+compile time stay O(1) in depth); each scan body is ``jax.checkpoint``-ed in
+training so activations rematerialize in the backward pass.  NOTE for the
+roofline: XLA's ``cost_analysis`` counts a scan body once — the analytic
+accounting in ``analysis/roofline.py`` owns flop totals (DESIGN.md section 7).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks
+from repro.models.attention import ModelCtx
+from repro.models.common import (ParamSpec, abstract_from_schema,
+                                 apply_norm, axes_from_schema,
+                                 init_from_schema, norm_schema, stack)
+
+
+# ------------------------------------------------------------------- schema
+def model_schema(cfg) -> dict:
+    D, V = cfg.d_model, cfg.vocab
+    pd = cfg.param_dtype
+    s = {"embed": {"tok": ParamSpec((V, D), ("vocab", "embed_r"), dtype=pd,
+                                    fan_in_dims=(1,))}}
+    if cfg.pos == "learned":
+        s["embed"]["pos"] = ParamSpec((cfg.max_pos, D), ("none", "embed_r"),
+                                      dtype=pd, fan_in_dims=(1,))
+    s["stages"] = [
+        {str(i): stack(blocks.layer_schema(cfg, t, cross=bool(cfg.enc_layers)),
+                       n)
+         for i, t in enumerate(pattern)}
+        for pattern, n in cfg.stage_split()
+    ]
+    s["final_norm"] = norm_schema(cfg)
+    if cfg.enc_layers:
+        s["enc"] = {
+            "stages": [{"0": stack(blocks.layer_schema(cfg, "attn"),
+                                   cfg.enc_layers)}],
+            "final_norm": norm_schema(cfg),
+        }
+    if not cfg.tie_embeddings:
+        s["head"] = ParamSpec((V, D), ("vocab", "embed_r"), dtype=pd,
+                              fan_in_dims=(1,))
+    return s
+
+
+def init_params(cfg, rng):
+    return init_from_schema(model_schema(cfg), rng)
+
+
+def abstract_params(cfg):
+    return abstract_from_schema(model_schema(cfg))
+
+
+def param_axes(cfg):
+    return axes_from_schema(model_schema(cfg))
+
+
+# ------------------------------------------------------------------- caches
+def init_cache(cfg, batch: int, s_cache: int, tp: int) -> list:
+    """Decode cache: list of per-stage pytrees, stacked on the scan dim."""
+    enc_len = cfg.n_frames if cfg.enc_layers else 0
+    out = []
+    for pattern, n in cfg.stage_split():
+        stage = {}
+        for i, t in enumerate(pattern):
+            one = blocks.layer_cache(cfg, t, batch, s_cache, tp,
+                                     enc_len=enc_len)
+            stage[str(i)] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), one)
+        out.append(stage)
+    return out
+
+
+def cache_axes(cfg, tp: int) -> list:
+    """Logical axes for the cache pytree (sharding rules)."""
+    def axes_for(leaf_path_type, arr):
+        nd = arr.ndim
+        if nd == 5:       # stacked attn kv: [R, B, G, S, Dh]
+            return ("stack", "act_batch", "kv_eff", "none", "none")
+        if nd == 4:       # rwkv state: [R, B, H, Dh] ... or [R,B,cw-1,W]
+            return ("stack", "act_batch", "none", "none")
+        if nd == 3:       # rec h / prev: [R, B, W|D]
+            return ("stack", "act_batch", "none")
+        return ("stack",) * nd
+
+    enc_len = cfg.n_frames if cfg.enc_layers else 0
+    cache = init_cache(cfg, 1, 2, tp)
+    out = []
+    for stage in cache:
+        out.append(jax.tree.map(lambda a: axes_for(None, a), stage))
+    return out
+
+
+def rwkv_state_axes():
+    return ("stack", "act_batch", "heads", "none", "none")
+
+
+# ------------------------------------------------------------------ forward
+def _run_stages(params_stages, cfg, ctx, x, stages_cfg, *, cache=None,
+                enc_out=None, causal=True, constrain=None, remat=False):
+    """Scan each stage; returns (x, new_cache_list, aux)."""
+    aux = jnp.float32(0.0)
+    new_cache = []
+    for si, (pattern, n) in enumerate(stages_cfg):
+        p_stage = params_stages[si]
+        c_stage = None if cache is None else cache[si]
+
+        def body(carry, xs, _pattern=pattern):
+            xx, aa = carry
+            p_l, c_l = xs
+            out_c = {}
+            for i, t in enumerate(_pattern):
+                ci = None if c_l is None else c_l[str(i)]
+                xx, nc, a = blocks.apply_layer(
+                    p_l[str(i)], xx, t, cfg, ctx, cache=ci, enc_out=enc_out,
+                    causal=causal, constrain=constrain)
+                if nc is not None:
+                    out_c[str(i)] = nc
+                aa = aa + a
+            return (xx, aa), (out_c if out_c else None)
+
+        fn = jax.checkpoint(body) if remat else body
+        (x, aux), cs = jax.lax.scan(fn, (x, aux), (p_stage, c_stage),
+                                    length=n)
+        new_cache.append(cs)
+    return x, new_cache, aux
+
+
+def _embed(params, cfg, tokens, constrain):
+    x = params["embed"]["tok"][tokens]          # gather over sharded vocab
+    return constrain(x.astype(jnp.dtype(cfg.param_dtype)),
+                     ("act_batch", "none", "none"))
+
+
+def _positions(cfg, params, start, length):
+    pos = start + jnp.arange(length)
+    return params["embed"]["pos"][jnp.clip(pos, 0, cfg.max_pos - 1)]
+
+
+def logits_fn(params, cfg, x, constrain):
+    x = apply_norm(params["final_norm"], x, cfg)
+    table = params["head"] if "head" in params else params["embed"]["tok"]
+    # Keep logits in the param dtype: an f32 einsum here makes the *loss
+    # cotangent* f32, and that dtype propagates backward through every
+    # layer — 2x bytes on every TP all-reduce, FSDP re-gather and gradient
+    # (measured in EXPERIMENTS.md §Perf iteration 1).  The cross-entropy
+    # itself upcasts to f32 internally (steps.xent_loss), and its backward
+    # casts the cotangent back down at this boundary.
+    logits = jnp.einsum("bsd,vd->bsv", x, table)
+    return constrain(logits, ("act_batch", "none", "vocab"))
+
+
+def encode(params, cfg, ctx, frames, constrain):
+    """Whisper encoder over stub frame embeddings [B, S_enc, D]."""
+    x = frames.astype(jnp.dtype(cfg.param_dtype))
+    if cfg.pos == "learned":
+        x = x + _positions(cfg, params, 0, x.shape[1])
+    x = constrain(x, ("act_batch", "none", "none"))
+    x, _, _ = _run_stages(
+        [params["enc"]["stages"][0]], cfg, ctx, x,
+        [(("attn",), cfg.enc_layers)], causal=False, constrain=constrain,
+        remat=(ctx.mode == "train" and cfg.remat))
+    return apply_norm(params["enc"]["final_norm"], x, cfg)
+
+
+def forward(params, cfg, ctx: ModelCtx, tokens, *, patches=None, frames=None,
+            cache=None, constrain=None):
+    """Unified forward.
+
+    train/prefill: tokens [B, S]; llava prepends ``patches`` [B, P, D];
+    whisper runs the encoder on ``frames`` [B, F, D] first.
+    decode: tokens [B, 1] with ``cache`` + ``ctx.pos``; returns new cache.
+
+    Returns (logits, new_cache, aux_loss).
+    """
+    constrain = constrain or (lambda t, a: t)
+    enc_out = None
+    if cfg.enc_layers:
+        if frames is not None:
+            enc_out = encode(params, cfg, ctx, frames, constrain)
+        # decode: cross K/V live in the cache; enc_out unused.
+
+    x = _embed(params, cfg, tokens, constrain)
+    n_prefix = 0
+    if patches is not None:
+        pre = patches.astype(x.dtype)
+        x = jnp.concatenate([pre, x], axis=1)
+        n_prefix = pre.shape[1]
+    if cfg.pos == "learned":
+        start = ctx.pos if ctx.mode == "decode" else 0
+        x = x + _positions(cfg, params, start, x.shape[1])
+
+    x, new_cache, aux = _run_stages(
+        params["stages"], cfg, ctx, x, cfg.stage_split(), cache=cache,
+        enc_out=enc_out, causal=True, constrain=constrain,
+        remat=(ctx.mode == "train" and cfg.remat))
+    logits = logits_fn(params, cfg, x, constrain)
+    return logits, new_cache, aux, n_prefix

@@ -1,0 +1,150 @@
+"""Recurrent blocks: RG-LRU (Griffin / recurrentgemma) and RWKV-6 time/
+channel mix.  Both route their recurrences through repro.kernels.ops (Pallas
+on TPU, jnp oracle elsewhere), so the model code is backend-agnostic.
+
+Decode caches:
+  rec : {"h": [B, W] f32 LRU state, "conv": [B, cw-1, W] conv tail}
+  rwkv: {"state": [B, H, Dh, Dh] f32 wkv state,
+         "prev_t"/"prev_c": [B, D] token-shift tails}
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models.common import ParamSpec, rmsnorm
+
+
+# ------------------------------------------------------------------- RG-LRU
+def rec_schema(cfg) -> dict:
+    D, W, cw = cfg.d_model, cfg.d_lru, cfg.conv_width
+    pd = cfg.param_dtype
+    return {
+        "w_x": ParamSpec((D, W), ("embed", "lru"), dtype=pd,
+                         fan_in_dims=(0,)),
+        "w_g": ParamSpec((D, W), ("embed", "lru"), dtype=pd,
+                         fan_in_dims=(0,)),
+        "w_a": ParamSpec((D, W), ("embed", "lru"), dtype=pd,
+                         fan_in_dims=(0,)),
+        "lam": ParamSpec((W,), ("lru",), "lambda_lru", "float32"),
+        "conv_w": ParamSpec((cw, W), ("none", "lru"), dtype=pd,
+                            fan_in_dims=(0,)),
+        "conv_b": ParamSpec((W,), ("lru",), "zeros", pd),
+        "w_o": ParamSpec((W, D), ("lru", "embed"), dtype=pd,
+                         fan_in_dims=(0,)),
+    }
+
+
+def rec_cache(cfg, batch: int) -> dict:
+    return {"h": jnp.zeros((batch, cfg.d_lru), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.d_lru),
+                              jnp.bfloat16)}
+
+
+def rec_apply(p, x, cfg, cache=None):
+    """x: normed input [B, S, D] -> (out [B, S, D], new_cache)."""
+    B, S, D = x.shape
+    cw = cfg.conv_width
+    xx = jnp.einsum("bsd,dw->bsw", x, p["w_x"])
+
+    tail = (cache["conv"].astype(xx.dtype) if cache is not None
+            else jnp.zeros((B, cw - 1, xx.shape[-1]), xx.dtype))
+    ext = jnp.concatenate([tail, xx], axis=1)            # [B, S+cw-1, W]
+    conv = sum(ext[:, i:i + S] * p["conv_w"][i] for i in range(cw))
+    conv = conv + p["conv_b"]
+
+    gate_a = jax.nn.sigmoid(
+        jnp.einsum("bsd,dw->bsw", x, p["w_a"]).astype(jnp.float32))
+    log_a = -8.0 * jax.nn.softplus(p["lam"]) * gate_a    # [B, S, W] f32
+
+    h0 = cache["h"] if cache is not None else None
+    h, h_last = ops.rglru(log_a, conv, h0=h0)
+
+    g = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_g"]))
+    out = jnp.einsum("bsw,wd->bsd", (h * g).astype(x.dtype), p["w_o"])
+    new_cache = None
+    if cache is not None:
+        new_cache = {"h": h_last,
+                     "conv": ext[:, -(cw - 1):].astype(cache["conv"].dtype)}
+    return out, new_cache
+
+
+# -------------------------------------------------------------------- RWKV6
+def rwkv_schema(cfg) -> dict:
+    D, F, H, Dh = cfg.d_model, cfg.d_ff, cfg.n_heads, cfg.d_head
+    pd = cfg.param_dtype
+    proj = dict(dtype=pd, fan_in_dims=(0,))
+    return {
+        "mu": ParamSpec((5, D), ("none", "none"), "zeros", "float32"),
+        "w_r": ParamSpec((D, H, Dh), ("embed", "heads", "head"), **proj),
+        "w_k": ParamSpec((D, H, Dh), ("embed", "heads", "head"), **proj),
+        "w_v": ParamSpec((D, H, Dh), ("embed", "heads", "head"), **proj),
+        "w_g": ParamSpec((D, H, Dh), ("embed", "heads", "head"), **proj),
+        "w_w": ParamSpec((D, H, Dh), ("embed", "heads", "head"), **proj),
+        "w0": ParamSpec((H, Dh), ("heads", "head"), "decay_bias", "float32"),
+        "u": ParamSpec((H, Dh), ("heads", "head"), dtype="float32"),
+        "ln_x": ParamSpec((H, Dh), ("heads", "head"), "zeros", "float32"),
+        "w_o": ParamSpec((H, Dh, D), ("heads", "head", "embed"), dtype=pd,
+                         fan_in_dims=(0, 1)),
+        "mu_c": ParamSpec((2, D), ("none", "none"), "zeros", "float32"),
+        "w_cin": ParamSpec((D, F), ("embed", "mlp"), **proj),
+        "w_cr": ParamSpec((D, D), ("embed", "none"), **proj),
+        "w_cout": ParamSpec((F, D), ("mlp", "embed"), **proj),
+    }
+
+
+def rwkv_cache(cfg, batch: int) -> dict:
+    H, Dh, D = cfg.n_heads, cfg.d_head, cfg.d_model
+    return {"state": jnp.zeros((batch, H, Dh, Dh), jnp.float32),
+            "prev_t": jnp.zeros((batch, D), jnp.bfloat16),
+            "prev_c": jnp.zeros((batch, D), jnp.bfloat16)}
+
+
+def _shift(x, prev):
+    """Token shift: x_{t-1} (prev carries across calls)."""
+    B, S, D = x.shape
+    first = (prev.astype(x.dtype)[:, None] if prev is not None
+             else jnp.zeros((B, 1, D), x.dtype))
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def rwkv_time_mix(p, x, cfg, cache=None):
+    """x: normed [B,S,D] -> (out, (state_last, prev_last))."""
+    B, S, D = x.shape
+    H, Dh = cfg.n_heads, cfg.d_head
+    xs = _shift(x, cache["prev_t"] if cache is not None else None)
+
+    def lerp(i):
+        return x + (xs - x) * p["mu"][i].astype(x.dtype)
+
+    r = jnp.einsum("bsd,dhk->bhsk", lerp(0), p["w_r"])
+    k = jnp.einsum("bsd,dhk->bhsk", lerp(1), p["w_k"])
+    v = jnp.einsum("bsd,dhk->bhsk", lerp(2), p["w_v"])
+    g = jax.nn.silu(jnp.einsum("bsd,dhk->bshk", lerp(3), p["w_g"]))
+    wexp = jnp.einsum("bsd,dhk->bhsk", lerp(4), p["w_w"]).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(p["w0"][None, :, None] + wexp))   # (0,1) decay
+
+    s0 = cache["state"] if cache is not None else None
+    out, s_last = ops.rwkv6(r, k, v, w, p["u"], s0=s0)      # [B,H,S,Dh]
+    out = out.transpose(0, 2, 1, 3)                          # [B,S,H,Dh]
+    out = rmsnorm(out, jnp.broadcast_to(p["ln_x"], out.shape[-2:]),
+                  cfg.norm_eps) * g.astype(out.dtype)
+    y = jnp.einsum("bshk,hkd->bsd", out.astype(x.dtype), p["w_o"])
+    new = None
+    if cache is not None:
+        new = {"state": s_last, "prev_t": x[:, -1].astype(jnp.bfloat16)}
+    return y, new
+
+
+def rwkv_channel_mix(p, x, cfg, cache=None):
+    xs = _shift(x, cache["prev_c"] if cache is not None else None)
+    mk = x + (xs - x) * p["mu_c"][0].astype(x.dtype)
+    mr = x + (xs - x) * p["mu_c"][1].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", mk, p["w_cin"])))
+    kv = jnp.einsum("bsf,fd->bsd", k, p["w_cout"])
+    out = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", mr, p["w_cr"])) * kv
+    new = None
+    if cache is not None:
+        new = {"prev_c": x[:, -1].astype(jnp.bfloat16)}
+    return out, new

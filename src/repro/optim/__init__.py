@@ -1,0 +1,3 @@
+from repro.optim.adamw import AdamW
+
+__all__ = ["AdamW"]

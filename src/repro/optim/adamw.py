@@ -1,0 +1,115 @@
+"""AdamW from scratch: f32 master weights (optional), configurable moment
+dtype (bf16 for the HBM-bound MoE archs), global-norm clipping, linear-warmup
+cosine schedule.
+
+ZeRO-1 placement: the optimizer state mirrors the parameter pytree, and
+models/sharding.py shards it over ("pod", "data") where parameters shard over
+"data" alone — XLA's SPMD partitioner then emits the reduce-scatter(grads) /
+all-gather(params) pair that implements the distributed update.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"
+    master_f32: bool = True
+
+    @staticmethod
+    def from_config(cfg, **kw) -> "AdamW":
+        return AdamW(moment_dtype=cfg.adam_moment_dtype,
+                     master_f32=cfg.adam_master_f32, **kw)
+
+    # ------------------------------------------------------------- schedule
+    def lr(self, step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") \
+            else jnp.float32(step)
+        warm = step / max(self.warmup_steps, 1)
+        t = jnp.clip((step - self.warmup_steps)
+                     / max(self.total_steps - self.warmup_steps, 1), 0.0, 1.0)
+        cos = self.min_lr_frac + (1 - self.min_lr_frac) * 0.5 * (
+            1 + jnp.cos(jnp.pi * t))
+        return self.peak_lr * jnp.where(step < self.warmup_steps, warm, cos)
+
+    # ---------------------------------------------------------------- state
+    def _needs_master(self, p) -> bool:
+        return self.master_f32 and p.dtype != jnp.float32
+
+    def init(self, params) -> dict:
+        mdt = jnp.dtype(self.moment_dtype)
+        state = {
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, mdt), params),
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, mdt), params),
+        }
+        if self.master_f32:
+            state["master"] = jax.tree.map(
+                lambda p: (p.astype(jnp.float32) if self._needs_master(p)
+                           else jnp.zeros((), jnp.float32)), params)
+        return state
+
+    # --------------------------------------------------------------- update
+    def update(self, grads, state, params, step):
+        gf = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in jax.tree.leaves(gf)))
+        scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-12))
+        lr = self.lr(step)
+        stepf = step.astype(jnp.float32) + 1.0
+        c1 = 1.0 - self.b1 ** stepf
+        c2 = 1.0 - self.b2 ** stepf
+        mdt = jnp.dtype(self.moment_dtype)
+
+        def one(p, g, m, v, master):
+            g = g * scale
+            m = (self.b1 * m.astype(jnp.float32) + (1 - self.b1) * g)
+            v = (self.b2 * v.astype(jnp.float32) + (1 - self.b2) * g * g)
+            upd = (m / c1) / (jnp.sqrt(v / c2) + self.eps)
+            base = master if (master is not None and master.ndim == p.ndim
+                              and self._needs_master(p)) \
+                else p.astype(jnp.float32)
+            new = base - lr * (upd + self.weight_decay * base)
+            new_master = new if (master is not None and master.ndim == p.ndim
+                                 and self._needs_master(p)) \
+                else (jnp.zeros((), jnp.float32) if master is not None
+                      else None)
+            return new.astype(p.dtype), m.astype(mdt), v.astype(mdt), \
+                new_master
+
+        ps, gs = jax.tree.leaves(params), jax.tree.leaves(gf)
+        ms, vs = jax.tree.leaves(state["m"]), jax.tree.leaves(state["v"])
+        mas = (jax.tree.leaves(state["master"]) if "master" in state
+               else [None] * len(ps))
+        out = [one(p, g, m, v, ma)
+               for p, g, m, v, ma in zip(ps, gs, ms, vs, mas)]
+        td = jax.tree.structure(params)
+        new_params = jax.tree.unflatten(td, [o[0] for o in out])
+        new_state = {"m": jax.tree.unflatten(td, [o[1] for o in out]),
+                     "v": jax.tree.unflatten(td, [o[2] for o in out])}
+        if "master" in state:
+            new_state["master"] = jax.tree.unflatten(
+                td, [o[3] for o in out])
+        return new_params, new_state, {"gnorm": gnorm, "lr": lr}
+
+    # ------------------------------------------------------ sharding helper
+    def state_axes(self, param_axes) -> dict:
+        ax = {"m": param_axes, "v": param_axes}
+        if self.master_f32:
+            # scalar placeholders for f32 params get no axes
+            ax["master"] = jax.tree.map(
+                lambda a: a, param_axes,
+                is_leaf=lambda x: isinstance(x, tuple) and all(
+                    isinstance(e, str) for e in x))
+        return ax

@@ -1,0 +1,4 @@
+from repro.workloads.ycsb import YCSBWorkload
+from repro.workloads.tpcc import TPCCWorkload
+
+__all__ = ["YCSBWorkload", "TPCCWorkload"]

@@ -1,0 +1,253 @@
+"""TPC-C (New-order, Payment, Order-status — 92% of the standard mix, the
+three the paper implements), laid out for vectorized wave execution.
+
+Tables live in one flat record space (dense arithmetic keys replace the
+Masstree index — see DESIGN.md section 2):
+
+    Warehouse | District | Customer | Item | Stock | Order ring | OrderLine ring
+
+Contention comes from the paper's analysis (section 3.4):
+  - New-order READS the warehouse/district tax fields;
+  - Payment UPDATES the warehouse/district YTD fields of the same rows;
+  - with one timestamp per row these are FALSE conflicts — the paper's
+    central observation.  Fine granularity gives W/D/C rows two timestamps:
+    group 0 = rarely-updated fields (tax, customer identity/credit),
+    group 1 = the rest (YTD, balance, counts).
+
+YTD/balance updates are blind commutative increments (ADD) — STO-style
+commutative updates; this matches the paper's implementation in which
+New-order's District access is a *read-only* operation (order-id assignment
+happens outside CC, modeled by the per-district append rings whose cursors
+advance by wave prefix-sum).
+
+The per-district order id / insert slots are assigned outside CC (ring
+cursors), like the paper's platform assigns o_id via fetch-and-add.  Aborted
+New-orders leave ring holes, as they do on the real system.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import types as t
+from repro.core.types import StoreState, TxnBatch, store_init
+from repro.workloads.zipf import nurand
+
+# Transaction types.
+NEW_ORDER, PAYMENT, ORDER_STATUS = 0, 1, 2
+# Renormalized standard mix (45/43/4 out of the 92% the paper implements).
+MIX = (45 / 92, 43 / 92, 4 / 92)
+
+MAX_ITEMS = 15
+SLOTS = 64
+
+# Column layout (n_cols = 4).
+W_TAX, W_YTD = 0, 1
+D_TAX, D_YTD = 0, 1
+C_INFO, C_BAL, C_YTD, C_CNT = 0, 1, 2, 3
+S_QTY = 0
+
+# Fine-granularity groups for W/D/C rows (the paper's two timestamps).
+G_RARE, G_HOT = 0, 1
+
+
+@dataclasses.dataclass(frozen=True)
+class TPCCWorkload:
+    n_warehouses: int = 8          # the paper fixes 8 (= their NUMA nodes)
+    n_districts: int = 10
+    n_cust_per_d: int = 3000
+    n_items: int = 100_000
+    o_cap: int = 1024              # order-ring capacity per district
+
+    n_groups: int = 2
+    n_txn_types: int = 3
+
+    @staticmethod
+    def make(n_warehouses: int = 8, scale: float = 1.0) -> "TPCCWorkload":
+        """scale < 1 shrinks the per-warehouse tables (for tests)."""
+        return TPCCWorkload(
+            n_warehouses=n_warehouses,
+            n_cust_per_d=max(int(3000 * scale), 8),
+            n_items=max(int(100_000 * scale), 16),
+            o_cap=max(int(1024 * scale), 16),
+        )
+
+    # ---- layout ----
+    @property
+    def n_dist_total(self) -> int:
+        return self.n_warehouses * self.n_districts
+
+    @property
+    def w_base(self) -> int: return 0
+
+    @property
+    def d_base(self) -> int: return self.n_warehouses
+
+    @property
+    def c_base(self) -> int: return self.d_base + self.n_dist_total
+
+    @property
+    def i_base(self) -> int:
+        return self.c_base + self.n_dist_total * self.n_cust_per_d
+
+    @property
+    def s_base(self) -> int: return self.i_base + self.n_items
+
+    @property
+    def o_base(self) -> int:
+        return self.s_base + self.n_warehouses * self.n_items
+
+    @property
+    def ol_base(self) -> int:
+        return self.o_base + self.n_dist_total * self.o_cap
+
+    @property
+    def n_records(self) -> int:
+        return self.ol_base + self.n_dist_total * self.o_cap * MAX_ITEMS
+
+    @property
+    def n_cols(self) -> int: return 4
+
+    @property
+    def n_rings(self) -> int: return self.n_dist_total
+
+    @property
+    def slots(self) -> int: return SLOTS
+
+    def init_store(self, track_values: bool = False) -> StoreState:
+        return store_init(self.n_records, self.n_groups,
+                          self.n_cols if track_values else 0,
+                          n_rings=self.n_rings)
+
+    # ---- key helpers ----
+    def d_key(self, w, d): return self.d_base + w * self.n_districts + d
+
+    def c_key(self, w, d, c):
+        return (self.c_base
+                + (w * self.n_districts + d) * self.n_cust_per_d + c)
+
+    def s_key(self, w, i): return self.s_base + w * self.n_items + i
+
+    def o_key(self, r, pos): return self.o_base + r * self.o_cap + pos
+
+    def ol_key(self, r, pos, j):
+        return self.ol_base + (r * self.o_cap + pos) * MAX_ITEMS + j
+
+    # ---- generation ----
+    def gen(self, rng: jax.Array, wave: jax.Array, lanes: int,
+            ring_tails: jax.Array):
+        T, K = lanes, SLOTS
+        (r_type, r_w, r_d, r_c, r_it, r_nit, r_q, r_rem, r_rw, r_rd
+         ) = jax.random.split(rng, 10)
+
+        txn_type = jax.random.choice(
+            r_type, 3, (T,), p=jnp.array(MIX, jnp.float32)).astype(jnp.int32)
+        w = jax.random.randint(r_w, (T,), 0, self.n_warehouses)
+        d = jax.random.randint(r_d, (T,), 0, self.n_districts)
+        c = nurand(r_c, 1023, 0, self.n_cust_per_d - 1, 259, (T,))
+        items = nurand(r_it, 8191, 0, self.n_items - 1, 7911, (T, MAX_ITEMS))
+        items = items % self.n_items
+        n_it = jax.random.randint(r_nit, (T,), 5, MAX_ITEMS + 1)
+        qty = jax.random.randint(r_q, (T, MAX_ITEMS), 1, 11).astype(
+            jnp.float32)
+
+        # Payment: 15% remote customer (different warehouse + district).
+        remote = jax.random.uniform(r_rem, (T,)) < 0.15
+        rw_ = jax.random.randint(r_rw, (T,), 0, self.n_warehouses)
+        rd_ = jax.random.randint(r_rd, (T,), 0, self.n_districts)
+        c_w = jnp.where(remote, rw_, w)
+        c_d = jnp.where(remote, rd_, d)
+
+        # Ring slot assignment for New-order lanes: per-district prefix sums.
+        ring = (w * self.n_districts + d).astype(jnp.int32)
+        is_no = txn_type == NEW_ORDER
+        onehot = (ring[:, None] == jnp.arange(self.n_dist_total)[None, :]
+                  ) & is_no[:, None]
+        rank = jnp.cumsum(onehot, axis=0) - 1
+        my_rank = jnp.take_along_axis(rank, ring[:, None], axis=1)[:, 0]
+        o_pos = (ring_tails[ring] + my_rank) % self.o_cap
+        new_tails = ring_tails + onehot.sum(axis=0).astype(jnp.int32)
+
+        no = self._gen_new_order(T, w, d, c, items, n_it, qty, ring, o_pos)
+        pay = self._gen_payment(T, w, d, c_w, c_d, c)
+        os_ = self._gen_order_status(T, w, d, c, ring, ring_tails)
+
+        batch = jax.tree.map(
+            lambda *xs: jnp.take_along_axis(
+                jnp.stack(xs),
+                txn_type.reshape((1, T) + (1,) * (xs[0].ndim - 1)),
+                axis=0)[0],
+            no, pay, os_)
+        batch = dataclasses.replace(batch, txn_type=txn_type)
+        return batch, new_tails
+
+    def _empty(self, T):
+        return dict(
+            op_key=jnp.full((T, SLOTS), -1, jnp.int32),
+            op_group=jnp.zeros((T, SLOTS), jnp.int32),
+            op_col=jnp.zeros((T, SLOTS), jnp.int32),
+            op_kind=jnp.zeros((T, SLOTS), jnp.int32),
+            op_val=jnp.zeros((T, SLOTS), jnp.float32),
+        )
+
+    @staticmethod
+    def _set(f, sl, key, col, kind, group, val=0.0, mask=None):
+        key = jnp.asarray(key, jnp.int32)
+        if mask is not None:
+            key = jnp.where(mask, key, -1)
+        f["op_key"] = f["op_key"].at[:, sl].set(key)
+        f["op_col"] = f["op_col"].at[:, sl].set(col)
+        f["op_kind"] = f["op_kind"].at[:, sl].set(kind)
+        f["op_group"] = f["op_group"].at[:, sl].set(group)
+        f["op_val"] = f["op_val"].at[:, sl].set(val)
+
+    def _gen_new_order(self, T, w, d, c, items, n_it, qty, ring, o_pos):
+        f = self._empty(T)
+        jmask = jnp.arange(MAX_ITEMS)[None, :] < n_it[:, None]
+        self._set(f, 0, w, W_TAX, t.READ, G_RARE)
+        self._set(f, 1, self.d_key(w, d), D_TAX, t.READ, G_RARE)
+        self._set(f, 2, self.c_key(w, d, c), C_INFO, t.READ, G_RARE)
+        self._set(f, slice(3, 18), self.i_base + items, 0, t.READ, G_RARE,
+                  mask=jmask)
+        skeys = self.s_key(w[:, None], items)
+        self._set(f, slice(18, 33), skeys, S_QTY, t.READ, G_RARE, mask=jmask)
+        self._set(f, slice(33, 48), skeys, S_QTY, t.WRITE, G_RARE, val=qty,
+                  mask=jmask)
+        self._set(f, 48, self.o_key(ring, o_pos), 0, t.WRITE, G_RARE,
+                  val=c.astype(jnp.float32))
+        olk = self.ol_key(ring[:, None], o_pos[:, None],
+                          jnp.arange(MAX_ITEMS)[None, :])
+        self._set(f, slice(49, 64), olk, 0, t.WRITE, G_RARE,
+                  val=items.astype(jnp.float32), mask=jmask)
+        n_ops = 4 + 3 * n_it
+        return TxnBatch(txn_type=jnp.zeros((T,), jnp.int32),
+                        n_ops=n_ops.astype(jnp.int32), **f)
+
+    def _gen_payment(self, T, w, d, c_w, c_d, c):
+        f = self._empty(T)
+        ck = self.c_key(c_w, c_d, c)
+        one = jnp.ones((T,), jnp.float32)
+        self._set(f, 0, w, W_YTD, t.ADD, G_HOT, val=one)
+        self._set(f, 1, self.d_key(w, d), D_YTD, t.ADD, G_HOT, val=one)
+        self._set(f, 2, ck, C_INFO, t.READ, G_RARE)
+        self._set(f, 3, ck, C_BAL, t.ADD, G_HOT, val=-one)
+        self._set(f, 4, ck, C_YTD, t.ADD, G_HOT, val=one)
+        self._set(f, 5, ck, C_CNT, t.ADD, G_HOT, val=one)
+        return TxnBatch(txn_type=jnp.ones((T,), jnp.int32),
+                        n_ops=jnp.full((T,), 6, jnp.int32), **f)
+
+    def _gen_order_status(self, T, w, d, c, ring, ring_tails):
+        f = self._empty(T)
+        ck = self.c_key(w, d, c)
+        last = (ring_tails[ring] - 1) % self.o_cap
+        self._set(f, 0, ck, C_INFO, t.READ, G_RARE)
+        self._set(f, 1, ck, C_BAL, t.READ, G_HOT)
+        self._set(f, 2, self.o_key(ring, last), 0, t.READ, G_RARE)
+        olk = self.ol_key(ring[:, None], last[:, None],
+                          jnp.arange(MAX_ITEMS)[None, :])
+        self._set(f, slice(3, 18), olk, 0, t.READ, G_RARE,
+                  mask=jnp.ones((T, MAX_ITEMS), jnp.bool_))
+        return TxnBatch(txn_type=jnp.full((T,), 2, jnp.int32),
+                        n_ops=jnp.full((T,), 18, jnp.int32), **f)

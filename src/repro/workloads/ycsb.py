@@ -1,0 +1,78 @@
+"""YCSB-like workload, per the paper's section 3.3:
+
+  - 10M keys, each value 10 columns of 10 bytes;
+  - each transaction: 16 operations, ~50% reads / ~50% writes, each picking a
+    key ~ scrambled-Zipfian(theta=0.9) and one uniformly random column;
+  - fine granularity = one timestamp for even-numbered columns, one for odd
+    (paper section 3.4) — i.e. group = column % 2.
+
+Writes are blind single-column overwrites (no read-modify-write), matching the
+YCSB "update one field" semantics.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import types as t
+from repro.core.types import StoreState, TxnBatch, store_init
+from repro.workloads.zipf import ZipfSampler
+
+
+@dataclasses.dataclass(frozen=True)
+class YCSBWorkload:
+    n_keys: int = 10_000_000
+    n_cols_schema: int = 10        # YCSB schema: 10 columns
+    ops_per_txn: int = 16
+    write_frac: float = 0.5
+    theta: float = 0.9
+    zipf: ZipfSampler = None  # type: ignore[assignment]
+
+    # Engine-facing schema:
+    n_groups: int = 2
+    n_rings: int = 1
+    n_txn_types: int = 1
+
+    @staticmethod
+    def make(n_keys: int = 10_000_000, theta: float = 0.9,
+             ops_per_txn: int = 16, write_frac: float = 0.5) -> "YCSBWorkload":
+        return YCSBWorkload(n_keys=n_keys, theta=theta,
+                            ops_per_txn=ops_per_txn, write_frac=write_frac,
+                            zipf=ZipfSampler.make(n_keys, theta))
+
+    @property
+    def n_records(self) -> int:
+        return self.n_keys
+
+    @property
+    def n_cols(self) -> int:
+        return self.n_cols_schema
+
+    @property
+    def slots(self) -> int:
+        return self.ops_per_txn
+
+    def init_store(self, track_values: bool = False) -> StoreState:
+        return store_init(self.n_records, self.n_groups,
+                          self.n_cols if track_values else 0,
+                          n_rings=self.n_rings)
+
+    def gen(self, rng: jax.Array, wave: jax.Array, lanes: int,
+            ring_tails: jax.Array):
+        K = self.ops_per_txn
+        rk, rc, rw, rv = jax.random.split(rng, 4)
+        keys = self.zipf.sample(rk, (lanes, K))
+        cols = jax.random.randint(rc, (lanes, K), 0, self.n_cols_schema)
+        is_w = jax.random.uniform(rw, (lanes, K)) < self.write_frac
+        batch = TxnBatch(
+            op_key=keys,
+            op_group=(cols % 2).astype(jnp.int32),  # the paper's parity split
+            op_col=cols.astype(jnp.int32),
+            op_kind=jnp.where(is_w, t.WRITE, t.READ).astype(jnp.int32),
+            op_val=jax.random.uniform(rv, (lanes, K)),
+            txn_type=jnp.zeros((lanes,), jnp.int32),
+            n_ops=jnp.full((lanes,), K, jnp.int32),
+        )
+        return batch, ring_tails

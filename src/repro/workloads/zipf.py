@@ -1,0 +1,69 @@
+"""Vectorized scrambled-Zipfian key sampler (the YCSB generator, in JAX).
+
+Implements the Gray et al. "Quickly generating billion-record synthetic
+databases" inverse-CDF construction used verbatim by YCSB's
+ZipfianGenerator/ScrambledZipfianGenerator: ranks follow P(i) ~ 1/i^theta and
+are then hash-scrambled so the hot set is spread across the keyspace (hot keys
+are not neighbors).  zeta(n, theta) is precomputed once on the host in
+float64; sampling is pure jnp and jit/vmap-friendly.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ZipfSampler:
+    n: int
+    theta: float
+    zetan: float
+    eta: float
+    alpha: float
+
+    @staticmethod
+    def make(n: int, theta: float = 0.9) -> "ZipfSampler":
+        i = np.arange(1, n + 1, dtype=np.float64)
+        zetan = float(np.sum(1.0 / i ** theta))
+        zeta2 = 1.0 + 0.5 ** theta
+        eta = (1.0 - (2.0 / n) ** (1.0 - theta)) / (1.0 - zeta2 / zetan)
+        return ZipfSampler(n=n, theta=theta, zetan=zetan, eta=eta,
+                           alpha=1.0 / (1.0 - theta))
+
+    def ranks(self, rng: jax.Array, shape) -> jax.Array:
+        """Zipfian ranks in [0, n): rank 0 is the hottest."""
+        u = jax.random.uniform(rng, shape, jnp.float32, 1e-7, 1.0)
+        uz = u * self.zetan
+        tail = (self.n * jnp.power(self.eta * u - self.eta + 1.0,
+                                   self.alpha)).astype(jnp.int32)
+        r = jnp.where(uz < 1.0, 0,
+                      jnp.where(uz < 1.0 + 0.5 ** self.theta, 1, tail))
+        return jnp.clip(r, 0, self.n - 1)
+
+    def sample(self, rng: jax.Array, shape) -> jax.Array:
+        """Scrambled-Zipfian keys in [0, n)."""
+        return scramble(self.ranks(rng, shape), self.n)
+
+
+def scramble(x: jax.Array, n: int) -> jax.Array:
+    """Murmur3-finalizer integer hash, mod n (YCSB uses FNV64 — any
+    well-mixing integer hash serves; collisions are part of the generator's
+    contract)."""
+    h = x.astype(jnp.uint32)
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> 13)
+    h = h * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> 16)
+    return (h % jnp.uint32(n)).astype(jnp.int32)
+
+
+def nurand(rng: jax.Array, A: int, x: int, y: int, C: int, shape):
+    """TPC-C NURand(A, x, y): non-uniform customer/item id selection."""
+    r1, r2 = jax.random.split(rng)
+    a = jax.random.randint(r1, shape, 0, A + 1)
+    b = jax.random.randint(r2, shape, x, y + 1)
+    return (((a | b) + C) % (y - x + 1)) + x

@@ -1,0 +1,247 @@
+"""CC-mechanism semantics: the paper's scenarios + property tests against a
+pure-python oracle (thinning disabled so rules are deterministic)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import claims
+from repro.core import types as t
+from repro.core.cc import occ, tictoc, two_pl
+from repro.core.types import CostModel, EngineConfig, TxnBatch, store_init
+
+EXACT = CostModel(opt_overlap=1.0, phase_overlap=1.0)
+
+
+def make_cfg(cc, lanes, slots, gran=1, n_rec=8):
+    return EngineConfig(cc=cc, lanes=lanes, slots=slots, n_records=n_rec,
+                        n_groups=2, n_cols=0, n_txn_types=1,
+                        granularity=gran, cost=EXACT)
+
+
+def batch_of(ops, lanes, slots):
+    """ops: list per lane of (key, group, kind) tuples."""
+    ks = np.full((lanes, slots), -1, np.int32)
+    gs = np.zeros((lanes, slots), np.int32)
+    kd = np.zeros((lanes, slots), np.int32)
+    for i, lane in enumerate(ops):
+        for j, (k, g, kind) in enumerate(lane):
+            ks[i, j], gs[i, j], kd[i, j] = k, g, kind
+    return TxnBatch(op_key=jnp.asarray(ks), op_group=jnp.asarray(gs),
+                    op_col=jnp.zeros((lanes, slots), jnp.int32),
+                    op_kind=jnp.asarray(kd),
+                    op_val=jnp.zeros((lanes, slots), jnp.float32),
+                    txn_type=jnp.zeros((lanes,), jnp.int32),
+                    n_ops=jnp.asarray([len(l) for l in ops], jnp.int32))
+
+
+# ------------------------------------------------- the paper's two scenarios
+def test_figure1_tictoc_commits_both_where_occ_aborts():
+    """Paper Figure 1: Txn1 reads row A; Txn2 updates row A and commits
+    first.  TicToc reschedules Txn1 before Txn2; OCC aborts Txn1."""
+    ops = [[(0, 0, t.READ)],          # Txn 1 (later prio)
+           [(0, 0, t.WRITE)]]         # Txn 2 (earlier prio = commits first)
+    batch = batch_of(ops, 2, 2)
+    prio = jnp.asarray([1, 0], jnp.uint32)
+    wave = jnp.uint32(0)
+
+    cfg = make_cfg(t.CC_OCC, 2, 2)
+    store = store_init(8, 2, 0)
+    _, res = occ.wave_validate(store, batch, prio, wave, cfg)
+    assert list(np.asarray(res.commit)) == [False, True]
+
+    cfg = make_cfg(t.CC_TICTOC, 2, 2)
+    store = store_init(8, 2, 0)
+    _, res = tictoc.wave_validate(store, batch, prio, wave, cfg)
+    assert list(np.asarray(res.commit)) == [True, True]
+
+
+def test_district_false_conflict_fine_vs_coarse():
+    """Paper section 3.4: New-order reads the district tax (group 0) while
+    Payment updates the district YTD (group 1).  Coarse timestamps abort the
+    reader (false conflict); fine timestamps commit both."""
+    ops = [[(3, 0, t.READ)],          # New-order: D_TAX, rare group
+           [(3, 1, t.ADD)]]           # Payment:  D_YTD, hot group
+    batch = batch_of(ops, 2, 2)
+    prio = jnp.asarray([1, 0], jnp.uint32)  # Payment first
+    wave = jnp.uint32(0)
+
+    for gran, want in ((0, [False, True]), (1, [True, True])):
+        cfg = make_cfg(t.CC_OCC, 2, 2, gran=gran)
+        store = store_init(8, 2, 0)
+        _, res = occ.wave_validate(store, batch, prio, wave, cfg)
+        assert list(np.asarray(res.commit)) == want, f"gran={gran}"
+
+
+def test_fine_granularity_still_detects_true_conflicts():
+    ops = [[(3, 1, t.READ)],          # reads the SAME group Payment writes
+           [(3, 1, t.ADD)]]
+    batch = batch_of(ops, 2, 2)
+    prio = jnp.asarray([1, 0], jnp.uint32)
+    cfg = make_cfg(t.CC_OCC, 2, 2, gran=1)
+    store = store_init(8, 2, 0)
+    _, res = occ.wave_validate(store, batch, prio, jnp.uint32(0), cfg)
+    assert list(np.asarray(res.commit)) == [False, True]
+
+
+# ------------------------------------------------------------ oracle checks
+def occ_oracle(ks, gs, kd, prio, gran):
+    """Commit set per OCC rule: a lane aborts iff one of its reads' cells is
+    write-claimed by a strictly-earlier-priority lane."""
+    T, K = ks.shape
+    commit = []
+    for i in range(T):
+        ok = True
+        for j in range(K):
+            if kd[i, j] == t.READ and ks[i, j] >= 0:
+                for i2 in range(T):
+                    if prio[i2] >= prio[i]:
+                        continue
+                    for j2 in range(K):
+                        if kd[i2, j2] in (t.WRITE, t.ADD) \
+                           and ks[i2, j2] == ks[i, j] \
+                           and (gran == 0 or gs[i2, j2] == gs[i, j]):
+                            ok = False
+        commit.append(ok)
+    return commit
+
+
+def twopl_oracle(ks, gs, kd, prio, gran):
+    T, K = ks.shape
+    commit = []
+    for i in range(T):
+        ok = True
+        for j in range(K):
+            if ks[i, j] < 0 or kd[i, j] == t.NOP:
+                continue
+            mine_w = kd[i, j] in (t.WRITE, t.ADD)
+            for i2 in range(T):
+                if prio[i2] >= prio[i]:
+                    continue
+                for j2 in range(K):
+                    if ks[i2, j2] != ks[i, j] or kd[i2, j2] == t.NOP \
+                       or ks[i2, j2] < 0:
+                        continue
+                    if gran == 1 and gs[i2, j2] != gs[i, j]:
+                        continue
+                    theirs_w = kd[i2, j2] in (t.WRITE, t.ADD)
+                    if theirs_w or mine_w:       # RR compatible only
+                        ok = False
+        commit.append(ok)
+    return commit
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), gran=st.integers(0, 1))
+def test_occ_matches_oracle(seed, gran):
+    rng = np.random.default_rng(seed)
+    T, K, N = 5, 4, 6
+    ks = rng.integers(-1, N, (T, K)).astype(np.int32)
+    gs = rng.integers(0, 2, (T, K)).astype(np.int32)
+    kd = rng.choice([t.NOP, t.READ, t.WRITE, t.ADD], (T, K)).astype(np.int32)
+    prio = rng.permutation(T).astype(np.uint32)
+    batch = TxnBatch(op_key=jnp.asarray(ks), op_group=jnp.asarray(gs),
+                     op_col=jnp.zeros((T, K), jnp.int32),
+                     op_kind=jnp.asarray(kd),
+                     op_val=jnp.zeros((T, K), jnp.float32),
+                     txn_type=jnp.zeros((T,), jnp.int32),
+                     n_ops=jnp.full((T,), K, jnp.int32))
+    cfg = make_cfg(t.CC_OCC, T, K, gran=gran, n_rec=N)
+    store = store_init(N, 2, 0)
+    _, res = occ.wave_validate(store, batch, jnp.asarray(prio),
+                               jnp.uint32(0), cfg)
+    assert list(np.asarray(res.commit)) == occ_oracle(ks, gs, kd, prio, gran)
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), gran=st.integers(0, 1))
+def test_twopl_matches_oracle(seed, gran):
+    rng = np.random.default_rng(seed)
+    T, K, N = 5, 4, 6
+    ks = rng.integers(-1, N, (T, K)).astype(np.int32)
+    gs = rng.integers(0, 2, (T, K)).astype(np.int32)
+    kd = rng.choice([t.NOP, t.READ, t.WRITE], (T, K)).astype(np.int32)
+    prio = rng.permutation(T).astype(np.uint32)
+    batch = TxnBatch(op_key=jnp.asarray(ks), op_group=jnp.asarray(gs),
+                     op_col=jnp.zeros((T, K), jnp.int32),
+                     op_kind=jnp.asarray(kd),
+                     op_val=jnp.zeros((T, K), jnp.float32),
+                     txn_type=jnp.zeros((T,), jnp.int32),
+                     n_ops=jnp.full((T,), K, jnp.int32))
+    cfg = make_cfg(t.CC_2PL, T, K, gran=gran, n_rec=N)
+    store = store_init(N, 2, 0)
+    _, res = two_pl.wave_validate(store, batch, jnp.asarray(prio),
+                                  jnp.uint32(0), cfg)
+    assert list(np.asarray(res.commit)) == twopl_oracle(ks, gs, kd, prio,
+                                                        gran)
+
+
+def test_tictoc_never_commits_fewer_than_occ():
+    """TicToc commits a superset of OCC's schedules (fresh store) — at the
+    pure-protocol level, i.e. with the stochastic lock-contention effects
+    (extension failures) disabled; with them enabled TicToc may abort
+    transactions OCC commits, which is exactly the paper's Fig 2a point."""
+    pure = CostModel(opt_overlap=1.0, phase_overlap=0.0)
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        T, K, N = 6, 4, 5
+        ks = rng.integers(0, N, (T, K)).astype(np.int32)
+        gs = rng.integers(0, 2, (T, K)).astype(np.int32)
+        kd = rng.choice([t.READ, t.WRITE], (T, K)).astype(np.int32)
+        prio = rng.permutation(T).astype(np.uint32)
+        batch = TxnBatch(op_key=jnp.asarray(ks), op_group=jnp.asarray(gs),
+                         op_col=jnp.zeros((T, K), jnp.int32),
+                         op_kind=jnp.asarray(kd),
+                         op_val=jnp.zeros((T, K), jnp.float32),
+                         txn_type=jnp.zeros((T,), jnp.int32),
+                         n_ops=jnp.full((T,), K, jnp.int32))
+        store = store_init(N, 2, 0)
+        cfg_o = dataclasses.replace(make_cfg(t.CC_OCC, T, K, n_rec=N),
+                                    cost=pure)
+        cfg_t = dataclasses.replace(make_cfg(t.CC_TICTOC, T, K, n_rec=N),
+                                    cost=pure)
+        _, r_occ = occ.wave_validate(store, batch, jnp.asarray(prio),
+                                     jnp.uint32(0), cfg_o)
+        _, r_tic = tictoc.wave_validate(store, batch, jnp.asarray(prio),
+                                        jnp.uint32(0), cfg_t)
+        assert int(r_tic.commit.sum()) >= int(r_occ.commit.sum())
+
+
+def test_add_sum_conservation_end_to_end():
+    """Committed ADD deltas must equal the final stored sums exactly
+    (track_values path applies committed writes serially by priority)."""
+    from repro.core.engine import run
+    from repro.workloads import YCSBWorkload
+
+    wl = YCSBWorkload.make(n_keys=64, theta=0.5, ops_per_txn=4,
+                           write_frac=1.0)
+
+    # make every write an ADD of 1.0 by patching gen output
+    class AddWorkload:
+        n_records = wl.n_records
+        n_groups = wl.n_groups
+        n_cols = wl.n_cols
+        n_rings = wl.n_rings
+        n_txn_types = 1
+        slots = wl.slots
+
+        def init_store(self, track_values=False):
+            return wl.init_store(track_values)
+
+        def gen(self, rng, wave, lanes, tails):
+            b, tails = wl.gen(rng, wave, lanes, tails)
+            b = dataclasses.replace(
+                b, op_kind=jnp.where(b.op_kind == t.WRITE, t.ADD, b.op_kind),
+                op_val=jnp.ones_like(b.op_val))
+            return b, tails
+
+    cfg = EngineConfig(cc=t.CC_OCC, lanes=8, slots=wl.slots,
+                       n_records=wl.n_records, n_groups=wl.n_groups,
+                       n_cols=wl.n_cols, n_txn_types=1, granularity=1,
+                       track_values=True, cost=EXACT)
+    res = run(cfg, AddWorkload(), n_waves=10, seed=3, keep_state=True)
+    total = float(res.final_state.store.values.sum())
+    assert total == pytest.approx(res.commits * wl.slots)

@@ -1,0 +1,105 @@
+"""Property tests for the wave-scoped claim tables (core/claims.py) — the
+primitive every CC mechanism is built on."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import claims
+from repro.core import types as t
+
+N_REC, G = 16, 2
+
+
+def np_scatter_min(table, keys, groups, words, mask):
+    out = np.array(table)
+    for k, g, w, m in zip(keys.ravel(), groups.ravel(), words.ravel(),
+                          mask.ravel()):
+        if m and 0 <= k < out.shape[0]:
+            out[k, g] = min(out[k, g], w)
+    return out
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.data())
+def test_scatter_claims_matches_oracle(data):
+    rng = np.random.default_rng(data.draw(st.integers(0, 2 ** 16)))
+    T, K = 4, 5
+    keys = rng.integers(-1, N_REC, (T, K)).astype(np.int32)
+    groups = rng.integers(0, G, (T, K)).astype(np.int32)
+    words = rng.integers(0, 2 ** 32, (T, K), dtype=np.uint32)
+    mask = rng.random((T, K)) < 0.7
+    table = np.full((N_REC, G), 0xFFFFFFFF, np.uint32)
+    got = claims.scatter_claims(jnp.asarray(table), jnp.asarray(keys),
+                                jnp.asarray(groups), jnp.asarray(words),
+                                jnp.asarray(mask))
+    want = np_scatter_min(table, keys, groups, words, mask)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_probe_ignores_stale_waves():
+    table = jnp.full((N_REC, G), t.NO_CLAIM, jnp.uint32)
+    w0, w1 = jnp.uint32(3), jnp.uint32(4)
+    word = claims.claim_word(w0, jnp.uint32(7))
+    table = table.at[5, 1].set(word)
+    # current wave sees it
+    got = claims.probe(table, jnp.array([[5]]), jnp.array([[1]]), w0)
+    assert int(got[0, 0]) == 7
+    # next wave: stale claim invisible, no reset needed
+    got = claims.probe(table, jnp.array([[5]]), jnp.array([[1]]), w1)
+    assert int(got[0, 0]) == int(claims.NO_PRIO)
+
+
+def test_probe_negative_and_oob_keys_return_no_prio():
+    table = jnp.zeros((N_REC, G), jnp.uint32)  # all cells claim prio 0 wave 0
+    # ... but masked / OOB keys must not see it
+    keys = jnp.array([[-1, N_REC + 3]])
+    groups = jnp.zeros_like(keys)
+    got = claims.probe(table, keys, groups, jnp.uint32(0xFFFF))
+    assert (np.asarray(got) == int(claims.NO_PRIO)).all()
+
+
+def test_coarse_probe_is_row_min():
+    table = jnp.full((N_REC, G), t.NO_CLAIM, jnp.uint32)
+    wave = jnp.uint32(0)
+    table = table.at[3, 1].set(claims.claim_word(wave, jnp.uint32(9)))
+    fine = claims.probe(table, jnp.array([[3]]), jnp.array([[0]]), wave)
+    coarse = claims.probe_any_group(table, jnp.array([[3]]), wave)
+    assert int(fine[0, 0]) == int(claims.NO_PRIO)   # other group: no claim
+    assert int(coarse[0, 0]) == 9                   # whole row: sees it
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2 ** 16))
+def test_cell_counts_matches_bincount(seed):
+    rng = np.random.default_rng(seed)
+    T, K = 6, 7
+    keys = rng.integers(0, 5, (T, K)).astype(np.int32)
+    groups = rng.integers(0, G, (T, K)).astype(np.int32)
+    mask = rng.random((T, K)) < 0.6
+    got = np.asarray(claims.cell_counts(
+        jnp.asarray(keys), jnp.asarray(groups), G, jnp.asarray(mask)))
+    cells = keys * G + groups
+    from collections import Counter
+    c = Counter(cells[mask].ravel().tolist())
+    want = np.where(mask, np.vectorize(lambda x: c.get(x, 0))(cells), 0)
+    np.testing.assert_array_equal(got, want.astype(np.float32))
+
+
+def test_lazy_decay_equals_eager():
+    heat = jnp.zeros((4,), jnp.float32).at[2].set(1.0)
+    heat_wave = jnp.zeros((4,), jnp.int32).at[2].set(10)
+    got = claims.lazy_decayed(heat, heat_wave, jnp.array([2]),
+                              jnp.uint32(13), 0.9)
+    assert np.isclose(float(got[0]), 0.9 ** 3)
+
+
+def test_hash01_uniform_and_deterministic():
+    ids = claims.lane_op_ids(64, 16)
+    u1 = np.asarray(claims.hash01(jnp.uint32(5), ids))
+    u2 = np.asarray(claims.hash01(jnp.uint32(5), ids))
+    u3 = np.asarray(claims.hash01(jnp.uint32(6), ids))
+    np.testing.assert_array_equal(u1, u2)
+    assert not np.array_equal(u1, u3)
+    assert 0.4 < u1.mean() < 0.6 and u1.min() >= 0.0 and u1.max() < 1.0

@@ -1,0 +1,87 @@
+"""Wave-engine behaviour: determinism, retry accounting, metrics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import types as t
+from repro.core.engine import run
+from repro.workloads import TPCCWorkload, YCSBWorkload
+
+
+def mk(cc, wl, lanes=16, gran=1, **kw):
+    return t.EngineConfig(cc=cc, lanes=lanes, slots=wl.slots,
+                          n_records=wl.n_records, n_groups=wl.n_groups,
+                          n_cols=wl.n_cols, n_txn_types=wl.n_txn_types,
+                          granularity=gran, n_rings=wl.n_rings, **kw)
+
+
+def test_determinism_same_seed():
+    wl = YCSBWorkload.make(n_keys=1000)
+    cfg = mk(t.CC_OCC, wl)
+    a = run(cfg, wl, n_waves=20, seed=7)
+    b = run(cfg, wl, n_waves=20, seed=7)
+    assert a.commits == b.commits and a.aborts == b.aborts
+    assert a.throughput == pytest.approx(b.throughput)
+
+
+def test_attempts_equal_lanes_times_waves():
+    wl = YCSBWorkload.make(n_keys=500)
+    for cc in (t.CC_OCC, t.CC_TICTOC, t.CC_2PL, t.CC_SWISS, t.CC_ADAPTIVE,
+               t.CC_AUTOGRAN):
+        cfg = mk(cc, wl, lanes=8)
+        r = run(cfg, wl, n_waves=15, seed=1)
+        assert r.commits + r.aborts == 8 * 15, t.CC_NAMES[cc]
+
+
+def test_aborted_txn_retries_not_regenerated():
+    """With heavy contention a lane's aborted txn must re-run (pending
+    buffer): with retries, commits by type track the original mix."""
+    wl = TPCCWorkload.make(n_warehouses=1, scale=0.05)
+    cfg = mk(t.CC_OCC, wl, lanes=32)
+    r = run(cfg, wl, n_waves=40, seed=0)
+    assert r.commits > 0
+    assert sum(r.commits_by_type) == r.commits
+
+
+def test_fine_granularity_reduces_tpcc_aborts():
+    wl = TPCCWorkload.make(n_warehouses=2, scale=0.2)
+    coarse = run(mk(t.CC_OCC, wl, lanes=32, gran=0), wl, 40, seed=1)
+    fine = run(mk(t.CC_OCC, wl, lanes=32, gran=1), wl, 40, seed=1)
+    assert fine.abort_rate < coarse.abort_rate
+    assert fine.throughput > coarse.throughput
+
+
+def test_ycsb_parity_split_reduces_aborts():
+    wl = YCSBWorkload.make(n_keys=64, theta=0.9)   # tiny => hot
+    coarse = run(mk(t.CC_OCC, wl, lanes=16, gran=0), wl, 30, seed=2)
+    fine = run(mk(t.CC_OCC, wl, lanes=16, gran=1), wl, 30, seed=2)
+    assert fine.abort_rate <= coarse.abort_rate
+
+
+def test_autogran_promotes_hot_records():
+    """Auto-granularity must converge toward fine-grained behaviour."""
+    wl = TPCCWorkload.make(n_warehouses=2, scale=0.2)
+    coarse = run(mk(t.CC_OCC, wl, lanes=32, gran=0), wl, 60, seed=3)
+    auto = run(mk(t.CC_AUTOGRAN, wl, lanes=32, gran=0), wl, 60, seed=3,
+               keep_state=True)
+    fine = run(mk(t.CC_OCC, wl, lanes=32, gran=1), wl, 60, seed=3)
+    assert int(auto.final_state.store.fine_mode.sum()) > 0   # promotions
+    assert auto.throughput > coarse.throughput
+    assert auto.throughput > 0.5 * fine.throughput
+
+
+def test_swisstm_ages_win_claims():
+    """SwissTM's contention manager must starve less: with age priority a
+    retried txn eventually beats fresh ones (commits monotone over waves)."""
+    wl = YCSBWorkload.make(n_keys=16, theta=0.99)  # brutal contention
+    r = run(mk(t.CC_SWISS, wl, lanes=16), wl, 60, seed=0)
+    assert r.commits > 0
+
+
+def test_tpcc_ring_cursors_advance():
+    wl = TPCCWorkload.make(n_warehouses=1, scale=0.1)
+    cfg = mk(t.CC_OCC, wl, lanes=16)
+    r = run(cfg, wl, n_waves=10, seed=0, keep_state=True)
+    tails = np.asarray(r.final_state.store.ring_tails)
+    assert tails.sum() > 0          # New-order lanes drew order slots

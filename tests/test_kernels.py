@@ -1,0 +1,142 @@
+"""Per-kernel validation: Pallas (interpret mode on CPU) vs the pure-jnp
+oracle in kernels/ref.py, across shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(0)
+
+
+# ------------------------------------------------------------- OCC kernels
+@pytest.mark.parametrize("T,K,N,G", [(4, 8, 64, 2), (8, 16, 512, 2),
+                                     (3, 5, 33, 1)])
+@pytest.mark.parametrize("fine", [True, False])
+def test_occ_validate(T, K, N, G, fine):
+    claim = jnp.asarray(RNG.integers(0, 2 ** 32, (N, G), dtype=np.uint32))
+    keys = jnp.asarray(RNG.integers(-1, N, (T, K), dtype=np.int32))
+    groups = jnp.asarray(RNG.integers(0, G, (T, K), dtype=np.int32))
+    prio = jnp.asarray(RNG.integers(0, 2 ** 16, (T, K), dtype=np.uint32))
+    check = jnp.asarray(RNG.random((T, K)) < 0.7) & (keys >= 0)
+    ivw = jnp.uint32(0xFF00)
+    a = ops.occ_validate(claim, keys, groups, prio, check, ivw, fine,
+                         use_pallas=True)
+    b = ref.occ_validate(claim, keys, groups, prio, check, ivw, fine)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("T,K,N,G", [(4, 8, 64, 2), (6, 3, 17, 1)])
+def test_occ_commit_with_duplicates(T, K, N, G):
+    wts = jnp.asarray(RNG.integers(0, 9, (N, G), dtype=np.uint32))
+    keys = jnp.asarray(RNG.integers(-1, N // 2, (T, K), dtype=np.int32))
+    groups = jnp.asarray(RNG.integers(0, G, (T, K), dtype=np.int32))
+    do = jnp.asarray(RNG.random((T, K)) < 0.6)
+    a = ops.occ_commit(wts, keys, groups, do, use_pallas=True)
+    b = ref.occ_commit(wts, keys, groups, do)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --------------------------------------------------------- flash attention
+@pytest.mark.parametrize("B,Hq,Hkv,Sq,Sk,D", [
+    (2, 4, 2, 64, 64, 32),       # GQA
+    (1, 2, 2, 128, 128, 16),     # MHA
+    (1, 4, 1, 32, 32, 8),        # MQA
+])
+@pytest.mark.parametrize("window", [None, 16])
+def test_flash_attention(B, Hq, Hkv, Sq, Sk, D, window):
+    q = jnp.asarray(RNG.standard_normal((B, Hq, Sq, D)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, Hkv, Sk, D)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, Hkv, Sk, D)), jnp.float32)
+    a = ops.flash_attention(q, k, v, causal=True, window=window,
+                            block_q=32, block_k=32, use_pallas=True)
+    b = ref.attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_bf16():
+    q = jnp.asarray(RNG.standard_normal((1, 2, 64, 16)), jnp.bfloat16)
+    k = jnp.asarray(RNG.standard_normal((1, 2, 64, 16)), jnp.bfloat16)
+    v = jnp.asarray(RNG.standard_normal((1, 2, 64, 16)), jnp.bfloat16)
+    a = ops.flash_attention(q, k, v, causal=True, block_q=32, block_k=32,
+                            use_pallas=True)
+    b = ref.attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), atol=3e-2)
+
+
+# ------------------------------------------------------------ jnp-flash
+@pytest.mark.parametrize("S,window", [(1024, None), (2048, None),
+                                      (2048, 256)])
+def test_jnp_flash_matches_dense(S, window):
+    """models/attention.py blocked path vs its own dense fallback."""
+    from repro.models.attention import _dense, _flash
+    B, G, R, D = 1, 2, 2, 16
+    q = jnp.asarray(RNG.standard_normal((B, G, R, S, D)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, G, S, D)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, G, S, D)), jnp.float32)
+    blocked = _flash(q, k, v, causal=True, window=window,
+                     block_q=512, block_k=512)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    dense = _dense(q * D ** -0.5, k, v, mask)
+    np.testing.assert_allclose(np.asarray(blocked), np.asarray(dense),
+                               atol=2e-5, rtol=2e-5)
+
+
+# ------------------------------------------------------------------ RG-LRU
+@pytest.mark.parametrize("B,S,D", [(2, 32, 128), (1, 64, 256)])
+def test_rglru(B, S, D):
+    la = -jnp.abs(jnp.asarray(RNG.standard_normal((B, S, D)), jnp.float32))
+    x = jnp.asarray(RNG.standard_normal((B, S, D)), jnp.float32)
+    h0 = jnp.asarray(RNG.standard_normal((B, D)), jnp.float32)
+    a, al = ops.rglru(la, x, h0=h0, use_pallas=True)
+    b, bl = ref.rglru(la, x, h0=h0)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(al), np.asarray(bl), atol=1e-5)
+
+
+def test_rglru_chunked_carries_state():
+    B, S, D = 1, 96, 128
+    la = -jnp.abs(jnp.asarray(RNG.standard_normal((B, S, D)), jnp.float32))
+    x = jnp.asarray(RNG.standard_normal((B, S, D)), jnp.float32)
+    a, al = ops.rglru(la, x, chunk=32, use_pallas=True)
+    b, bl = ref.rglru(la, x)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(al), np.asarray(bl), atol=1e-5)
+
+
+# ------------------------------------------------------------------ RWKV-6
+@pytest.mark.parametrize("B,H,S,Dk,Dv", [(2, 2, 16, 8, 8), (1, 4, 32, 16, 16)])
+def test_rwkv6(B, H, S, Dk, Dv):
+    r = jnp.asarray(RNG.standard_normal((B, H, S, Dk)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, H, S, Dk)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, H, S, Dv)), jnp.float32)
+    w = jnp.asarray(RNG.random((B, H, S, Dk)) * 0.9 + 0.05, jnp.float32)
+    u = jnp.asarray(RNG.standard_normal((H, Dk)), jnp.float32)
+    a, asl = ops.rwkv6(r, k, v, w, u, use_pallas=True)
+    b, bsl = ref.rwkv6(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5,
+                               rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(asl), np.asarray(bsl), atol=2e-5,
+                               rtol=2e-5)
+
+
+def test_rwkv6_chunked_carries_state():
+    B, H, S, D = 1, 2, 48, 8
+    r = jnp.asarray(RNG.standard_normal((B, H, S, D)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, H, S, D)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, H, S, D)), jnp.float32)
+    w = jnp.asarray(RNG.random((B, H, S, D)) * 0.9 + 0.05, jnp.float32)
+    u = jnp.asarray(RNG.standard_normal((H, D)), jnp.float32)
+    a, asl = ops.rwkv6(r, k, v, w, u, chunk=16, use_pallas=True)
+    b, bsl = ref.rwkv6(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5,
+                               rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(asl), np.asarray(bsl), atol=2e-5,
+                               rtol=2e-5)

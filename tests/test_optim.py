@@ -1,0 +1,58 @@
+"""AdamW: schedule shape, clipping, master-weight precision."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import AdamW
+
+
+def test_schedule_warmup_then_cosine():
+    opt = AdamW(peak_lr=1.0, warmup_steps=10, total_steps=110,
+                min_lr_frac=0.1)
+    assert float(opt.lr(jnp.int32(0))) == 0.0
+    assert float(opt.lr(jnp.int32(5))) == pytest.approx(0.5)
+    assert float(opt.lr(jnp.int32(10))) == pytest.approx(1.0)
+    assert float(opt.lr(jnp.int32(110))) == pytest.approx(0.1)
+    assert float(opt.lr(jnp.int32(60))) < 1.0
+
+
+def test_clipping_bounds_update():
+    opt = AdamW(peak_lr=1e-1, warmup_steps=0, total_steps=10, clip_norm=1.0,
+                weight_decay=0.0)
+    p = {"w": jnp.zeros((4,), jnp.float32)}
+    s = opt.init(p)
+    g = {"w": jnp.full((4,), 100.0)}           # gnorm 200 >> clip
+    p2, s2, m = opt.update(g, s, p, jnp.int32(1))
+    assert float(m["gnorm"]) == pytest.approx(200.0)
+    assert np.abs(np.asarray(p2["w"])).max() < 1.0
+
+
+def test_master_weights_accumulate_small_updates():
+    """bf16 params lose sub-eps updates; the f32 master must keep them."""
+    opt = AdamW(peak_lr=1e-5, warmup_steps=0, total_steps=1000,
+                weight_decay=0.0, master_f32=True)
+    p = {"w": jnp.ones((1,), jnp.bfloat16)}
+    s = opt.init(p)
+    g = {"w": jnp.full((1,), 1e-3, jnp.bfloat16)}
+    master0 = float(s["master"]["w"][0])
+    for i in range(5):
+        p, s, _ = opt.update(g, s, p, jnp.int32(i))
+    assert float(s["master"]["w"][0]) != master0
+
+
+def test_moment_dtype_honored():
+    opt = AdamW(moment_dtype="bfloat16")
+    s = opt.init({"w": jnp.zeros((2,), jnp.float32)})
+    assert s["m"]["w"].dtype == jnp.bfloat16
+
+
+def test_descends_quadratic():
+    opt = AdamW(peak_lr=0.1, warmup_steps=2, total_steps=120,
+                weight_decay=0.0)
+    p = {"w": jnp.asarray([3.0, -2.0])}
+    s = opt.init(p)
+    for i in range(120):
+        g = {"w": 2 * p["w"]}
+        p, s, _ = opt.update(g, s, p, jnp.int32(i))
+    assert float(jnp.abs(p["w"]).max()) < 0.5

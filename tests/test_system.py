@@ -1,0 +1,79 @@
+"""End-to-end behaviour tests for the paper's system: reduced-size versions
+of the figure benchmarks asserting the paper's ORDERING claims."""
+import jax
+import pytest
+
+from repro.core import types as t
+from repro.core.engine import run
+from repro.workloads import TPCCWorkload, YCSBWorkload
+
+
+def mk(cc, wl, lanes, gran):
+    return t.EngineConfig(cc=cc, lanes=lanes, slots=wl.slots,
+                          n_records=wl.n_records, n_groups=wl.n_groups,
+                          n_cols=wl.n_cols, n_txn_types=wl.n_txn_types,
+                          granularity=gran, n_rings=wl.n_rings)
+
+
+@pytest.fixture(scope="module")
+def tpcc():
+    return TPCCWorkload.make(n_warehouses=8, scale=0.5)
+
+
+def test_tpcc_fine_occ_beats_everything_at_high_lanes(tpcc):
+    """Paper section 4.3 / Fig 3b: with fine-grained timestamps OCC is the
+    fastest mechanism at high core counts."""
+    T, W = 96, 120
+    occ = run(mk(t.CC_OCC, tpcc, T, 1), tpcc, W, seed=5).throughput
+    for cc in (t.CC_TICTOC, t.CC_2PL, t.CC_SWISS):
+        other = run(mk(cc, tpcc, T, 1), tpcc, W, seed=5).throughput
+        assert occ > other, t.CC_NAMES[cc]
+
+
+def test_tpcc_coarse_tictoc_beats_occ_midrange(tpcc):
+    """Fig 3a: TicToc above OCC at mid-high core counts with coarse TS."""
+    T, W = 64, 120
+    occ = run(mk(t.CC_OCC, tpcc, T, 0), tpcc, W, seed=5)
+    tic = run(mk(t.CC_TICTOC, tpcc, T, 0), tpcc, W, seed=5)
+    assert tic.throughput > occ.throughput
+    assert tic.abort_rate < occ.abort_rate
+
+
+def test_tpcc_fine_granularity_large_abort_drop(tpcc):
+    """Section 4.3: OCC's abort rate collapses when timestamps go fine
+    (paper: 30.91% -> 1.75% at 128 threads)."""
+    T, W = 128, 120
+    coarse = run(mk(t.CC_OCC, tpcc, T, 0), tpcc, W, seed=5).abort_rate
+    fine = run(mk(t.CC_OCC, tpcc, T, 1), tpcc, W, seed=5).abort_rate
+    assert coarse > 5 * fine
+    assert fine < 0.05
+
+
+def test_occ_fine_beats_tictoc_coarse(tpcc):
+    """The headline: OCC + fine-grained timestamps outperforms TicToc with
+    coarse timestamps (paper: 1.37x @96)."""
+    T, W = 96, 120
+    occ_f = run(mk(t.CC_OCC, tpcc, T, 1), tpcc, W, seed=5).throughput
+    tic_c = run(mk(t.CC_TICTOC, tpcc, T, 0), tpcc, W, seed=5).throughput
+    assert occ_f > 1.15 * tic_c
+
+
+def test_ycsb_tictoc_collapses_at_high_lanes():
+    """Fig 2a: TicToc ends up much worse than OCC as parallelism increases
+    (rts-extension CAS failures under contention)."""
+    wl = YCSBWorkload.make(n_keys=200_000)
+    W = 100
+    occ = run(mk(t.CC_OCC, wl, 128, 0), wl, W, seed=6)
+    tic = run(mk(t.CC_TICTOC, wl, 128, 0), wl, W, seed=6)
+    assert tic.throughput < 0.7 * occ.throughput
+    assert tic.abort_rate > occ.abort_rate
+
+
+def test_ycsb_fine_lifts_all_mechanisms():
+    """Fig 2b: every mechanism improves with the parity split."""
+    wl = YCSBWorkload.make(n_keys=200_000)
+    W = 80
+    for cc in (t.CC_OCC, t.CC_TICTOC, t.CC_2PL, t.CC_SWISS, t.CC_ADAPTIVE):
+        c = run(mk(cc, wl, 96, 0), wl, W, seed=7).throughput
+        f = run(mk(cc, wl, 96, 1), wl, W, seed=7).throughput
+        assert f > c, t.CC_NAMES[cc]

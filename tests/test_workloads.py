@@ -1,0 +1,94 @@
+"""Workload generators: distributions and the paper's schema splits."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import types as t
+from repro.workloads import TPCCWorkload, YCSBWorkload
+from repro.workloads.tpcc import G_HOT, G_RARE, NEW_ORDER, ORDER_STATUS, \
+    PAYMENT
+from repro.workloads.zipf import ZipfSampler, nurand, scramble
+
+
+def test_zipf_is_skewed_and_scrambled():
+    z = ZipfSampler.make(10_000, 0.9)
+    ranks = np.asarray(z.ranks(jax.random.PRNGKey(0), (20_000,)))
+    # rank 0 hottest; top-10 ranks carry a large share
+    share = (ranks < 10).mean()
+    assert 0.10 < share < 0.45
+    keys = np.asarray(z.sample(jax.random.PRNGKey(0), (20_000,)))
+    # scrambling disperses the hot prefix (not the identity map) while
+    # preserving hotness (some key still carries rank-0's mass)
+    assert (keys < 10).mean() < (ranks < 10).mean() / 2
+    counts = np.bincount(keys, minlength=10_000)
+    assert counts.max() / len(keys) > 0.015
+    assert keys.min() >= 0 and keys.max() < 10_000
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2 ** 10))
+def test_nurand_in_range(seed):
+    v = np.asarray(nurand(jax.random.PRNGKey(seed), 1023, 0, 2999, 259,
+                          (512,)))
+    assert v.min() >= 0 and v.max() <= 2999
+
+
+def test_ycsb_parity_groups():
+    wl = YCSBWorkload.make(n_keys=100)
+    b, _ = wl.gen(jax.random.PRNGKey(0), jnp.uint32(0), 8,
+                  jnp.zeros((1,), jnp.int32))
+    cols = np.asarray(b.op_col)
+    groups = np.asarray(b.op_group)
+    np.testing.assert_array_equal(groups, cols % 2)   # the paper's split
+
+
+def test_tpcc_group_split_matches_paper():
+    """Payment writes the hot group; New-order's W/D/C reads the rare group
+    (section 3.4: tax & identity vs YTD & balance)."""
+    wl = TPCCWorkload.make(n_warehouses=2, scale=0.1)
+    b, _ = wl.gen(jax.random.PRNGKey(1), jnp.uint32(0), 256,
+                  jnp.zeros((wl.n_rings,), jnp.int32))
+    tt = np.asarray(b.txn_type)
+    kinds = np.asarray(b.op_kind)
+    groups = np.asarray(b.op_group)
+    keys = np.asarray(b.op_key)
+
+    pay = tt == PAYMENT
+    # Payment ops 0/1 are W_YTD / D_YTD ADDs in the hot group
+    assert (kinds[pay][:, 0] == t.ADD).all()
+    assert (groups[pay][:, 0] == G_HOT).all()
+    assert (groups[pay][:, 1] == G_HOT).all()
+    # Payment op 2 reads customer identity: rare group
+    assert (groups[pay][:, 2] == G_RARE).all()
+    no = tt == NEW_ORDER
+    # New-order ops 0/1 read W_TAX / D_TAX: rare group, READ
+    assert (kinds[no][:, 0] == t.READ).all()
+    assert (groups[no][:, 0] == G_RARE).all()
+    assert (groups[no][:, 1] == G_RARE).all()
+    # all keys in range
+    live = keys >= 0
+    assert keys[live].max() < wl.n_records
+
+
+def test_tpcc_mix_proportions():
+    wl = TPCCWorkload.make(n_warehouses=2, scale=0.1)
+    b, _ = wl.gen(jax.random.PRNGKey(2), jnp.uint32(0), 4096,
+                  jnp.zeros((wl.n_rings,), jnp.int32))
+    tt = np.asarray(b.txn_type)
+    assert abs((tt == NEW_ORDER).mean() - 45 / 92) < 0.05
+    assert abs((tt == PAYMENT).mean() - 43 / 92) < 0.05
+    assert abs((tt == ORDER_STATUS).mean() - 4 / 92) < 0.03
+
+
+def test_tpcc_ring_slots_unique_per_wave():
+    """Concurrent New-orders in one wave get distinct order slots."""
+    wl = TPCCWorkload.make(n_warehouses=1, scale=0.1)
+    b, tails = wl.gen(jax.random.PRNGKey(3), jnp.uint32(0), 64,
+                      jnp.zeros((wl.n_rings,), jnp.int32))
+    tt = np.asarray(b.txn_type)
+    okeys = np.asarray(b.op_key)[:, 48]     # the O-row write slot
+    no_keys = okeys[tt == NEW_ORDER]
+    assert len(no_keys) == len(set(no_keys.tolist()))
+    assert int(np.asarray(tails).sum()) == (tt == NEW_ORDER).sum()
