@@ -10,20 +10,19 @@ LANES = [8, 16, 32, 64, 96, 128]
 
 
 def sweep(workload: str, *, ccs=None, lanes=None, grans=(0, 1), waves=300,
-          scale=1.0, n_keys=1_000_000, seed=1, quiet=False):
-    from repro.launch.txn_bench import run_one
-    rows = []
-    for gran in grans:
-        for cc in (ccs or CCS):
-            for T in (lanes or LANES):
-                r = run_one(workload, cc, gran, T, waves, scale=scale,
-                            n_keys=n_keys, seed=seed)
-                rows.append(r)
-                if not quiet:
-                    print(f"  {workload} {cc:9s} "
-                          f"{'fine' if gran else 'coarse'} T={T:4d}  "
-                          f"thpt={r['throughput']:8.3f}  "
-                          f"abort={100*r['abort_rate']:6.2f}%")
+          scale=1.0, n_keys=1_000_000, seed=1, quiet=False, backend="jnp"):
+    """One jitted sweep over the whole grid (core/engine.py sweep)."""
+    from repro.launch.txn_bench import run_grid
+    rows = run_grid(workload, list(ccs or CCS), tuple(grans),
+                    list(lanes or LANES), waves, scale=scale, n_keys=n_keys,
+                    seed=seed, backend=backend)
+    if not quiet:
+        for r in rows:
+            print(f"  {workload} {r['cc']:9s} "
+                  f"{'fine' if r['granularity'] else 'coarse'} "
+                  f"T={r['lanes']:4d}  "
+                  f"thpt={r['throughput']:8.3f}  "
+                  f"abort={100*r['abort_rate']:6.2f}%")
     return rows
 
 

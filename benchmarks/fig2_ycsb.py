@@ -21,12 +21,15 @@ def main(argv=None):
     ap.add_argument("--full", action="store_true",
                     help="paper-scale: 10M keys (slower)")
     ap.add_argument("--waves", type=int, default=300)
+    ap.add_argument("--backend", choices=("jnp", "pallas"), default="jnp")
     ap.add_argument("--json", default="reports/fig2_ycsb.json")
     args = ap.parse_args(argv)
 
     n_keys = 10_000_000 if args.full else 1_000_000
-    print(f"# Fig 2a (coarse) + 2b (fine), {n_keys} keys")
-    rows = sweep("ycsb", waves=args.waves, n_keys=n_keys)
+    print(f"# Fig 2a (coarse) + 2b (fine), {n_keys} keys "
+          f"[{args.backend} backend, one jitted grid]")
+    rows = sweep("ycsb", waves=args.waves, n_keys=n_keys,
+                 backend=args.backend)
     save_rows(rows, args.json)
 
     # ordering checks

@@ -23,12 +23,15 @@ def main(argv=None):
                     help="paper-scale TPC-C tables")
     ap.add_argument("--waves", type=int, default=300)
     ap.add_argument("--ratios", action="store_true")
+    ap.add_argument("--backend", choices=("jnp", "pallas"), default="jnp")
     ap.add_argument("--json", default="reports/fig3_tpcc.json")
     args = ap.parse_args(argv)
 
     scale = 1.0
-    print(f"# Fig 3a (coarse) + 3b (fine), 8 warehouses, scale={scale}")
-    rows = sweep("tpcc", waves=args.waves, scale=scale)
+    print(f"# Fig 3a (coarse) + 3b (fine), 8 warehouses, scale={scale} "
+          f"[{args.backend} backend, one jitted grid]")
+    rows = sweep("tpcc", waves=args.waves, scale=scale,
+                 backend=args.backend)
     save_rows(rows, args.json)
 
     occ96f = one(rows, cc="occ", granularity=1, lanes=96)["throughput"]

@@ -4,12 +4,16 @@
 Runs the shard_map OCC wave on 1/2/4/8 host devices (same *global* lane and
 record counts), measuring committed txns per second of wall time and the
 per-wave collective bytes — the weak-scaling story of the routed engine.
+A ``shards=0`` anchor row first runs the single-device engine through the
+vmapped ``sweep()`` grid runner at the same global lane count, so the table
+reads "local engine vs N-shard routed engine".
 
     PYTHONPATH=src python -m benchmarks.txn_scaling
 """
 from __future__ import annotations
 
 import json
+import os
 import subprocess
 import sys
 import textwrap
@@ -24,6 +28,30 @@ PROG = textwrap.dedent("""
 
     GLOBAL_LANES, K, N, WAVES = 256, 16, 1_000_000, 30
     rows = []
+
+    # shards=0 anchor: the local (single-device) engine at the same global
+    # lane count, via the one-XLA-program sweep() grid runner.
+    from repro.core import types as t
+    from repro.core.engine import sweep as engine_sweep
+    from repro.workloads import YCSBWorkload
+    wl = YCSBWorkload.make(n_keys=N)
+    cfg = t.EngineConfig(cc=t.CC_OCC, lanes=GLOBAL_LANES, slots=wl.slots,
+                         n_records=wl.n_records, n_groups=wl.n_groups,
+                         n_cols=wl.n_cols, n_txn_types=wl.n_txn_types,
+                         n_rings=wl.n_rings)
+    # Warm call first: the timed call then hits the XLA executable cache and
+    # measures (re-trace +) waves rather than a full compile.
+    engine_sweep(cfg, wl, WAVES, ccs=[t.CC_OCC], grans=(1,),
+                 lane_counts=(GLOBAL_LANES,))
+    t0 = time.time()
+    (pt,) = engine_sweep(cfg, wl, WAVES, ccs=[t.CC_OCC], grans=(1,),
+                         lane_counts=(GLOBAL_LANES,))
+    rows.append({"shards": 0, "commits": pt.commits,
+                 "waves_per_s": WAVES / (time.time() - t0),
+                 "coll_bytes_per_wave": 0})
+    print(f"local  : {rows[0]['waves_per_s']:6.1f} waves/s  "
+          f"{pt.commits} commits  (sweep() anchor, no collectives)")
+
     for ns in (1, 2, 4, 8):
         mesh = jax.make_mesh((ns,), ("data",))
         cfg = D.DistConfig(n_records=N, n_groups=2,
@@ -73,6 +101,7 @@ def main(argv=None):
     for line in r.stdout.splitlines():
         if line.startswith("JSON:"):
             rows = json.loads(line[5:])
+            os.makedirs("reports", exist_ok=True)
             with open("reports/txn_scaling.json", "w") as f:
                 json.dump(rows, f, indent=1)
             print("[saved] reports/txn_scaling.json")

@@ -80,5 +80,5 @@ def wave_validate(store: StoreState, batch: TxnBatch, prio, wave,
 
     store = dataclasses.replace(store, abort_heat=heat, heat_wave=heat_wave,
                                 pess_mode=pess_mode)
-    store = base.bump_versions(store, batch, res.commit)
+    store = base.bump_versions(store, batch, res.commit, cfg)
     return store, res

@@ -28,17 +28,14 @@ from repro.core.types import OOB_KEY, EngineConfig, StoreState, TxnBatch
 
 def wave_validate(store: StoreState, batch: TxnBatch, prio, wave,
                   cfg: EngineConfig):
-    live = batch.live()
-    rd = batch.is_read() & live
-    myp = base.my_prio_per_op(batch, prio)
-
     store = base.write_claims(store, batch, prio, wave)
-    fine_probe = claims.probe(store.claim_w, batch.op_key, batch.op_group,
-                              wave)
-    coarse_probe = claims.probe_any_group(store.claim_w, batch.op_key, wave)
-
-    conflict_fine = rd & (fine_probe < myp)
-    conflict_coarse = rd & (coarse_probe < myp)
+    # Two probe widths, one claim table: the record's fine_mode bit picks
+    # which verdict applies.  Both probes are backend-routed (Pallas kernel
+    # or jnp gather — DESIGN.md section 5).
+    conflict_fine = base.read_set_conflicts(store, batch, prio, wave, cfg,
+                                            fine=True)
+    conflict_coarse = base.read_set_conflicts(store, batch, prio, wave, cfg,
+                                              fine=False)
 
     kf = jnp.where(batch.op_key >= 0, batch.op_key, OOB_KEY)
     is_fine_rec = store.fine_mode.at[kf].get(mode="fill", fill_value=False)
@@ -60,5 +57,5 @@ def wave_validate(store: StoreState, batch: TxnBatch, prio, wave,
 
     store = dataclasses.replace(store, false_heat=heat, heat_wave=heat_wave,
                                 fine_mode=fine_mode)
-    store = base.bump_versions(store, batch, res.commit)
+    store = base.bump_versions(store, batch, res.commit, cfg)
     return store, res

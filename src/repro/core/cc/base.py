@@ -45,19 +45,57 @@ def result_from_conflicts(batch: TxnBatch, conflict_op: jax.Array,
     )
 
 
-def bump_versions(store: StoreState, batch: TxnBatch,
-                  commit: jax.Array) -> StoreState:
-    """Advance write timestamps for committed write-set ops.
+def bump_versions(store: StoreState, batch: TxnBatch, commit: jax.Array,
+                  cfg: EngineConfig) -> StoreState:
+    """Advance write timestamps for committed write-set ops (commit install).
 
     OCC-family version semantics: any committed modification of a (record,
     group) invalidates concurrent readers; the absolute value only needs to be
-    monotone, so a scatter-add of 1 per committed write op is sufficient
-    (duplicates simply advance the clock further)."""
+    monotone, so +1 per committed write op is sufficient (duplicates simply
+    advance the clock further).  The ``pallas`` backend installs through the
+    sequential-grid commit kernel; the ``jnp`` backend through an XLA
+    scatter-add — identical results (DESIGN.md section 5)."""
     w = batch.is_write() & batch.live() & commit[:, None]
-    k = jnp.where(w, batch.op_key, OOB_KEY).reshape(-1)
-    g = batch.op_group.reshape(-1)
-    wts = store.wts.at[k, g].add(jnp.uint32(1), mode="drop")
+    if cfg.backend == "pallas":
+        from repro.kernels import ops
+        wts = ops.occ_commit(store.wts, batch.op_key, batch.op_group, w,
+                             use_pallas=True)
+    else:
+        k = jnp.where(w, batch.op_key, OOB_KEY).reshape(-1)
+        g = batch.op_group.reshape(-1)
+        wts = store.wts.at[k, g].add(jnp.uint32(1), mode="drop")
     return dataclasses.replace(store, wts=wts)
+
+
+def read_set_conflicts(store: StoreState, batch: TxnBatch, prio: jax.Array,
+                       wave: jax.Array, cfg: EngineConfig,
+                       fine=None) -> jax.Array:
+    """Read-set probe against the writer-claim table (the OCC hot loop).
+
+    Returns conflict bool[T, K]: True where a live read op's (record, group)
+    cell was write-claimed this wave by a strictly-higher-priority lane.
+    ``fine`` selects the probe width (granularity); it defaults to the
+    config's static granularity and may be a per-op bool array
+    (auto-granularity) — the kernel path requires a static bool, so per-op
+    selectors always take the jnp path.
+
+    Backend routing: ``pallas`` runs the scalar-prefetch DMA kernel
+    (kernels/occ_validate.py — interpret mode off-TPU), ``jnp`` the
+    gather-based probe.  Both decode the claim words of core/claimword.py and
+    produce bit-identical flags (DESIGN.md section 5).
+    """
+    myp = my_prio_per_op(batch, prio)
+    check = batch.is_read() & batch.live()
+    if fine is None:
+        fine = is_fine(cfg)
+    if cfg.backend == "pallas" and isinstance(fine, bool):
+        from repro.kernels import ops
+        return ops.occ_validate(store.claim_w, batch.op_key, batch.op_group,
+                                myp, check, claims.inv_wave(wave), fine,
+                                use_pallas=True)
+    wprio = claims.effective_probe(store.claim_w, batch.op_key,
+                                   batch.op_group, wave, fine)
+    return check & (wprio < myp)
 
 
 def my_prio_per_op(batch: TxnBatch, prio: jax.Array) -> jax.Array:

@@ -23,13 +23,10 @@ from repro.core.types import EngineConfig, StoreState, TxnBatch
 def wave_validate(store: StoreState, batch: TxnBatch, prio, wave,
                   cfg: EngineConfig):
     store = base.write_claims(store, batch, prio, wave)
-    wprio = claims.effective_probe(store.claim_w, batch.op_key,
-                                   batch.op_group, wave, base.is_fine(cfg))
-    conflict = (batch.is_read() & batch.live()
-                & (wprio < base.my_prio_per_op(batch, prio)))
+    conflict = base.read_set_conflicts(store, batch, prio, wave, cfg)
     T, K = batch.op_key.shape
     u = claims.hash01(wave, claims.lane_op_ids(T, K))
     conflict = conflict & (u < cfg.cost.opt_overlap)   # window thinning
     res = base.result_from_conflicts(batch, conflict, eager=False)
-    store = base.bump_versions(store, batch, res.commit)
+    store = base.bump_versions(store, batch, res.commit, cfg)
     return store, res

@@ -49,5 +49,5 @@ def wave_validate(store: StoreState, batch: TxnBatch, prio, wave,
     K = batch.slots
     first_ww = claims.first_true_index(ww, K)
     res = dataclasses.replace(res, first_conflict=first_ww)
-    store = base.bump_versions(store, batch, res.commit)
+    store = base.bump_versions(store, batch, res.commit, cfg)
     return store, res

@@ -46,5 +46,5 @@ def wave_validate(store: StoreState, batch: TxnBatch, prio, wave,
     u = claims.hash01(wave, claims.lane_op_ids(T, K))
     conflict = conflict & (u < cfg.cost.phase_overlap)
     res = base.result_from_conflicts(batch, conflict, eager=True)
-    store = base.bump_versions(store, batch, res.commit)
+    store = base.bump_versions(store, batch, res.commit, cfg)
     return store, res

@@ -17,7 +17,9 @@ embeds the wave number, arranged to be *monotonically decreasing*:
 
 A claim from wave w is numerically smaller than every claim from waves < w, so
 ``scatter-min`` makes the current wave always win and stale entries are simply
-ignored at probe time (their tag mismatches).  No reset, ever.
+ignored at probe time (their tag mismatches).  No reset, ever.  The bit layout
+itself lives in ``core/claimword.py``, shared with the Pallas kernels so both
+engine backends read the same words (DESIGN.md section 5).
 
 ``prio16`` is the in-wave priority: ``(inv_age << PRIO_LANE_BITS) | lane_rank``
 — lower value = earlier in the wave's serialization order.  Contention-managed
@@ -29,16 +31,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.claimword import (EMPTY_WORD, MAX_WAVE, NO_PRIO, PRIO16_MASK,
+                                  claim_word, inv_wave, live_prio)
 from repro.core.types import OOB_KEY, PRIO_LANE_BITS
-
-MAX_WAVE = jnp.uint32(0xFFFF)
-PRIO16_MASK = jnp.uint32(0xFFFF)
-NO_PRIO = jnp.uint32(0xFFFF)  # probe result when nobody claims
-
-
-def inv_wave(wave: jax.Array) -> jax.Array:
-    """Monotone-decreasing wave tag."""
-    return MAX_WAVE - (wave.astype(jnp.uint32) & MAX_WAVE)
 
 
 def prio16(age: jax.Array, lane_rank: jax.Array,
@@ -52,10 +47,6 @@ def prio16(age: jax.Array, lane_rank: jax.Array,
         inv_age = jnp.full_like(age, max_age)
     return (inv_age.astype(jnp.uint32) << PRIO_LANE_BITS) | (
         lane_rank.astype(jnp.uint32) & ((1 << PRIO_LANE_BITS) - 1))
-
-
-def claim_word(wave: jax.Array, prio: jax.Array) -> jax.Array:
-    return (inv_wave(wave) << 16) | prio.astype(jnp.uint32)
 
 
 def scatter_claims(table: jax.Array, keys: jax.Array, groups: jax.Array,
@@ -80,10 +71,8 @@ def probe(table: jax.Array, keys: jax.Array, groups: jax.Array,
     the fill value applies (negative gathers would wrap to the last record).
     """
     k = jnp.where(keys >= 0, keys, OOB_KEY)
-    words = table.at[k, groups].get(mode="fill",
-                                    fill_value=0xFFFFFFFF)
-    live = (words >> 16) == inv_wave(wave)
-    return jnp.where(live, words & PRIO16_MASK, NO_PRIO)
+    words = table.at[k, groups].get(mode="fill", fill_value=EMPTY_WORD)
+    return live_prio(words, inv_wave(wave))
 
 
 def probe_any_group(table: jax.Array, keys: jax.Array,
@@ -98,11 +87,8 @@ def probe_any_group(table: jax.Array, keys: jax.Array,
     """
     # table: [n_records, G]; gather whole rows then reduce.
     k = jnp.where(keys >= 0, keys, OOB_KEY)
-    rows = table.at[k, :].get(mode="fill",
-                              fill_value=0xFFFFFFFF)  # [..., G]
-    live = (rows >> 16) == inv_wave(wave)
-    pr = jnp.where(live, rows & PRIO16_MASK, NO_PRIO)
-    return pr.min(axis=-1)
+    rows = table.at[k, :].get(mode="fill", fill_value=EMPTY_WORD)  # [..., G]
+    return live_prio(rows, inv_wave(wave)).min(axis=-1)
 
 
 def effective_probe(table: jax.Array, keys: jax.Array, groups: jax.Array,

@@ -1,0 +1,51 @@
+"""The packed claim-word layout, shared by every backend.
+
+A claim table cell is one uint32:
+
+    word = (inv_wave << WAVE_SHIFT) | prio16
+    inv_wave = MAX_WAVE - (wave & MAX_WAVE)      (monotone decreasing)
+    prio16   = (inv_age << PRIO_LANE_BITS) | lane_rank   (lower wins)
+
+Both engine backends interpret this layout: the jnp backend through the
+gather/scatter helpers in ``core/claims.py``, the Pallas backend inside the
+TPU kernels (``kernels/occ_validate.py`` / ``occ_commit.py``) and their jnp
+oracles (``kernels/ref.py``).  Keeping the bit layout in exactly one module is
+what makes the backends bit-identical by construction — see DESIGN.md
+section 2 for the semantics and DESIGN.md section 5 for the backend contract.
+
+Only ``jax.numpy`` is used, and every helper operates on plain arrays, so the
+same code runs inside a Pallas kernel body, inside a jitted scan, and in
+eager test code.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Plain ints (not jnp scalars): these are baked into Pallas kernel bodies,
+# which may not capture traced constants.
+WAVE_SHIFT = 16                 # wave tag occupies the high 16 bits
+MAX_WAVE = 0xFFFF
+PRIO16_MASK = 0xFFFF
+NO_PRIO = 0xFFFF                # probe result when nobody claims
+EMPTY_WORD = 0xFFFFFFFF         # fill value for absent/masked cells
+
+
+def inv_wave(wave: jax.Array) -> jax.Array:
+    """Monotone-decreasing wave tag: the current wave's claims are numerically
+    smaller than every stale wave's, so scatter-min never needs a reset."""
+    return MAX_WAVE - (wave.astype(jnp.uint32) & MAX_WAVE)
+
+
+def claim_word(wave: jax.Array, prio: jax.Array) -> jax.Array:
+    """Pack (wave, prio16) into one claim word."""
+    return (inv_wave(wave) << WAVE_SHIFT) | (prio.astype(jnp.uint32)
+                                             & PRIO16_MASK)
+
+
+def live_prio(words: jax.Array, ivw: jax.Array) -> jax.Array:
+    """Unpack claim words: prio16 where the wave tag matches ``ivw``
+    (a value produced by ``inv_wave``), NO_PRIO where the claim is stale
+    or absent."""
+    live = (words >> WAVE_SHIFT) == ivw
+    return jnp.where(live, words & PRIO16_MASK, NO_PRIO)

@@ -1,0 +1,24 @@
+"""JAX version-compatibility shims (jax 0.4.x through current).
+
+``shard_map`` moved from ``jax.experimental.shard_map`` to ``jax.shard_map``
+and renamed its replication-check flag (``check_rep`` -> ``check_vma``).
+Every shard_map user in this repo goes through this wrapper so version drift
+stays in one file.
+"""
+from __future__ import annotations
+
+try:                                    # jax >= 0.6
+    from jax import shard_map as _shard_map
+except ImportError:                     # jax 0.4.x: experimental home
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    """shard_map with replication checking off (the repo-wide convention:
+    out-specs here describe data layout, not replication proofs)."""
+    try:
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=False)
+    except TypeError:                   # jax 0.4.x spells it check_rep
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=False)

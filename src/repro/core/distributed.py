@@ -37,8 +37,9 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
+
+from repro.core.compat import shard_map
 
 from repro.core import claims
 from repro.core import types as t
@@ -165,8 +166,7 @@ def make_wave_fn(cfg: DistConfig, mesh):
         local_wave, mesh=mesh,
         in_specs=(spec_ops, spec_ops, spec_ops, spec_ops, spec_ops,
                   spec_ops, P()),
-        out_specs=(spec_ops, spec_ops, spec_ops, spec_ops),
-        check_vma=False)
+        out_specs=(spec_ops, spec_ops, spec_ops, spec_ops))
     return wave
 
 

@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Callable, Optional, Protocol
+from typing import Callable, Optional, Protocol, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -96,7 +96,16 @@ def apply_values(values: jax.Array, batch: TxnBatch, commit: jax.Array,
     return values
 
 
-def make_wave_step(cfg: EngineConfig, workload: Workload) -> Callable:
+def make_wave_step(cfg: EngineConfig, workload: Workload,
+                   active: Optional[jax.Array] = None) -> Callable:
+    """Build the scan body for one wave.
+
+    ``active`` (bool[T] or None) marks live lanes: the sweep runner pads every
+    grid point to a common lane count and masks the padding here, so grids of
+    different thread counts share one compiled program.  Inactive lanes carry
+    empty transactions (no ops, no claims) and are excluded from every metric.
+    ``None`` (the single-run path) means all lanes are active.
+    """
     validator = VALIDATORS[cfg.cc]
     c = cfg.cost
     T = cfg.lanes
@@ -113,6 +122,14 @@ def make_wave_step(cfg: EngineConfig, workload: Workload) -> Callable:
                 sel.reshape((T,) + (1,) * (p.ndim - 1)), p, f),
             state.pending, fresh)
         age = jnp.where(sel, state.age, 0)
+        if active is not None:
+            # Padding lanes run empty transactions: no ops => no claims, no
+            # conflicts, and the accounting below masks them out.
+            batch = dataclasses.replace(
+                batch,
+                op_key=jnp.where(active[:, None], batch.op_key, -1),
+                op_kind=jnp.where(active[:, None], batch.op_kind, t.NOP),
+                n_ops=jnp.where(active, batch.n_ops, 0))
         store = dataclasses.replace(state.store, ring_tails=tails)
 
         perm = jax.random.permutation(rng_perm, T).astype(jnp.uint32)
@@ -160,25 +177,31 @@ def make_wave_step(cfg: EngineConfig, workload: Workload) -> Callable:
         lane_dt = jnp.where(commit, t_commit, t_abort)
 
         # ---- metrics + retry bookkeeping ----
+        if active is None:
+            committed, aborted = commit, ~commit
+        else:
+            committed, aborted = commit & active, ~commit & active
+            lane_dt = jnp.where(active, lane_dt, 0.0)
         commits_by_type = state.commits_by_type.at[batch.txn_type].add(
-            commit.astype(state.commits_by_type.dtype))
+            committed.astype(state.commits_by_type.dtype))
         new_state = EngineState(
             rng=rng,
             wave=wave + 1,
             store=store,
             pending=batch,
-            pending_live=~commit,
+            pending_live=aborted,
             age=jnp.where(commit, 0, age + 1),
             lane_time=state.lane_time + lane_dt,
-            commits=state.commits + commit.sum().astype(state.commits.dtype),
-            aborts=state.aborts + (~commit).sum().astype(state.aborts.dtype),
+            commits=state.commits
+                    + committed.sum().astype(state.commits.dtype),
+            aborts=state.aborts + aborted.sum().astype(state.aborts.dtype),
             commits_by_type=commits_by_type,
             wasted_time=state.wasted_time
-                        + jnp.where(commit, 0.0, lane_dt).sum(),
+                        + jnp.where(committed, 0.0, lane_dt).sum(),
             ext_events=state.ext_events + res.ext_count,
         )
-        ys = (commit.sum().astype(jnp.int32),
-              (~commit).sum().astype(jnp.int32))
+        ys = (committed.sum().astype(jnp.int32),
+              aborted.sum().astype(jnp.int32))
         return new_state, ys
 
     return wave_step
@@ -197,6 +220,78 @@ class SimResult:
     waves: int
     per_wave_commits: Optional[jax.Array] = None
     final_state: Optional[EngineState] = None
+
+
+@dataclasses.dataclass
+class SweepPoint:
+    """One datapoint of a sweep grid (a SimResult plus its coordinates)."""
+    cc: int
+    granularity: int
+    lanes: int
+    seed: int
+    commits: int
+    aborts: int
+    abort_rate: float
+    throughput: float          # committed txns per simulated microsecond
+    sim_time_us: float
+    ext_events: int
+    waves: int
+
+
+def sweep(cfg: EngineConfig, workload: Workload, n_waves: int, *,
+          ccs: Sequence[int], grans: Sequence[int] = (0, 1),
+          lane_counts: Sequence[int] = (16, 64, 128),
+          seeds: Sequence[int] = (0,)) -> list[SweepPoint]:
+    """Run an entire benchmark grid as ONE jitted XLA program.
+
+    The grid is ccs x grans x lane_counts x seeds.  (cc, granularity) pairs
+    select different validator code, so they are unrolled as branches inside
+    the single jitted function; the (lane_count, seed) axis is *vmapped*:
+    every point is padded to max(lane_counts) lanes and a per-point active
+    mask silences the padding (see make_wave_step).  One compile, one
+    device dispatch — this is what makes a full Fig 2/Fig 3 datapoint grid
+    cheap to re-run (ROADMAP: one-XLA-program benchmark grids).
+
+    A point with lane_count == max(lane_counts) is bit-identical to
+    ``run(replace(cfg, cc=cc, granularity=g, lanes=T), workload, n_waves,
+    seed)`` — padding only changes points below the max (their PRNG stream
+    spans the padded lane count).  Tested in tests/test_sweep.py.
+    """
+    T_max = max(lane_counts)
+    store = workload.init_store(cfg.track_values)
+    lane_grid = jnp.repeat(jnp.asarray(lane_counts, jnp.int32), len(seeds))
+    seed_grid = jnp.tile(jnp.asarray(seeds, jnp.uint32), len(lane_counts))
+    combos = [(cc, g) for g in grans for cc in ccs]
+    cfgs = [dataclasses.replace(cfg, cc=cc, granularity=g, lanes=T_max)
+            for cc, g in combos]
+
+    def point_fn(ccfg):
+        def point(n_lanes, seed):
+            active = jnp.arange(T_max, dtype=jnp.int32) < n_lanes
+            state0 = engine_state_init(ccfg, jax.random.PRNGKey(seed), store)
+            step = make_wave_step(ccfg, workload, active=active)
+            state, _ = jax.lax.scan(step, state0, None, length=n_waves)
+            return (state.commits, state.aborts, state.lane_time.sum(),
+                    state.ext_events)
+        return point
+
+    @jax.jit
+    def go(lane_grid, seed_grid):
+        return [jax.vmap(point_fn(c))(lane_grid, seed_grid) for c in cfgs]
+
+    raw = jax.device_get(go(lane_grid, seed_grid))
+    points = []
+    for (cc, g), (commits, aborts, lane_time, ext) in zip(combos, raw):
+        for i, (T, sd) in enumerate(
+                (T, sd) for T in lane_counts for sd in seeds):
+            c, a = int(commits[i]), int(aborts[i])
+            wall = float(lane_time[i]) / T
+            points.append(SweepPoint(
+                cc=cc, granularity=g, lanes=T, seed=sd, commits=c, aborts=a,
+                abort_rate=a / max(c + a, 1),
+                throughput=c / max(wall, 1e-9), sim_time_us=wall,
+                ext_events=int(ext[i]), waves=n_waves))
+    return points
 
 
 def run(cfg: EngineConfig, workload: Workload, n_waves: int,

@@ -249,7 +249,17 @@ class EngineConfig:
     # Auto-granularity (beyond-paper, paper section 5 future work):
     autogran_up: float = 0.10
     autogran_decay: float = 0.97
-    use_pallas: bool = False    # route validate/commit through Pallas kernels
+    backend: str = "jnp"        # "jnp": XLA gather/scatter probe + install;
+                                # "pallas": the TPU-native kernels
+                                # (kernels/occ_validate.py, occ_commit.py;
+                                # interpret mode off-TPU).  Both read the same
+                                # claim words (core/claimword.py) and are
+                                # bit-identical — see DESIGN.md section 5.
+
+    def __post_init__(self):
+        if self.backend not in ("jnp", "pallas"):
+            raise ValueError(f"unknown backend {self.backend!r} "
+                             "(expected 'jnp' or 'pallas')")
 
 
 def txn_batch_zeros(lanes: int, slots: int) -> TxnBatch:

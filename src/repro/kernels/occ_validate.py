@@ -22,18 +22,17 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-NO_PRIO = 0xFFFF
+from repro.core.claimword import NO_PRIO, live_prio
 
 
 def _kernel(fine: bool, G: int,
             keys_ref, ivw_ref, grp_ref, prio_ref, chk_ref, row_ref, out_ref):
     row = row_ref[0, :]                                   # uint32[G]
-    live = (row >> 16) == ivw_ref[0]
-    pr = jnp.where(live, row & NO_PRIO, jnp.uint32(NO_PRIO))
+    pr = live_prio(row, ivw_ref[0])
     if fine:
         g = grp_ref[0, 0]
         sel = jnp.arange(G, dtype=jnp.int32) == g
-        wprio = jnp.where(sel, pr, jnp.uint32(NO_PRIO)).min()
+        wprio = jnp.where(sel, pr, NO_PRIO).min()
     else:
         wprio = pr.min()
     out_ref[0, 0] = chk_ref[0, 0] & (wprio < prio_ref[0, 0])

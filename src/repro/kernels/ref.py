@@ -4,19 +4,18 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.claimword import EMPTY_WORD, live_prio
+from repro.core.types import OOB_KEY  # negative indices wrap, OOB drops
+
 
 # ---------------------------------------------------------------- OCC kernels
-OOB_KEY = 0x7F000000  # see core/types.py — negative indices wrap, OOB drops
-
-
 def occ_validate(claim_w: jax.Array, keys: jax.Array, groups: jax.Array,
                  myprio: jax.Array, check: jax.Array,
                  inv_wave: jax.Array, fine: bool) -> jax.Array:
     """Conflict flags for read-set validation (see core/claims.py probe)."""
     k = jnp.where(keys >= 0, keys, OOB_KEY)
-    rows = claim_w.at[k, :].get(mode="fill", fill_value=0xFFFFFFFF)
-    live = (rows >> 16) == inv_wave
-    pr = jnp.where(live, rows & 0xFFFF, jnp.uint32(0xFFFF))
+    rows = claim_w.at[k, :].get(mode="fill", fill_value=EMPTY_WORD)
+    pr = live_prio(rows, inv_wave)
     if fine:
         g1 = jnp.take_along_axis(pr, groups[..., None], axis=-1)[..., 0]
         wprio = g1

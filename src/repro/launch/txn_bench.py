@@ -2,6 +2,11 @@
 
     PYTHONPATH=src python -m repro.launch.txn_bench --workload tpcc \
         --cc occ tictoc --granularity both --lanes 16 64 128 --waves 300
+
+The whole cc x granularity x lanes grid compiles to ONE XLA program
+(core/engine.py sweep); ``--backend pallas`` routes the OCC-family probe and
+commit-install through the TPU-native kernels (interpret mode on CPU — see
+DESIGN.md section 5).
 """
 from __future__ import annotations
 
@@ -10,20 +15,66 @@ import json
 import time
 
 
+def _make_workload(workload: str, *, scale: float = 1.0,
+                   n_keys: int = 1_000_000):
+    from repro.workloads import TPCCWorkload, YCSBWorkload
+    if workload == "tpcc":
+        return TPCCWorkload.make(n_warehouses=8, scale=scale)
+    return YCSBWorkload.make(n_keys=n_keys)
+
+
+def _row(workload: str, cc_name: str, p, wall_s: float,
+         backend: str) -> dict:
+    return {
+        "workload": workload, "cc": cc_name, "granularity": p.granularity,
+        "lanes": p.lanes, "waves": p.waves,
+        "commits": p.commits, "aborts": p.aborts,
+        "abort_rate": round(p.abort_rate, 4),
+        "throughput": round(p.throughput, 4),
+        "ext_events": p.ext_events,
+        "wall_s": round(wall_s, 2),
+        "backend": backend,
+    }
+
+
+def run_grid(workload: str, ccs: list, grans, lanes: list, waves: int, *,
+             scale: float = 1.0, n_keys: int = 1_000_000, seed: int = 0,
+             backend: str = "jnp") -> list:
+    """Run the whole benchmark grid in one jitted sweep; returns row dicts.
+
+    ``wall_s`` in each row is the grid's wall time amortized over its rows
+    (the grid runs as one XLA program, so per-point timing does not exist).
+    """
+    from repro.core import types as t
+    from repro.core.engine import sweep
+
+    wl = _make_workload(workload, scale=scale, n_keys=n_keys)
+    cfg = t.EngineConfig(
+        cc=t.CC_OCC, lanes=max(lanes), slots=wl.slots,
+        n_records=wl.n_records, n_groups=wl.n_groups, n_cols=wl.n_cols,
+        n_txn_types=wl.n_txn_types, n_rings=wl.n_rings, backend=backend)
+    t0 = time.time()
+    points = sweep(cfg, wl, waves, ccs=[t.CC_IDS[c] for c in ccs],
+                   grans=tuple(grans), lane_counts=tuple(lanes),
+                   seeds=(seed,))
+    wall = (time.time() - t0) / max(len(points), 1)
+    return [_row(workload, t.CC_NAMES[p.cc], p, wall, backend)
+            for p in points]
+
+
 def run_one(workload: str, cc_name: str, gran: int, lanes: int, waves: int,
-            *, scale: float = 1.0, n_keys: int = 1_000_000, seed: int = 0):
+            *, scale: float = 1.0, n_keys: int = 1_000_000, seed: int = 0,
+            backend: str = "jnp"):
+    """Single grid point (one compiled run; prefer run_grid for grids)."""
     from repro.core import types as t
     from repro.core.engine import run
-    from repro.workloads import TPCCWorkload, YCSBWorkload
 
-    if workload == "tpcc":
-        wl = TPCCWorkload.make(n_warehouses=8, scale=scale)
-    else:
-        wl = YCSBWorkload.make(n_keys=n_keys)
+    wl = _make_workload(workload, scale=scale, n_keys=n_keys)
     cfg = t.EngineConfig(
         cc=t.CC_IDS[cc_name], lanes=lanes, slots=wl.slots,
         n_records=wl.n_records, n_groups=wl.n_groups, n_cols=wl.n_cols,
-        n_txn_types=wl.n_txn_types, granularity=gran, n_rings=wl.n_rings)
+        n_txn_types=wl.n_txn_types, granularity=gran, n_rings=wl.n_rings,
+        backend=backend)
     t0 = time.time()
     res = run(cfg, wl, n_waves=waves, seed=seed)
     wall = time.time() - t0
@@ -35,6 +86,7 @@ def run_one(workload: str, cc_name: str, gran: int, lanes: int, waves: int,
         "throughput": round(res.throughput, 4),
         "ext_events": res.ext_events,
         "wall_s": round(wall, 2),
+        "backend": backend,
     }
 
 
@@ -49,21 +101,23 @@ def main(argv=None):
     ap.add_argument("--waves", type=int, default=300)
     ap.add_argument("--scale", type=float, default=1.0)
     ap.add_argument("--n-keys", type=int, default=1_000_000)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--backend", choices=("jnp", "pallas"), default="jnp",
+                    help="probe/commit substrate (pallas = TPU kernels, "
+                         "interpret mode on CPU)")
     ap.add_argument("--json", default=None)
     args = ap.parse_args(argv)
 
-    grans = {"coarse": [0], "fine": [1], "both": [0, 1]}[args.granularity]
-    rows = []
-    for gran in grans:
-        for cc in args.cc:
-            for lanes in args.lanes:
-                r = run_one(args.workload, cc, gran, lanes, args.waves,
-                            scale=args.scale, n_keys=args.n_keys)
-                rows.append(r)
-                print(f"{r['workload']} {r['cc']:9s} "
-                      f"{'fine' if gran else 'coarse'} T={lanes:4d}: "
-                      f"thpt={r['throughput']:8.3f} txn/us  "
-                      f"abort={100*r['abort_rate']:6.2f}%")
+    grans = {"coarse": (0,), "fine": (1,), "both": (0, 1)}[args.granularity]
+    rows = run_grid(args.workload, args.cc, grans, args.lanes, args.waves,
+                    scale=args.scale, n_keys=args.n_keys, seed=args.seed,
+                    backend=args.backend)
+    for r in rows:
+        print(f"{r['workload']} {r['cc']:9s} "
+              f"{'fine' if r['granularity'] else 'coarse'} "
+              f"T={r['lanes']:4d}: "
+              f"thpt={r['throughput']:8.3f} txn/us  "
+              f"abort={100*r['abort_rate']:6.2f}%")
     if args.json:
         with open(args.json, "w") as f:
             json.dump(rows, f, indent=1)

@@ -145,8 +145,9 @@ def moe_ffn_ep(p, x, cfg, mesh, constrain=None):
     """
     import math as _math
 
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from repro.core.compat import shard_map
 
     B, S, D = x.shape
     E, k = cfg.n_experts, cfg.top_k
@@ -236,6 +237,5 @@ def moe_ffn_ep(p, x, cfg, mesh, constrain=None):
                   P("data" if "data" in ax else None, None, mspec),
                   P("data" if "data" in ax else None, mspec, None)),
         out_specs=(bspec, P()),
-        check_vma=False,
     )(x, p["router"], p["w_gate"], p["w_in"], p["w_out"])
     return out, aux * cfg.aux_loss_coef

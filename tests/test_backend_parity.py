@@ -1,0 +1,110 @@
+"""Backend parity: the Pallas kernels (interpret mode on CPU) and the jnp
+gather/scatter path must be bit-identical — same commit masks, same installed
+versions — because both decode the one claim-word layout in
+core/claimword.py (DESIGN.md section 5)."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import claims
+from repro.core import types as t
+from repro.core.cc import autogran, occ
+from repro.core.engine import run
+from repro.core.types import EngineConfig, TxnBatch, store_init
+from repro.kernels import ref
+from repro.workloads import TPCCWorkload, YCSBWorkload
+
+RNG = np.random.default_rng(42)
+
+
+def _random_batch(T, K, N, G):
+    ks = RNG.integers(-1, N, (T, K)).astype(np.int32)
+    gs = RNG.integers(0, G, (T, K)).astype(np.int32)
+    kd = RNG.choice([t.NOP, t.READ, t.WRITE, t.ADD], (T, K)).astype(np.int32)
+    return TxnBatch(op_key=jnp.asarray(ks), op_group=jnp.asarray(gs),
+                    op_col=jnp.zeros((T, K), jnp.int32),
+                    op_kind=jnp.asarray(kd),
+                    op_val=jnp.zeros((T, K), jnp.float32),
+                    txn_type=jnp.zeros((T,), jnp.int32),
+                    n_ops=jnp.full((T,), K, jnp.int32))
+
+
+def _cfg(cc, T, K, N, gran, backend):
+    return EngineConfig(cc=cc, lanes=T, slots=K, n_records=N, n_groups=2,
+                        n_cols=0, n_txn_types=1, granularity=gran,
+                        backend=backend)
+
+
+# -------------------------------------------------- single-wave validation
+@pytest.mark.parametrize("cc_mod,cc_id", [(occ, t.CC_OCC),
+                                          (autogran, t.CC_AUTOGRAN)])
+@pytest.mark.parametrize("gran", [0, 1])
+def test_wave_validate_backend_parity(cc_mod, cc_id, gran):
+    T, K, N = 6, 4, 32
+    for trial in range(3):
+        batch = _random_batch(T, K, N, 2)
+        prio = jnp.asarray(RNG.permutation(T).astype(np.uint32))
+        wave = jnp.uint32(trial)
+        store_a = store_init(N, 2, 0)
+        store_b = store_init(N, 2, 0)
+        sa, ra = cc_mod.wave_validate(store_a, batch, prio, wave,
+                                      _cfg(cc_id, T, K, N, gran, "jnp"))
+        sb, rb = cc_mod.wave_validate(store_b, batch, prio, wave,
+                                      _cfg(cc_id, T, K, N, gran, "pallas"))
+        np.testing.assert_array_equal(np.asarray(ra.commit),
+                                      np.asarray(rb.commit))
+        np.testing.assert_array_equal(np.asarray(ra.conflict_op),
+                                      np.asarray(rb.conflict_op))
+        np.testing.assert_array_equal(np.asarray(sa.wts), np.asarray(sb.wts))
+
+
+# ------------------------------------------------------- whole-run parity
+@pytest.mark.parametrize("gran", [0, 1])
+@pytest.mark.parametrize("wlname", ["ycsb", "tpcc"])
+def test_run_backend_parity(wlname, gran):
+    """EngineConfig(backend='pallas') must yield bit-identical commit masks
+    and versions to backend='jnp' on both paper workloads (ISSUE acceptance
+    criterion)."""
+    if wlname == "ycsb":
+        wl = YCSBWorkload.make(n_keys=512)
+    else:
+        wl = TPCCWorkload.make(n_warehouses=1, scale=0.05)
+    cfg = EngineConfig(cc=t.CC_OCC, lanes=8, slots=wl.slots,
+                       n_records=wl.n_records, n_groups=wl.n_groups,
+                       n_cols=wl.n_cols, n_txn_types=wl.n_txn_types,
+                       granularity=gran, n_rings=wl.n_rings)
+    a = run(cfg, wl, n_waves=6, seed=0, keep_state=True)
+    b = run(dataclasses.replace(cfg, backend="pallas"), wl, n_waves=6,
+            seed=0, keep_state=True)
+    np.testing.assert_array_equal(np.asarray(a.per_wave_commits),
+                                  np.asarray(b.per_wave_commits))
+    assert (a.commits, a.aborts) == (b.commits, b.aborts)
+    np.testing.assert_array_equal(np.asarray(a.final_state.store.wts),
+                                  np.asarray(b.final_state.store.wts))
+    np.testing.assert_array_equal(
+        np.asarray(a.final_state.pending_live),
+        np.asarray(b.final_state.pending_live))
+
+
+# ------------------------------------- shared layout: claims vs kernel oracle
+@pytest.mark.parametrize("fine", [True, False])
+def test_claims_probe_matches_kernel_oracle(fine):
+    """The engine's jnp probe and the kernel oracle decode identical claim
+    words — the core/claimword.py contract both backends build on."""
+    T, K, N, G = 5, 6, 64, 2
+    table = jnp.asarray(RNG.integers(0, 2 ** 32, (N, G), dtype=np.uint32))
+    keys = jnp.asarray(RNG.integers(-1, N, (T, K), dtype=np.int32))
+    groups = jnp.asarray(RNG.integers(0, G, (T, K), dtype=np.int32))
+    myp = jnp.asarray(RNG.integers(0, 2 ** 16, (T, K), dtype=np.uint32))
+    check = jnp.asarray(RNG.random((T, K)) < 0.8) & (keys >= 0)
+    wave = jnp.uint32(3)
+
+    wprio = (claims.probe(table, keys, groups, wave) if fine
+             else claims.probe_any_group(table, keys, wave))
+    via_claims = check & (wprio < myp)
+    via_oracle = ref.occ_validate(table, keys, groups, myp, check,
+                                  claims.inv_wave(wave), fine)
+    np.testing.assert_array_equal(np.asarray(via_claims),
+                                  np.asarray(via_oracle))

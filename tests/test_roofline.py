@@ -26,9 +26,9 @@ def test_collective_parser_counts_loop_trips():
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import jax, jax.numpy as jnp, sys
         sys.path.insert(0, "src")
-        from jax import shard_map
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.analysis.roofline import collective_bytes_from_hlo
+        from repro.core.compat import shard_map
 
         mesh = jax.make_mesh((8,), ("model",))
         def f(x, w):
@@ -37,7 +37,7 @@ def test_collective_parser_counts_loop_trips():
                     return jax.lax.psum(cc @ ww, "model")
                 y = shard_map(mm, mesh=mesh,
                               in_specs=(P(None, "model"), P("model", None)),
-                              out_specs=P(), check_vma=False)(c, w)
+                              out_specs=P())(c, w)
                 return y, None
             return jax.lax.scan(body, x, None, length=5)[0]
         x = jax.ShapeDtypeStruct((128, 512), jnp.float32,

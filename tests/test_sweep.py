@@ -1,0 +1,84 @@
+"""The vmapped sweep runner: one jitted XLA program per benchmark grid
+(core/engine.py sweep), padded-lane masking, and the txn_bench row schema."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import types as t
+from repro.core.engine import run, sweep
+from repro.workloads import YCSBWorkload
+
+WL = YCSBWorkload.make(n_keys=512)
+
+
+def base_cfg(backend="jnp"):
+    return t.EngineConfig(cc=t.CC_OCC, lanes=8, slots=WL.slots,
+                          n_records=WL.n_records, n_groups=WL.n_groups,
+                          n_cols=WL.n_cols, n_txn_types=WL.n_txn_types,
+                          n_rings=WL.n_rings, backend=backend)
+
+
+def test_sweep_full_grid_shape_and_attempts():
+    """granularity x {occ, tictoc} x 3 lane counts in a single jitted call
+    (ISSUE acceptance criterion)."""
+    lanes = (4, 8, 16)
+    pts = sweep(base_cfg(), WL, 5, ccs=[t.CC_OCC, t.CC_TICTOC],
+                grans=(0, 1), lane_counts=lanes, seeds=(0,))
+    assert len(pts) == 2 * 2 * 3
+    for p in pts:
+        # Inactive padding lanes are masked out of all accounting.
+        assert p.commits + p.aborts == p.lanes * 5
+    coords = {(p.cc, p.granularity, p.lanes) for p in pts}
+    assert len(coords) == 12
+
+
+def test_sweep_matches_run_at_max_lanes():
+    """A grid point at T == max(lane_counts) is bit-identical to run()."""
+    T = 16
+    pts = sweep(base_cfg(), WL, 8, ccs=[t.CC_OCC, t.CC_TICTOC],
+                grans=(0, 1), lane_counts=(4, T), seeds=(3,))
+    for p in pts:
+        if p.lanes != T:
+            continue
+        cfg = dataclasses.replace(base_cfg(), cc=p.cc,
+                                  granularity=p.granularity, lanes=T)
+        r = run(cfg, WL, n_waves=8, seed=3)
+        assert (r.commits, r.aborts) == (p.commits, p.aborts), \
+            (p.cc, p.granularity)
+        assert r.throughput == pytest.approx(p.throughput)
+        assert r.ext_events == p.ext_events
+
+
+def test_sweep_seeds_axis():
+    pts = sweep(base_cfg(), WL, 5, ccs=[t.CC_OCC], grans=(1,),
+                lane_counts=(8,), seeds=(0, 1, 2))
+    assert len(pts) == 3
+    assert {p.seed for p in pts} == {0, 1, 2}
+    # different seeds draw different workloads
+    assert len({p.commits for p in pts}) > 1 or len(
+        {p.throughput for p in pts}) > 1
+
+
+def test_sweep_pallas_backend_parity():
+    a = sweep(base_cfg("jnp"), WL, 5, ccs=[t.CC_OCC], grans=(0, 1),
+              lane_counts=(8,), seeds=(0,))
+    b = sweep(base_cfg("pallas"), WL, 5, ccs=[t.CC_OCC], grans=(0, 1),
+              lane_counts=(8,), seeds=(0,))
+    for pa, pb in zip(a, b):
+        assert (pa.commits, pa.aborts) == (pb.commits, pb.aborts)
+
+
+def test_txn_bench_grid_schema():
+    """txn_bench --json schema: the seed keys plus the new backend field."""
+    from repro.launch.txn_bench import run_grid
+    rows = run_grid("ycsb", ["occ", "tictoc"], (0, 1), [4, 8], 4,
+                    n_keys=512, backend="jnp")
+    assert len(rows) == 2 * 2 * 2
+    want = {"workload", "cc", "granularity", "lanes", "waves", "commits",
+            "aborts", "abort_rate", "throughput", "ext_events", "wall_s",
+            "backend"}
+    for r in rows:
+        assert set(r) == want
+        assert r["backend"] == "jnp"
+        assert r["commits"] + r["aborts"] == r["lanes"] * r["waves"]
