@@ -27,18 +27,20 @@ PROG = textwrap.dedent("""
     from repro.analysis.roofline import collective_bytes_from_hlo
 
     GLOBAL_LANES, K, N, WAVES = 256, 16, 1_000_000, 30
+    BACKEND = os.environ.get("REPRO_TXN_BACKEND", "jnp")
     rows = []
 
     # shards=0 anchor: the local (single-device) engine at the same global
     # lane count, via the one-XLA-program sweep() grid runner.
     from repro.core import types as t
+    from repro.core.backend import kernel_coverage
     from repro.core.engine import sweep as engine_sweep
     from repro.workloads import YCSBWorkload
     wl = YCSBWorkload.make(n_keys=N)
     cfg = t.EngineConfig(cc=t.CC_OCC, lanes=GLOBAL_LANES, slots=wl.slots,
                          n_records=wl.n_records, n_groups=wl.n_groups,
                          n_cols=wl.n_cols, n_txn_types=wl.n_txn_types,
-                         n_rings=wl.n_rings)
+                         n_rings=wl.n_rings, backend=BACKEND)
     # Warm call first: the timed call then hits the XLA executable cache and
     # measures (re-trace +) waves rather than a full compile.
     engine_sweep(cfg, wl, WAVES, ccs=[t.CC_OCC], grans=(1,),
@@ -48,7 +50,10 @@ PROG = textwrap.dedent("""
                          lane_counts=(GLOBAL_LANES,))
     rows.append({"shards": 0, "commits": pt.commits,
                  "waves_per_s": WAVES / (time.time() - t0),
-                 "coll_bytes_per_wave": 0})
+                 "coll_bytes_per_wave": 0,
+                 # Attribution: which engine the anchor actually ran on.
+                 "backend": BACKEND,
+                 "kernel_ops": kernel_coverage(BACKEND, t.CC_OCC)})
     print(f"local  : {rows[0]['waves_per_s']:6.1f} waves/s  "
           f"{pt.commits} commits  (sweep() anchor, no collectives)")
 
@@ -84,7 +89,10 @@ PROG = textwrap.dedent("""
         dt = time.time() - t0
         rows.append({"shards": ns, "commits": commits,
                      "waves_per_s": WAVES / dt,
-                     "coll_bytes_per_wave": coll})
+                     "coll_bytes_per_wave": coll,
+                     # The routed engine is its own substrate: shard_map +
+                     # XLA collectives, no per-op kernel dispatch (yet).
+                     "backend": "shard_map", "kernel_ops": {}})
         print(f"shards={ns}: {WAVES/dt:6.1f} waves/s  "
               f"{commits} commits  coll/wave={coll/1024:.1f} KiB")
     print("JSON:" + json.dumps(rows))

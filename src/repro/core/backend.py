@@ -1,0 +1,149 @@
+"""The kernel-backend layer: one dispatch surface for every CC mechanism.
+
+Every concurrency-control mechanism in ``core/cc/`` touches shared state
+through exactly seven ops — the full surface a wave needs (DESIGN.md
+section 5):
+
+    validate        read-set verdicts vs the writer-claim table (OCC rule)
+    validate_dual   fine AND coarse verdicts from one row fetch (AutoGran)
+    probe           raw strongest-claimant prio16 (TicToc/SwissTM/2PL/
+                    Adaptive need the priority itself, not a verdict)
+    ts_gather       per-op (wts | rts) observation; coarse = row max (TicToc)
+    claim_scatter   pack + scatter-min claim words (every mechanism's claims)
+    commit_install  +1 version bumps for committed writes (OCC-family)
+    ts_install_max  monotone scatter-max timestamp install (TicToc)
+
+``resolve(cfg)`` maps ``EngineConfig.backend`` to one of two stateless
+singleton implementations:
+
+- ``jnp``    — XLA gather/scatter (the oracles in ``kernels/ref.py`` and the
+  helpers in ``core/claims.py`` are the same computations);
+- ``pallas`` — the TPU-native kernels behind ``kernels/ops.py`` (interpret
+  mode off-TPU), every op a scalar-prefetch row-DMA grid or an aliased-output
+  sequential-grid scatter.
+
+Both decode the one claim-word layout in ``core/claimword.py`` and are
+bit-identical (tests/test_backend_parity.py, tests/test_kernels.py).  CC
+mechanisms hold no ``cfg.backend`` branches: they call ``resolve(cfg)`` once
+per wave and use only this surface, so a new mechanism gets TPU execution for
+free and a new backend only has to implement these seven ops.
+"""
+from __future__ import annotations
+
+from repro.core import claims
+from repro.core import types as t
+from repro.core.claimword import inv_wave
+
+
+class JnpBackend:
+    """XLA gather/scatter implementation (the reference substrate)."""
+    name = "jnp"
+    use_pallas = False
+
+    def validate(self, claim_w, keys, groups, myprio, check, wave,
+                 fine: bool):
+        """Conflict bool[T, K]: live read cells claimed by a strictly
+        stronger lane this wave."""
+        wprio = (claims.probe(claim_w, keys, groups, wave) if fine
+                 else claims.probe_any_group(claim_w, keys, wave))
+        return check & (wprio < myprio)
+
+    def validate_dual(self, claim_w, keys, groups, myprio, check, wave):
+        """(fine, coarse) conflict bool[T, K] from one logical row fetch."""
+        from repro.kernels import ref
+        return ref.occ_validate_dual(claim_w, keys, groups, myprio, check,
+                                     inv_wave(wave))
+
+    def probe(self, table, keys, groups, wave, fine: bool):
+        """Strongest live claimant prio16 per op (NO_PRIO if unclaimed)."""
+        return (claims.probe(table, keys, groups, wave) if fine
+                else claims.probe_any_group(table, keys, wave))
+
+    def ts_gather(self, table, keys, groups, fine: bool):
+        """Per-op timestamp observation; coarse reads the row max."""
+        from repro.kernels import ref
+        return ref.ts_gather(table, keys, groups, fine)
+
+    def claim_scatter(self, table, keys, groups, prio, wave, mask):
+        """Scatter-min packed claim words into table[record, group]."""
+        from repro.kernels import ref
+        return ref.claim_scatter(table, keys, groups, prio, mask, wave)
+
+    def commit_install(self, wts, keys, groups, do):
+        """+1 per committed write op (monotone version bump)."""
+        from repro.kernels import ref
+        return ref.occ_commit(wts, keys, groups, do)
+
+    def ts_install_max(self, table, keys, groups, vals, mask,
+                       whole_row: bool = False):
+        """Monotone scatter-max timestamp install."""
+        from repro.kernels import ref
+        return ref.ts_install_max(table, keys, groups, vals, mask, whole_row)
+
+
+class PallasBackend:
+    """TPU-native kernels (compiled on TPU, interpret mode elsewhere)."""
+    name = "pallas"
+    use_pallas = True
+
+    def validate(self, claim_w, keys, groups, myprio, check, wave,
+                 fine: bool):
+        from repro.kernels import ops
+        return ops.occ_validate(claim_w, keys, groups, myprio, check,
+                                inv_wave(wave), fine, use_pallas=True)
+
+    def validate_dual(self, claim_w, keys, groups, myprio, check, wave):
+        from repro.kernels import ops
+        return ops.occ_validate_dual(claim_w, keys, groups, myprio, check,
+                                     inv_wave(wave), use_pallas=True)
+
+    def probe(self, table, keys, groups, wave, fine: bool):
+        from repro.kernels import ops
+        return ops.claim_probe(table, keys, groups, inv_wave(wave), fine,
+                               use_pallas=True)
+
+    def ts_gather(self, table, keys, groups, fine: bool):
+        from repro.kernels import ops
+        return ops.ts_gather(table, keys, groups, fine, use_pallas=True)
+
+    def claim_scatter(self, table, keys, groups, prio, wave, mask):
+        from repro.kernels import ops
+        return ops.claim_scatter(table, keys, groups, prio, mask, wave,
+                                 use_pallas=True)
+
+    def commit_install(self, wts, keys, groups, do):
+        from repro.kernels import ops
+        return ops.occ_commit(wts, keys, groups, do, use_pallas=True)
+
+    def ts_install_max(self, table, keys, groups, vals, mask,
+                       whole_row: bool = False):
+        from repro.kernels import ops
+        return ops.ts_install_max(table, keys, groups, vals, mask, whole_row,
+                                  use_pallas=True)
+
+
+_BACKENDS = {"jnp": JnpBackend(), "pallas": PallasBackend()}
+
+#: The surface ops each mechanism routes through the backend per wave —
+#: consumed by benchmark JSON rows so BENCH_* trajectories record which ops
+#: actually ran as Pallas kernels (see launch/txn_bench.py).
+CC_OPS = {
+    t.CC_OCC: ("validate", "claim_scatter", "commit_install"),
+    t.CC_TICTOC: ("probe", "ts_gather", "claim_scatter", "ts_install_max"),
+    t.CC_2PL: ("probe", "claim_scatter", "commit_install"),
+    t.CC_SWISS: ("probe", "claim_scatter", "commit_install"),
+    t.CC_ADAPTIVE: ("probe", "claim_scatter", "commit_install"),
+    t.CC_AUTOGRAN: ("validate_dual", "claim_scatter", "commit_install"),
+}
+
+
+def resolve(cfg) -> JnpBackend | PallasBackend:
+    """EngineConfig -> the backend singleton (validated in __post_init__)."""
+    return _BACKENDS[cfg.backend]
+
+
+def kernel_coverage(backend_name: str, cc: int) -> dict:
+    """{op: "pallas" | "xla"} for the ops mechanism ``cc`` routes through
+    backend ``backend_name`` — the attribution record for benchmark JSON."""
+    engine = "pallas" if backend_name == "pallas" else "xla"
+    return {op: engine for op in CC_OPS[cc]}

@@ -12,6 +12,13 @@ The mechanisms mirror the paper's section 3.2 set: OCC (STO's default),
 TicToc, 2PL, SwissTM contention management, our Adaptive reader-writer lock —
 plus the beyond-paper Auto-granularity mechanism sketched in the paper's
 section 5.
+
+Every mechanism touches shared state only through the kernel-backend surface
+(core/backend.py): validate / validate_dual / probe / ts_gather /
+claim_scatter / commit_install / ts_install_max, resolved from
+``EngineConfig.backend`` — XLA gather/scatter or TPU Pallas kernels,
+bit-identical (DESIGN.md section 5).  No per-mechanism backend branches
+live in this package.
 """
 from repro.core.cc.base import ValidationResult
 from repro.core.cc.occ import wave_validate as occ_validate

@@ -8,6 +8,10 @@ Per-record state machine: ``pess_mode`` flips pessimistic when the record's
 abort-heat EWMA exceeds ``adapt_up`` and relaxes back when it decays below
 ``adapt_down``.  Heat decay is lazy (claims.lazy_decayed) so the state machine
 costs O(touched records), not O(table), per wave.
+
+Claim scatters and probes route through the kernel-backend surface
+(core/backend.py) — Pallas kernels or XLA gather/scatter per
+``EngineConfig.backend`` (DESIGN.md section 5).
 """
 from __future__ import annotations
 
@@ -15,6 +19,7 @@ import dataclasses
 
 import jax.numpy as jnp
 
+from repro.core import backend as kb
 from repro.core import claims
 from repro.core.cc import base
 from repro.core.types import OOB_KEY, EngineConfig, StoreState, TxnBatch
@@ -22,6 +27,7 @@ from repro.core.types import OOB_KEY, EngineConfig, StoreState, TxnBatch
 
 def wave_validate(store: StoreState, batch: TxnBatch, prio, wave,
                   cfg: EngineConfig):
+    be = kb.resolve(cfg)
     fine = base.is_fine(cfg)
     live = batch.live()
     rd = batch.is_read() & live
@@ -32,14 +38,12 @@ def wave_validate(store: StoreState, batch: TxnBatch, prio, wave,
     pess = store.pess_mode.at[kp].get(mode="fill",
                                       fill_value=False)  # [T, K]
 
-    store = base.write_claims(store, batch, prio, wave)
+    store = base.write_claims(store, batch, prio, wave, cfg)
     # Visible (lock-acquiring) reads only on pessimistic records.
-    store = base.read_claims(store, batch, prio, wave, mask=pess)
+    store = base.read_claims(store, batch, prio, wave, cfg, mask=pess)
 
-    wprio = claims.effective_probe(store.claim_w, batch.op_key,
-                                   batch.op_group, wave, fine)
-    rprio = claims.effective_probe(store.claim_r, batch.op_key,
-                                   batch.op_group, wave, fine)
+    wprio = be.probe(store.claim_w, batch.op_key, batch.op_group, wave, fine)
+    rprio = be.probe(store.claim_r, batch.op_key, batch.op_group, wave, fine)
 
     T, K = batch.op_key.shape
     u = claims.hash01(wave, claims.lane_op_ids(T, K))

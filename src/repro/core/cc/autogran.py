@@ -14,6 +14,11 @@ lazily so cold records stop accumulating.
 
 The physical version table is always fine-width (G=2); promotion only changes
 the probe width per record, so promotion is a metadata bit flip — no copy.
+
+Both probe widths come from ONE ``validate_dual`` call on the kernel-backend
+surface (core/backend.py): the dual-output kernel emits the fine and coarse
+verdicts from a single claim-row DMA per op, so the double probe no longer
+fetches every claim row twice per wave (DESIGN.md section 5).
 """
 from __future__ import annotations
 
@@ -21,6 +26,7 @@ import dataclasses
 
 import jax.numpy as jnp
 
+from repro.core import backend as kb
 from repro.core import claims
 from repro.core.cc import base
 from repro.core.types import OOB_KEY, EngineConfig, StoreState, TxnBatch
@@ -28,14 +34,13 @@ from repro.core.types import OOB_KEY, EngineConfig, StoreState, TxnBatch
 
 def wave_validate(store: StoreState, batch: TxnBatch, prio, wave,
                   cfg: EngineConfig):
-    store = base.write_claims(store, batch, prio, wave)
-    # Two probe widths, one claim table: the record's fine_mode bit picks
-    # which verdict applies.  Both probes are backend-routed (Pallas kernel
-    # or jnp gather — DESIGN.md section 5).
-    conflict_fine = base.read_set_conflicts(store, batch, prio, wave, cfg,
-                                            fine=True)
-    conflict_coarse = base.read_set_conflicts(store, batch, prio, wave, cfg,
-                                              fine=False)
+    store = base.write_claims(store, batch, prio, wave, cfg)
+    # Two probe widths, one claim table, ONE row fetch: the record's
+    # fine_mode bit picks which verdict applies.
+    myp = base.my_prio_per_op(batch, prio)
+    check = batch.is_read() & batch.live()
+    conflict_fine, conflict_coarse = kb.resolve(cfg).validate_dual(
+        store.claim_w, batch.op_key, batch.op_group, myp, check, wave)
 
     kf = jnp.where(batch.op_key >= 0, batch.op_key, OOB_KEY)
     is_fine_rec = store.fine_mode.at[kf].get(mode="fill", fill_value=False)

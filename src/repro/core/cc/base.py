@@ -1,4 +1,11 @@
-"""Shared pieces of the CC mechanism implementations."""
+"""Shared pieces of the CC mechanism implementations.
+
+All shared-state access goes through the kernel-backend surface
+(``core/backend.py``): validate / validate_dual / probe / ts_gather /
+claim_scatter / commit_install / ts_install_max, resolved once per wave from
+``EngineConfig.backend``.  No mechanism in this package branches on the
+backend itself — that is the whole point of the layer (DESIGN.md section 5).
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -7,8 +14,9 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.core import backend as kb
 from repro.core import claims
-from repro.core.types import OOB_KEY, EngineConfig, StoreState, TxnBatch
+from repro.core.types import EngineConfig, StoreState, TxnBatch
 
 
 @partial(jax.tree_util.register_dataclass,
@@ -52,50 +60,38 @@ def bump_versions(store: StoreState, batch: TxnBatch, commit: jax.Array,
     OCC-family version semantics: any committed modification of a (record,
     group) invalidates concurrent readers; the absolute value only needs to be
     monotone, so +1 per committed write op is sufficient (duplicates simply
-    advance the clock further).  The ``pallas`` backend installs through the
-    sequential-grid commit kernel; the ``jnp`` backend through an XLA
-    scatter-add — identical results (DESIGN.md section 5)."""
+    advance the clock further).  Routed through the backend surface's
+    ``commit_install`` op — the sequential-grid Pallas kernel or an XLA
+    scatter-add, identical results (DESIGN.md section 5)."""
     w = batch.is_write() & batch.live() & commit[:, None]
-    if cfg.backend == "pallas":
-        from repro.kernels import ops
-        wts = ops.occ_commit(store.wts, batch.op_key, batch.op_group, w,
-                             use_pallas=True)
-    else:
-        k = jnp.where(w, batch.op_key, OOB_KEY).reshape(-1)
-        g = batch.op_group.reshape(-1)
-        wts = store.wts.at[k, g].add(jnp.uint32(1), mode="drop")
+    wts = kb.resolve(cfg).commit_install(store.wts, batch.op_key,
+                                         batch.op_group, w)
     return dataclasses.replace(store, wts=wts)
 
 
 def read_set_conflicts(store: StoreState, batch: TxnBatch, prio: jax.Array,
                        wave: jax.Array, cfg: EngineConfig,
-                       fine=None) -> jax.Array:
+                       fine: bool | None = None) -> jax.Array:
     """Read-set probe against the writer-claim table (the OCC hot loop).
 
     Returns conflict bool[T, K]: True where a live read op's (record, group)
     cell was write-claimed this wave by a strictly-higher-priority lane.
-    ``fine`` selects the probe width (granularity); it defaults to the
-    config's static granularity and may be a per-op bool array
-    (auto-granularity) — the kernel path requires a static bool, so per-op
-    selectors always take the jnp path.
+    ``fine`` selects the probe width (granularity) and defaults to the
+    config's static granularity.  Mechanisms needing BOTH widths at once
+    (auto-granularity) call the backend's ``validate_dual`` instead — one row
+    fetch, two verdicts.
 
-    Backend routing: ``pallas`` runs the scalar-prefetch DMA kernel
-    (kernels/occ_validate.py — interpret mode off-TPU), ``jnp`` the
-    gather-based probe.  Both decode the claim words of core/claimword.py and
+    Routed through the backend surface's ``validate`` op: the scalar-prefetch
+    DMA kernel (kernels/occ_validate.py — interpret mode off-TPU) or the jnp
+    gather probe.  Both decode the claim words of core/claimword.py and
     produce bit-identical flags (DESIGN.md section 5).
     """
     myp = my_prio_per_op(batch, prio)
     check = batch.is_read() & batch.live()
     if fine is None:
         fine = is_fine(cfg)
-    if cfg.backend == "pallas" and isinstance(fine, bool):
-        from repro.kernels import ops
-        return ops.occ_validate(store.claim_w, batch.op_key, batch.op_group,
-                                myp, check, claims.inv_wave(wave), fine,
-                                use_pallas=True)
-    wprio = claims.effective_probe(store.claim_w, batch.op_key,
-                                   batch.op_group, wave, fine)
-    return check & (wprio < myp)
+    return kb.resolve(cfg).validate(store.claim_w, batch.op_key,
+                                    batch.op_group, myp, check, wave, fine)
 
 
 def my_prio_per_op(batch: TxnBatch, prio: jax.Array) -> jax.Array:
@@ -104,21 +100,27 @@ def my_prio_per_op(batch: TxnBatch, prio: jax.Array) -> jax.Array:
 
 
 def write_claims(store: StoreState, batch: TxnBatch, prio: jax.Array,
-                 wave: jax.Array) -> StoreState:
-    words = claims.claim_word(wave, my_prio_per_op(batch, prio))
-    cw = claims.scatter_claims(store.claim_w, batch.op_key, batch.op_group,
-                               words, batch.is_write() & batch.live())
+                 wave: jax.Array, cfg: EngineConfig) -> StoreState:
+    """Write-set claims into the writer-claim table (backend
+    ``claim_scatter``: the fused pack+scatter-min kernel on pallas, XLA
+    scatter-min on jnp)."""
+    cw = kb.resolve(cfg).claim_scatter(store.claim_w, batch.op_key,
+                                       batch.op_group,
+                                       my_prio_per_op(batch, prio), wave,
+                                       batch.is_write() & batch.live())
     return dataclasses.replace(store, claim_w=cw)
 
 
 def read_claims(store: StoreState, batch: TxnBatch, prio: jax.Array,
-                wave: jax.Array, mask=None) -> StoreState:
+                wave: jax.Array, cfg: EngineConfig,
+                mask: jax.Array | None = None) -> StoreState:
+    """Visible-read claims into the reader-claim table (2PL/Swiss/Adaptive)."""
     m = batch.is_read() & batch.live()
     if mask is not None:
         m = m & mask
-    words = claims.claim_word(wave, my_prio_per_op(batch, prio))
-    cr = claims.scatter_claims(store.claim_r, batch.op_key, batch.op_group,
-                               words, m)
+    cr = kb.resolve(cfg).claim_scatter(store.claim_r, batch.op_key,
+                                       batch.op_group,
+                                       my_prio_per_op(batch, prio), wave, m)
     return dataclasses.replace(store, claim_r=cr)
 
 

@@ -10,6 +10,11 @@ pairs do not abort (commit-time locks serialize the installs).
 Timestamp granularity is the probe width: coarse probes treat a claim on any
 column group of the record as a conflict (one timestamp per row), fine probes
 look only at the op's own group — the paper's mechanism.
+
+All shared-state access (claim scatter, read-set validate, version install)
+routes through the kernel-backend surface of core/backend.py — Pallas kernels
+or XLA gather/scatter, selected by ``EngineConfig.backend`` (DESIGN.md
+section 5).
 """
 from __future__ import annotations
 
@@ -22,7 +27,7 @@ from repro.core.types import EngineConfig, StoreState, TxnBatch
 
 def wave_validate(store: StoreState, batch: TxnBatch, prio, wave,
                   cfg: EngineConfig):
-    store = base.write_claims(store, batch, prio, wave)
+    store = base.write_claims(store, batch, prio, wave, cfg)
     conflict = base.read_set_conflicts(store, batch, prio, wave, cfg)
     T, K = batch.op_key.shape
     u = claims.hash01(wave, claims.lane_op_ids(T, K))

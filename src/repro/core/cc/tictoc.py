@@ -17,6 +17,13 @@ extend the same cell in one wave (the many-core degradation of the paper's
 Figures 2a/3a).  Per the paper's section 3.2 we model the 128-bit
 (non-compressed) timestamp variant — their 64-bit compressed variant aborted
 more than OCC due to overflow — and STO's non-waiting deadlock prevention.
+
+Shared-state access routes through the kernel-backend surface
+(core/backend.py): the claim probe is the backend's ``probe`` op, the
+(wts, rts) observation its ``ts_gather`` row-gather (coarse = row max), and
+the monotone timestamp installs its ``ts_install_max`` scatter-max — Pallas
+kernels on ``backend="pallas"``, XLA gather/scatter on ``"jnp"``, bit-
+identical either way (DESIGN.md section 5).
 """
 from __future__ import annotations
 
@@ -24,37 +31,28 @@ import dataclasses
 
 import jax.numpy as jnp
 
+from repro.core import backend as kb
 from repro.core import claims
 from repro.core.cc import base
-from repro.core.types import OOB_KEY, EngineConfig, StoreState, TxnBatch
-
-
-def _gather_ts(table, batch: TxnBatch, fine: bool):
-    """Per-op timestamp observation honoring granularity.
-
-    Coarse granularity sees one timestamp per record = the row max (any group
-    modification invalidates/constrains the whole row)."""
-    k = jnp.where(batch.op_key >= 0, batch.op_key, OOB_KEY)
-    if fine:
-        return table.at[k, batch.op_group].get(mode="fill", fill_value=0)
-    rows = table.at[k, :].get(mode="fill", fill_value=0)
-    return rows.max(axis=-1)
+from repro.core.types import EngineConfig, StoreState, TxnBatch
 
 
 def wave_validate(store: StoreState, batch: TxnBatch, prio, wave,
                   cfg: EngineConfig):
+    be = kb.resolve(cfg)
     fine = base.is_fine(cfg)
     live = batch.live()
     rd = batch.is_read() & live
     wr = batch.is_write() & live
     myp = base.my_prio_per_op(batch, prio)
 
-    store = base.write_claims(store, batch, prio, wave)
-    wprio = claims.effective_probe(store.claim_w, batch.op_key,
-                                   batch.op_group, wave, fine)
+    store = base.write_claims(store, batch, prio, wave, cfg)
+    wprio = be.probe(store.claim_w, batch.op_key, batch.op_group, wave, fine)
 
-    wts_op = _gather_ts(store.wts, batch, fine)
-    rts_op = _gather_ts(store.rts, batch, fine)
+    # (wts, rts) observation honoring granularity: coarse sees one timestamp
+    # per record = the row max (any group modification constrains the row).
+    wts_op = be.ts_gather(store.wts, batch.op_key, batch.op_group, fine)
+    rts_op = be.ts_gather(store.rts, batch.op_key, batch.op_group, fine)
 
     # commit_ts over live ops (uint32; 0 when no ops).
     ts_term = jnp.where(wr, rts_op + 1, jnp.where(rd, wts_op, 0))
@@ -107,29 +105,26 @@ def wave_validate(store: StoreState, batch: TxnBatch, prio, wave,
         0.0)
     ext_penalty = per_op.reshape(T, K).sum(axis=1)
 
-    # Timestamp installs (vs the snapshot; monotone scatter-max).
-    # Within-wave cts chaining: n same-cell writers serialize their installs
-    # (each holds the write lock in turn), so the surviving wts/rts advance
-    # by ~n per wave, not 1 — hot-row timestamps inflate with contention and
-    # cross-row skew grows, which is what aborts multi-hot-row readers at
-    # high thread counts (TicToc's own high-core degradation, paper Fig 3a).
+    # Timestamp installs (vs the snapshot; monotone scatter-max via the
+    # backend's ts_install_max).  Within-wave cts chaining: n same-cell
+    # writers serialize their installs (each holds the write lock in turn),
+    # so the surviving wts/rts advance by ~n per wave, not 1 — hot-row
+    # timestamps inflate with contention and cross-row skew grows, which is
+    # what aborts multi-hot-row readers at high thread counts (TicToc's own
+    # high-core degradation, paper Fig 3a).
     cts = jnp.broadcast_to(commit_ts[:, None], batch.op_key.shape)
     wmask = wr & commit[:, None]
     n_wcell = claims.cell_counts(batch.op_key, batch.op_group,
                                  store.wts.shape[1], wmask)
     cts = cts + 2 * (jnp.maximum(n_wcell, 1.0).astype(jnp.uint32) - 1)
-    kw = jnp.where(wmask, batch.op_key, OOB_KEY).reshape(-1)
-    ke = jnp.where(ext, batch.op_key, OOB_KEY).reshape(-1)
-    g = batch.op_group.reshape(-1)
-    ctsf = cts.reshape(-1)
-    wts = store.wts.at[kw, g].max(ctsf, mode="drop")
-    rts = store.rts.at[kw, g].max(ctsf, mode="drop")
-    if fine:
-        rts = rts.at[ke, g].max(ctsf, mode="drop")
-    else:
-        # Coarse extension raises the whole row's read horizon.
-        for gg in range(store.rts.shape[1]):
-            rts = rts.at[ke, gg].max(ctsf, mode="drop")
+    wts = be.ts_install_max(store.wts, batch.op_key, batch.op_group, cts,
+                            wmask)
+    rts = be.ts_install_max(store.rts, batch.op_key, batch.op_group, cts,
+                            wmask)
+    # rts extension installs; coarse extension raises the whole row's read
+    # horizon (one timestamp per record).
+    rts = be.ts_install_max(rts, batch.op_key, batch.op_group, cts, ext,
+                            whole_row=not fine)
     store = dataclasses.replace(store, wts=wts, rts=rts)
 
     res = dataclasses.replace(res, ext_penalty=ext_penalty,

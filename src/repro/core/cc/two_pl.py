@@ -10,11 +10,16 @@ the overhead the paper's cost discussion attributes to pessimistic mechanisms
 
 Lock compatibility: R/R compatible; R/W, W/R, W/W conflict.  Non-waiting =
 the lower-priority lane of a conflicting pair aborts immediately.
+
+Lock claims and probes route through the kernel-backend surface
+(core/backend.py) — Pallas kernels or XLA gather/scatter per
+``EngineConfig.backend`` (DESIGN.md section 5).
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.core import backend as kb
 from repro.core import claims
 from repro.core.cc import base
 from repro.core.types import EngineConfig, StoreState, TxnBatch
@@ -22,19 +27,18 @@ from repro.core.types import EngineConfig, StoreState, TxnBatch
 
 def wave_validate(store: StoreState, batch: TxnBatch, prio, wave,
                   cfg: EngineConfig):
+    be = kb.resolve(cfg)
     fine = base.is_fine(cfg)
     live = batch.live()
     rd = batch.is_read() & live
     wr = batch.is_write() & live
     myp = base.my_prio_per_op(batch, prio)
 
-    store = base.write_claims(store, batch, prio, wave)
-    store = base.read_claims(store, batch, prio, wave)
+    store = base.write_claims(store, batch, prio, wave, cfg)
+    store = base.read_claims(store, batch, prio, wave, cfg)
 
-    wprio = claims.effective_probe(store.claim_w, batch.op_key,
-                                   batch.op_group, wave, fine)
-    rprio = claims.effective_probe(store.claim_r, batch.op_key,
-                                   batch.op_group, wave, fine)
+    wprio = be.probe(store.claim_w, batch.op_key, batch.op_group, wave, fine)
+    rprio = be.probe(store.claim_r, batch.op_key, batch.op_group, wave, fine)
 
     conflict = ((rd & (wprio < myp))                      # read vs writer lock
                 | (wr & (wprio < myp))                    # write vs writer lock

@@ -19,7 +19,10 @@ A claim from wave w is numerically smaller than every claim from waves < w, so
 ``scatter-min`` makes the current wave always win and stale entries are simply
 ignored at probe time (their tag mismatches).  No reset, ever.  The bit layout
 itself lives in ``core/claimword.py``, shared with the Pallas kernels so both
-engine backends read the same words (DESIGN.md section 5).
+engine backends read the same words; the engine reaches these helpers through
+the backend surface of ``core/backend.py``, whose pallas side replaces the
+XLA scatter-min with the fused kernels/claim_scatter.py (DESIGN.md
+section 5).
 
 ``prio16`` is the in-wave priority: ``(inv_age << PRIO_LANE_BITS) | lane_rank``
 — lower value = earlier in the wave's serialization order.  Contention-managed

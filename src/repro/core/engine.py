@@ -238,36 +238,64 @@ class SweepPoint:
     waves: int
 
 
+def lane_buckets(lane_counts: Sequence[int],
+                 ratio: Optional[float] = 2.0) -> list[list[int]]:
+    """Group lane counts so padding waste stays bounded.
+
+    Every count in a bucket is padded to the bucket's max, so the masked-work
+    waste for a count T is bucket_max / T.  Greedy ascending grouping keeps
+    that factor <= ``ratio``: a grid mixing 16 and 128 lanes splits into
+    [16], [128] instead of padding the 16-lane point 8x.  ``ratio=None``
+    disables bucketing (one bucket padded to the global max — the legacy
+    behavior)."""
+    uniq = sorted(set(lane_counts))
+    if ratio is None:
+        return [uniq]
+    buckets: list[list[int]] = []
+    for T in uniq:
+        if buckets and T <= ratio * buckets[-1][0]:
+            buckets[-1].append(T)
+        else:
+            buckets.append([T])
+    return buckets
+
+
 def sweep(cfg: EngineConfig, workload: Workload, n_waves: int, *,
           ccs: Sequence[int], grans: Sequence[int] = (0, 1),
           lane_counts: Sequence[int] = (16, 64, 128),
-          seeds: Sequence[int] = (0,)) -> list[SweepPoint]:
+          seeds: Sequence[int] = (0,),
+          lane_bucket_ratio: Optional[float] = 2.0) -> list[SweepPoint]:
     """Run an entire benchmark grid as ONE jitted XLA program.
 
     The grid is ccs x grans x lane_counts x seeds.  (cc, granularity) pairs
     select different validator code, so they are unrolled as branches inside
-    the single jitted function; the (lane_count, seed) axis is *vmapped*:
-    every point is padded to max(lane_counts) lanes and a per-point active
-    mask silences the padding (see make_wave_step).  One compile, one
-    device dispatch — this is what makes a full Fig 2/Fig 3 datapoint grid
-    cheap to re-run (ROADMAP: one-XLA-program benchmark grids).
+    the single jitted function; the (lane_count, seed) axis is *vmapped* in
+    **lane buckets** (``lane_buckets``): counts within a factor of
+    ``lane_bucket_ratio`` of each other share one vmapped program padded to
+    the bucket max, with a per-point active mask silencing the padding (see
+    make_wave_step).  Bucketing bounds the masked-work waste — a grid mixing
+    16 and 128 lanes no longer pads everything 8x to 128 — while still
+    compiling once and dispatching once per sweep (ROADMAP: one-XLA-program
+    benchmark grids).
 
-    A point with lane_count == max(lane_counts) is bit-identical to
+    A point with lane_count == its bucket's max is bit-identical to
     ``run(replace(cfg, cc=cc, granularity=g, lanes=T), workload, n_waves,
-    seed)`` — padding only changes points below the max (their PRNG stream
-    spans the padded lane count).  Tested in tests/test_sweep.py.
+    seed)`` — padding only changes points below their bucket max (their PRNG
+    stream spans the padded lane count).  Tested in tests/test_sweep.py.
     """
-    T_max = max(lane_counts)
     store = workload.init_store(cfg.track_values)
-    lane_grid = jnp.repeat(jnp.asarray(lane_counts, jnp.int32), len(seeds))
-    seed_grid = jnp.tile(jnp.asarray(seeds, jnp.uint32), len(lane_counts))
+    buckets = lane_buckets(lane_counts, lane_bucket_ratio)
     combos = [(cc, g) for g in grans for cc in ccs]
-    cfgs = [dataclasses.replace(cfg, cc=cc, granularity=g, lanes=T_max)
-            for cc, g in combos]
 
-    def point_fn(ccfg):
+    # One (lane_grid, seed_grid) pair per bucket, vmapped per (combo, bucket).
+    grids = tuple(
+        (jnp.repeat(jnp.asarray(b, jnp.int32), len(seeds)),
+         jnp.tile(jnp.asarray(seeds, jnp.uint32), len(b)))
+        for b in buckets)
+
+    def point_fn(ccfg, T_pad):
         def point(n_lanes, seed):
-            active = jnp.arange(T_max, dtype=jnp.int32) < n_lanes
+            active = jnp.arange(T_pad, dtype=jnp.int32) < n_lanes
             state0 = engine_state_init(ccfg, jax.random.PRNGKey(seed), store)
             step = make_wave_step(ccfg, workload, active=active)
             state, _ = jax.lax.scan(step, state0, None, length=n_waves)
@@ -276,21 +304,37 @@ def sweep(cfg: EngineConfig, workload: Workload, n_waves: int, *,
         return point
 
     @jax.jit
-    def go(lane_grid, seed_grid):
-        return [jax.vmap(point_fn(c))(lane_grid, seed_grid) for c in cfgs]
+    def go(grids):
+        out = []
+        for cc, g in combos:
+            per_bucket = []
+            for b, (lane_grid, seed_grid) in zip(buckets, grids):
+                ccfg = dataclasses.replace(cfg, cc=cc, granularity=g,
+                                           lanes=max(b))
+                per_bucket.append(
+                    jax.vmap(point_fn(ccfg, max(b)))(lane_grid, seed_grid))
+            out.append(per_bucket)
+        return out
 
-    raw = jax.device_get(go(lane_grid, seed_grid))
+    raw = jax.device_get(go(grids))
+    # Index (T, seed) -> (bucket, position) to reassemble rows in grid order.
+    where = {}
+    for bi, b in enumerate(buckets):
+        for i, (T, sd) in enumerate((T, sd) for T in b for sd in seeds):
+            where[(T, sd)] = (bi, i)
     points = []
-    for (cc, g), (commits, aborts, lane_time, ext) in zip(combos, raw):
-        for i, (T, sd) in enumerate(
-                (T, sd) for T in lane_counts for sd in seeds):
-            c, a = int(commits[i]), int(aborts[i])
-            wall = float(lane_time[i]) / T
-            points.append(SweepPoint(
-                cc=cc, granularity=g, lanes=T, seed=sd, commits=c, aborts=a,
-                abort_rate=a / max(c + a, 1),
-                throughput=c / max(wall, 1e-9), sim_time_us=wall,
-                ext_events=int(ext[i]), waves=n_waves))
+    for (cc, g), per_bucket in zip(combos, raw):
+        for T in lane_counts:
+            for sd in seeds:
+                bi, i = where[(T, sd)]
+                commits, aborts, lane_time, ext = per_bucket[bi]
+                c, a = int(commits[i]), int(aborts[i])
+                wall = float(lane_time[i]) / T
+                points.append(SweepPoint(
+                    cc=cc, granularity=g, lanes=T, seed=sd, commits=c,
+                    aborts=a, abort_rate=a / max(c + a, 1),
+                    throughput=c / max(wall, 1e-9), sim_time_us=wall,
+                    ext_events=int(ext[i]), waves=n_waves))
     return points
 
 

@@ -237,8 +237,9 @@ class EngineConfig:
     granularity: int = 1        # 0 = coarse (one timestamp per row),
                                 # 1 = fine (the paper's mechanism).
                                 # Claims are always scattered at fine group
-                                # resolution; granularity selects the probe
-                                # width (see claims.effective_probe).
+                                # resolution; granularity selects the probe/
+                                # observe width of the backend surface ops
+                                # (core/backend.py validate/probe/ts_gather).
     n_rings: int = 1
     track_values: bool = False
     cost: CostModel = dataclasses.field(default_factory=CostModel)
@@ -249,12 +250,13 @@ class EngineConfig:
     # Auto-granularity (beyond-paper, paper section 5 future work):
     autogran_up: float = 0.10
     autogran_decay: float = 0.97
-    backend: str = "jnp"        # "jnp": XLA gather/scatter probe + install;
-                                # "pallas": the TPU-native kernels
-                                # (kernels/occ_validate.py, occ_commit.py;
-                                # interpret mode off-TPU).  Both read the same
-                                # claim words (core/claimword.py) and are
-                                # bit-identical — see DESIGN.md section 5.
+    backend: str = "jnp"        # Substrate for the kernel-backend surface
+                                # (core/backend.py) every CC mechanism calls:
+                                # "jnp": XLA gather/scatter; "pallas": the
+                                # TPU-native kernels (interpret mode off-TPU).
+                                # Both read the same claim words
+                                # (core/claimword.py) and are bit-identical —
+                                # see DESIGN.md section 5.
 
     def __post_init__(self):
         if self.backend not in ("jnp", "pallas"):

@@ -6,9 +6,15 @@ wrappers (auto-selecting kernel vs reference by backend), and ``ref.py`` with
 the pure-jnp oracles every kernel is validated against (interpret mode on CPU,
 shape/dtype sweeps in tests/test_kernels.py).
 
-Kernels:
-  occ_validate    OCC read-set validation: scalar-prefetch row gather + compare
+Kernels (the CC set implements the backend surface of core/backend.py —
+DESIGN.md section 5):
+  occ_validate    read-set validation: scalar-prefetch row DMA + compare;
+                  also the dual-granularity variant (one DMA, fine+coarse
+                  verdicts) and the raw strongest-claimant probe
   occ_commit      version-bump scatter with aliased output
+  ts_gather       TicToc (wts, rts) row gather; coarse = row max
+  ts_install      monotone scatter-max timestamp install (whole-row option)
+  claim_scatter   fused pack+scatter-min of claim words
   flash_attention blocked causal attention (GQA, optional sliding window)
   rglru_scan      RG-LRU linear recurrence (recurrentgemma)
   rwkv6_scan      RWKV-6 wkv state recurrence (data-dependent decay)

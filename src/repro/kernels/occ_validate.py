@@ -12,6 +12,16 @@ op's own group column, coarse reduces over the whole row (G is small — one
 8/16-byte row per op — so the coarse reduce is free; the DMA is the cost, and
 it is identical for both granularities, matching the paper's "fine-grained
 timestamps have no measurable overhead").
+
+Three kernels share the one row-DMA grid:
+
+- ``occ_validate_pallas`` — conflict bool at one granularity (OCC's hot loop);
+- ``occ_validate_dual_pallas`` — fine AND coarse verdicts from the same row
+  fetch, so AutoGran's double probe costs one DMA per op, not two;
+- ``claim_probe_pallas`` — the raw strongest-claimant prio16 (NO_PRIO when
+  the cell is unclaimed this wave), for mechanisms that need the priority
+  itself rather than a verdict (TicToc's extension rule, SwissTM, 2PL,
+  Adaptive; DESIGN.md section 5).
 """
 from __future__ import annotations
 
@@ -68,3 +78,96 @@ def occ_validate_pallas(claim_w: jax.Array, keys: jax.Array,
         out_shape=jax.ShapeDtypeStruct((T, K), jnp.bool_),
         interpret=interpret,
     )(keys, ivw, groups, myprio.astype(jnp.uint32), check, claim_w)
+
+
+def _dual_kernel(G: int, keys_ref, ivw_ref, grp_ref, prio_ref, chk_ref,
+                 row_ref, fine_ref, coarse_ref):
+    row = row_ref[0, :]                                   # uint32[G]
+    pr = live_prio(row, ivw_ref[0])
+    g = grp_ref[0, 0]
+    sel = jnp.arange(G, dtype=jnp.int32) == g
+    fprio = jnp.where(sel, pr, NO_PRIO).min()
+    cprio = pr.min()
+    chk = chk_ref[0, 0]
+    myp = prio_ref[0, 0]
+    fine_ref[0, 0] = chk & (fprio < myp)
+    coarse_ref[0, 0] = chk & (cprio < myp)
+
+
+def occ_validate_dual_pallas(claim_w: jax.Array, keys: jax.Array,
+                             groups: jax.Array, myprio: jax.Array,
+                             check: jax.Array, inv_wave: jax.Array,
+                             interpret: bool = False
+                             ) -> tuple[jax.Array, jax.Array]:
+    """(fine, coarse) conflict bool[T, K] from ONE row DMA per op — the
+    AutoGran double probe without the double fetch."""
+    T, K = keys.shape
+    G = claim_w.shape[1]
+    ivw = jnp.reshape(inv_wave.astype(jnp.uint32), (1,))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # keys, inv_wave
+        grid=(T, K),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda t, k, keys, ivw: (t, k)),   # groups
+            pl.BlockSpec((1, 1), lambda t, k, keys, ivw: (t, k)),   # myprio
+            pl.BlockSpec((1, 1), lambda t, k, keys, ivw: (t, k)),   # check
+            pl.BlockSpec((1, G),
+                         lambda t, k, keys, ivw: (jnp.maximum(keys[t, k], 0),
+                                                  0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, 1), lambda t, k, keys, ivw: (t, k)),
+            pl.BlockSpec((1, 1), lambda t, k, keys, ivw: (t, k)),
+        ),
+    )
+    return pl.pallas_call(
+        functools.partial(_dual_kernel, G),
+        grid_spec=grid_spec,
+        out_shape=(jax.ShapeDtypeStruct((T, K), jnp.bool_),
+                   jax.ShapeDtypeStruct((T, K), jnp.bool_)),
+        interpret=interpret,
+    )(keys, ivw, groups, myprio.astype(jnp.uint32), check, claim_w)
+
+
+def _probe_kernel(fine: bool, G: int, keys_ref, ivw_ref, grp_ref, row_ref,
+                  out_ref):
+    row = row_ref[0, :]                                   # uint32[G]
+    pr = live_prio(row, ivw_ref[0])
+    if fine:
+        g = grp_ref[0, 0]
+        sel = jnp.arange(G, dtype=jnp.int32) == g
+        wprio = jnp.where(sel, pr, NO_PRIO).min()
+    else:
+        wprio = pr.min()
+    t, k = pl.program_id(0), pl.program_id(1)
+    live = keys_ref[t, k] >= 0
+    out_ref[0, 0] = jnp.where(live, wprio, jnp.uint32(NO_PRIO))
+
+
+def claim_probe_pallas(table: jax.Array, keys: jax.Array, groups: jax.Array,
+                       inv_wave: jax.Array, fine: bool,
+                       interpret: bool = False) -> jax.Array:
+    """Strongest live claimant prio16 per op (uint32[T, K]; NO_PRIO when the
+    cell is unclaimed this wave or the op is masked) — see ref.claim_probe."""
+    T, K = keys.shape
+    G = table.shape[1]
+    ivw = jnp.reshape(inv_wave.astype(jnp.uint32), (1,))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # keys, inv_wave
+        grid=(T, K),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda t, k, keys, ivw: (t, k)),   # groups
+            pl.BlockSpec((1, G),
+                         lambda t, k, keys, ivw: (jnp.maximum(keys[t, k], 0),
+                                                  0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda t, k, keys, ivw: (t, k)),
+    )
+    return pl.pallas_call(
+        functools.partial(_probe_kernel, fine, G),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((T, K), jnp.uint32),
+        interpret=interpret,
+    )(keys, ivw, groups, table)

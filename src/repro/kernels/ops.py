@@ -7,9 +7,10 @@ Each op auto-selects the execution path:
     (tests/test_kernels.py validates kernel == reference across shape/dtype
     sweeps).
 
-Set ``FORCE`` ("pallas" | "ref") or pass use_pallas/interpret explicitly to
-override; models route through these wrappers so the same model code runs on
-both backends.
+Set ``REPRO_KERNELS`` ("pallas" | "ref") or pass use_pallas/interpret
+explicitly to override; models route through these wrappers so the same model
+code runs on both backends.  The env var is resolved *per call* (not at
+import time), so tests and benchmarks can toggle it after this module loads.
 """
 from __future__ import annotations
 
@@ -19,22 +20,31 @@ import os
 import jax
 import jax.numpy as jnp
 
+from repro.core.claimword import inv_wave as _inv_wave
 from repro.kernels import ref
+from repro.kernels.claim_scatter import claim_scatter_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.occ_commit import occ_commit_pallas
-from repro.kernels.occ_validate import occ_validate_pallas
+from repro.kernels.occ_validate import (claim_probe_pallas,
+                                        occ_validate_dual_pallas,
+                                        occ_validate_pallas)
 from repro.kernels.rglru_scan import rglru_pallas
 from repro.kernels.rwkv6_scan import rwkv6_pallas
+from repro.kernels.ts_gather import ts_gather_pallas
+from repro.kernels.ts_install import ts_install_max_pallas
 
-FORCE = os.environ.get("REPRO_KERNELS", "")  # "", "pallas", "ref"
+
+def _force() -> str:
+    return os.environ.get("REPRO_KERNELS", "")  # "", "pallas", "ref"
 
 
 def _use_pallas(use_pallas) -> bool:
     if use_pallas is not None:
         return use_pallas
-    if FORCE == "pallas":
+    force = _force()
+    if force == "pallas":
         return True
-    if FORCE == "ref":
+    if force == "ref":
         return False
     return jax.default_backend() == "tpu"
 
@@ -64,10 +74,51 @@ def occ_validate(claim_w, keys, groups, myprio, check, inv_wave, fine: bool,
                             inv_wave, fine)
 
 
+def occ_validate_dual(claim_w, keys, groups, myprio, check, inv_wave,
+                      use_pallas=None):
+    if _use_pallas(use_pallas):
+        return occ_validate_dual_pallas(claim_w, keys, groups,
+                                        myprio.astype(jnp.uint32), check,
+                                        inv_wave, interpret=_interp())
+    return ref.occ_validate_dual(claim_w, keys, groups, myprio, check,
+                                 inv_wave)
+
+
+def claim_probe(table, keys, groups, inv_wave, fine: bool, use_pallas=None):
+    if _use_pallas(use_pallas):
+        return claim_probe_pallas(table, keys, groups, inv_wave, fine,
+                                  interpret=_interp())
+    return ref.claim_probe(table, keys, groups, inv_wave, fine)
+
+
 def occ_commit(wts, keys, groups, do, use_pallas=None):
     if _use_pallas(use_pallas):
         return occ_commit_pallas(wts, keys, groups, do, interpret=_interp())
     return ref.occ_commit(wts, keys, groups, do)
+
+
+# --------------------------------------------------------- TicToc timestamps
+def ts_gather(table, keys, groups, fine: bool, use_pallas=None):
+    if _use_pallas(use_pallas):
+        return ts_gather_pallas(table, keys, groups, fine,
+                                interpret=_interp())
+    return ref.ts_gather(table, keys, groups, fine)
+
+
+def ts_install_max(table, keys, groups, vals, do, whole_row: bool = False,
+                   use_pallas=None):
+    if _use_pallas(use_pallas):
+        return ts_install_max_pallas(table, keys, groups, vals, do,
+                                     whole_row, interpret=_interp())
+    return ref.ts_install_max(table, keys, groups, vals, do, whole_row)
+
+
+# -------------------------------------------------------------- claim tables
+def claim_scatter(table, keys, groups, prio, do, wave, use_pallas=None):
+    if _use_pallas(use_pallas):
+        return claim_scatter_pallas(table, keys, groups, prio, do,
+                                    _inv_wave(wave), interpret=_interp())
+    return ref.claim_scatter(table, keys, groups, prio, do, wave)
 
 
 # ------------------------------------------------------- flash attention

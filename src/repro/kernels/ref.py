@@ -4,7 +4,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.claimword import EMPTY_WORD, live_prio
+from repro.core.claimword import EMPTY_WORD, NO_PRIO, claim_word, live_prio
 from repro.core.types import OOB_KEY  # negative indices wrap, OOB drops
 
 
@@ -24,12 +24,72 @@ def occ_validate(claim_w: jax.Array, keys: jax.Array, groups: jax.Array,
     return check & (wprio < myprio)
 
 
+def occ_validate_dual(claim_w: jax.Array, keys: jax.Array, groups: jax.Array,
+                      myprio: jax.Array, check: jax.Array,
+                      inv_wave: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(fine, coarse) conflict flags from one logical row fetch."""
+    k = jnp.where(keys >= 0, keys, OOB_KEY)
+    rows = claim_w.at[k, :].get(mode="fill", fill_value=EMPTY_WORD)
+    pr = live_prio(rows, inv_wave)
+    fprio = jnp.take_along_axis(pr, groups[..., None], axis=-1)[..., 0]
+    cprio = pr.min(axis=-1)
+    return check & (fprio < myprio), check & (cprio < myprio)
+
+
+def claim_probe(table: jax.Array, keys: jax.Array, groups: jax.Array,
+                inv_wave: jax.Array, fine: bool) -> jax.Array:
+    """Strongest live claimant prio16 per op; NO_PRIO when unclaimed/masked."""
+    k = jnp.where(keys >= 0, keys, OOB_KEY)
+    rows = table.at[k, :].get(mode="fill", fill_value=EMPTY_WORD)
+    pr = live_prio(rows, inv_wave)
+    if fine:
+        wprio = jnp.take_along_axis(pr, groups[..., None], axis=-1)[..., 0]
+    else:
+        wprio = pr.min(axis=-1)
+    return jnp.where(keys >= 0, wprio, jnp.uint32(NO_PRIO))
+
+
 def occ_commit(wts: jax.Array, keys: jax.Array, groups: jax.Array,
                do: jax.Array) -> jax.Array:
     """Bump version of each (key, group) once per committed write op."""
     k = jnp.where(do & (keys >= 0), keys, OOB_KEY)
     return wts.at[k.reshape(-1), groups.reshape(-1)].add(jnp.uint32(1),
                                                          mode="drop")
+
+
+def ts_gather(table: jax.Array, keys: jax.Array, groups: jax.Array,
+              fine: bool) -> jax.Array:
+    """Per-op timestamp observation: own cell (fine) or row max (coarse —
+    one timestamp per record); 0 for masked ops."""
+    k = jnp.where(keys >= 0, keys, OOB_KEY)
+    if fine:
+        return table.at[k, groups].get(mode="fill", fill_value=0)
+    rows = table.at[k, :].get(mode="fill", fill_value=0)
+    return rows.max(axis=-1)
+
+
+def ts_install_max(table: jax.Array, keys: jax.Array, groups: jax.Array,
+                   vals: jax.Array, do: jax.Array,
+                   whole_row: bool = False) -> jax.Array:
+    """Monotone scatter-max of vals into table[key, group] per masked op;
+    whole_row installs across every group of the record."""
+    k = jnp.where(do & (keys >= 0), keys, OOB_KEY).reshape(-1)
+    v = vals.astype(jnp.uint32).reshape(-1)
+    if whole_row:
+        for g in range(table.shape[1]):
+            table = table.at[k, g].max(v, mode="drop")
+        return table
+    return table.at[k, groups.reshape(-1)].max(v, mode="drop")
+
+
+def claim_scatter(table: jax.Array, keys: jax.Array, groups: jax.Array,
+                  prio: jax.Array, do: jax.Array,
+                  wave: jax.Array) -> jax.Array:
+    """Pack claim words and scatter-min them into table[key, group]."""
+    words = claim_word(wave, prio)
+    k = jnp.where(do & (keys >= 0), keys, OOB_KEY)
+    return table.at[k.reshape(-1), groups.reshape(-1)].min(
+        words.reshape(-1), mode="drop")
 
 
 # ------------------------------------------------------------ flash attention

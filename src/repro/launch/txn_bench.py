@@ -4,9 +4,11 @@
         --cc occ tictoc --granularity both --lanes 16 64 128 --waves 300
 
 The whole cc x granularity x lanes grid compiles to ONE XLA program
-(core/engine.py sweep); ``--backend pallas`` routes the OCC-family probe and
-commit-install through the TPU-native kernels (interpret mode on CPU — see
-DESIGN.md section 5).
+(core/engine.py sweep, vmapped in lane buckets); ``--backend pallas`` routes
+every CC shared-state op (validate/probe/gather, claim/commit/timestamp
+scatters) through the TPU-native kernels via the backend surface of
+core/backend.py (interpret mode on CPU — see DESIGN.md section 5).  Each
+JSON row records the resolved backend and per-op kernel coverage.
 """
 from __future__ import annotations
 
@@ -25,6 +27,8 @@ def _make_workload(workload: str, *, scale: float = 1.0,
 
 def _row(workload: str, cc_name: str, p, wall_s: float,
          backend: str) -> dict:
+    from repro.core import types as t
+    from repro.core.backend import kernel_coverage
     return {
         "workload": workload, "cc": cc_name, "granularity": p.granularity,
         "lanes": p.lanes, "waves": p.waves,
@@ -34,6 +38,10 @@ def _row(workload: str, cc_name: str, p, wall_s: float,
         "ext_events": p.ext_events,
         "wall_s": round(wall_s, 2),
         "backend": backend,
+        # Which backend-surface ops this mechanism actually routed through
+        # Pallas kernels vs XLA — makes BENCH_*.json trajectories
+        # attributable to an execution engine (DESIGN.md section 5).
+        "kernel_ops": kernel_coverage(backend, t.CC_IDS[cc_name]),
     }
 
 
@@ -75,6 +83,7 @@ def run_one(workload: str, cc_name: str, gran: int, lanes: int, waves: int,
         n_records=wl.n_records, n_groups=wl.n_groups, n_cols=wl.n_cols,
         n_txn_types=wl.n_txn_types, granularity=gran, n_rings=wl.n_rings,
         backend=backend)
+    from repro.core.backend import kernel_coverage
     t0 = time.time()
     res = run(cfg, wl, n_waves=waves, seed=seed)
     wall = time.time() - t0
@@ -87,6 +96,7 @@ def run_one(workload: str, cc_name: str, gran: int, lanes: int, waves: int,
         "ext_events": res.ext_events,
         "wall_s": round(wall, 2),
         "backend": backend,
+        "kernel_ops": kernel_coverage(backend, t.CC_IDS[cc_name]),
     }
 
 

@@ -1,7 +1,8 @@
 """Backend parity: the Pallas kernels (interpret mode on CPU) and the jnp
 gather/scatter path must be bit-identical — same commit masks, same installed
-versions — because both decode the one claim-word layout in
-core/claimword.py (DESIGN.md section 5)."""
+versions/timestamps — because both decode the one claim-word layout in
+core/claimword.py through the one backend op surface in core/backend.py
+(DESIGN.md section 5)."""
 import dataclasses
 
 import jax.numpy as jnp
@@ -10,13 +11,18 @@ import pytest
 
 from repro.core import claims
 from repro.core import types as t
-from repro.core.cc import autogran, occ
-from repro.core.engine import run
+from repro.core.cc import autogran, occ, tictoc
+from repro.core.engine import run, sweep
 from repro.core.types import EngineConfig, TxnBatch, store_init
 from repro.kernels import ref
 from repro.workloads import TPCCWorkload, YCSBWorkload
 
 RNG = np.random.default_rng(42)
+
+WORKLOADS = {
+    "ycsb": YCSBWorkload.make(n_keys=512),
+    "tpcc": TPCCWorkload.make(n_warehouses=1, scale=0.05),
+}
 
 
 def _random_batch(T, K, N, G):
@@ -39,6 +45,7 @@ def _cfg(cc, T, K, N, gran, backend):
 
 # -------------------------------------------------- single-wave validation
 @pytest.mark.parametrize("cc_mod,cc_id", [(occ, t.CC_OCC),
+                                          (tictoc, t.CC_TICTOC),
                                           (autogran, t.CC_AUTOGRAN)])
 @pytest.mark.parametrize("gran", [0, 1])
 def test_wave_validate_backend_parity(cc_mod, cc_id, gran):
@@ -58,20 +65,21 @@ def test_wave_validate_backend_parity(cc_mod, cc_id, gran):
         np.testing.assert_array_equal(np.asarray(ra.conflict_op),
                                       np.asarray(rb.conflict_op))
         np.testing.assert_array_equal(np.asarray(sa.wts), np.asarray(sb.wts))
+        np.testing.assert_array_equal(np.asarray(sa.rts), np.asarray(sb.rts))
+        np.testing.assert_array_equal(np.asarray(sa.claim_w),
+                                      np.asarray(sb.claim_w))
 
 
 # ------------------------------------------------------- whole-run parity
+@pytest.mark.parametrize("cc", [t.CC_OCC, t.CC_TICTOC, t.CC_AUTOGRAN])
 @pytest.mark.parametrize("gran", [0, 1])
 @pytest.mark.parametrize("wlname", ["ycsb", "tpcc"])
-def test_run_backend_parity(wlname, gran):
-    """EngineConfig(backend='pallas') must yield bit-identical commit masks
-    and versions to backend='jnp' on both paper workloads (ISSUE acceptance
-    criterion)."""
-    if wlname == "ycsb":
-        wl = YCSBWorkload.make(n_keys=512)
-    else:
-        wl = TPCCWorkload.make(n_warehouses=1, scale=0.05)
-    cfg = EngineConfig(cc=t.CC_OCC, lanes=8, slots=wl.slots,
+def test_run_backend_parity(wlname, gran, cc):
+    """EngineConfig(backend='pallas') must yield bit-identical commit masks,
+    versions, and TicToc timestamps to backend='jnp' on both paper workloads
+    for OCC, TicToc, and AutoGran (ISSUE acceptance criterion)."""
+    wl = WORKLOADS[wlname]
+    cfg = EngineConfig(cc=cc, lanes=8, slots=wl.slots,
                        n_records=wl.n_records, n_groups=wl.n_groups,
                        n_cols=wl.n_cols, n_txn_types=wl.n_txn_types,
                        granularity=gran, n_rings=wl.n_rings)
@@ -83,9 +91,52 @@ def test_run_backend_parity(wlname, gran):
     assert (a.commits, a.aborts) == (b.commits, b.aborts)
     np.testing.assert_array_equal(np.asarray(a.final_state.store.wts),
                                   np.asarray(b.final_state.store.wts))
+    np.testing.assert_array_equal(np.asarray(a.final_state.store.rts),
+                                  np.asarray(b.final_state.store.rts))
     np.testing.assert_array_equal(
         np.asarray(a.final_state.pending_live),
         np.asarray(b.final_state.pending_live))
+
+
+@pytest.mark.parametrize("cc", [t.CC_2PL, t.CC_SWISS, t.CC_ADAPTIVE])
+@pytest.mark.parametrize("gran", [0, 1])
+def test_run_backend_parity_lock_mechanisms(cc, gran):
+    """The lock-based mechanisms compose the surface differently (claim_r
+    scatters, dual claim_w/claim_r probes, Adaptive's pess-masked visible
+    reads) — the README backend matrix promises them the same no-fallback
+    bit-identity, so prove it end-to-end too."""
+    wl = WORKLOADS["ycsb"]
+    cfg = EngineConfig(cc=cc, lanes=8, slots=wl.slots,
+                       n_records=wl.n_records, n_groups=wl.n_groups,
+                       n_cols=wl.n_cols, n_txn_types=wl.n_txn_types,
+                       granularity=gran, n_rings=wl.n_rings)
+    a = run(cfg, wl, n_waves=6, seed=0, keep_state=True)
+    b = run(dataclasses.replace(cfg, backend="pallas"), wl, n_waves=6,
+            seed=0, keep_state=True)
+    np.testing.assert_array_equal(np.asarray(a.per_wave_commits),
+                                  np.asarray(b.per_wave_commits))
+    assert (a.commits, a.aborts) == (b.commits, b.aborts)
+    np.testing.assert_array_equal(np.asarray(a.final_state.store.wts),
+                                  np.asarray(b.final_state.store.wts))
+    np.testing.assert_array_equal(np.asarray(a.final_state.store.claim_r),
+                                  np.asarray(b.final_state.store.claim_r))
+
+
+# --------------------------------------------------- sweep-grid parity
+def test_sweep_backend_parity_all_mechanisms():
+    """Bit-identical SweepPoints jnp vs pallas for OCC, TicToc, and AutoGran
+    at both granularities (ISSUE acceptance criterion)."""
+    wl = WORKLOADS["ycsb"]
+    ccs = [t.CC_OCC, t.CC_TICTOC, t.CC_AUTOGRAN]
+    cfg = EngineConfig(cc=t.CC_OCC, lanes=8, slots=wl.slots,
+                       n_records=wl.n_records, n_groups=wl.n_groups,
+                       n_cols=wl.n_cols, n_txn_types=wl.n_txn_types,
+                       n_rings=wl.n_rings)
+    a = sweep(cfg, wl, 4, ccs=ccs, grans=(0, 1), lane_counts=(8,),
+              seeds=(0,))
+    b = sweep(dataclasses.replace(cfg, backend="pallas"), wl, 4, ccs=ccs,
+              grans=(0, 1), lane_counts=(8,), seeds=(0,))
+    assert a == b  # SweepPoint dataclass equality: every field, every point
 
 
 # ------------------------------------- shared layout: claims vs kernel oracle
@@ -108,3 +159,15 @@ def test_claims_probe_matches_kernel_oracle(fine):
                                   claims.inv_wave(wave), fine)
     np.testing.assert_array_equal(np.asarray(via_claims),
                                   np.asarray(via_oracle))
+
+
+def test_no_backend_branches_left_in_cc():
+    """The refactor's contract: zero per-mechanism ``cfg.backend`` branches
+    in cc/*.py — all routing goes through core/backend.py (ISSUE acceptance
+    criterion)."""
+    import pathlib
+
+    import repro.core.cc as cc_pkg
+    pkg_dir = pathlib.Path(cc_pkg.__file__).parent
+    for path in pkg_dir.glob("*.py"):
+        assert "cfg.backend" not in path.read_text(), path.name

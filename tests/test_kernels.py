@@ -38,6 +38,96 @@ def test_occ_commit_with_duplicates(T, K, N, G):
     np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+# ------------------------------------------- backend-surface kernels (new)
+@pytest.mark.parametrize("T,K,N,G", [(4, 8, 64, 2), (3, 5, 33, 1)])
+def test_occ_validate_dual(T, K, N, G):
+    """One row DMA, two verdicts: the dual kernel must equal BOTH
+    single-granularity oracles."""
+    claim = jnp.asarray(RNG.integers(0, 2 ** 32, (N, G), dtype=np.uint32))
+    keys = jnp.asarray(RNG.integers(-1, N, (T, K), dtype=np.int32))
+    groups = jnp.asarray(RNG.integers(0, G, (T, K), dtype=np.int32))
+    prio = jnp.asarray(RNG.integers(0, 2 ** 16, (T, K), dtype=np.uint32))
+    check = jnp.asarray(RNG.random((T, K)) < 0.7) & (keys >= 0)
+    ivw = jnp.uint32(0xFF00)
+    af, ac = ops.occ_validate_dual(claim, keys, groups, prio, check, ivw,
+                                   use_pallas=True)
+    np.testing.assert_array_equal(
+        np.asarray(af),
+        np.asarray(ref.occ_validate(claim, keys, groups, prio, check, ivw,
+                                    fine=True)))
+    np.testing.assert_array_equal(
+        np.asarray(ac),
+        np.asarray(ref.occ_validate(claim, keys, groups, prio, check, ivw,
+                                    fine=False)))
+
+
+@pytest.mark.parametrize("T,K,N,G", [(4, 8, 64, 2), (3, 5, 17, 1)])
+@pytest.mark.parametrize("fine", [True, False])
+def test_claim_probe(T, K, N, G, fine):
+    table = jnp.asarray(RNG.integers(0, 2 ** 32, (N, G), dtype=np.uint32))
+    keys = jnp.asarray(RNG.integers(-1, N, (T, K), dtype=np.int32))
+    groups = jnp.asarray(RNG.integers(0, G, (T, K), dtype=np.int32))
+    ivw = jnp.uint32(0xFFF0)
+    a = ops.claim_probe(table, keys, groups, ivw, fine, use_pallas=True)
+    b = ref.claim_probe(table, keys, groups, ivw, fine)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("T,K,N,G", [(4, 8, 64, 2), (6, 3, 17, 1)])
+@pytest.mark.parametrize("fine", [True, False])
+def test_ts_gather(T, K, N, G, fine):
+    """TicToc (wts, rts) observation: fine = own cell, coarse = row max."""
+    table = jnp.asarray(RNG.integers(0, 1000, (N, G), dtype=np.uint32))
+    keys = jnp.asarray(RNG.integers(-1, N, (T, K), dtype=np.int32))
+    groups = jnp.asarray(RNG.integers(0, G, (T, K), dtype=np.int32))
+    a = ops.ts_gather(table, keys, groups, fine, use_pallas=True)
+    b = ref.ts_gather(table, keys, groups, fine)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("T,K,N,G", [(4, 8, 64, 2), (6, 3, 17, 1)])
+@pytest.mark.parametrize("whole_row", [False, True])
+def test_ts_install_max_with_duplicates(T, K, N, G, whole_row):
+    """Scatter-max install; keys drawn from N//2 records force duplicate
+    (record, group) cells within the wave."""
+    table = jnp.asarray(RNG.integers(0, 500, (N, G), dtype=np.uint32))
+    keys = jnp.asarray(RNG.integers(-1, N // 2, (T, K), dtype=np.int32))
+    groups = jnp.asarray(RNG.integers(0, G, (T, K), dtype=np.int32))
+    vals = jnp.asarray(RNG.integers(0, 1000, (T, K), dtype=np.uint32))
+    do = jnp.asarray(RNG.random((T, K)) < 0.6)
+    a = ops.ts_install_max(table, keys, groups, vals, do, whole_row,
+                           use_pallas=True)
+    b = ref.ts_install_max(table, keys, groups, vals, do, whole_row)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("T,K,N,G", [(4, 8, 64, 2), (6, 3, 17, 1)])
+def test_claim_scatter_with_duplicates(T, K, N, G):
+    """Fused pack+scatter-min; duplicate cells must resolve to the strongest
+    claimant exactly like the XLA scatter-min."""
+    table = jnp.asarray(RNG.integers(0, 2 ** 32, (N, G), dtype=np.uint32))
+    keys = jnp.asarray(RNG.integers(-1, N // 2, (T, K), dtype=np.int32))
+    groups = jnp.asarray(RNG.integers(0, G, (T, K), dtype=np.int32))
+    prio = jnp.asarray(RNG.integers(0, 2 ** 16, (T, K), dtype=np.uint32))
+    do = jnp.asarray(RNG.random((T, K)) < 0.6)
+    wave = jnp.uint32(5)
+    a = ops.claim_scatter(table, keys, groups, prio, do, wave,
+                          use_pallas=True)
+    b = ref.claim_scatter(table, keys, groups, prio, do, wave)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_repro_kernels_env_resolved_per_call(monkeypatch):
+    """REPRO_KERNELS must be read per call, not frozen at import time."""
+    monkeypatch.setenv("REPRO_KERNELS", "pallas")
+    assert ops._use_pallas(None) is True
+    monkeypatch.setenv("REPRO_KERNELS", "ref")
+    assert ops._use_pallas(None) is False
+    monkeypatch.delenv("REPRO_KERNELS")
+    import jax
+    assert ops._use_pallas(None) == (jax.default_backend() == "tpu")
+
+
 # --------------------------------------------------------- flash attention
 @pytest.mark.parametrize("B,Hq,Hkv,Sq,Sk,D", [
     (2, 4, 2, 64, 64, 32),       # GQA

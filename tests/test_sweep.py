@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from repro.core import types as t
-from repro.core.engine import run, sweep
+from repro.core.engine import lane_buckets, run, sweep
 from repro.workloads import YCSBWorkload
 
 WL = YCSBWorkload.make(n_keys=512)
@@ -50,6 +50,42 @@ def test_sweep_matches_run_at_max_lanes():
         assert r.ext_events == p.ext_events
 
 
+def test_lane_buckets():
+    """Greedy grouping bounds padding waste to the ratio; None = one bucket
+    (legacy pad-to-global-max)."""
+    assert lane_buckets((16, 64, 128), 2.0) == [[16], [64, 128]]
+    assert lane_buckets((8, 16, 32, 64, 96, 128), 2.0) == \
+        [[8, 16], [32, 64], [96, 128]]
+    assert lane_buckets((16, 128), 8.0) == [[16, 128]]
+    assert lane_buckets((16, 64, 128), None) == [[16, 64, 128]]
+    assert lane_buckets((128, 16, 64), 2.0) == [[16], [64, 128]]  # sorted
+
+
+def test_sweep_matches_run_at_every_bucket_max():
+    """Bucketed padding strengthens the bit-identity guarantee: EVERY point
+    sitting at its bucket's max lane count equals a standalone run()."""
+    lanes = (4, 16)   # ratio 2 puts these in separate buckets
+    assert lane_buckets(lanes, 2.0) == [[4], [16]]
+    pts = sweep(base_cfg(), WL, 6, ccs=[t.CC_OCC], grans=(1,),
+                lane_counts=lanes, seeds=(2,))
+    for p in pts:
+        cfg = dataclasses.replace(base_cfg(), cc=p.cc,
+                                  granularity=p.granularity, lanes=p.lanes)
+        r = run(cfg, WL, n_waves=6, seed=2)
+        assert (r.commits, r.aborts) == (p.commits, p.aborts), p.lanes
+
+
+def test_sweep_bucketing_preserves_grid_order():
+    """Bucketed execution must not permute the returned point grid."""
+    pts = sweep(base_cfg(), WL, 3, ccs=[t.CC_OCC, t.CC_TICTOC], grans=(0, 1),
+                lane_counts=(4, 8, 16), seeds=(0, 1))
+    coords = [(p.cc, p.granularity, p.lanes, p.seed) for p in pts]
+    want = [(cc, g, T, sd)
+            for g in (0, 1) for cc in (t.CC_OCC, t.CC_TICTOC)
+            for T in (4, 8, 16) for sd in (0, 1)]
+    assert coords == want
+
+
 def test_sweep_seeds_axis():
     pts = sweep(base_cfg(), WL, 5, ccs=[t.CC_OCC], grans=(1,),
                 lane_counts=(8,), seeds=(0, 1, 2))
@@ -70,15 +106,32 @@ def test_sweep_pallas_backend_parity():
 
 
 def test_txn_bench_grid_schema():
-    """txn_bench --json schema: the seed keys plus the new backend field."""
+    """txn_bench --json schema: the seed keys plus backend attribution."""
     from repro.launch.txn_bench import run_grid
     rows = run_grid("ycsb", ["occ", "tictoc"], (0, 1), [4, 8], 4,
                     n_keys=512, backend="jnp")
     assert len(rows) == 2 * 2 * 2
     want = {"workload", "cc", "granularity", "lanes", "waves", "commits",
             "aborts", "abort_rate", "throughput", "ext_events", "wall_s",
-            "backend"}
+            "backend", "kernel_ops"}
     for r in rows:
         assert set(r) == want
         assert r["backend"] == "jnp"
         assert r["commits"] + r["aborts"] == r["lanes"] * r["waves"]
+        assert all(v == "xla" for v in r["kernel_ops"].values())
+
+
+def test_txn_bench_kernel_ops_attribution():
+    """Pallas rows must name the ops that actually ran as kernels, per
+    mechanism (validate for OCC, probe/ts_gather/ts_install_max for
+    TicToc, validate_dual for AutoGran)."""
+    from repro.core.backend import kernel_coverage
+    occ_ops = kernel_coverage("pallas", t.CC_OCC)
+    tic_ops = kernel_coverage("pallas", t.CC_TICTOC)
+    ag_ops = kernel_coverage("pallas", t.CC_AUTOGRAN)
+    assert occ_ops == {"validate": "pallas", "claim_scatter": "pallas",
+                       "commit_install": "pallas"}
+    assert tic_ops == {"probe": "pallas", "ts_gather": "pallas",
+                       "claim_scatter": "pallas", "ts_install_max": "pallas"}
+    assert ag_ops == {"validate_dual": "pallas", "claim_scatter": "pallas",
+                      "commit_install": "pallas"}
