@@ -5,17 +5,20 @@ import json
 import os
 import time
 
-CCS = ["occ", "tictoc", "2pl", "swisstm", "adaptive"]
+CCS = ["occ", "tictoc", "2pl", "swisstm", "adaptive", "mvcc", "mvocc"]
 LANES = [8, 16, 32, 64, 96, 128]
 
 
 def sweep(workload: str, *, ccs=None, lanes=None, grans=(0, 1), waves=300,
-          scale=1.0, n_keys=1_000_000, seed=1, quiet=False, backend="jnp"):
-    """One jitted sweep over the whole grid (core/engine.py sweep)."""
+          scale=1.0, n_keys=1_000_000, seed=1, quiet=False, backend="jnp",
+          **wl_kw):
+    """One jitted sweep over the whole grid (core/engine.py sweep).
+    Extra keywords (write_frac, ro_frac, theta, mv_depth) pass through to
+    ``run_grid``."""
     from repro.launch.txn_bench import run_grid
     rows = run_grid(workload, list(ccs or CCS), tuple(grans),
                     list(lanes or LANES), waves, scale=scale, n_keys=n_keys,
-                    seed=seed, backend=backend)
+                    seed=seed, backend=backend, **wl_kw)
     if not quiet:
         for r in rows:
             print(f"  {workload} {r['cc']:9s} "

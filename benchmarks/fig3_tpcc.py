@@ -49,6 +49,16 @@ def main(argv=None):
           f"{occ96f/tic96c:.2f}x (paper: 1.37x)")
     print(f"ratio: OCC-fine@128 / TicToc-fine@128 = "
           f"{occ128f/tic128f:.2f}x (paper: 1.14x)")
+    # Beyond-paper: the multi-version pair on the same grid.  TPC-C's
+    # write-write conflicts are same-group (stock), so pure-SI mvcc is
+    # granularity-flat here — but serializable MV-OCC validates reads and
+    # inherits the New-order/Payment false-conflict structure: its
+    # fine/coarse gap mirrors OCC's, i.e. granularity still matters in the
+    # multi-version world.
+    mvc = one(rows, cc="mvocc", granularity=0, lanes=128)["throughput"]
+    mvf = one(rows, cc="mvocc", granularity=1, lanes=128)["throughput"]
+    print(f"mv: mvocc fine/coarse @128 = {mvf/mvc:.2f}x "
+          "(granularity still matters without read-only aborts)")
     return rows
 
 

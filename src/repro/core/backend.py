@@ -1,8 +1,8 @@
 """The kernel-backend layer: one dispatch surface for every CC mechanism.
 
 Every concurrency-control mechanism in ``core/cc/`` touches shared state
-through exactly seven ops — the full surface a wave needs (DESIGN.md
-section 5):
+through exactly ten ops — the full surface a wave needs (DESIGN.md
+sections 5 and 9):
 
     validate        read-set verdicts vs the writer-claim table (OCC rule)
     validate_dual   fine AND coarse verdicts from one row fetch (AutoGran)
@@ -12,6 +12,12 @@ section 5):
     claim_scatter   pack + scatter-min claim words (every mechanism's claims)
     commit_install  +1 version bumps for committed writes (OCC-family)
     ts_install_max  monotone scatter-max timestamp install (TicToc)
+    segment_count   same-cell op counts within the wave (TicToc's extension
+                    chains + the engine's install-contention cost model —
+                    ops that are not simple row gathers)
+    mv_gather       snapshot version select on the multi-version ring
+                    (mvcc/mvocc reads; core/mvstore.py)
+    mv_install      ring-slot claim + version publish (mvcc/mvocc commits)
 
 ``resolve(cfg)`` maps ``EngineConfig.backend`` to one of two stateless
 singleton implementations:
@@ -26,7 +32,7 @@ Both decode the one claim-word layout in ``core/claimword.py`` and are
 bit-identical (tests/test_backend_parity.py, tests/test_kernels.py).  CC
 mechanisms hold no ``cfg.backend`` branches: they call ``resolve(cfg)`` once
 per wave and use only this surface, so a new mechanism gets TPU execution for
-free and a new backend only has to implement these seven ops.
+free and a new backend only has to implement these ten ops.
 """
 from __future__ import annotations
 
@@ -80,6 +86,21 @@ class JnpBackend:
         from repro.kernels import ref
         return ref.ts_install_max(table, keys, groups, vals, mask, whole_row)
 
+    def segment_count(self, keys, groups, G: int, mask):
+        """#same-(record, group) ops in the wave, per op (0 where masked)."""
+        from repro.kernels import ref
+        return ref.segment_count(keys, groups, G, mask)
+
+    def mv_gather(self, begin, keys, groups, ts, fine: bool):
+        """(slot, ok) of the newest ring version visible at snapshot ts."""
+        from repro.kernels import ref
+        return ref.mv_gather(begin, keys, groups, ts, fine)
+
+    def mv_install(self, begin, head, keys, groups, do, ts):
+        """Claim one ring slot per written record; publish begin stamps."""
+        from repro.kernels import ref
+        return ref.mv_install(begin, head, keys, groups, do, ts)
+
 
 class PallasBackend:
     """TPU-native kernels (compiled on TPU, interpret mode elsewhere)."""
@@ -121,19 +142,44 @@ class PallasBackend:
         return ops.ts_install_max(table, keys, groups, vals, mask, whole_row,
                                   use_pallas=True)
 
+    def segment_count(self, keys, groups, G: int, mask):
+        from repro.kernels import ops
+        return ops.segment_count(keys, groups, G, mask, use_pallas=True)
+
+    def mv_gather(self, begin, keys, groups, ts, fine: bool):
+        from repro.kernels import ops
+        return ops.mv_gather(begin, keys, groups, ts, fine, use_pallas=True)
+
+    def mv_install(self, begin, head, keys, groups, do, ts):
+        from repro.kernels import ops
+        return ops.mv_install(begin, head, keys, groups, do, ts,
+                              use_pallas=True)
+
 
 _BACKENDS = {"jnp": JnpBackend(), "pallas": PallasBackend()}
 
-#: The surface ops each mechanism routes through the backend per wave —
+#: The surface ops each mechanism's wave routes through the backend —
 #: consumed by benchmark JSON rows so BENCH_* trajectories record which ops
-#: actually ran as Pallas kernels (see launch/txn_bench.py).
+#: actually ran as Pallas kernels (see launch/txn_bench.py).  Every
+#: mechanism includes ``segment_count``: the engine's install-contention
+#: cost model counts same-row committers/readers through it each wave
+#: (core/engine.py make_wave_step), on top of TicToc's extension chains.
 CC_OPS = {
-    t.CC_OCC: ("validate", "claim_scatter", "commit_install"),
-    t.CC_TICTOC: ("probe", "ts_gather", "claim_scatter", "ts_install_max"),
-    t.CC_2PL: ("probe", "claim_scatter", "commit_install"),
-    t.CC_SWISS: ("probe", "claim_scatter", "commit_install"),
-    t.CC_ADAPTIVE: ("probe", "claim_scatter", "commit_install"),
-    t.CC_AUTOGRAN: ("validate_dual", "claim_scatter", "commit_install"),
+    t.CC_OCC: ("validate", "claim_scatter", "commit_install",
+               "segment_count"),
+    t.CC_TICTOC: ("probe", "ts_gather", "claim_scatter", "ts_install_max",
+                  "segment_count"),
+    t.CC_2PL: ("probe", "claim_scatter", "commit_install", "segment_count"),
+    t.CC_SWISS: ("probe", "claim_scatter", "commit_install",
+                 "segment_count"),
+    t.CC_ADAPTIVE: ("probe", "claim_scatter", "commit_install",
+                    "segment_count"),
+    t.CC_AUTOGRAN: ("validate_dual", "claim_scatter", "commit_install",
+                    "segment_count"),
+    t.CC_MVCC: ("validate", "claim_scatter", "mv_gather", "mv_install",
+                "segment_count"),
+    t.CC_MVOCC: ("validate", "claim_scatter", "mv_gather", "mv_install",
+                 "segment_count"),
 }
 
 

@@ -11,7 +11,9 @@ bumps, contention-manager state, adaptivity state machines).
 The mechanisms mirror the paper's section 3.2 set: OCC (STO's default),
 TicToc, 2PL, SwissTM contention management, our Adaptive reader-writer lock —
 plus the beyond-paper Auto-granularity mechanism sketched in the paper's
-section 5.
+section 5 and the multi-version pair (MVCC snapshot isolation, serializable
+MV-OCC) built on the version ring of core/mvstore.py, which extends the
+paper's granularity question to stores where readers never block.
 
 Every mechanism touches shared state only through the kernel-backend surface
 (core/backend.py): validate / validate_dual / probe / ts_gather /
@@ -27,6 +29,8 @@ from repro.core.cc.two_pl import wave_validate as two_pl_validate
 from repro.core.cc.swisstm import wave_validate as swisstm_validate
 from repro.core.cc.adaptive import wave_validate as adaptive_validate
 from repro.core.cc.autogran import wave_validate as autogran_validate
+from repro.core.cc.mvcc import wave_validate as mvcc_validate
+from repro.core.cc.mvocc import wave_validate as mvocc_validate
 
 from repro.core import types as _t
 
@@ -37,8 +41,10 @@ VALIDATORS = {
     _t.CC_SWISS: swisstm_validate,
     _t.CC_ADAPTIVE: adaptive_validate,
     _t.CC_AUTOGRAN: autogran_validate,
+    _t.CC_MVCC: mvcc_validate,
+    _t.CC_MVOCC: mvocc_validate,
 }
 
 __all__ = ["ValidationResult", "VALIDATORS", "occ_validate", "tictoc_validate",
            "two_pl_validate", "swisstm_validate", "adaptive_validate",
-           "autogran_validate"]
+           "autogran_validate", "mvcc_validate", "mvocc_validate"]

@@ -124,5 +124,21 @@ def read_claims(store: StoreState, batch: TxnBatch, prio: jax.Array,
     return dataclasses.replace(store, claim_r=cr)
 
 
+def plain_write_claims(store: StoreState, batch: TxnBatch, prio: jax.Array,
+                       wave: jax.Array, cfg: EngineConfig) -> StoreState:
+    """Plain-WRITE claims into the reader-claim table (MV mechanisms).
+
+    First-committer-wins needs to distinguish overwrites from blind
+    commutative ADDs: ADD-vs-ADD pairs never conflict (types.ADD), so an ADD
+    op must only probe for stronger plain WRITEs.  The MV mechanisms take no
+    visible-read locks, leaving ``claim_r`` free to carry this second claim
+    channel — same packed words, same scatter op, no new table."""
+    m = batch.is_plain_write() & batch.live()
+    cr = kb.resolve(cfg).claim_scatter(store.claim_r, batch.op_key,
+                                       batch.op_group,
+                                       my_prio_per_op(batch, prio), wave, m)
+    return dataclasses.replace(store, claim_r=cr)
+
+
 def is_fine(cfg: EngineConfig) -> bool:
     return cfg.n_groups > 1 and cfg.granularity == 1

@@ -1,0 +1,107 @@
+"""MVCC — multi-version snapshot isolation with first-committer-wins
+(Hekaton-style; Larson et al., "High-Performance Concurrency Control
+Mechanisms for Main-Memory Databases"), wave-vectorized.
+
+Reads never block and never abort: every read selects the newest version of
+its (record, group) visible at the transaction's snapshot (the wave's start)
+from the fixed-depth version ring of ``core/mvstore.py`` — the backend's
+``mv_gather`` op.  The only in-wave conflicts are write-write: of the
+concurrent writers of a cell, the first committer (strongest priority) wins
+and the rest abort — detected against the same wave-scoped claim tables the
+single-version mechanisms use.  Blind commutative ADDs keep their STO
+semantics (never abort against other ADDs): ADD ops probe a second claim
+channel holding only plain WRITEs (``base.plain_write_claims``).
+
+Timestamp granularity enters exactly as in the paper, but one level down:
+fine granularity makes both the write-write conflict rule AND version
+visibility per column group (a group-1 update neither conflicts with nor
+invalidates group-0 accesses); coarse granularity treats the record as one
+unit on both paths.  So the paper's question — do fine timestamps still pay
+off when readers never block? — is answered by the same granularity switch.
+
+The one way a read CAN abort is epoch reclamation: the ring retains only
+the D newest versions, and a snapshot older than all of them must abort
+cleanly rather than read a recycled slot (``mv_gather``'s ok flag).  With
+wave-fresh snapshots this never fires — which is precisely the mechanism's
+zero read-only abort rate the abort_rates benchmark demonstrates.
+
+Committed writes claim one ring slot per record per wave and publish their
+begin timestamps through the backend's ``mv_install`` op.  Note MVCC is
+snapshot isolation, not serializability (write skew is admitted —
+``cc/mvocc.py`` adds the read validation that closes it).
+
+All shared-state access routes through the kernel-backend surface
+(core/backend.py): claim_scatter / validate / mv_gather / mv_install —
+Pallas kernels or XLA gather/scatter, bit-identical (DESIGN.md section 9).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import backend as kb
+from repro.core import claims, mvstore
+from repro.core.cc import base
+from repro.core.types import EngineConfig, StoreState, TxnBatch
+
+
+def fcw_conflicts(store: StoreState, batch: TxnBatch, prio, wave,
+                  cfg: EngineConfig):
+    """(store', conflict bool[T, K]): first-committer-wins write-write
+    verdicts, shared by mvcc and mvocc.  Scatters both claim channels, then:
+    a plain WRITE conflicts with any stronger writer of its cell, an ADD
+    only with a stronger plain WRITE (ADD-ADD pairs commute)."""
+    be = kb.resolve(cfg)
+    fine = base.is_fine(cfg)
+    live = batch.live()
+    pw = batch.is_plain_write() & live
+    ad = batch.is_add() & live
+    myp = base.my_prio_per_op(batch, prio)
+
+    store = base.write_claims(store, batch, prio, wave, cfg)   # all writes
+    store = base.plain_write_claims(store, batch, prio, wave, cfg)
+    cw = be.validate(store.claim_w, batch.op_key, batch.op_group, myp, pw,
+                     wave, fine)
+    ca = be.validate(store.claim_r, batch.op_key, batch.op_group, myp, ad,
+                     wave, fine)
+    return store, cw | ca
+
+
+def mv_commit(store: StoreState, batch: TxnBatch, commit, prio, wave,
+              cfg: EngineConfig) -> StoreState:
+    """Install the wave's committed writes into the version ring: one slot
+    claim + begin publish per written record (backend ``mv_install``), plus
+    the slot's value materialization when values are tracked."""
+    be = kb.resolve(cfg)
+    do = batch.is_write() & batch.live() & commit[:, None]
+    head_old = store.mv_head
+    mv_begin, mv_head = be.mv_install(store.mv_begin, head_old,
+                                      batch.op_key, batch.op_group, do,
+                                      mvstore.install_ts(wave))
+    store = dataclasses.replace(store, mv_begin=mv_begin, mv_head=mv_head)
+    if cfg.track_values:
+        vals = mvstore.install_values(store.mv_vals, head_old, mv_head,
+                                      batch, commit, prio)
+        store = dataclasses.replace(store, mv_vals=vals)
+    return store
+
+
+def wave_validate(store: StoreState, batch: TxnBatch, prio, wave,
+                  cfg: EngineConfig):
+    be = kb.resolve(cfg)
+    fine = base.is_fine(cfg)
+    rd = batch.is_read() & batch.live()
+
+    store, conflict = fcw_conflicts(store, batch, prio, wave, cfg)
+    u = claims.hash01(wave, claims.lane_op_ids(*batch.op_key.shape))
+    conflict = conflict & (u < cfg.cost.opt_overlap)   # window thinning
+
+    # Snapshot visibility: reads select their version; a reclaimed snapshot
+    # aborts deterministically (never thinned — it is store state, not a
+    # racing-window event).  With wave-fresh snapshots ok is always True.
+    _, ok = be.mv_gather(store.mv_begin, batch.op_key, batch.op_group,
+                         mvstore.snapshot_ts(wave), fine)
+    conflict = conflict | (rd & ~ok)
+
+    res = base.result_from_conflicts(batch, conflict, eager=False)
+    store = mv_commit(store, batch, res.commit, prio, wave, cfg)
+    return store, res

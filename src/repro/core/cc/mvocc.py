@@ -1,0 +1,62 @@
+"""MV-OCC — serializable multi-version OCC: snapshot reads plus commit-time
+read-set validation against the version chain (Larson et al.'s optimistic
+scheme; the repair-oriented variant of Dashti et al. motivates the
+read-only exemption), wave-vectorized.
+
+MVCC's snapshot isolation admits write skew: two transactions each read
+what the other writes, neither sees a write-write conflict, both commit —
+no serial order explains the result.  MV-OCC closes the gap the classic
+way: an UPDATE transaction re-validates its read set at commit — a read
+conflicts when a strictly-stronger lane installed a new version of its
+(record, group) this wave, exactly the single-version OCC probe, but
+against the version chain's claim channel.  The multi-version payoff that
+single-version OCC cannot offer survives where it is sound: a READ-ONLY
+transaction needs no validation at all — its snapshot is a consistent cut
+and it serializes at its snapshot timestamp, so only write-carrying
+transactions ever abort on a reader's behalf ("only write-write conflicts
+abort readers" in the single-version sense: pure readers are exempt).
+
+Granularity is the same switch as everywhere in this repro: fine validates
+and resolves write-write conflicts per column group, coarse per record —
+extending the paper's central question to the serializable multi-version
+point of the design space.
+
+Write-write conflicts, ring install, value materialization, and snapshot
+reclamation aborts are shared with ``cc/mvcc.py``; everything routes
+through the kernel-backend surface (validate / claim_scatter / mv_gather /
+mv_install), Pallas or XLA, bit-identical (DESIGN.md section 9).
+"""
+from __future__ import annotations
+
+from repro.core import backend as kb
+from repro.core import claims, mvstore
+from repro.core.cc import base, mvcc
+from repro.core.types import EngineConfig, StoreState, TxnBatch
+
+
+def wave_validate(store: StoreState, batch: TxnBatch, prio, wave,
+                  cfg: EngineConfig):
+    be = kb.resolve(cfg)
+    fine = base.is_fine(cfg)
+    live = batch.live()
+    rd = batch.is_read() & live
+    myp = base.my_prio_per_op(batch, prio)
+
+    store, conflict = mvcc.fcw_conflicts(store, batch, prio, wave, cfg)
+
+    # Commit-time read validation, update transactions only: read-only
+    # lanes serialize at their snapshot and skip the probe entirely.
+    has_write = (batch.is_write() & live).any(axis=1)
+    crd = be.validate(store.claim_w, batch.op_key, batch.op_group, myp, rd,
+                      wave, fine)
+    conflict = conflict | (crd & has_write[:, None])
+    u = claims.hash01(wave, claims.lane_op_ids(*batch.op_key.shape))
+    conflict = conflict & (u < cfg.cost.opt_overlap)   # window thinning
+
+    _, ok = be.mv_gather(store.mv_begin, batch.op_key, batch.op_group,
+                         mvstore.snapshot_ts(wave), fine)
+    conflict = conflict | (rd & ~ok)
+
+    res = base.result_from_conflicts(batch, conflict, eager=False)
+    store = mvcc.mv_commit(store, batch, res.commit, prio, wave, cfg)
+    return store, res

@@ -20,10 +20,12 @@ more than OCC due to overflow — and STO's non-waiting deadlock prevention.
 
 Shared-state access routes through the kernel-backend surface
 (core/backend.py): the claim probe is the backend's ``probe`` op, the
-(wts, rts) observation its ``ts_gather`` row-gather (coarse = row max), and
-the monotone timestamp installs its ``ts_install_max`` scatter-max — Pallas
-kernels on ``backend="pallas"``, XLA gather/scatter on ``"jnp"``, bit-
-identical either way (DESIGN.md section 5).
+(wts, rts) observation its ``ts_gather`` row-gather (coarse = row max), the
+monotone timestamp installs its ``ts_install_max`` scatter-max, and the
+same-cell extender/committer counts its ``segment_count`` (the all-pairs
+kernel that closed the pallas path's last XLA sort) — Pallas kernels on
+``backend="pallas"``, XLA gather/scatter on ``"jnp"``, bit-identical either
+way (DESIGN.md section 5).
 """
 from __future__ import annotations
 
@@ -86,15 +88,10 @@ def wave_validate(store: StoreState, batch: TxnBatch, prio, wave,
     # serialize on its cacheline; with retries the expected cost per
     # extender grows with the number of contenders (each failed CAS
     # re-reads the line) — the many-core collapse of the paper's Fig 2a/3a.
-    # Count same-cell extenders in-wave via a sort (no O(n_records) table).
-    T, K = batch.op_key.shape
+    # Same-cell extender counts come from the backend's segment_count op
+    # (the all-pairs Pallas kernel or the jnp sort; no O(n_records) table).
     G = store.wts.shape[1]
-    cell = jnp.where(ext, batch.op_key * G + batch.op_group,
-                     jnp.int32(0x7FFFFFFF)).reshape(-1)
-    scell = jnp.sort(cell)
-    lo = jnp.searchsorted(scell, cell, side="left")
-    hi = jnp.searchsorted(scell, cell, side="right")
-    n_ext = jnp.where(ext.reshape(-1), (hi - lo).astype(jnp.float32), 0.0)
+    n_ext = be.segment_count(batch.op_key, batch.op_group, G, ext)
     # Every extension pays the base CAS (c_ext); same-cell extenders
     # additionally serialize on the line — each waits on average for half
     # the contenders ahead of it (the high-contention collapse of Fig 2a).
@@ -103,7 +100,7 @@ def wave_validate(store: StoreState, batch: TxnBatch, prio, wave,
         jnp.float32(cfg.cost.c_ext)
         + 0.5 * jnp.float32(cfg.cost.lam_ext) * jnp.maximum(n_ext - 1.0, 0.0),
         0.0)
-    ext_penalty = per_op.reshape(T, K).sum(axis=1)
+    ext_penalty = per_op.sum(axis=1)
 
     # Timestamp installs (vs the snapshot; monotone scatter-max via the
     # backend's ts_install_max).  Within-wave cts chaining: n same-cell
@@ -114,8 +111,8 @@ def wave_validate(store: StoreState, batch: TxnBatch, prio, wave,
     # high-core degradation, paper Fig 3a).
     cts = jnp.broadcast_to(commit_ts[:, None], batch.op_key.shape)
     wmask = wr & commit[:, None]
-    n_wcell = claims.cell_counts(batch.op_key, batch.op_group,
-                                 store.wts.shape[1], wmask)
+    n_wcell = be.segment_count(batch.op_key, batch.op_group,
+                               store.wts.shape[1], wmask)
     cts = cts + 2 * (jnp.maximum(n_wcell, 1.0).astype(jnp.uint32) - 1)
     wts = be.ts_install_max(store.wts, batch.op_key, batch.op_group, cts,
                             wmask)

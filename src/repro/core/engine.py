@@ -23,6 +23,7 @@ from typing import Callable, Optional, Protocol, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.core import backend as kb
 from repro.core import claims
 from repro.core import types as t
 from repro.core.cc import VALIDATORS, ValidationResult
@@ -39,10 +40,20 @@ class Workload(Protocol):
     n_txn_types: int
     slots: int
 
-    def init_store(self, track_values: bool) -> StoreState: ...
+    def init_store(self, track_values: bool,
+                   mv_depth: int = 0) -> StoreState: ...
 
     def gen(self, rng: jax.Array, wave: jax.Array, lanes: int,
             ring_tails: jax.Array) -> tuple[TxnBatch, jax.Array]: ...
+
+
+def _init_store(workload: Workload, cfg: EngineConfig) -> StoreState:
+    """Workload store init honoring the config's MV-ring depth.  The
+    mv_depth keyword is only passed when a ring is requested, so legacy
+    workload objects without the parameter keep working."""
+    if cfg.mv_depth:
+        return workload.init_store(cfg.track_values, mv_depth=cfg.mv_depth)
+    return workload.init_store(cfg.track_values)
 
 
 def _kappa(cfg: EngineConfig, res: ValidationResult) -> jax.Array:
@@ -59,16 +70,24 @@ def _kappa(cfg: EngineConfig, res: ValidationResult) -> jax.Array:
         return (c.kappa_adaptive_opt
                 + res.pess_frac * (c.kappa_adaptive_pess
                                    - c.kappa_adaptive_opt))
+    if cfg.cc == t.CC_MVCC:
+        return jnp.float32(c.kappa_mvcc)
+    if cfg.cc == t.CC_MVOCC:
+        return jnp.float32(c.kappa_mvocc)
     raise ValueError(f"unknown cc {cfg.cc}")
 
 
 def _optimistic(cfg: EngineConfig) -> bool:
+    """Mechanisms paying commit-time read validation (c_validate per read).
+    MVCC is excluded: snapshot reads validate nothing (its chain-walk cost
+    sits in kappa_mvcc instead)."""
     return cfg.cc in (t.CC_OCC, t.CC_TICTOC, t.CC_SWISS, t.CC_AUTOGRAN,
-                      t.CC_ADAPTIVE)
+                      t.CC_ADAPTIVE, t.CC_MVOCC)
 
 
 def apply_values(values: jax.Array, batch: TxnBatch, commit: jax.Array,
-                 prio: jax.Array) -> jax.Array:
+                 prio: jax.Array,
+                 slot_of: Optional[jax.Array] = None) -> jax.Array:
     """Install committed writes in wave-serialization (ascending prio) order.
 
     Exactness over speed: lanes are applied sequentially in priority order and
@@ -76,6 +95,13 @@ def apply_values(values: jax.Array, batch: TxnBatch, commit: jax.Array,
     the committed transactions — this is what the serializability property
     tests check the CC mechanisms against.  Only used when track_values=True
     (correctness tests / semantic demos), never in the throughput benchmarks.
+
+    ``slot_of`` (int32[n_records] or None) is the multi-version hook: when
+    given, writes land in ``values[key, slot_of[key], col]`` — the MV ring's
+    freshly-claimed slots (core/mvstore.install_values) — instead of the flat
+    ``values[key, col]``.  One implementation defines the serial-replay
+    discipline for both stores, so the value oracle comparing them cannot be
+    broken by one side drifting.
     """
     order = jnp.argsort(prio)
     K = batch.slots
@@ -87,9 +113,14 @@ def apply_values(values: jax.Array, batch: TxnBatch, commit: jax.Array,
             kind, v = batch.op_kind[i, k], batch.op_val[i, k]
             kk = jnp.where(ok & (kind == t.WRITE) & (key >= 0), key,
                            t.OOB_KEY)
-            vals = vals.at[kk, col].set(v, mode="drop")
             ka = jnp.where(ok & (kind == t.ADD) & (key >= 0), key, t.OOB_KEY)
-            vals = vals.at[ka, col].add(v, mode="drop")
+            if slot_of is None:
+                vals = vals.at[kk, col].set(v, mode="drop")
+                vals = vals.at[ka, col].add(v, mode="drop")
+            else:
+                hn = slot_of[jnp.maximum(key, 0)]
+                vals = vals.at[kk, hn, col].set(v, mode="drop")
+                vals = vals.at[ka, hn, col].add(v, mode="drop")
         return vals, None
 
     values, _ = jax.lax.scan(lane_step, values, order)
@@ -147,24 +178,36 @@ def make_wave_step(cfg: EngineConfig, workload: Workload,
         n_ops = batch.n_ops.astype(jnp.float32)
         n_reads = (batch.is_read() & batch.live()).sum(axis=1).astype(
             jnp.float32)
+        # One definition of "read-only lane" (no live write ops) serves
+        # both the MV-OCC validation-cost exemption and the ro metrics.
+        has_write = (batch.is_write() & batch.live()).any(axis=1)
         t_exec = c.c_txn + n_ops * c.c_op * kappa
         if _optimistic(cfg):
-            t_exec = t_exec + n_reads * c.c_validate
+            val_reads = n_reads
+            if cfg.cc == t.CC_MVOCC:
+                # MV-OCC exempts read-only transactions from commit-time
+                # validation (they serialize at their snapshot — see
+                # cc/mvocc.py), so they don't pay for it either.
+                val_reads = jnp.where(has_write, n_reads, 0.0)
+            t_exec = t_exec + val_reads * c.c_validate
         # Install contention: committed writers of the same *row* serialize
         # on its cacheline (lock + version + data write): quadratic chain in
         # the number of same-row committers.  Mechanism-agnostic, and
         # granularity-independent — a row's version words share a cacheline
         # whether there are one or two of them (the paper's "fine-grained
-        # timestamps show no measurable slowdown").
+        # timestamps show no measurable slowdown").  Same-row counts route
+        # through the backend's segment_count op like every shared-state
+        # access, so the pallas wave program carries no XLA sort.
+        be = kb.resolve(cfg)
         wmask = batch.is_write() & batch.live() & commit[:, None]
-        n_w = claims.cell_counts(batch.op_key,
-                                 jnp.zeros_like(batch.op_group), 1, wmask)
+        n_w = be.segment_count(batch.op_key,
+                               jnp.zeros_like(batch.op_group), 1, wmask)
         # Concurrent readers of the line interleave their probes with the
         # writer chain, stretching each hold (the 8-socket effect that bends
         # every optimistic curve past ~96 threads in the paper's Fig 3a).
         rmask = batch.is_read() & batch.live()
-        n_r = claims.cell_counts(batch.op_key,
-                                 jnp.zeros_like(batch.op_group), 1, rmask)
+        n_r = be.segment_count(batch.op_key,
+                               jnp.zeros_like(batch.op_group), 1, rmask)
         install_pen = (0.5 * jnp.float32(c.lam_w)
                        * jnp.maximum(n_w - 1.0, 0.0)
                        * (1.0 + 0.15 * n_r)).sum(axis=1)
@@ -184,6 +227,10 @@ def make_wave_step(cfg: EngineConfig, workload: Workload,
             lane_dt = jnp.where(active, lane_dt, 0.0)
         commits_by_type = state.commits_by_type.at[batch.txn_type].add(
             committed.astype(state.commits_by_type.dtype))
+        # Read-only lanes: the MV mechanisms' headline is that these never
+        # abort.  Padding lanes are empty and therefore "read-only", but
+        # committed/aborted already mask them out.
+        ro = ~has_write
         new_state = EngineState(
             rng=rng,
             wave=wave + 1,
@@ -199,6 +246,10 @@ def make_wave_step(cfg: EngineConfig, workload: Workload,
             wasted_time=state.wasted_time
                         + jnp.where(committed, 0.0, lane_dt).sum(),
             ext_events=state.ext_events + res.ext_count,
+            ro_commits=state.ro_commits
+                       + (committed & ro).sum().astype(state.ro_commits.dtype),
+            ro_aborts=state.ro_aborts
+                      + (aborted & ro).sum().astype(state.ro_aborts.dtype),
         )
         ys = (committed.sum().astype(jnp.int32),
               aborted.sum().astype(jnp.int32))
@@ -218,6 +269,10 @@ class SimResult:
     ext_events: int
     lanes: int
     waves: int
+    ro_commits: int = 0        # read-only transaction commits/aborts: the
+    ro_aborts: int = 0         #   multi-version headline metric (snapshot
+                               #   readers never abort — DESIGN.md section 9)
+    ro_abort_rate: float = 0.0
     per_wave_commits: Optional[jax.Array] = None
     final_state: Optional[EngineState] = None
 
@@ -236,6 +291,9 @@ class SweepPoint:
     sim_time_us: float
     ext_events: int
     waves: int
+    ro_commits: int = 0
+    ro_aborts: int = 0
+    ro_abort_rate: float = 0.0
 
 
 def lane_buckets(lane_counts: Sequence[int],
@@ -283,7 +341,7 @@ def sweep(cfg: EngineConfig, workload: Workload, n_waves: int, *,
     seed)`` — padding only changes points below their bucket max (their PRNG
     stream spans the padded lane count).  Tested in tests/test_sweep.py.
     """
-    store = workload.init_store(cfg.track_values)
+    store = _init_store(workload, cfg)
     buckets = lane_buckets(lane_counts, lane_bucket_ratio)
     combos = [(cc, g) for g in grans for cc in ccs]
 
@@ -300,7 +358,7 @@ def sweep(cfg: EngineConfig, workload: Workload, n_waves: int, *,
             step = make_wave_step(ccfg, workload, active=active)
             state, _ = jax.lax.scan(step, state0, None, length=n_waves)
             return (state.commits, state.aborts, state.lane_time.sum(),
-                    state.ext_events)
+                    state.ext_events, state.ro_commits, state.ro_aborts)
         return point
 
     @jax.jit
@@ -327,14 +385,17 @@ def sweep(cfg: EngineConfig, workload: Workload, n_waves: int, *,
         for T in lane_counts:
             for sd in seeds:
                 bi, i = where[(T, sd)]
-                commits, aborts, lane_time, ext = per_bucket[bi]
+                commits, aborts, lane_time, ext, roc, roa = per_bucket[bi]
                 c, a = int(commits[i]), int(aborts[i])
+                rc, ra = int(roc[i]), int(roa[i])
                 wall = float(lane_time[i]) / T
                 points.append(SweepPoint(
                     cc=cc, granularity=g, lanes=T, seed=sd, commits=c,
                     aborts=a, abort_rate=a / max(c + a, 1),
                     throughput=c / max(wall, 1e-9), sim_time_us=wall,
-                    ext_events=int(ext[i]), waves=n_waves))
+                    ext_events=int(ext[i]), waves=n_waves,
+                    ro_commits=rc, ro_aborts=ra,
+                    ro_abort_rate=ra / max(rc + ra, 1)))
     return points
 
 
@@ -342,7 +403,7 @@ def run(cfg: EngineConfig, workload: Workload, n_waves: int,
         seed: int = 0, keep_state: bool = False) -> SimResult:
     """Run a simulation: jit(scan(wave_step)) and summarize."""
     rng = jax.random.PRNGKey(seed)
-    store = workload.init_store(cfg.track_values)
+    store = _init_store(workload, cfg)
     state0 = engine_state_init(cfg, rng, store)
     step = make_wave_step(cfg, workload)
 
@@ -353,6 +414,7 @@ def run(cfg: EngineConfig, workload: Workload, n_waves: int,
     state, (cw, aw) = go(state0)
     commits = int(state.commits)
     aborts = int(state.aborts)
+    ro_c, ro_a = int(state.ro_commits), int(state.ro_aborts)
     total_time = float(state.lane_time.sum())
     wall = total_time / cfg.lanes if cfg.lanes else 0.0
     return SimResult(
@@ -365,6 +427,9 @@ def run(cfg: EngineConfig, workload: Workload, n_waves: int,
         ext_events=int(state.ext_events),
         lanes=cfg.lanes,
         waves=n_waves,
+        ro_commits=ro_c,
+        ro_aborts=ro_a,
+        ro_abort_rate=ro_a / max(ro_c + ro_a, 1),
         per_wave_commits=cw,
         final_state=state if keep_state else None,
     )

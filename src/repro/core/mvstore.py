@@ -1,0 +1,143 @@
+"""The multi-version record store: a fixed-depth ring of versions per record.
+
+Single-version OCC (the paper's subject) aborts a reader whenever a
+concurrent writer bumps the version it read.  The strongest competing family
+in the literature — multi-versioning (Larson et al., "High-Performance
+Concurrency Control Mechanisms for Main-Memory Databases"; Dashti et al.,
+"Repairing Conflicts among MVCC Transactions") — keeps the old versions
+around instead, so readers *never block and never abort*: they read the
+newest version visible at their snapshot timestamp.  This module is the
+store-side machinery the MV mechanisms (``cc/mvcc.py``, ``cc/mvocc.py``)
+build on, letting the repro ask the paper's question in the multi-version
+world: does timestamp granularity still matter when readers never block?
+(DESIGN.md section 9.)
+
+Ring layout
+-----------
+Each record owns a fixed-depth ring of D version slots:
+
+    mv_begin uint32[n_records, D, G]  begin timestamp per slot per
+                                      granularity group
+    mv_head  int32[n_records]         index of the newest slot
+    mv_vals  f32[n_records, D, C]     version values (track_values only)
+
+A slot's *begin* timestamp is per granularity group — THIS is where the
+paper's contribution enters the multi-version world.  A committed write that
+touches only group g publishes ``begin[g] = install_ts`` in the new slot and
+*carries forward* the other groups' begin timestamps (their data did not
+change).  A fine-granularity snapshot read of group g looks for the newest
+slot whose ``begin[g]`` fits under its snapshot; a coarse read treats the
+record as one unit (``max_g begin[g]`` — one timestamp per record), so a
+group-g-only update invalidates coarse readers of *every* group: the false
+conflicts of the paper's section 3.4, reproduced at the version-chain level.
+
+Timestamps are wave-derived: a transaction in wave w reads at snapshot
+``snapshot_ts(w) = w`` (the wave's start) and committed writes install at
+``install_ts(w) = w + 1`` — visible to every later wave, never to their own
+wave's snapshots.  At most ONE new slot is installed per record per wave
+(concurrent committed writers of different groups merge into it; the
+first-committer-wins rule serializes same-cell writers), so the head cursor
+advances 0 or 1 per record per wave.
+
+Reclamation is epoch-based and free: installing into a full ring overwrites
+the oldest slot ((head + 1) mod D).  A reader whose snapshot predates every
+retained slot gets ``ok = False`` from the ``mv_gather`` op and aborts
+cleanly — it can never read a torn or recycled version, because visibility
+is decided purely from the begin timestamps it fetched.  Empty slots carry
+``MV_EMPTY`` begins and are invisible to every snapshot.
+
+All state is pure JAX arrays threaded through ``StoreState``/``EngineState``
+(sweep-compatible: vmapped grids carry the ring like every other table), and
+all shared-state access goes through the backend op surface of
+``core/backend.py``: ``mv_gather`` (snapshot version select) and
+``mv_install`` (ring-slot claim + version publish), each with jnp and Pallas
+implementations (``kernels/mv_gather.py`` / ``kernels/mv_install.py``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Plain int (not a jnp scalar): baked into Pallas kernel bodies, which may
+# not capture traced constants.
+MV_EMPTY = 0xFFFFFFFF   # begin value of a never-installed ring slot
+
+
+def snapshot_ts(wave: jax.Array) -> jax.Array:
+    """A wave-w transaction reads as of the wave's start: installs from
+    waves < w (begin <= w) are visible, this wave's (begin = w + 1) are
+    not."""
+    return wave.astype(jnp.uint32)
+
+
+def install_ts(wave: jax.Array) -> jax.Array:
+    """Begin timestamp for versions committed in wave w (monotone per wave;
+    the ``mv_install`` op's same-wave revisit detection relies on every
+    pre-existing begin being strictly smaller)."""
+    return wave.astype(jnp.uint32) + jnp.uint32(1)
+
+
+def mv_init(n_records: int, depth: int, n_groups: int,
+            n_cols: int = 0, values=None):
+    """Fresh ring tables: slot 0 holds the initial version (begin 0 in every
+    group), the other D-1 slots are empty.  Returns (begin, head, vals);
+    ``vals`` is a [1, 1, 1] placeholder unless ``n_cols > 0``."""
+    begin = jnp.full((n_records, depth, n_groups), MV_EMPTY, jnp.uint32)
+    begin = begin.at[:, 0, :].set(jnp.uint32(0))
+    head = jnp.zeros((n_records,), jnp.int32)
+    if n_cols > 0:
+        vals = jnp.zeros((n_records, depth, n_cols), jnp.float32)
+        if values is not None:
+            vals = vals.at[:, 0, :].set(values)
+    else:
+        vals = jnp.zeros((1, 1, 1), jnp.float32)
+    return begin, head, vals
+
+
+def mv_placeholder():
+    """Zero-size stand-ins for runs without an MV store (mv_depth = 0) so
+    StoreState keeps one pytree structure everywhere."""
+    return (jnp.zeros((1, 1, 1), jnp.uint32),
+            jnp.zeros((1,), jnp.int32),
+            jnp.zeros((1, 1, 1), jnp.float32))
+
+
+def install_values(vals: jax.Array, head_old: jax.Array,
+                   head_new: jax.Array, batch, commit: jax.Array,
+                   prio: jax.Array) -> jax.Array:
+    """Materialize the wave's new ring slots (track_values only).
+
+    Two steps, mirroring the begin-table install of the ``mv_install`` op:
+    first every installed slot is copied from its record's previous newest
+    slot (carry-forward of unwritten columns), then committed writes are
+    applied by ``engine.apply_values`` targeting the new slots — the ONE
+    implementation of the serial-replay discipline (ascending prio, slot
+    order within a lane), so the ring and the flat store cannot drift apart.
+    Never used by the throughput benchmarks (they run untracked)."""
+    from repro.core import engine
+    from repro.core import types as t
+
+    do = batch.is_write() & batch.live() & commit[:, None]
+    k = jnp.where(do, batch.op_key, t.OOB_KEY).reshape(-1)
+    h_old = head_old.at[k].get(mode="fill", fill_value=0)
+    h_new = head_new.at[k].get(mode="fill", fill_value=0)
+    # Copy: duplicates (several committed ops on one record) write the same
+    # source row, so the unordered scatter is deterministic.
+    old = vals.at[k, h_old, :].get(mode="fill", fill_value=0.0)
+    vals = vals.at[k, h_new, :].set(old, mode="drop")
+    return engine.apply_values(vals, batch, commit, prio, slot_of=head_new)
+
+
+def snapshot_values(vals: jax.Array, begin: jax.Array, keys: jax.Array,
+                    groups: jax.Array, cols: jax.Array, ts: jax.Array,
+                    fine: bool):
+    """Snapshot value read for tests/demos: (value f32, ok bool) per op.
+    ``ok`` is False where the snapshot's version has been reclaimed (or the
+    op is masked) — the caller must treat the value as garbage then."""
+    from repro.core.types import OOB_KEY
+    from repro.kernels import ref
+
+    slot, ok = ref.mv_gather(begin, keys, groups, ts, fine)
+    k = jnp.where(keys >= 0, keys, OOB_KEY)
+    v = vals.at[k, slot, cols].get(mode="fill", fill_value=0.0)
+    return jnp.where(ok, v, 0.0), ok

@@ -49,6 +49,11 @@ CC_2PL: int = 2
 CC_SWISS: int = 3
 CC_ADAPTIVE: int = 4
 CC_AUTOGRAN: int = 5
+CC_MVCC: int = 6     # multi-version snapshot reads + first-committer-wins
+CC_MVOCC: int = 7    # multi-version OCC: read-set validation on the chain
+
+#: Mechanisms that need the multi-version ring (EngineConfig.mv_depth >= 1).
+MV_CCS = (CC_MVCC, CC_MVOCC)
 
 CC_NAMES = {
     CC_OCC: "occ",
@@ -57,6 +62,8 @@ CC_NAMES = {
     CC_SWISS: "swisstm",
     CC_ADAPTIVE: "adaptive",
     CC_AUTOGRAN: "autogran",
+    CC_MVCC: "mvcc",
+    CC_MVOCC: "mvocc",
 }
 CC_IDS = {v: k for k, v in CC_NAMES.items()}
 
@@ -122,7 +129,8 @@ class TxnBatch:
 @partial(jax.tree_util.register_dataclass,
          data_fields=["values", "wts", "rts", "claim_w", "claim_r",
                       "pess_mode", "abort_heat", "fine_mode", "false_heat",
-                      "heat_wave", "ring_tails"],
+                      "heat_wave", "ring_tails", "mv_begin", "mv_head",
+                      "mv_vals"],
          meta_fields=[])
 @dataclasses.dataclass
 class StoreState:
@@ -150,6 +158,12 @@ class StoreState:
                            #    would be O(n_records) memory traffic; instead decay
                            #    decay**(wave - heat_wave) is applied at touch time)
     ring_tails: jax.Array  # int32[n_rings]         append-ring cursors (inserts)
+    mv_begin: jax.Array    # uint32[n_records, D, G] multi-version ring begin
+                           #   timestamps (core/mvstore.py; [1,1,1] when the
+                           #   MV store is disabled, mv_depth=0)
+    mv_head: jax.Array     # int32[n_records]       newest ring slot per record
+    mv_vals: jax.Array     # f32[n_records, D, n_cols] version values
+                           #   (track_values only; [1,1,1] otherwise)
 
     @property
     def n_records(self) -> int:
@@ -159,11 +173,18 @@ class StoreState:
     def n_groups(self) -> int:
         return self.wts.shape[1]
 
+    @property
+    def mv_depth(self) -> int:
+        """Ring depth D of the multi-version store (1 when disabled —
+        the placeholder's single slot)."""
+        return self.mv_begin.shape[1]
+
 
 @partial(jax.tree_util.register_dataclass,
          data_fields=["rng", "wave", "store", "pending", "pending_live",
                       "age", "lane_time", "commits", "aborts",
-                      "commits_by_type", "wasted_time", "ext_events"],
+                      "commits_by_type", "wasted_time", "ext_events",
+                      "ro_commits", "ro_aborts"],
          meta_fields=[])
 @dataclasses.dataclass
 class EngineState:
@@ -180,6 +201,10 @@ class EngineState:
     commits_by_type: jax.Array  # int64[n_txn_types]
     wasted_time: jax.Array  # f32 scalar, simulated time lost to aborts
     ext_events: jax.Array   # int64 scalar, TicToc rts-extension CAS events
+    ro_commits: jax.Array   # int scalar: commits of read-only transactions
+    ro_aborts: jax.Array    # int scalar: aborts of read-only transactions
+                            #   (the MV headline metric: snapshot readers
+                            #   never abort — DESIGN.md section 9)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -202,6 +227,13 @@ class CostModel:
     kappa_swiss: float = 1.18   # eager w-locks + CM table updates
     kappa_adaptive_opt: float = 1.12   # mode check on the optimistic path
     kappa_adaptive_pess: float = 1.42  # rw-lock path
+    kappa_mvcc: float = 1.30    # multi-version overhead: version-chain
+                                # traversal on every read, allocate+publish
+                                # on every write, GC bookkeeping (Larson et
+                                # al.'s measured penalty vs single-version)
+    kappa_mvocc: float = 1.24   # same chain costs minus the SI visibility
+                                # check writes (read validation is charged
+                                # through c_validate like the OCC family)
     c_ext: float = 0.04        # uncontended rts-extension CAS (+fence); the
                                 # 128-bit two-word variant the paper runs
     lam_ext: float = 1.35       # TicToc rts-extension contention: extra cost per
@@ -242,6 +274,13 @@ class EngineConfig:
                                 # (core/backend.py validate/probe/ts_gather).
     n_rings: int = 1
     track_values: bool = False
+    mv_depth: int = 0           # D: version-ring depth of the multi-version
+                                # store (core/mvstore.py).  0 disables the MV
+                                # tables entirely (placeholder arrays); the
+                                # MV mechanisms (mvcc/mvocc) require >= 1 and
+                                # benchmarks default to 4.  Depth bounds how
+                                # far behind a snapshot may trail before its
+                                # version is reclaimed and the reader aborts.
     cost: CostModel = dataclasses.field(default_factory=CostModel)
     # Adaptive CC state machine:
     adapt_up: float = 0.20      # abort-heat threshold -> pessimistic
@@ -262,6 +301,12 @@ class EngineConfig:
         if self.backend not in ("jnp", "pallas"):
             raise ValueError(f"unknown backend {self.backend!r} "
                              "(expected 'jnp' or 'pallas')")
+        if self.mv_depth < 0:
+            raise ValueError(f"mv_depth must be >= 0, got {self.mv_depth}")
+        if self.cc in MV_CCS and self.mv_depth < 1:
+            raise ValueError(
+                f"{CC_NAMES[self.cc]} needs the multi-version store: "
+                "set EngineConfig.mv_depth >= 1 (benchmarks use 4)")
 
 
 def txn_batch_zeros(lanes: int, slots: int) -> TxnBatch:
@@ -277,10 +322,17 @@ def txn_batch_zeros(lanes: int, slots: int) -> TxnBatch:
 
 def store_init(n_records: int, n_groups: int, n_cols: int,
                n_rings: int = 1, values: Optional[jax.Array] = None,
-               need_rts: bool = True) -> StoreState:
+               need_rts: bool = True, mv_depth: int = 0) -> StoreState:
+    from repro.core import mvstore
     G = n_groups
     if values is None:
         values = jnp.zeros((n_records, max(n_cols, 1)), jnp.float32)
+    if mv_depth > 0:
+        mv_begin, mv_head, mv_vals = mvstore.mv_init(
+            n_records, mv_depth, G, n_cols,
+            values if n_cols > 0 else None)
+    else:
+        mv_begin, mv_head, mv_vals = mvstore.mv_placeholder()
     return StoreState(
         values=values,
         wts=jnp.zeros((n_records, G), jnp.uint32),
@@ -294,6 +346,9 @@ def store_init(n_records: int, n_groups: int, n_cols: int,
         false_heat=jnp.zeros((n_records,), jnp.float32),
         heat_wave=jnp.zeros((n_records,), jnp.int32),
         ring_tails=jnp.zeros((n_rings,), jnp.int32),
+        mv_begin=mv_begin,
+        mv_head=mv_head,
+        mv_vals=mv_vals,
     )
 
 
@@ -314,4 +369,6 @@ def engine_state_init(cfg: EngineConfig, rng: jax.Array,
                                   jnp.int64 if jax.config.jax_enable_x64 else jnp.int32),
         wasted_time=jnp.float32(0),
         ext_events=jnp.int32(0),
+        ro_commits=jnp.int64(0) if jax.config.jax_enable_x64 else jnp.int32(0),
+        ro_aborts=jnp.int64(0) if jax.config.jax_enable_x64 else jnp.int32(0),
     )

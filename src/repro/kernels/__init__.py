@@ -15,6 +15,12 @@ DESIGN.md section 5):
   ts_gather       TicToc (wts, rts) row gather; coarse = row max
   ts_install      monotone scatter-max timestamp install (whole-row option)
   claim_scatter   fused pack+scatter-min of claim words
+  segment_count   same-cell op counts in a wave (all-pairs compare — TicToc
+                  extension chains without the XLA sort)
+  mv_gather       multi-version snapshot select: one DMA fetches a record's
+                  whole begin ring, the VPU scans all D slots at once
+  mv_install      ring-slot claim + version publish: aliased-output RMW over
+                  the begin ring AND head cursor (DESIGN.md section 9)
   flash_attention blocked causal attention (GQA, optional sliding window)
   rglru_scan      RG-LRU linear recurrence (recurrentgemma)
   rwkv6_scan      RWKV-6 wkv state recurrence (data-dependent decay)

@@ -1,0 +1,83 @@
+"""Snapshot version-select kernel (the MV store's read path).
+
+A multi-version read walks the record's version chain for the newest version
+visible at its snapshot timestamp.  On the paper's CPU platform that is a
+pointer chase per read; here the chain is a fixed-depth ring
+(core/mvstore.py), so the TPU-native formulation is the same scalar-prefetch
+DMA as the claim-table gathers (kernels/occ_validate.py): op keys are
+prefetched into SMEM, each grid step DMAs one record's whole begin-timestamp
+ring [D, G] HBM->VMEM, and the VPU does the visibility scan — all D slots
+compared at once instead of a serial chain walk.
+
+Granularity is the visibility width (DESIGN.md section 9): fine checks the
+op's own group's begin timestamp per slot, coarse reduces each slot over the
+whole row (one timestamp per record: max over groups, so a group-1-only
+update hides the slot from coarse group-0 readers — the false-conflict
+structure of the paper's section 3.4 at the version-chain level).  Empty
+slots carry MV_EMPTY begins and are never visible.  When NO retained slot is
+visible the snapshot has been reclaimed by the ring's epoch advance: ok is
+False and the caller aborts the reader — it can never read a recycled slot.
+
+Masked ops (key < 0) clamp their DMA to row 0 and are forced to
+(slot 0, ok False), matching the jnp gather's fill path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(fine: bool, D: int, G: int, keys_ref, ts_ref, grp_ref, row_ref,
+            slot_ref, ok_ref):
+    row = row_ref[0]                                      # uint32[D, G]
+    ts = ts_ref[0]
+    if fine:
+        g = grp_ref[0, 0]
+        sel = jnp.arange(G, dtype=jnp.int32)[None, :] == g
+        eff = jnp.where(sel, row, jnp.uint32(0)).max(axis=1)
+    else:
+        eff = row.max(axis=1)                             # uint32[D]
+    score = jnp.where(eff <= ts, eff + jnp.uint32(1), jnp.uint32(0))
+    best = score.max()
+    slot = jnp.where(score == best, jnp.arange(D, dtype=jnp.int32), D).min()
+    t, k = pl.program_id(0), pl.program_id(1)
+    live = keys_ref[t, k] >= 0
+    slot_ref[0, 0] = jnp.where(live, slot, 0)
+    ok_ref[0, 0] = live & (best > 0)
+
+
+def mv_gather_pallas(begin: jax.Array, keys: jax.Array, groups: jax.Array,
+                     ts: jax.Array, fine: bool,
+                     interpret: bool = False
+                     ) -> tuple[jax.Array, jax.Array]:
+    """(slot int32[T, K], ok bool[T, K]) — see ref.mv_gather."""
+    T, K = keys.shape
+    D, G = begin.shape[1], begin.shape[2]
+    tsa = jnp.reshape(ts.astype(jnp.uint32), (1,))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # keys, ts drive the index_maps
+        grid=(T, K),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda t, k, keys, ts: (t, k)),   # groups
+            # One record's whole begin ring per op, DMA'd by prefetched key.
+            pl.BlockSpec((1, D, G),
+                         lambda t, k, keys, ts: (jnp.maximum(keys[t, k], 0),
+                                                 0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, 1), lambda t, k, keys, ts: (t, k)),
+            pl.BlockSpec((1, 1), lambda t, k, keys, ts: (t, k)),
+        ),
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, fine, D, G),
+        grid_spec=grid_spec,
+        out_shape=(jax.ShapeDtypeStruct((T, K), jnp.int32),
+                   jax.ShapeDtypeStruct((T, K), jnp.bool_)),
+        interpret=interpret,
+    )(keys, tsa, groups, begin)

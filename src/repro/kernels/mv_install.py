@@ -1,0 +1,102 @@
+"""Ring-slot claim + version-publish kernel (the MV store's commit path).
+
+Extends the aliased-output sequential-scatter pattern of occ_commit.py to a
+read-modify-write with *two* aliased tables: the begin-timestamp ring
+[N, D, G] and the head cursor [N, 1] are both input and output
+(input_output_aliases), the sequential TPU grid walks the wave's committed
+write ops, and each step DMAs its record's whole ring + cursor, edits them
+in VMEM, and writes both back.
+
+Unlike the min/+1/max scatters, a version install is NOT a per-cell
+commutative combine — a record must claim exactly ONE new slot per wave no
+matter how many committed ops hit it (concurrent group writers and
+duplicate in-transaction writes merge into that slot).  The sequential grid
+makes this well-defined: the FIRST op to visit a record advances the head,
+copies the old newest slot's begin row into the new slot (carry-forward of
+unwritten groups) and stamps its group; LATER visits detect the same-wave
+install — some begin in the row already equals this wave's install
+timestamp, which no earlier wave can have written because install
+timestamps advance monotonically (core/mvstore.install_ts) — and only stamp
+their group.  Under that monotonicity precondition the result is
+order-independent across a wave, and bit-identical to the jnp oracle
+(ref.mv_install), which resolves every op against the pre-wave head instead.
+
+Masked ops clamp their DMA to row 0 and write the ring and cursor back
+unchanged.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(D: int, G: int, keys_ref, ts_ref, grp_ref, do_ref, b_in, h_in,
+            b_out, h_out):
+    # Accumulate through the *output* refs (see occ_commit.py): the aliased
+    # buffers hold the current tables and sequential grid steps revisiting a
+    # record read back their predecessors' install.
+    del b_in, h_in
+    ts = ts_ref[0]
+    do = do_ref[0, 0]
+    row = b_out[0]                                        # uint32[D, G]
+    h = h_out[0, 0]
+    already = (row == ts).any()      # same-wave slot already claimed
+    adv = do & ~already
+    h_eff = jnp.where(adv, (h + 1) % D, h)
+    dsel = jnp.arange(D, dtype=jnp.int32)[:, None] == h_eff
+    old_row = jnp.where(jnp.arange(D, dtype=jnp.int32)[:, None] == h, row,
+                        jnp.uint32(0)).max(axis=0)        # uint32[G]
+    copied = jnp.where(dsel & adv, old_row[None, :], row)
+    gsel = (jnp.arange(G, dtype=jnp.int32)[None, :] == grp_ref[0, 0]) \
+        & dsel & do
+    b_out[0] = jnp.where(gsel, ts, copied)
+    h_out[0, 0] = jnp.where(do, h_eff, h)
+
+
+def mv_install_pallas(begin: jax.Array, head: jax.Array, keys: jax.Array,
+                      groups: jax.Array, do: jax.Array, ts: jax.Array,
+                      interpret: bool = False
+                      ) -> tuple[jax.Array, jax.Array]:
+    """(begin', head') with one new ring slot per masked record — see
+    ref.mv_install (incl. the begin < ts monotonicity precondition)."""
+    T, K = keys.shape
+    D, G = begin.shape[1], begin.shape[2]
+    tsa = jnp.reshape(ts.astype(jnp.uint32), (1,))
+    head2 = head.reshape(-1, 1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # keys, ts
+        grid=(T, K),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda t, k, keys, ts: (t, k)),   # groups
+            pl.BlockSpec((1, 1), lambda t, k, keys, ts: (t, k)),   # do
+            pl.BlockSpec((1, D, G),
+                         lambda t, k, keys, ts: (jnp.maximum(keys[t, k], 0),
+                                                 0, 0)),
+            pl.BlockSpec((1, 1),
+                         lambda t, k, keys, ts: (jnp.maximum(keys[t, k], 0),
+                                                 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, D, G),
+                         lambda t, k, keys, ts: (jnp.maximum(keys[t, k], 0),
+                                                 0, 0)),
+            pl.BlockSpec((1, 1),
+                         lambda t, k, keys, ts: (jnp.maximum(keys[t, k], 0),
+                                                 0)),
+        ),
+    )
+    begin2, head3 = pl.pallas_call(
+        functools.partial(_kernel, D, G),
+        grid_spec=grid_spec,
+        out_shape=(jax.ShapeDtypeStruct(begin.shape, begin.dtype),
+                   jax.ShapeDtypeStruct(head2.shape, head2.dtype)),
+        # begin is operand 4 and head operand 5, counting the two prefetches.
+        input_output_aliases={4: 0, 5: 1},
+        interpret=interpret,
+    )(keys, tsa, groups, do & (keys >= 0), begin, head2)
+    return begin2, head3.reshape(-1)

@@ -25,11 +25,14 @@ from repro.kernels import ref
 from repro.kernels.claim_scatter import claim_scatter_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.occ_commit import occ_commit_pallas
+from repro.kernels.mv_gather import mv_gather_pallas
+from repro.kernels.mv_install import mv_install_pallas
 from repro.kernels.occ_validate import (claim_probe_pallas,
                                         occ_validate_dual_pallas,
                                         occ_validate_pallas)
 from repro.kernels.rglru_scan import rglru_pallas
 from repro.kernels.rwkv6_scan import rwkv6_pallas
+from repro.kernels.segment_count import segment_count_pallas
 from repro.kernels.ts_gather import ts_gather_pallas
 from repro.kernels.ts_install import ts_install_max_pallas
 
@@ -119,6 +122,28 @@ def claim_scatter(table, keys, groups, prio, do, wave, use_pallas=None):
         return claim_scatter_pallas(table, keys, groups, prio, do,
                                     _inv_wave(wave), interpret=_interp())
     return ref.claim_scatter(table, keys, groups, prio, do, wave)
+
+
+def segment_count(keys, groups, G: int, mask, use_pallas=None):
+    if _use_pallas(use_pallas):
+        return segment_count_pallas(keys, groups, G, mask,
+                                    interpret=_interp())
+    return ref.segment_count(keys, groups, G, mask)
+
+
+# ------------------------------------------------------- multi-version store
+def mv_gather(begin, keys, groups, ts, fine: bool, use_pallas=None):
+    if _use_pallas(use_pallas):
+        return mv_gather_pallas(begin, keys, groups, ts, fine,
+                                interpret=_interp())
+    return ref.mv_gather(begin, keys, groups, ts, fine)
+
+
+def mv_install(begin, head, keys, groups, do, ts, use_pallas=None):
+    if _use_pallas(use_pallas):
+        return mv_install_pallas(begin, head, keys, groups, do, ts,
+                                 interpret=_interp())
+    return ref.mv_install(begin, head, keys, groups, do, ts)
 
 
 # ------------------------------------------------------- flash attention

@@ -5,6 +5,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.claimword import EMPTY_WORD, NO_PRIO, claim_word, live_prio
+from repro.core.mvstore import MV_EMPTY
 from repro.core.types import OOB_KEY  # negative indices wrap, OOB drops
 
 
@@ -90,6 +91,80 @@ def claim_scatter(table: jax.Array, keys: jax.Array, groups: jax.Array,
     k = jnp.where(do & (keys >= 0), keys, OOB_KEY)
     return table.at[k.reshape(-1), groups.reshape(-1)].min(
         words.reshape(-1), mode="drop")
+
+
+def segment_count(keys: jax.Array, groups: jax.Array, G: int,
+                  mask: jax.Array) -> jax.Array:
+    """#masked ops in the wave hitting the same (record, group) cell, per op
+    (0 where masked) — the same-cell contention counts of TicToc's extension
+    pass.  Delegates to the engine's sort-based counter so exactly one
+    implementation defines the semantics both backends must match."""
+    from repro.core.claims import cell_counts
+    return cell_counts(keys, groups, G, mask)
+
+
+# ------------------------------------------------------- multi-version store
+def mv_gather(begin: jax.Array, keys: jax.Array, groups: jax.Array,
+              ts: jax.Array, fine: bool) -> tuple[jax.Array, jax.Array]:
+    """Snapshot version select on the MV ring (core/mvstore.py layout).
+
+    begin: uint32[N, D, G] per-slot per-group begin timestamps.  Returns
+    (slot int32, ok bool) per op: the newest ring slot visible at snapshot
+    ``ts`` — fine visibility checks the op's own group's begin, coarse
+    treats the record as one unit (max over groups, one timestamp per
+    record).  ``ok`` is False when every retained slot postdates the
+    snapshot (version reclaimed — the reader must abort, never read
+    garbage) or the op is masked.
+    """
+    D, G = begin.shape[1], begin.shape[2]
+    k = jnp.where(keys >= 0, keys, OOB_KEY)
+    rows = begin.at[k, :, :].get(mode="fill",
+                                 fill_value=MV_EMPTY)     # [T, K, D, G]
+    if fine:
+        sel = jnp.arange(G, dtype=jnp.int32) == groups[..., None, None]
+        eff = jnp.where(sel, rows, jnp.uint32(0)).max(axis=-1)
+    else:
+        eff = rows.max(axis=-1)                           # [T, K, D]
+    # score = eff + 1 where visible, 0 where not: empty slots (MV_EMPTY) and
+    # future versions drop out, argmax-by-min-index picks the newest.
+    score = jnp.where(eff <= ts.astype(jnp.uint32), eff + jnp.uint32(1),
+                      jnp.uint32(0))
+    best = score.max(axis=-1)
+    slot = jnp.where(score == best[..., None],
+                     jnp.arange(D, dtype=jnp.int32), D).min(axis=-1)
+    return slot.astype(jnp.int32), best > 0
+
+
+def mv_install(begin: jax.Array, head: jax.Array, keys: jax.Array,
+               groups: jax.Array, do: jax.Array, ts: jax.Array
+               ) -> tuple[jax.Array, jax.Array]:
+    """Ring-slot claim + version publish on the MV ring.
+
+    Per record with >= 1 masked op: advance head to the next ring slot
+    (reclaiming its previous occupant), copy the old newest slot's begin row
+    into it (carry-forward of unwritten groups), then publish ``begin[g] =
+    ts`` for every masked op's group.  At most one slot is claimed per
+    record per wave — concurrent committers of different groups merge.
+
+    Precondition (the engine invariant both backends rely on): every
+    pre-existing begin value is < ``ts`` — install timestamps advance
+    per wave (core/mvstore.install_ts), which is what lets the Pallas
+    kernel detect same-wave revisits from the row alone.
+    """
+    D = begin.shape[1]
+    k = jnp.where(do & (keys >= 0), keys, OOB_KEY).reshape(-1)
+    g = groups.reshape(-1)
+    h_old = head.at[k].get(mode="fill", fill_value=0)
+    h_new = (h_old + 1) % D
+    # Carry-forward copy: duplicates write the same source row (head moves
+    # once per record per wave), so the unordered scatter is deterministic.
+    old_rows = begin.at[k, h_old, :].get(mode="fill", fill_value=0)
+    begin = begin.at[k, h_new, :].set(old_rows, mode="drop")
+    # Publish: every masked op stamps ts into its group of the new slot
+    # (duplicates write the identical value).
+    begin = begin.at[k, h_new, g].set(ts.astype(jnp.uint32), mode="drop")
+    head = head.at[k].set(h_new, mode="drop")
+    return begin, head
 
 
 # ------------------------------------------------------------ flash attention

@@ -1,0 +1,53 @@
+"""Same-cell segment-count kernel (TicToc's extension-pass contention).
+
+TicToc's cost model needs, per op, how many ops of the SAME WAVE hit the
+same (record, group) cell — the rts-extension CAS chain length and the
+commit-ts install chain (cc/tictoc.py).  The jnp path counts segments with
+an XLA sort + two searchsorted passes; this kernel closes that last XLA hop
+on the pallas TicToc path (ROADMAP item) with a direct all-pairs compare:
+the wave's op set is tiny ([T, K] int32s fit in VMEM whole), so each grid
+step loads one lane's ops plus the full wave and the VPU reduces the
+[T*K, K] equality matrix — no sort, no O(n_records) table, and the count is
+an order-free sum, bit-identical to the sorted formulation.
+
+Masked ops take a sentinel cell id and masked columns are zeroed, matching
+ref.segment_count exactly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(G: int, keys_ref, grp_ref, msk_ref, mykeys_ref, mygrp_ref,
+            mymsk_ref, out_ref):
+    sent = jnp.int32(0x7FFFFFFF)
+    all_cell = jnp.where(msk_ref[...], keys_ref[...] * G + grp_ref[...],
+                         sent).reshape(-1)                # int32[T*K]
+    my_cell = jnp.where(mymsk_ref[0, :], mykeys_ref[0, :] * G
+                        + mygrp_ref[0, :], sent)          # int32[K]
+    eq = (all_cell[:, None] == my_cell[None, :]) & msk_ref[...].reshape(-1)[
+        :, None]                                          # [T*K, K]
+    cnt = eq.sum(axis=0)
+    out_ref[0, :] = jnp.where(mymsk_ref[0, :], cnt.astype(jnp.float32), 0.0)
+
+
+def segment_count_pallas(keys: jax.Array, groups: jax.Array, G: int,
+                         mask: jax.Array,
+                         interpret: bool = False) -> jax.Array:
+    """float32[T, K] same-cell op counts — see ref.segment_count."""
+    T, K = keys.shape
+    full = pl.BlockSpec((T, K), lambda t: (0, 0))
+    mine = pl.BlockSpec((1, K), lambda t: (t, 0))
+    return pl.pallas_call(
+        functools.partial(_kernel, G),
+        grid=(T,),
+        in_specs=[full, full, full, mine, mine, mine],
+        out_specs=pl.BlockSpec((1, K), lambda t: (t, 0)),
+        out_shape=jax.ShapeDtypeStruct((T, K), jnp.float32),
+        interpret=interpret,
+    )(keys, groups, mask, keys, groups, mask)

@@ -18,11 +18,13 @@ import time
 
 
 def _make_workload(workload: str, *, scale: float = 1.0,
-                   n_keys: int = 1_000_000):
+                   n_keys: int = 1_000_000, write_frac: float = 0.5,
+                   ro_frac: float = 0.0, theta: float = 0.9):
     from repro.workloads import TPCCWorkload, YCSBWorkload
     if workload == "tpcc":
         return TPCCWorkload.make(n_warehouses=8, scale=scale)
-    return YCSBWorkload.make(n_keys=n_keys)
+    return YCSBWorkload.make(n_keys=n_keys, write_frac=write_frac,
+                             ro_frac=ro_frac, theta=theta)
 
 
 def _row(workload: str, cc_name: str, p, wall_s: float,
@@ -34,6 +36,8 @@ def _row(workload: str, cc_name: str, p, wall_s: float,
         "lanes": p.lanes, "waves": p.waves,
         "commits": p.commits, "aborts": p.aborts,
         "abort_rate": round(p.abort_rate, 4),
+        "ro_commits": p.ro_commits, "ro_aborts": p.ro_aborts,
+        "ro_abort_rate": round(p.ro_abort_rate, 4),
         "throughput": round(p.throughput, 4),
         "ext_events": p.ext_events,
         "wall_s": round(wall_s, 2),
@@ -47,20 +51,27 @@ def _row(workload: str, cc_name: str, p, wall_s: float,
 
 def run_grid(workload: str, ccs: list, grans, lanes: list, waves: int, *,
              scale: float = 1.0, n_keys: int = 1_000_000, seed: int = 0,
-             backend: str = "jnp") -> list:
+             backend: str = "jnp", mv_depth: int = 4,
+             write_frac: float = 0.5, ro_frac: float = 0.0,
+             theta: float = 0.9) -> list:
     """Run the whole benchmark grid in one jitted sweep; returns row dicts.
 
     ``wall_s`` in each row is the grid's wall time amortized over its rows
     (the grid runs as one XLA program, so per-point timing does not exist).
+    The multi-version ring (``mv_depth``) is only allocated when the grid
+    contains an MV mechanism.
     """
     from repro.core import types as t
     from repro.core.engine import sweep
 
-    wl = _make_workload(workload, scale=scale, n_keys=n_keys)
+    wl = _make_workload(workload, scale=scale, n_keys=n_keys,
+                        write_frac=write_frac, ro_frac=ro_frac, theta=theta)
+    need_mv = any(t.CC_IDS[c] in t.MV_CCS for c in ccs)
     cfg = t.EngineConfig(
         cc=t.CC_OCC, lanes=max(lanes), slots=wl.slots,
         n_records=wl.n_records, n_groups=wl.n_groups, n_cols=wl.n_cols,
-        n_txn_types=wl.n_txn_types, n_rings=wl.n_rings, backend=backend)
+        n_txn_types=wl.n_txn_types, n_rings=wl.n_rings, backend=backend,
+        mv_depth=mv_depth if need_mv else 0)
     t0 = time.time()
     points = sweep(cfg, wl, waves, ccs=[t.CC_IDS[c] for c in ccs],
                    grans=tuple(grans), lane_counts=tuple(lanes),
@@ -72,7 +83,7 @@ def run_grid(workload: str, ccs: list, grans, lanes: list, waves: int, *,
 
 def run_one(workload: str, cc_name: str, gran: int, lanes: int, waves: int,
             *, scale: float = 1.0, n_keys: int = 1_000_000, seed: int = 0,
-            backend: str = "jnp"):
+            backend: str = "jnp", mv_depth: int = 4):
     """Single grid point (one compiled run; prefer run_grid for grids)."""
     from repro.core import types as t
     from repro.core.engine import run
@@ -82,7 +93,8 @@ def run_one(workload: str, cc_name: str, gran: int, lanes: int, waves: int,
         cc=t.CC_IDS[cc_name], lanes=lanes, slots=wl.slots,
         n_records=wl.n_records, n_groups=wl.n_groups, n_cols=wl.n_cols,
         n_txn_types=wl.n_txn_types, granularity=gran, n_rings=wl.n_rings,
-        backend=backend)
+        backend=backend,
+        mv_depth=mv_depth if t.CC_IDS[cc_name] in t.MV_CCS else 0)
     from repro.core.backend import kernel_coverage
     t0 = time.time()
     res = run(cfg, wl, n_waves=waves, seed=seed)
@@ -92,6 +104,8 @@ def run_one(workload: str, cc_name: str, gran: int, lanes: int, waves: int,
         "lanes": lanes, "waves": waves,
         "commits": res.commits, "aborts": res.aborts,
         "abort_rate": round(res.abort_rate, 4),
+        "ro_commits": res.ro_commits, "ro_aborts": res.ro_aborts,
+        "ro_abort_rate": round(res.ro_abort_rate, 4),
         "throughput": round(res.throughput, 4),
         "ext_events": res.ext_events,
         "wall_s": round(wall, 2),
@@ -104,7 +118,8 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--workload", choices=("tpcc", "ycsb"), default="tpcc")
     ap.add_argument("--cc", nargs="+",
-                    default=["occ", "tictoc", "2pl", "swisstm", "adaptive"])
+                    default=["occ", "tictoc", "2pl", "swisstm", "adaptive",
+                             "mvcc", "mvocc"])
     ap.add_argument("--granularity", choices=("coarse", "fine", "both"),
                     default="both")
     ap.add_argument("--lanes", type=int, nargs="+", default=[16, 64, 128])
@@ -115,13 +130,33 @@ def main(argv=None):
     ap.add_argument("--backend", choices=("jnp", "pallas"), default="jnp",
                     help="probe/commit substrate (pallas = TPU kernels, "
                          "interpret mode on CPU)")
+    ap.add_argument("--mv-depth", type=int, default=4,
+                    help="version-ring depth for mvcc/mvocc grids "
+                         "(core/mvstore.py; ignored without an MV cc)")
+    # None sentinels so the tpcc guard below detects flag *presence*, not
+    # just non-default values.
+    ap.add_argument("--write-frac", type=float, default=None,
+                    help="YCSB per-op write probability (default 0.5)")
+    ap.add_argument("--ro-frac", type=float, default=None,
+                    help="YCSB fraction of read-only transactions "
+                         "(default 0)")
+    ap.add_argument("--theta", type=float, default=None,
+                    help="YCSB Zipf skew (default 0.9)")
     ap.add_argument("--json", default=None)
     args = ap.parse_args(argv)
 
+    ycsb_flags = (args.write_frac, args.ro_frac, args.theta)
+    if args.workload == "tpcc" and any(v is not None for v in ycsb_flags):
+        ap.error("--write-frac/--ro-frac/--theta shape the ycsb workload "
+                 "only; TPC-C's mix is fixed by the standard")
     grans = {"coarse": (0,), "fine": (1,), "both": (0, 1)}[args.granularity]
     rows = run_grid(args.workload, args.cc, grans, args.lanes, args.waves,
                     scale=args.scale, n_keys=args.n_keys, seed=args.seed,
-                    backend=args.backend)
+                    backend=args.backend, mv_depth=args.mv_depth,
+                    write_frac=(0.5 if args.write_frac is None
+                                else args.write_frac),
+                    ro_frac=0.0 if args.ro_frac is None else args.ro_frac,
+                    theta=0.9 if args.theta is None else args.theta)
     for r in rows:
         print(f"{r['workload']} {r['cc']:9s} "
               f"{'fine' if r['granularity'] else 'coarse'} "

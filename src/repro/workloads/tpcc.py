@@ -116,10 +116,11 @@ class TPCCWorkload:
     @property
     def slots(self) -> int: return SLOTS
 
-    def init_store(self, track_values: bool = False) -> StoreState:
+    def init_store(self, track_values: bool = False,
+                   mv_depth: int = 0) -> StoreState:
         return store_init(self.n_records, self.n_groups,
                           self.n_cols if track_values else 0,
-                          n_rings=self.n_rings)
+                          n_rings=self.n_rings, mv_depth=mv_depth)
 
     # ---- key helpers ----
     def d_key(self, w, d): return self.d_base + w * self.n_districts + d

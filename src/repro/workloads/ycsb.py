@@ -8,6 +8,13 @@
 
 Writes are blind single-column overwrites (no read-modify-write), matching the
 YCSB "update one field" semantics.
+
+``ro_frac`` mixes in read-only scan transactions (txn_type 1: every op a
+READ) — the YCSB-B/C-style client class the multi-version mechanisms
+protect: under mvcc/mvocc these lanes read their snapshot and never abort,
+while single-version OCC aborts them on any conflicting concurrent write
+(benchmarks/abort_rates.py).  ``ro_frac=0`` (the default) draws the exact
+PRNG stream this workload always had.
 """
 from __future__ import annotations
 
@@ -27,6 +34,7 @@ class YCSBWorkload:
     n_cols_schema: int = 10        # YCSB schema: 10 columns
     ops_per_txn: int = 16
     write_frac: float = 0.5
+    ro_frac: float = 0.0           # fraction of read-only transactions
     theta: float = 0.9
     zipf: ZipfSampler = None  # type: ignore[assignment]
 
@@ -35,11 +43,21 @@ class YCSBWorkload:
     n_rings: int = 1
     n_txn_types: int = 1
 
+    def __post_init__(self):
+        # The read-only class is its own txn_type; derive the count here so
+        # direct dataclass construction can't desync it from gen()'s output
+        # (a txn_type beyond n_txn_types would silently corrupt the
+        # engine's commits_by_type scatter).
+        if self.ro_frac > 0 and self.n_txn_types < 2:
+            object.__setattr__(self, "n_txn_types", 2)
+
     @staticmethod
     def make(n_keys: int = 10_000_000, theta: float = 0.9,
-             ops_per_txn: int = 16, write_frac: float = 0.5) -> "YCSBWorkload":
+             ops_per_txn: int = 16, write_frac: float = 0.5,
+             ro_frac: float = 0.0) -> "YCSBWorkload":
         return YCSBWorkload(n_keys=n_keys, theta=theta,
                             ops_per_txn=ops_per_txn, write_frac=write_frac,
+                            ro_frac=ro_frac,
                             zipf=ZipfSampler.make(n_keys, theta))
 
     @property
@@ -54,25 +72,34 @@ class YCSBWorkload:
     def slots(self) -> int:
         return self.ops_per_txn
 
-    def init_store(self, track_values: bool = False) -> StoreState:
+    def init_store(self, track_values: bool = False,
+                   mv_depth: int = 0) -> StoreState:
         return store_init(self.n_records, self.n_groups,
                           self.n_cols if track_values else 0,
-                          n_rings=self.n_rings)
+                          n_rings=self.n_rings, mv_depth=mv_depth)
 
     def gen(self, rng: jax.Array, wave: jax.Array, lanes: int,
             ring_tails: jax.Array):
         K = self.ops_per_txn
-        rk, rc, rw, rv = jax.random.split(rng, 4)
+        if self.ro_frac > 0:
+            # Extra split only when the read-only class exists, so the
+            # default workload draws its historical PRNG stream unchanged.
+            rk, rc, rw, rv, rro = jax.random.split(rng, 5)
+            is_ro = jax.random.uniform(rro, (lanes,)) < self.ro_frac
+        else:
+            rk, rc, rw, rv = jax.random.split(rng, 4)
+            is_ro = jnp.zeros((lanes,), jnp.bool_)
         keys = self.zipf.sample(rk, (lanes, K))
         cols = jax.random.randint(rc, (lanes, K), 0, self.n_cols_schema)
         is_w = jax.random.uniform(rw, (lanes, K)) < self.write_frac
+        is_w = is_w & ~is_ro[:, None]
         batch = TxnBatch(
             op_key=keys,
             op_group=(cols % 2).astype(jnp.int32),  # the paper's parity split
             op_col=cols.astype(jnp.int32),
             op_kind=jnp.where(is_w, t.WRITE, t.READ).astype(jnp.int32),
             op_val=jax.random.uniform(rv, (lanes, K)),
-            txn_type=jnp.zeros((lanes,), jnp.int32),
+            txn_type=is_ro.astype(jnp.int32),
             n_ops=jnp.full((lanes,), K, jnp.int32),
         )
         return batch, ring_tails

@@ -11,7 +11,7 @@ import pytest
 
 from repro.core import claims
 from repro.core import types as t
-from repro.core.cc import autogran, occ, tictoc
+from repro.core.cc import autogran, mvcc, mvocc, occ, tictoc
 from repro.core.engine import run, sweep
 from repro.core.types import EngineConfig, TxnBatch, store_init
 from repro.kernels import ref
@@ -40,22 +40,26 @@ def _random_batch(T, K, N, G):
 def _cfg(cc, T, K, N, gran, backend):
     return EngineConfig(cc=cc, lanes=T, slots=K, n_records=N, n_groups=2,
                         n_cols=0, n_txn_types=1, granularity=gran,
-                        backend=backend)
+                        backend=backend,
+                        mv_depth=3 if cc in t.MV_CCS else 0)
 
 
 # -------------------------------------------------- single-wave validation
 @pytest.mark.parametrize("cc_mod,cc_id", [(occ, t.CC_OCC),
                                           (tictoc, t.CC_TICTOC),
-                                          (autogran, t.CC_AUTOGRAN)])
+                                          (autogran, t.CC_AUTOGRAN),
+                                          (mvcc, t.CC_MVCC),
+                                          (mvocc, t.CC_MVOCC)])
 @pytest.mark.parametrize("gran", [0, 1])
 def test_wave_validate_backend_parity(cc_mod, cc_id, gran):
     T, K, N = 6, 4, 32
+    mvd = 3 if cc_id in t.MV_CCS else 0
     for trial in range(3):
         batch = _random_batch(T, K, N, 2)
         prio = jnp.asarray(RNG.permutation(T).astype(np.uint32))
         wave = jnp.uint32(trial)
-        store_a = store_init(N, 2, 0)
-        store_b = store_init(N, 2, 0)
+        store_a = store_init(N, 2, 0, mv_depth=mvd)
+        store_b = store_init(N, 2, 0, mv_depth=mvd)
         sa, ra = cc_mod.wave_validate(store_a, batch, prio, wave,
                                       _cfg(cc_id, T, K, N, gran, "jnp"))
         sb, rb = cc_mod.wave_validate(store_b, batch, prio, wave,
@@ -68,21 +72,28 @@ def test_wave_validate_backend_parity(cc_mod, cc_id, gran):
         np.testing.assert_array_equal(np.asarray(sa.rts), np.asarray(sb.rts))
         np.testing.assert_array_equal(np.asarray(sa.claim_w),
                                       np.asarray(sb.claim_w))
+        np.testing.assert_array_equal(np.asarray(sa.mv_begin),
+                                      np.asarray(sb.mv_begin))
+        np.testing.assert_array_equal(np.asarray(sa.mv_head),
+                                      np.asarray(sb.mv_head))
 
 
 # ------------------------------------------------------- whole-run parity
-@pytest.mark.parametrize("cc", [t.CC_OCC, t.CC_TICTOC, t.CC_AUTOGRAN])
+@pytest.mark.parametrize("cc", [t.CC_OCC, t.CC_TICTOC, t.CC_AUTOGRAN,
+                                t.CC_MVCC, t.CC_MVOCC])
 @pytest.mark.parametrize("gran", [0, 1])
 @pytest.mark.parametrize("wlname", ["ycsb", "tpcc"])
 def test_run_backend_parity(wlname, gran, cc):
     """EngineConfig(backend='pallas') must yield bit-identical commit masks,
-    versions, and TicToc timestamps to backend='jnp' on both paper workloads
-    for OCC, TicToc, and AutoGran (ISSUE acceptance criterion)."""
+    versions, timestamps, and MV rings to backend='jnp' on both paper
+    workloads for OCC, TicToc, AutoGran, MVCC, and MV-OCC (ISSUE acceptance
+    criterion)."""
     wl = WORKLOADS[wlname]
     cfg = EngineConfig(cc=cc, lanes=8, slots=wl.slots,
                        n_records=wl.n_records, n_groups=wl.n_groups,
                        n_cols=wl.n_cols, n_txn_types=wl.n_txn_types,
-                       granularity=gran, n_rings=wl.n_rings)
+                       granularity=gran, n_rings=wl.n_rings,
+                       mv_depth=4 if cc in t.MV_CCS else 0)
     a = run(cfg, wl, n_waves=6, seed=0, keep_state=True)
     b = run(dataclasses.replace(cfg, backend="pallas"), wl, n_waves=6,
             seed=0, keep_state=True)
@@ -93,6 +104,10 @@ def test_run_backend_parity(wlname, gran, cc):
                                   np.asarray(b.final_state.store.wts))
     np.testing.assert_array_equal(np.asarray(a.final_state.store.rts),
                                   np.asarray(b.final_state.store.rts))
+    np.testing.assert_array_equal(np.asarray(a.final_state.store.mv_begin),
+                                  np.asarray(b.final_state.store.mv_begin))
+    np.testing.assert_array_equal(np.asarray(a.final_state.store.mv_head),
+                                  np.asarray(b.final_state.store.mv_head))
     np.testing.assert_array_equal(
         np.asarray(a.final_state.pending_live),
         np.asarray(b.final_state.pending_live))
@@ -124,14 +139,14 @@ def test_run_backend_parity_lock_mechanisms(cc, gran):
 
 # --------------------------------------------------- sweep-grid parity
 def test_sweep_backend_parity_all_mechanisms():
-    """Bit-identical SweepPoints jnp vs pallas for OCC, TicToc, and AutoGran
-    at both granularities (ISSUE acceptance criterion)."""
+    """Bit-identical SweepPoints jnp vs pallas for OCC, TicToc, AutoGran,
+    MVCC, and MV-OCC at both granularities (ISSUE acceptance criterion)."""
     wl = WORKLOADS["ycsb"]
-    ccs = [t.CC_OCC, t.CC_TICTOC, t.CC_AUTOGRAN]
+    ccs = [t.CC_OCC, t.CC_TICTOC, t.CC_AUTOGRAN, t.CC_MVCC, t.CC_MVOCC]
     cfg = EngineConfig(cc=t.CC_OCC, lanes=8, slots=wl.slots,
                        n_records=wl.n_records, n_groups=wl.n_groups,
                        n_cols=wl.n_cols, n_txn_types=wl.n_txn_types,
-                       n_rings=wl.n_rings)
+                       n_rings=wl.n_rings, mv_depth=3)
     a = sweep(cfg, wl, 4, ccs=ccs, grans=(0, 1), lane_counts=(8,),
               seeds=(0,))
     b = sweep(dataclasses.replace(cfg, backend="pallas"), wl, 4, ccs=ccs,

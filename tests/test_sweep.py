@@ -112,7 +112,8 @@ def test_txn_bench_grid_schema():
                     n_keys=512, backend="jnp")
     assert len(rows) == 2 * 2 * 2
     want = {"workload", "cc", "granularity", "lanes", "waves", "commits",
-            "aborts", "abort_rate", "throughput", "ext_events", "wall_s",
+            "aborts", "abort_rate", "ro_commits", "ro_aborts",
+            "ro_abort_rate", "throughput", "ext_events", "wall_s",
             "backend", "kernel_ops"}
     for r in rows:
         assert set(r) == want
@@ -123,15 +124,25 @@ def test_txn_bench_grid_schema():
 
 def test_txn_bench_kernel_ops_attribution():
     """Pallas rows must name the ops that actually ran as kernels, per
-    mechanism (validate for OCC, probe/ts_gather/ts_install_max for
-    TicToc, validate_dual for AutoGran)."""
+    mechanism (validate for OCC, probe/ts_gather/ts_install_max/
+    segment_count for TicToc, validate_dual for AutoGran, the mv ring ops
+    for the multi-version pair)."""
     from repro.core.backend import kernel_coverage
     occ_ops = kernel_coverage("pallas", t.CC_OCC)
     tic_ops = kernel_coverage("pallas", t.CC_TICTOC)
     ag_ops = kernel_coverage("pallas", t.CC_AUTOGRAN)
+    mv_ops = kernel_coverage("pallas", t.CC_MVCC)
+    # every mechanism's wave also counts same-row contention through
+    # segment_count (the engine cost model) — no XLA sort on the pallas path
     assert occ_ops == {"validate": "pallas", "claim_scatter": "pallas",
-                       "commit_install": "pallas"}
+                       "commit_install": "pallas",
+                       "segment_count": "pallas"}
     assert tic_ops == {"probe": "pallas", "ts_gather": "pallas",
-                       "claim_scatter": "pallas", "ts_install_max": "pallas"}
+                       "claim_scatter": "pallas", "ts_install_max": "pallas",
+                       "segment_count": "pallas"}
     assert ag_ops == {"validate_dual": "pallas", "claim_scatter": "pallas",
-                      "commit_install": "pallas"}
+                      "commit_install": "pallas", "segment_count": "pallas"}
+    assert mv_ops == {"validate": "pallas", "claim_scatter": "pallas",
+                      "mv_gather": "pallas", "mv_install": "pallas",
+                      "segment_count": "pallas"}
+    assert kernel_coverage("pallas", t.CC_MVOCC) == mv_ops
