@@ -1,0 +1,139 @@
+"""Perf dashboard: aggregate benchmark JSON rows into one markdown table
+(ROADMAP item: "wire BENCH_*.json kernel_ops attribution into a perf
+dashboard").
+
+Sources: every ``BENCH_*.json`` in the repo root (the ad-hoc bench
+trajectory files, .gitignored) plus ``reports/*.json`` (the curated figure
+sweeps).  Two row shapes are understood:
+
+- mechanism rows (txn_bench / figure sweeps: ``cc`` key) — summarized per
+  (workload, cc, granularity, backend) at their peak-throughput lane
+  count, with abort rate and per-op pallas/xla kernel attribution;
+- distributed rows (txn_scaling: ``shards`` key) — waves/s, collective
+  bytes per wave, and the shard-local op attribution.
+
+    PYTHONPATH=src python -m benchmarks.perf_dashboard \
+        [paths-or-globs ...] [--out reports/perf_dashboard.md]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+DEFAULT_GLOBS = ("BENCH_*.json", "reports/*.json")
+
+
+def load_rows(patterns=DEFAULT_GLOBS) -> tuple[list, list]:
+    """Expand globs, read every JSON list, split (mechanism, distributed)
+    rows; anything else (unknown schema) is skipped."""
+    mech, dist = [], []
+    for pat in patterns:
+        for path in sorted(glob.glob(pat)):
+            try:
+                with open(path) as f:
+                    rows = json.load(f)
+            except (OSError, json.JSONDecodeError):
+                continue
+            if not isinstance(rows, list):
+                continue
+            for r in rows:
+                if not isinstance(r, dict):
+                    continue
+                r = dict(r, _src=os.path.basename(path))
+                if "cc" in r and "throughput" in r:
+                    mech.append(r)
+                elif "shards" in r:
+                    dist.append(r)
+    return mech, dist
+
+
+def _ops_cell(kernel_ops: dict) -> str:
+    """Compress a {op: "pallas"|"xla"} map: '4/4 pallas' or 'xla' or a
+    mixed listing (mixed should not happen — it would mean a partial
+    fallback, worth seeing loudly)."""
+    if not kernel_ops:
+        return "—"
+    engines = set(kernel_ops.values())
+    if engines == {"pallas"}:
+        return f"{len(kernel_ops)}/{len(kernel_ops)} pallas"
+    if engines == {"xla"}:
+        return "xla"
+    return ", ".join(f"{op}:{eng}" for op, eng in sorted(kernel_ops.items()))
+
+
+def _gran(g) -> str:
+    return "fine" if g else "coarse"
+
+
+def render_markdown(mech: list, dist: list) -> str:
+    out = ["# Perf dashboard", "",
+           "Aggregated from benchmark JSON rows (BENCH_*.json + "
+           "reports/*.json); regenerate with "
+           "`PYTHONPATH=src python -m benchmarks.perf_dashboard`.", ""]
+
+    if mech:
+        groups: dict = {}
+        for r in mech:
+            key = (r.get("workload", "?"), r["cc"], r.get("granularity", 1),
+                   r.get("backend", "?"))
+            best = groups.get(key)
+            if best is None or r["throughput"] > best["throughput"]:
+                groups[key] = r
+        out += ["## Mechanisms (peak-throughput point per "
+                "workload × cc × granularity × backend)", "",
+                "| workload | cc | granularity | backend | peak thpt "
+                "(txn/us) | @lanes | abort rate | kernel ops | source |",
+                "|---|---|---|---|---|---|---|---|---|"]
+        for key in sorted(groups):
+            r = groups[key]
+            out.append(
+                f"| {key[0]} | {key[1]} | {_gran(key[2])} | {key[3]} "
+                f"| {r['throughput']:.3f} | {r.get('lanes', '?')} "
+                f"| {100 * r.get('abort_rate', 0):.2f}% "
+                f"| {_ops_cell(r.get('kernel_ops', {}))} "
+                f"| {r['_src']} |")
+        out.append("")
+
+    if dist:
+        out += ["## Distributed engine (txn_scaling; shards=0 = local "
+                "sweep() anchor)", "",
+                "| shards | waves/s | commits | coll KiB/wave | backend "
+                "| kernel ops | source |",
+                "|---|---|---|---|---|---|---|"]
+        for r in sorted(dist, key=lambda r: (r["_src"], r["shards"])):
+            out.append(
+                f"| {r['shards']} | {r.get('waves_per_s', 0):.1f} "
+                f"| {r.get('commits', '?')} "
+                f"| {r.get('coll_bytes_per_wave', 0) / 1024:.1f} "
+                f"| {r.get('backend', '?')} "
+                f"| {_ops_cell(r.get('kernel_ops', {}))} | {r['_src']} |")
+        out.append("")
+
+    if not mech and not dist:
+        out += ["No benchmark rows found — run `python -m "
+                "repro.launch.txn_bench --json BENCH_x.json` or any "
+                "`benchmarks/` figure script first.", ""]
+    return "\n".join(out)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("patterns", nargs="*", default=list(DEFAULT_GLOBS),
+                    help="JSON files or globs (default: BENCH_*.json "
+                         "reports/*.json)")
+    ap.add_argument("--out", default="reports/perf_dashboard.md")
+    args = ap.parse_args(argv)
+    mech, dist = load_rows(tuple(args.patterns))
+    md = render_markdown(mech, dist)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        f.write(md)
+    print(f"[saved] {args.out}  ({len(mech)} mechanism rows, "
+          f"{len(dist)} distributed rows)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

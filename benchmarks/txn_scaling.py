@@ -6,7 +6,11 @@ record counts), measuring committed txns per second of wall time and the
 per-wave collective bytes — the weak-scaling story of the routed engine.
 A ``shards=0`` anchor row first runs the single-device engine through the
 vmapped ``sweep()`` grid runner at the same global lane count, so the table
-reads "local engine vs N-shard routed engine".
+reads "local engine vs N-shard routed engine".  ``REPRO_TXN_BACKEND``
+("jnp" | "pallas") selects the kernel-backend surface for BOTH engines —
+the distributed wave routes its shard-local route/claim/probe/install
+through core/backend.py like the local one — and every row records the
+resolved backend plus per-op kernel attribution.
 
     PYTHONPATH=src python -m benchmarks.txn_scaling
 """
@@ -60,7 +64,8 @@ PROG = textwrap.dedent("""
     for ns in (1, 2, 4, 8):
         mesh = jax.make_mesh((ns,), ("data",))
         cfg = D.DistConfig(n_records=N, n_groups=2,
-                           lanes_per_shard=GLOBAL_LANES // ns, slots=K)
+                           lanes_per_shard=GLOBAL_LANES // ns, slots=K,
+                           backend=BACKEND)
         wave = jax.jit(D.make_wave_fn(cfg, mesh))
         rng = np.random.default_rng(0)
         keys = jnp.asarray(rng.integers(0, N, (GLOBAL_LANES, K),
@@ -87,12 +92,15 @@ PROG = textwrap.dedent("""
             commits += int(c.sum())
         jax.block_until_ready(wts)
         dt = time.time() - t0
+        from repro.core.backend import dist_kernel_coverage
         rows.append({"shards": ns, "commits": commits,
                      "waves_per_s": WAVES / dt,
                      "coll_bytes_per_wave": coll,
-                     # The routed engine is its own substrate: shard_map +
-                     # XLA collectives, no per-op kernel dispatch (yet).
-                     "backend": "shard_map", "kernel_ops": {}})
+                     # The routed engine claims/probes/installs through the
+                     # same backend surface as the local one; only the
+                     # exchange itself stays shard_map + XLA collectives.
+                     "backend": BACKEND,
+                     "kernel_ops": dist_kernel_coverage(BACKEND)})
         print(f"shards={ns}: {WAVES/dt:6.1f} waves/s  "
               f"{commits} commits  coll/wave={coll/1024:.1f} KiB")
     print("JSON:" + json.dumps(rows))

@@ -1,26 +1,38 @@
 """The kernel-backend layer: one dispatch surface for every CC mechanism.
 
-Every concurrency-control mechanism in ``core/cc/`` touches shared state
-through exactly ten ops — the full surface a wave needs (DESIGN.md
-sections 5 and 9):
+Every concurrency-control mechanism in ``core/cc/`` — and the distributed
+engine's shard-local wave (``core/distributed.py``) — touches shared state
+through exactly twelve ops, the full surface a wave needs (DESIGN.md
+sections 5, 9 and 10):
 
-    validate        read-set verdicts vs the writer-claim table (OCC rule)
+    validate        read-set verdicts vs the writer-claim table (OCC rule;
+                    mvcc/mvocc's first-committer-wins channels)
     validate_dual   fine AND coarse verdicts from one row fetch (AutoGran)
-    probe           raw strongest-claimant prio16 (TicToc/SwissTM/2PL/
-                    Adaptive need the priority itself, not a verdict)
+    probe           raw strongest-claimant prio16 (NO_PRIO if unclaimed)
+    claim_probe     FUSED claim_scatter + probe: one pass installs the
+                    wave's claim words and answers every op's post-install
+                    strongest-claimant probe (the probe family — OCC,
+                    TicToc, 2PL, SwissTM, Adaptive — and the distributed
+                    owner step; half the launches and claim-row DMAs)
     ts_gather       per-op (wts | rts) observation; coarse = row max (TicToc)
-    claim_scatter   pack + scatter-min claim words (every mechanism's claims)
-    commit_install  +1 version bumps for committed writes (OCC-family)
+    claim_scatter   pack + scatter-min claim words (install-only callers:
+                    AutoGran's verdict path, the MV claim channels)
+    commit_install  +1 version bumps for committed writes (OCC-family +
+                    the distributed install return-trip)
     ts_install_max  monotone scatter-max timestamp install (TicToc)
     segment_count   same-cell op counts within the wave (TicToc's extension
                     chains + the engine's install-contention cost model —
                     ops that are not simple row gathers)
+    route_pack      sort-free per-destination exchange-buffer pack (the
+                    distributed wave's send side; counting/offset scan in
+                    place of the old argsort routing pass)
     mv_gather       snapshot version select on the multi-version ring
                     (mvcc/mvocc reads; core/mvstore.py)
     mv_install      ring-slot claim + version publish (mvcc/mvocc commits)
 
-``resolve(cfg)`` maps ``EngineConfig.backend`` to one of two stateless
-singleton implementations:
+``resolve(cfg)`` maps ``EngineConfig.backend`` (or ``DistConfig.backend`` —
+any config with a ``backend`` field) to one of two stateless singleton
+implementations:
 
 - ``jnp``    — XLA gather/scatter (the oracles in ``kernels/ref.py`` and the
   helpers in ``core/claims.py`` are the same computations);
@@ -32,7 +44,7 @@ Both decode the one claim-word layout in ``core/claimword.py`` and are
 bit-identical (tests/test_backend_parity.py, tests/test_kernels.py).  CC
 mechanisms hold no ``cfg.backend`` branches: they call ``resolve(cfg)`` once
 per wave and use only this surface, so a new mechanism gets TPU execution for
-free and a new backend only has to implement these ten ops.
+free and a new backend only has to implement these twelve ops.
 """
 from __future__ import annotations
 
@@ -64,6 +76,19 @@ class JnpBackend:
         """Strongest live claimant prio16 per op (NO_PRIO if unclaimed)."""
         return (claims.probe(table, keys, groups, wave) if fine
                 else claims.probe_any_group(table, keys, wave))
+
+    def claim_probe(self, table, keys, groups, prio, wave, mask,
+                    fine: bool):
+        """Fused claim_scatter + probe: min-install claim words for masked
+        ops, return every op's post-install strongest-claimant prio16."""
+        from repro.kernels import ref
+        return ref.claim_probe_fused(table, keys, groups, prio, mask, wave,
+                                     fine)
+
+    def route_pack(self, owner, vals, n_dest: int, cap: int, fills):
+        """Sort-free per-destination fixed-capacity buffer pack."""
+        from repro.kernels import ref
+        return ref.route_pack(owner, vals, n_dest, cap, fills)
 
     def ts_gather(self, table, keys, groups, fine: bool):
         """Per-op timestamp observation; coarse reads the row max."""
@@ -123,6 +148,17 @@ class PallasBackend:
         return ops.claim_probe(table, keys, groups, inv_wave(wave), fine,
                                use_pallas=True)
 
+    def claim_probe(self, table, keys, groups, prio, wave, mask,
+                    fine: bool):
+        from repro.kernels import ops
+        return ops.claim_probe_fused(table, keys, groups, prio, mask, wave,
+                                     fine, use_pallas=True)
+
+    def route_pack(self, owner, vals, n_dest: int, cap: int, fills):
+        from repro.kernels import ops
+        return ops.route_pack(owner, vals, n_dest, cap, fills,
+                              use_pallas=True)
+
     def ts_gather(self, table, keys, groups, fine: bool):
         from repro.kernels import ops
         return ops.ts_gather(table, keys, groups, fine, use_pallas=True)
@@ -164,16 +200,18 @@ _BACKENDS = {"jnp": JnpBackend(), "pallas": PallasBackend()}
 #: mechanism includes ``segment_count``: the engine's install-contention
 #: cost model counts same-row committers/readers through it each wave
 #: (core/engine.py make_wave_step), on top of TicToc's extension chains.
+#: The probe family (OCC's read validation included) runs on the fused
+#: ``claim_probe`` op — the separate claim_scatter + probe pair is gone
+#: from their waves; ``claim_scatter`` remains listed only where a
+#: mechanism still installs claims it never probes as priorities
+#: (AutoGran's verdict path, the MV first-committer-wins channels).
 CC_OPS = {
-    t.CC_OCC: ("validate", "claim_scatter", "commit_install",
-               "segment_count"),
-    t.CC_TICTOC: ("probe", "ts_gather", "claim_scatter", "ts_install_max",
+    t.CC_OCC: ("claim_probe", "commit_install", "segment_count"),
+    t.CC_TICTOC: ("claim_probe", "ts_gather", "ts_install_max",
                   "segment_count"),
-    t.CC_2PL: ("probe", "claim_scatter", "commit_install", "segment_count"),
-    t.CC_SWISS: ("probe", "claim_scatter", "commit_install",
-                 "segment_count"),
-    t.CC_ADAPTIVE: ("probe", "claim_scatter", "commit_install",
-                    "segment_count"),
+    t.CC_2PL: ("claim_probe", "commit_install", "segment_count"),
+    t.CC_SWISS: ("claim_probe", "commit_install", "segment_count"),
+    t.CC_ADAPTIVE: ("claim_probe", "commit_install", "segment_count"),
     t.CC_AUTOGRAN: ("validate_dual", "claim_scatter", "commit_install",
                     "segment_count"),
     t.CC_MVCC: ("validate", "claim_scatter", "mv_gather", "mv_install",
@@ -182,9 +220,16 @@ CC_OPS = {
                  "segment_count"),
 }
 
+#: The surface ops one shard-local distributed wave routes through the
+#: backend (core/distributed.py): the sort-free exchange pack, the fused
+#: owner-side claim install + probe, and the install return-trip's version
+#: bumps.  Recorded by benchmarks/txn_scaling.py rows.
+DIST_OPS = ("route_pack", "claim_probe", "commit_install")
+
 
 def resolve(cfg) -> JnpBackend | PallasBackend:
-    """EngineConfig -> the backend singleton (validated in __post_init__)."""
+    """Config (EngineConfig / DistConfig — anything with a validated
+    ``backend`` field) -> the backend singleton."""
     return _BACKENDS[cfg.backend]
 
 
@@ -193,3 +238,9 @@ def kernel_coverage(backend_name: str, cc: int) -> dict:
     backend ``backend_name`` — the attribution record for benchmark JSON."""
     engine = "pallas" if backend_name == "pallas" else "xla"
     return {op: engine for op in CC_OPS[cc]}
+
+
+def dist_kernel_coverage(backend_name: str) -> dict:
+    """Kernel attribution for the distributed wave's shard-local ops."""
+    engine = "pallas" if backend_name == "pallas" else "xla"
+    return {op: engine for op in DIST_OPS}

@@ -16,11 +16,11 @@ MV-OCC) built on the version ring of core/mvstore.py, which extends the
 paper's granularity question to stores where readers never block.
 
 Every mechanism touches shared state only through the kernel-backend surface
-(core/backend.py): validate / validate_dual / probe / ts_gather /
-claim_scatter / commit_install / ts_install_max, resolved from
-``EngineConfig.backend`` — XLA gather/scatter or TPU Pallas kernels,
-bit-identical (DESIGN.md section 5).  No per-mechanism backend branches
-live in this package.
+(core/backend.py): claim_probe (the fused claim install + probe the whole
+probe family runs) / validate / validate_dual / ts_gather / claim_scatter /
+commit_install / ts_install_max, resolved from ``EngineConfig.backend`` —
+XLA gather/scatter or TPU Pallas kernels, bit-identical (DESIGN.md
+section 5).  No per-mechanism backend branches live in this package.
 """
 from repro.core.cc.base import ValidationResult
 from repro.core.cc.occ import wave_validate as occ_validate

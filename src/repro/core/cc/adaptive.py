@@ -9,9 +9,11 @@ abort-heat EWMA exceeds ``adapt_up`` and relaxes back when it decays below
 ``adapt_down``.  Heat decay is lazy (claims.lazy_decayed) so the state machine
 costs O(touched records), not O(table), per wave.
 
-Claim scatters and probes route through the kernel-backend surface
-(core/backend.py) — Pallas kernels or XLA gather/scatter per
-``EngineConfig.backend`` (DESIGN.md section 5).
+Each claim table is acquired and probed by one fused ``claim_probe`` pass
+on the kernel-backend surface (core/backend.py) — Pallas kernels or XLA
+gather/scatter per ``EngineConfig.backend`` (DESIGN.md section 5); the
+reader channel's install mask is narrowed to pessimistic records (visible
+reads), while its probe still answers for every op.
 """
 from __future__ import annotations
 
@@ -19,7 +21,6 @@ import dataclasses
 
 import jax.numpy as jnp
 
-from repro.core import backend as kb
 from repro.core import claims
 from repro.core.cc import base
 from repro.core.types import OOB_KEY, EngineConfig, StoreState, TxnBatch
@@ -27,7 +28,6 @@ from repro.core.types import OOB_KEY, EngineConfig, StoreState, TxnBatch
 
 def wave_validate(store: StoreState, batch: TxnBatch, prio, wave,
                   cfg: EngineConfig):
-    be = kb.resolve(cfg)
     fine = base.is_fine(cfg)
     live = batch.live()
     rd = batch.is_read() & live
@@ -38,12 +38,10 @@ def wave_validate(store: StoreState, batch: TxnBatch, prio, wave,
     pess = store.pess_mode.at[kp].get(mode="fill",
                                       fill_value=False)  # [T, K]
 
-    store = base.write_claims(store, batch, prio, wave, cfg)
+    store, wprio = base.claim_and_probe(store, batch, prio, wave, cfg, fine)
     # Visible (lock-acquiring) reads only on pessimistic records.
-    store = base.read_claims(store, batch, prio, wave, cfg, mask=pess)
-
-    wprio = be.probe(store.claim_w, batch.op_key, batch.op_group, wave, fine)
-    rprio = be.probe(store.claim_r, batch.op_key, batch.op_group, wave, fine)
+    store, rprio = base.claim_and_probe(store, batch, prio, wave, cfg, fine,
+                                        table="r", mask=pess)
 
     T, K = batch.op_key.shape
     u = claims.hash01(wave, claims.lane_op_ids(T, K))

@@ -1,10 +1,16 @@
 """Shared pieces of the CC mechanism implementations.
 
 All shared-state access goes through the kernel-backend surface
-(``core/backend.py``): validate / validate_dual / probe / ts_gather /
+(``core/backend.py``): claim_probe / validate / validate_dual / ts_gather /
 claim_scatter / commit_install / ts_install_max, resolved once per wave from
 ``EngineConfig.backend``.  No mechanism in this package branches on the
 backend itself — that is the whole point of the layer (DESIGN.md section 5).
+
+The probe family (OCC, TicToc, 2PL, SwissTM, Adaptive) claims and probes
+through ONE fused op (``claim_and_probe`` below — the backend's
+``claim_probe``): one kernel pass over the claim table installs the wave's
+claim words AND answers every op's strongest-claimant probe, where the
+mechanisms previously launched claim_scatter and probe back to back.
 """
 from __future__ import annotations
 
@@ -69,34 +75,39 @@ def bump_versions(store: StoreState, batch: TxnBatch, commit: jax.Array,
     return dataclasses.replace(store, wts=wts)
 
 
-def read_set_conflicts(store: StoreState, batch: TxnBatch, prio: jax.Array,
-                       wave: jax.Array, cfg: EngineConfig,
-                       fine: bool | None = None) -> jax.Array:
-    """Read-set probe against the writer-claim table (the OCC hot loop).
-
-    Returns conflict bool[T, K]: True where a live read op's (record, group)
-    cell was write-claimed this wave by a strictly-higher-priority lane.
-    ``fine`` selects the probe width (granularity) and defaults to the
-    config's static granularity.  Mechanisms needing BOTH widths at once
-    (auto-granularity) call the backend's ``validate_dual`` instead — one row
-    fetch, two verdicts.
-
-    Routed through the backend surface's ``validate`` op: the scalar-prefetch
-    DMA kernel (kernels/occ_validate.py — interpret mode off-TPU) or the jnp
-    gather probe.  Both decode the claim words of core/claimword.py and
-    produce bit-identical flags (DESIGN.md section 5).
-    """
-    myp = my_prio_per_op(batch, prio)
-    check = batch.is_read() & batch.live()
-    if fine is None:
-        fine = is_fine(cfg)
-    return kb.resolve(cfg).validate(store.claim_w, batch.op_key,
-                                    batch.op_group, myp, check, wave, fine)
-
-
 def my_prio_per_op(batch: TxnBatch, prio: jax.Array) -> jax.Array:
     return jnp.broadcast_to(prio[:, None].astype(jnp.uint32),
                             batch.op_key.shape)
+
+
+def claim_and_probe(store: StoreState, batch: TxnBatch, prio: jax.Array,
+                    wave: jax.Array, cfg: EngineConfig,
+                    fine: bool | None = None, *, table: str = "w",
+                    mask: jax.Array | None = None
+                    ) -> tuple[StoreState, jax.Array]:
+    """Fused claim install + strongest-claimant probe on one claim table.
+
+    Routes the backend's ``claim_probe`` op: ONE kernel pass min-installs
+    the install-mask ops' claim words and returns the post-install probe
+    (uint32 prio16, NO_PRIO where unclaimed/masked) for EVERY op — halving
+    kernel launches and claim-row DMAs vs the old claim_scatter-then-probe
+    pair on the wave's hottest table.
+
+    ``table`` selects the claim channel ("w" writer / "r" reader); the
+    install mask defaults to the channel's natural op set (live writes for
+    "w", live reads for "r") and ``mask`` narrows it further (Adaptive's
+    pessimistic-only visible reads).  Returns ``(store', wprio [T, K])``.
+    """
+    if fine is None:
+        fine = is_fine(cfg)
+    m = (batch.is_write() if table == "w" else batch.is_read()) & batch.live()
+    if mask is not None:
+        m = m & mask
+    field = "claim_w" if table == "w" else "claim_r"
+    tbl, wprio = kb.resolve(cfg).claim_probe(
+        getattr(store, field), batch.op_key, batch.op_group,
+        my_prio_per_op(batch, prio), wave, m, fine)
+    return dataclasses.replace(store, **{field: tbl}), wprio
 
 
 def write_claims(store: StoreState, batch: TxnBatch, prio: jax.Array,
@@ -109,19 +120,6 @@ def write_claims(store: StoreState, batch: TxnBatch, prio: jax.Array,
                                        my_prio_per_op(batch, prio), wave,
                                        batch.is_write() & batch.live())
     return dataclasses.replace(store, claim_w=cw)
-
-
-def read_claims(store: StoreState, batch: TxnBatch, prio: jax.Array,
-                wave: jax.Array, cfg: EngineConfig,
-                mask: jax.Array | None = None) -> StoreState:
-    """Visible-read claims into the reader-claim table (2PL/Swiss/Adaptive)."""
-    m = batch.is_read() & batch.live()
-    if mask is not None:
-        m = m & mask
-    cr = kb.resolve(cfg).claim_scatter(store.claim_r, batch.op_key,
-                                       batch.op_group,
-                                       my_prio_per_op(batch, prio), wave, m)
-    return dataclasses.replace(store, claim_r=cr)
 
 
 def plain_write_claims(store: StoreState, batch: TxnBatch, prio: jax.Array,

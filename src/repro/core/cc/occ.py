@@ -11,10 +11,14 @@ Timestamp granularity is the probe width: coarse probes treat a claim on any
 column group of the record as a conflict (one timestamp per row), fine probes
 look only at the op's own group — the paper's mechanism.
 
-All shared-state access (claim scatter, read-set validate, version install)
-routes through the kernel-backend surface of core/backend.py — Pallas kernels
-or XLA gather/scatter, selected by ``EngineConfig.backend`` (DESIGN.md
-section 5).
+All shared-state access (claim install + probe, version install) routes
+through the kernel-backend surface of core/backend.py — Pallas kernels or
+XLA gather/scatter, selected by ``EngineConfig.backend`` (DESIGN.md
+section 5).  The claim scatter and the read-set probe are ONE fused
+``claim_probe`` op (base.claim_and_probe): a single pass over the writer
+claim table installs the wave's write claims and yields every op's
+strongest-claimant priority; the OCC verdict is then just the strictness
+compare against the lane's own priority.
 """
 from __future__ import annotations
 
@@ -27,8 +31,9 @@ from repro.core.types import EngineConfig, StoreState, TxnBatch
 
 def wave_validate(store: StoreState, batch: TxnBatch, prio, wave,
                   cfg: EngineConfig):
-    store = base.write_claims(store, batch, prio, wave, cfg)
-    conflict = base.read_set_conflicts(store, batch, prio, wave, cfg)
+    store, wprio = base.claim_and_probe(store, batch, prio, wave, cfg)
+    check = batch.is_read() & batch.live()
+    conflict = check & (wprio < base.my_prio_per_op(batch, prio))
     T, K = batch.op_key.shape
     u = claims.hash01(wave, claims.lane_op_ids(T, K))
     conflict = conflict & (u < cfg.cost.opt_overlap)   # window thinning

@@ -10,9 +10,10 @@ eagerly (at the op acquiring the write lock); read-write conflicts are found
 at commit-time validation like OCC, so a read-invalidated lane wastes its full
 execution.
 
-Claim scatter and probe route through the kernel-backend surface
-(core/backend.py) — Pallas kernels or XLA gather/scatter per
-``EngineConfig.backend`` (DESIGN.md section 5).
+Claim install and probe are ONE fused ``claim_probe`` pass over the
+writer-claim table on the kernel-backend surface (core/backend.py) —
+Pallas kernels or XLA gather/scatter per ``EngineConfig.backend``
+(DESIGN.md section 5).
 """
 from __future__ import annotations
 
@@ -20,7 +21,6 @@ import dataclasses
 
 import jax.numpy as jnp
 
-from repro.core import backend as kb
 from repro.core import claims
 from repro.core.cc import base
 from repro.core.types import EngineConfig, StoreState, TxnBatch
@@ -34,9 +34,7 @@ def wave_validate(store: StoreState, batch: TxnBatch, prio, wave,
     wr = batch.is_write() & live
     myp = base.my_prio_per_op(batch, prio)
 
-    store = base.write_claims(store, batch, prio, wave, cfg)
-    wprio = kb.resolve(cfg).probe(store.claim_w, batch.op_key,
-                                  batch.op_group, wave, fine)
+    store, wprio = base.claim_and_probe(store, batch, prio, wave, cfg, fine)
 
     ww = wr & (wprio < myp)   # eager: lost the write lock to an older txn
     rw = rd & (wprio < myp)   # late: read invalidated at commit validation

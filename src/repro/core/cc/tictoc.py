@@ -19,11 +19,13 @@ Figures 2a/3a).  Per the paper's section 3.2 we model the 128-bit
 more than OCC due to overflow — and STO's non-waiting deadlock prevention.
 
 Shared-state access routes through the kernel-backend surface
-(core/backend.py): the claim probe is the backend's ``probe`` op, the
-(wts, rts) observation its ``ts_gather`` row-gather (coarse = row max), the
-monotone timestamp installs its ``ts_install_max`` scatter-max, and the
-same-cell extender/committer counts its ``segment_count`` (the all-pairs
-kernel that closed the pallas path's last XLA sort) — Pallas kernels on
+(core/backend.py): the claim install and probe are ONE fused
+``claim_probe`` op (one pass over the writer-claim table instead of the
+old claim_scatter + probe pair), the (wts, rts) observation its
+``ts_gather`` row-gather (coarse = row max), the monotone timestamp
+installs its ``ts_install_max`` scatter-max, and the same-cell
+extender/committer counts its ``segment_count`` (the all-pairs kernel that
+closed the pallas path's last XLA sort) — Pallas kernels on
 ``backend="pallas"``, XLA gather/scatter on ``"jnp"``, bit-identical either
 way (DESIGN.md section 5).
 """
@@ -48,8 +50,7 @@ def wave_validate(store: StoreState, batch: TxnBatch, prio, wave,
     wr = batch.is_write() & live
     myp = base.my_prio_per_op(batch, prio)
 
-    store = base.write_claims(store, batch, prio, wave, cfg)
-    wprio = be.probe(store.claim_w, batch.op_key, batch.op_group, wave, fine)
+    store, wprio = base.claim_and_probe(store, batch, prio, wave, cfg, fine)
 
     # (wts, rts) observation honoring granularity: coarse sees one timestamp
     # per record = the row max (any group modification constrains the row).

@@ -13,13 +13,12 @@ the lower-priority lane of a conflicting pair aborts immediately.
 
 Lock claims and probes route through the kernel-backend surface
 (core/backend.py) — Pallas kernels or XLA gather/scatter per
-``EngineConfig.backend`` (DESIGN.md section 5).
+``EngineConfig.backend`` (DESIGN.md section 5).  Each lock table (writer
+claims, reader claims) is acquired AND probed by one fused ``claim_probe``
+op, so a 2PL wave makes exactly two claim-table passes instead of four.
 """
 from __future__ import annotations
 
-import jax.numpy as jnp
-
-from repro.core import backend as kb
 from repro.core import claims
 from repro.core.cc import base
 from repro.core.types import EngineConfig, StoreState, TxnBatch
@@ -27,18 +26,15 @@ from repro.core.types import EngineConfig, StoreState, TxnBatch
 
 def wave_validate(store: StoreState, batch: TxnBatch, prio, wave,
                   cfg: EngineConfig):
-    be = kb.resolve(cfg)
     fine = base.is_fine(cfg)
     live = batch.live()
     rd = batch.is_read() & live
     wr = batch.is_write() & live
     myp = base.my_prio_per_op(batch, prio)
 
-    store = base.write_claims(store, batch, prio, wave, cfg)
-    store = base.read_claims(store, batch, prio, wave, cfg)
-
-    wprio = be.probe(store.claim_w, batch.op_key, batch.op_group, wave, fine)
-    rprio = be.probe(store.claim_r, batch.op_key, batch.op_group, wave, fine)
+    store, wprio = base.claim_and_probe(store, batch, prio, wave, cfg, fine)
+    store, rprio = base.claim_and_probe(store, batch, prio, wave, cfg, fine,
+                                        table="r")
 
     conflict = ((rd & (wprio < myp))                      # read vs writer lock
                 | (wr & (wprio < myp))                    # write vs writer lock

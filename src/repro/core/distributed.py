@@ -8,18 +8,33 @@ The record space is range-sharded over every mesh axis combined (an
 claim tables.  Lanes (transactions) are sharded the same way.  One wave is:
 
   1. route    every op is routed to its key's owner shard.  Per-destination
-              fixed-capacity buffers [n_shards, cap, words] are exchanged
-              with one ``all_to_all``; ops beyond a pair's capacity abort
-              their lane (counted; capacity is sized for the workload).
-  2. claim    owners scatter-min writer claims into their table shard and
+              fixed-capacity buffers [n_shards, cap, words] are built by the
+              backend's ``route_pack`` op — a counting/offset scan (the
+              placement a stable argsort by owner would give, WITHOUT the
+              sort; kernels/route_pack.py) — and exchanged with one
+              ``all_to_all``.  Ops beyond a pair's capacity abort their
+              lane (counted; capacity is sized for the workload).
+  2. claim    owners run the backend's fused ``claim_probe`` op on their
+              claim-table shard: ONE pass min-installs the routed write
+              claims and answers every routed op's strongest-claimant
               probe — the same reset-free wave-tag tables as the local
-              engine (core/claims.py), reused verbatim on the local shard.
+              engine (core/claims.py), halved kernel launches and claim-row
+              HBM round-trips (kernels/claim_probe.py).
   3. verdict  per-op conflict flags return through the inverse all_to_all;
-              a lane commits iff none of its routed ops conflicted and none
-              were capacity-dropped.
-  4. install  committed write ops advance their (record, group) version —
-              the commit bit rides the return trip, so installation reuses
-              the routed buffer (no second exchange).
+              the sender *gathers* its verdicts back by each op's
+              (owner, pos) routing coordinates from route_pack — no return
+              scatter.  A lane commits iff none of its routed ops
+              conflicted and none were capacity-dropped.
+  4. install  committed write ops advance their (record, group) version
+              through the backend's ``commit_install`` op — the commit bit
+              rides the return trip, so installation reuses the routed
+              buffer (no second exchange).
+
+Every shard-local table touch goes through ``backend.resolve(cfg)``
+(core/backend.py): ``DistConfig.backend`` selects XLA gather/scatter or the
+Pallas kernels exactly like the local engine, bit-identically — the
+sharded wave is the local wave's op pipeline behind one exchange
+(DESIGN.md section 10).
 
 Granularity (the paper's mechanism) is carried per op exactly as in the
 local engine: coarse probes the whole row, fine probes the op's group.
@@ -41,10 +56,14 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.compat import shard_map
 
-from repro.core import claims
+from repro.core import backend as kb
 from repro.core import types as t
 
-NO_OP = jnp.int32(0x7FFFFFFF)
+# Python ints (not jnp scalars): route_pack bakes the buffer fills into the
+# Pallas kernel body, which may not capture traced constants.
+NO_OP = 0x7FFFFFFF       # empty buffer cell in the key channel
+META_FILL = 0x7FFF8      # empty meta: group 0, kind NOP, prio16 NO_PRIO
+LANE_FILL = -1           # empty cell in the local slot -> lane map
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,14 +72,48 @@ class DistConfig:
     n_groups: int = 2
     lanes_per_shard: int = 64      # T_loc
     slots: int = 16                # K ops per txn
-    route_cap: int = 0             # 0 = auto: 4x fair share
+    route_cap: int = 0             # 0 = auto: 4x fair share, 8-aligned
     granularity: int = 1           # 0 coarse / 1 fine (probe width)
+    backend: str = "jnp"           # kernel-backend surface substrate for
+                                   # every shard-local table touch
+                                   # (core/backend.py): "jnp" XLA, "pallas"
+                                   # TPU kernels (interpret mode off-TPU)
+
+    def __post_init__(self):
+        if self.backend not in ("jnp", "pallas"):
+            raise ValueError(f"unknown backend {self.backend!r} "
+                             "(expected 'jnp' or 'pallas')")
+        if self.route_cap < 0:
+            raise ValueError(
+                f"route_cap={self.route_cap} is negative (0 = auto, "
+                "positive = explicit per-destination capacity)")
+        if 0 < self.route_cap < self.slots:
+            raise ValueError(
+                f"route_cap={self.route_cap} < slots={self.slots}: one "
+                "lane sending its whole transaction to a single shard "
+                "could never fit, so every wave would drop it — set "
+                "route_cap >= slots (or 0 for auto)")
+        if self.route_cap % 8:
+            raise ValueError(
+                f"route_cap={self.route_cap} must be a multiple of 8: "
+                "exchange buffers are the Pallas kernels' lane dimension "
+                "and must never be ragged (auto capacity rounds itself)")
+        if not 1 <= self.n_groups <= 2:
+            raise ValueError(
+                f"n_groups={self.n_groups}: the wire meta word packs the "
+                "group id into one bit (group | kind << 1 | prio16 << 3)")
 
     def cap(self, n_shards: int) -> int:
+        """Per-destination buffer capacity: explicit, or 4x the fair share
+        — but never below ``slots``, so one lane routing its whole
+        transaction to a single shard always fits (the invariant the
+        explicit-cap validation enforces).  Always a multiple of 8 (auto
+        rounds up, explicit is validated) so Pallas lane tiling never sees
+        ragged exchange buffers."""
         if self.route_cap:
             return self.route_cap
         fair = self.lanes_per_shard * self.slots / max(n_shards, 1)
-        return max(8, int(4 * fair))
+        return -(-max(8, int(4 * fair), self.slots) // 8) * 8
 
 
 def _axes(mesh) -> tuple:
@@ -74,7 +127,12 @@ def n_shards(mesh) -> int:
 def make_wave_fn(cfg: DistConfig, mesh):
     """Returns wave(keys, groups, kinds, prio, wts, claim_w, wave_idx) ->
     (commit [T], new_wts, new_claim_w, stats) — all arguments globally
-    shaped, sharded over the combined mesh axes.
+    shaped, sharded over the combined mesh axes.  ``stats`` is int32[4]
+    per shard: [commits, aborts, capacity-dropped lanes, dropped ops].
+
+    The resolved backend (``cfg.backend``) is threaded into the
+    shard-local wave; route/claim/probe/install all run through its
+    surface ops on the shard's table slice.
     """
     ax = _axes(mesh)
     ns = n_shards(mesh)
@@ -82,6 +140,7 @@ def make_wave_fn(cfg: DistConfig, mesh):
     rec_per = -(-cfg.n_records // ns)
     T, K, G = cfg.lanes_per_shard, cfg.slots, cfg.n_groups
     fine = cfg.granularity == 1
+    be = kb.resolve(cfg)
 
     def local_wave(keys, groups, kinds, prio, wts, claim_w, wave_idx):
         # keys/groups/kinds: [T, K] local lanes; prio: [T]
@@ -90,61 +149,52 @@ def make_wave_fn(cfg: DistConfig, mesh):
         owner = jnp.where(live, keys // rec_per, ns)         # dest shard
         lkey = jnp.where(live, keys % rec_per, NO_OP)
 
-        # --- build per-destination buffers -----------------------------
-        flat_owner = owner.reshape(-1)
-        order = jnp.argsort(flat_owner)                       # group by dest
-        sorted_owner = flat_owner[order]
-        counts = jnp.bincount(sorted_owner, length=ns + 1)[:ns]
-        offs = jnp.cumsum(counts) - counts
-        pos = jnp.arange(T * K) - offs[jnp.clip(sorted_owner, 0, ns - 1)]
-        ok = (sorted_owner < ns) & (pos < cap)
-        slot = jnp.where(ok, sorted_owner * cap + pos, ns * cap)
-
-        def pack(v, fill):
-            buf = jnp.full((ns * cap + 1,), fill, jnp.int32)
-            return buf.at[slot].set(v.reshape(-1)[order], mode="drop")[:-1]
-
+        # --- build per-destination buffers (backend route_pack) ---------
         # Perf iteration (txn-engine): pack (group | kind | prio16) into ONE
         # int32 rider word — 2 words per op on the wire instead of 4; the
         # lane id never travels (the sender keeps the slot->lane map).
         meta = (groups | (kinds << 1)
                 | (jnp.broadcast_to(prio[:, None], (T, K)).astype(jnp.int32)
                    << 3))
-        b_key = pack(lkey, NO_OP).reshape(ns, cap)
-        b_meta = pack(meta, 0x7FFF8).reshape(ns, cap)
-        b_lane = pack(jnp.broadcast_to(
-            jnp.arange(T, dtype=jnp.int32)[:, None], (T, K)), -1
-        ).reshape(ns, cap)          # local only: slot -> lane
+        lane = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[:, None],
+                                (T, K))
+        vals = jnp.stack([lkey.reshape(-1), meta.reshape(-1),
+                          lane.reshape(-1)])
+        buf, pos, took = be.route_pack(owner.reshape(-1), vals, ns, cap,
+                                       (NO_OP, META_FILL, LANE_FILL))
+        b_key, b_meta, b_lane = buf[0], buf[1], buf[2]
 
-        # capacity-dropped ops abort their lane
-        drop_lane = jnp.where(~ok & (sorted_owner < ns), order // K, T)
-        lane_dropped = jnp.zeros((T + 1,), jnp.bool_).at[drop_lane].set(
-            True)[:T]
+        # capacity-dropped ops abort their lane (no scatter: took is
+        # flat-op aligned, so a reshape + any does the lane reduce)
+        dropped_op = ~took & (owner.reshape(-1) < ns)
+        lane_dropped = dropped_op.reshape(T, K).any(axis=1)
 
         # --- exchange: rows -> owners ----------------------------------
         a2a = partial(jax.lax.all_to_all, axis_name=ax, split_axis=0,
                       concat_axis=0, tiled=True)
         r_key = a2a(b_key)
         r_meta = a2a(b_meta)
-        r_grp = r_meta & 1
-        r_kind = (r_meta >> 1) & 3
-        r_prio = (r_meta >> 3) & 0xFFFF
-
-        # --- owner side: claim, probe ----------------------------------
         r_live = r_key != NO_OP
+        rk = jnp.where(r_live, r_key, -1)     # masked-op convention of the
+        r_grp = r_meta & 1                    # backend surface: key -1
+        r_kind = (r_meta >> 1) & 3
+        r_prio = ((r_meta >> 3) & 0xFFFF).astype(jnp.uint32)
+
+        # --- owner side: fused claim install + probe (ONE table pass) ---
         is_w = r_live & ((r_kind == t.WRITE) | (r_kind == t.ADD))
         is_r = r_live & (r_kind == t.READ)
-        words = claims.claim_word(wave_idx, r_prio.astype(jnp.uint32))
-        claim_w = claims.scatter_claims(claim_w, r_key, r_grp, words, is_w)
-        wprio = claims.effective_probe(claim_w, r_key, r_grp, wave_idx, fine)
-        conflict = is_r & (wprio < r_prio.astype(jnp.uint32))
+        claim_w, wprio = be.claim_probe(claim_w, rk, r_grp, r_prio,
+                                        wave_idx, is_w, fine)
+        conflict = is_r & (wprio < r_prio)
 
         # --- verdicts return to lane owners (1 byte per op) -------------
+        # Gathered back by each op's routing coordinates — sort-free and
+        # scatter-free, the inverse of route_pack's placement.
         v_conf = a2a(conflict.astype(jnp.int8))               # [ns, cap]
-        lane_conf = jnp.zeros((T + 1,), jnp.int32).at[
-            jnp.where(b_lane >= 0, b_lane, T).reshape(-1)].add(
-            v_conf.reshape(-1).astype(jnp.int32))[:T]
-        commit = (lane_conf == 0) & ~lane_dropped
+        oo = jnp.clip(owner.reshape(-1), 0, ns - 1)
+        pp = jnp.clip(pos, 0, cap - 1)
+        op_conf = (v_conf[oo, pp] > 0) & took
+        commit = ~op_conf.reshape(T, K).any(axis=1) & ~lane_dropped
 
         # --- install: commit bits ride back to owners (1 byte) ----------
         b_commit = jnp.where(
@@ -153,12 +203,11 @@ def make_wave_fn(cfg: DistConfig, mesh):
             jnp.int8(0))
         r_commit = a2a(b_commit)
         bump = is_w & (r_commit > 0)
-        kk = jnp.where(bump, r_key, t.OOB_KEY)
-        wts = wts.at[kk.reshape(-1), r_grp.reshape(-1)].add(
-            jnp.uint32(1), mode="drop")
+        wts = be.commit_install(wts, rk, r_grp, bump)
 
         stats = jnp.stack([commit.sum(), (~commit).sum(),
-                           lane_dropped.sum()]).astype(jnp.int32)
+                           lane_dropped.sum(),
+                           dropped_op.sum()]).astype(jnp.int32)
         return commit, wts, claim_w, stats
 
     spec_ops = P(ax if len(ax) > 1 else ax[0])

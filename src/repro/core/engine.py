@@ -3,7 +3,12 @@
 One *wave* simulates all T threads each running one transaction concurrently
 (DESIGN.md section 2).  The executor is a single jitted ``lax.scan`` whose
 carry is the whole engine state (store, retry buffer, metrics), so a full
-benchmark datapoint (thousands of waves) is one XLA program.
+benchmark datapoint (thousands of waves) is one XLA program.  Every
+shared-state touch inside the scan body goes through the twelve-op
+kernel-backend surface (core/backend.py): the validators' claim+probe runs
+as the fused ``claim_probe`` pass and the cost model's same-row contention
+counts as ``segment_count``, so the compiled wave carries no per-wave sort
+and no duplicated claim-table traffic on either backend.
 
 Throughput model
 ----------------

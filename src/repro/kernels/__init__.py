@@ -11,12 +11,20 @@ DESIGN.md section 5):
   occ_validate    read-set validation: scalar-prefetch row DMA + compare;
                   also the dual-granularity variant (one DMA, fine+coarse
                   verdicts) and the raw strongest-claimant probe
+  claim_probe     FUSED claim install + post-install probe: one aliased
+                  row DMA per op serves both the scatter-min claim and the
+                  strongest-claimant answer (wave-local all-pairs min
+                  completes the later-grid-step claims) — the probe
+                  family's two hottest passes in one kernel
   occ_commit      version-bump scatter with aliased output
   ts_gather       TicToc (wts, rts) row gather; coarse = row max
   ts_install      monotone scatter-max timestamp install (whole-row option)
   claim_scatter   fused pack+scatter-min of claim words
   segment_count   same-cell op counts in a wave (all-pairs compare — TicToc
                   extension chains without the XLA sort)
+  route_pack      sort-free per-destination exchange-buffer pack for the
+                  distributed wave (counting/offset scan over the in-VMEM
+                  wave replaces the argsort routing pass)
   mv_gather       multi-version snapshot select: one DMA fetches a record's
                   whole begin ring, the VPU scans all D slots at once
   mv_install      ring-slot claim + version publish: aliased-output RMW over

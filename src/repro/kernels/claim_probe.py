@@ -1,0 +1,125 @@
+"""Fused claim-install + probe kernel (one pass over the claim table).
+
+The probe-family mechanisms (TicToc/2PL/SwissTM/Adaptive, the OCC read
+validation, and the distributed owner step) all ran the same two-kernel
+sequence on the hottest table each wave: ``claim_scatter`` (RMW every write
+op's claim row) followed by ``probe`` (DMA every op's claim row again).
+This kernel does both in ONE sequential grid pass — half the kernel
+launches and half the claim-table HBM row round-trips.
+
+Like ``mv_install`` it is dual-purpose per grid step: the claim table is
+aliased input/output, each step DMAs its op's row once, min-installs the
+packed claim word (write ops), and answers the op's strongest-claimant
+probe.  The subtlety is that the probe must see claims installed by *later*
+grid steps too (the jnp semantics probe the fully-installed table).  The
+sequential grid only shows a step its predecessors' installs — so the
+kernel completes the picture from VMEM: the whole wave's (key, group, prio,
+mask) vectors ride along as full blocks (they are tiny, segment_count
+style), and an all-pairs same-cell min over them yields the strongest
+*same-wave* claimant of the op's cell.  min(row probe, wave min) then
+equals the post-install probe, because under the claim-word monotonicity
+precondition (no table word tagged newer than this wave — see
+ref.claim_probe_fused) every claim that could change the row's probe this
+wave is in the VMEM wave vectors.  Min is commutative and idempotent, so
+grid order is unobservable: bit-identical to the two-phase jnp path.
+
+Granularity is the probe width as everywhere (DESIGN.md section 2): fine
+matches the op's (record, group) cell, coarse matches any group of the
+record — on both the row probe and the all-pairs wave term.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.claimword import (EMPTY_WORD, NO_PRIO, PRIO16_MASK,
+                                  WAVE_SHIFT, live_prio)
+
+_SENT = 0x7FFFFFFF  # cell id of masked ops in the all-pairs compare
+
+
+def _kernel(fine: bool, G: int, keys_ref, ivw_ref, grp_ref, prio_ref,
+            do_ref, allk_ref, allg_ref, allp_ref, alldo_ref, row_ref,
+            tbl_ref, out_ref):
+    # Accumulate through the aliased *output* ref (see occ_commit.py).
+    del row_ref
+    ivw = ivw_ref[0]
+    t, k = pl.program_id(0), pl.program_id(1)
+    key = keys_ref[t, k]
+    g = grp_ref[0, 0]
+    row = tbl_ref[0, :]                               # uint32[G]
+    pr = live_prio(row, ivw)
+
+    # Same-wave claimants of my cell, from the in-VMEM wave vectors.
+    allp = (allp_ref[...] & jnp.uint32(PRIO16_MASK)).reshape(-1)
+    if fine:
+        table_prio = jnp.where(jnp.arange(G, dtype=jnp.int32) == g, pr,
+                               NO_PRIO).min()
+        all_cell = jnp.where(alldo_ref[...],
+                             allk_ref[...] * G + allg_ref[...],
+                             jnp.int32(_SENT)).reshape(-1)
+        hit = all_cell == key * G + g
+    else:
+        table_prio = pr.min()
+        all_key = jnp.where(alldo_ref[...], allk_ref[...],
+                            jnp.int32(_SENT)).reshape(-1)
+        hit = all_key == key
+    wave_prio = jnp.where(hit, allp, jnp.uint32(NO_PRIO)).min()
+    wprio = jnp.minimum(table_prio, wave_prio)
+    out_ref[0, 0] = jnp.where(key >= 0, wprio, jnp.uint32(NO_PRIO))
+
+    # Install this op's claim word (packed in registers, claim_scatter.py).
+    word = ((ivw << WAVE_SHIFT)
+            | (prio_ref[0, 0] & jnp.uint32(PRIO16_MASK)))
+    sel = (jnp.arange(G, dtype=jnp.int32) == g) & do_ref[0, 0]
+    tbl_ref[0, :] = jnp.minimum(row, jnp.where(sel, word,
+                                               jnp.uint32(EMPTY_WORD)))
+
+
+def claim_probe_fused_pallas(table: jax.Array, keys: jax.Array,
+                             groups: jax.Array, prio: jax.Array,
+                             do: jax.Array, inv_wave: jax.Array, fine: bool,
+                             interpret: bool = False
+                             ) -> tuple[jax.Array, jax.Array]:
+    """(table', wprio uint32[T, K]) — see ref.claim_probe_fused."""
+    T, K = keys.shape
+    G = table.shape[1]
+    ivw = jnp.reshape(inv_wave.astype(jnp.uint32), (1,))
+    do = do & (keys >= 0)
+    p16 = prio.astype(jnp.uint32)
+    full = pl.BlockSpec((T, K), lambda t, k, keys, ivw: (0, 0))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # keys, inv_wave
+        grid=(T, K),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda t, k, keys, ivw: (t, k)),   # groups
+            pl.BlockSpec((1, 1), lambda t, k, keys, ivw: (t, k)),   # prio
+            pl.BlockSpec((1, 1), lambda t, k, keys, ivw: (t, k)),   # do
+            full,                                                   # wave keys
+            full,                                                   # wave grps
+            full,                                                   # wave prio
+            full,                                                   # wave mask
+            pl.BlockSpec((1, G),
+                         lambda t, k, keys, ivw: (jnp.maximum(keys[t, k], 0),
+                                                  0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, G),
+                         lambda t, k, keys, ivw: (jnp.maximum(keys[t, k], 0),
+                                                  0)),
+            pl.BlockSpec((1, 1), lambda t, k, keys, ivw: (t, k)),
+        ),
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, fine, G),
+        grid_spec=grid_spec,
+        out_shape=(jax.ShapeDtypeStruct(table.shape, table.dtype),
+                   jax.ShapeDtypeStruct((T, K), jnp.uint32)),
+        input_output_aliases={9: 0},  # table is operand 9 counting prefetch
+        interpret=interpret,
+    )(keys, ivw, groups, p16, do, keys, groups, p16, do, table)

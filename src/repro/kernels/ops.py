@@ -22,6 +22,7 @@ import jax.numpy as jnp
 
 from repro.core.claimword import inv_wave as _inv_wave
 from repro.kernels import ref
+from repro.kernels.claim_probe import claim_probe_fused_pallas
 from repro.kernels.claim_scatter import claim_scatter_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.occ_commit import occ_commit_pallas
@@ -31,6 +32,7 @@ from repro.kernels.occ_validate import (claim_probe_pallas,
                                         occ_validate_dual_pallas,
                                         occ_validate_pallas)
 from repro.kernels.rglru_scan import rglru_pallas
+from repro.kernels.route_pack import route_pack_pallas
 from repro.kernels.rwkv6_scan import rwkv6_pallas
 from repro.kernels.segment_count import segment_count_pallas
 from repro.kernels.ts_gather import ts_gather_pallas
@@ -122,6 +124,22 @@ def claim_scatter(table, keys, groups, prio, do, wave, use_pallas=None):
         return claim_scatter_pallas(table, keys, groups, prio, do,
                                     _inv_wave(wave), interpret=_interp())
     return ref.claim_scatter(table, keys, groups, prio, do, wave)
+
+
+def claim_probe_fused(table, keys, groups, prio, do, wave, fine: bool,
+                      use_pallas=None):
+    if _use_pallas(use_pallas):
+        return claim_probe_fused_pallas(table, keys, groups, prio, do,
+                                        _inv_wave(wave), fine,
+                                        interpret=_interp())
+    return ref.claim_probe_fused(table, keys, groups, prio, do, wave, fine)
+
+
+def route_pack(owner, vals, n_dest: int, cap: int, fills, use_pallas=None):
+    if _use_pallas(use_pallas):
+        return route_pack_pallas(owner, vals, n_dest, cap, fills,
+                                 interpret=_interp())
+    return ref.route_pack(owner, vals, n_dest, cap, fills)
 
 
 def segment_count(keys, groups, G: int, mask, use_pallas=None):

@@ -4,7 +4,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.claimword import EMPTY_WORD, NO_PRIO, claim_word, live_prio
+from repro.core.claimword import (EMPTY_WORD, NO_PRIO, claim_word, inv_wave,
+                                  live_prio)
 from repro.core.mvstore import MV_EMPTY
 from repro.core.types import OOB_KEY  # negative indices wrap, OOB drops
 
@@ -91,6 +92,61 @@ def claim_scatter(table: jax.Array, keys: jax.Array, groups: jax.Array,
     k = jnp.where(do & (keys >= 0), keys, OOB_KEY)
     return table.at[k.reshape(-1), groups.reshape(-1)].min(
         words.reshape(-1), mode="drop")
+
+
+def claim_probe_fused(table: jax.Array, keys: jax.Array, groups: jax.Array,
+                      prio: jax.Array, do: jax.Array, wave: jax.Array,
+                      fine: bool) -> tuple[jax.Array, jax.Array]:
+    """Fused claim install + probe (the backend's ``claim_probe`` op).
+
+    Scatter-min the wave's packed claim words for the masked (write) ops,
+    then return the *post-install* strongest-claimant prio16 for EVERY op —
+    one op where the two-phase path ran ``claim_scatter`` followed by
+    ``claim_probe``.  Returns ``(table', wprio uint32[T, K])``.
+
+    Precondition (the engine invariant the Pallas kernel relies on): no
+    pre-existing table word carries a wave tag *newer* than ``wave`` —
+    cells hold claims from waves <= the current one (the monotone wave tag
+    of core/claimword.py; claim tables are claimed once per wave).  Under
+    it the probe of the final table equals min(probe of the pre-wave
+    table, strongest same-wave claimant of the cell), which is what lets
+    the kernel answer both from ONE row DMA per op.
+    """
+    table = claim_scatter(table, keys, groups, prio, do, wave)
+    return table, claim_probe(table, keys, groups, inv_wave(wave), fine)
+
+
+def route_pack(owner: jax.Array, vals: jax.Array, n_dest: int, cap: int,
+               fills) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Sort-free routing pack: per-destination fixed-capacity buffers.
+
+    ``owner`` int32[M] gives each op's destination (out-of-range = masked,
+    never packed); ``vals`` int32[W, M] carries W payload channels and
+    ``fills`` their W empty-cell fill values (static Python ints).  Ops are
+    placed in flat-op order by a counting/offset scan — op i lands at
+    ``buf[:, owner[i], pos[i]]`` where ``pos[i]`` counts earlier ops bound
+    for the same destination (exactly the placement a stable argsort by
+    owner would produce, without the sort).  Ops whose rank reaches ``cap``
+    are capacity-dropped.
+
+    Returns ``(buf int32[W, n_dest, cap], pos int32[M], took bool[M])``:
+    ``took`` is False for masked and capacity-dropped ops; ``pos`` stays
+    the in-destination rank even when dropped (0 for masked ops) so
+    verdict buffers can be *gathered* back per op — no return scatter.
+    """
+    W, M = vals.shape
+    d = jnp.arange(n_dest, dtype=jnp.int32)[:, None]
+    match = owner[None, :] == d                        # [n_dest, M]
+    prefix = jnp.cumsum(match, axis=1) - match         # rank within dest
+    pos = jnp.where(match, prefix, 0).sum(axis=0).astype(jnp.int32)
+    took = (match & (prefix < cap)).any(axis=0)
+    # Materialize via a unique-slot scatter (at most one op per cell, so it
+    # is order-free); dropped/masked ops land in the trimmed overflow cell.
+    slot = jnp.where(took, owner * cap + pos, n_dest * cap)
+    bufs = [jnp.full((n_dest * cap + 1,), fills[w], jnp.int32)
+            .at[slot].set(vals[w], mode="drop")[:-1].reshape(n_dest, cap)
+            for w in range(W)]
+    return jnp.stack(bufs), pos, took
 
 
 def segment_count(keys: jax.Array, groups: jax.Array, G: int,

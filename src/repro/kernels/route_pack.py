@@ -1,0 +1,72 @@
+"""Sort-free routing-pack kernel (the distributed wave's send side).
+
+The sharded engine used to build its per-destination exchange buffers with
+an ``argsort`` over op owners plus ``bincount``/``cumsum`` offsets — the one
+per-wave sort left in the repo after the local wave went sort-free.  This
+kernel replaces it with a counting/offset scan: the grid walks destinations,
+each step matches the wave's owner vector against its destination id, a
+cumulative count gives every matching op its in-destination rank (the exact
+placement a *stable* argsort by owner would produce), and a rank-vs-slot
+one-hot select materializes the destination's fixed-capacity buffer row for
+every payload channel at once.  The whole wave ([M] int32 owners + [W, M]
+payloads) sits in VMEM, so like segment_count this is an all-pairs-style
+compare with no sort, no O(n_records) table, and an order-free result.
+
+Ops whose rank reaches the capacity are dropped (``took`` False — their
+lane aborts, counted by the caller); masked ops carry an out-of-range owner
+and match no destination.  Per-destination ``pos``/``took`` rows are
+reduced to per-op vectors by the wrapper (sum/any over destinations — each
+op matches at most one), bit-identical to ``ref.route_pack``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(cap: int, fills, owner_ref, vals_ref, buf_ref, pos_ref,
+            took_ref):
+    d = pl.program_id(0)
+    own = owner_ref[0, :]                             # int32[M]
+    match = own == d
+    prefix = jnp.cumsum(match) - match                # rank within dest d
+    fit = match & (prefix < cap)
+    pos_ref[0, :] = jnp.where(match, prefix, 0).astype(jnp.int32)
+    took_ref[0, :] = fit
+    # One-hot (rank == slot) select: at most one op per buffer cell.
+    sel = fit[None, :] & (prefix[None, :]
+                          == jnp.arange(cap, dtype=jnp.int32)[:, None])
+    have = sel.any(axis=1)                            # bool[cap]
+    for w, fill in enumerate(fills):                  # W static channels
+        v = jnp.where(sel, vals_ref[w, :][None, :], 0).sum(axis=1)
+        buf_ref[w, 0, :] = jnp.where(have, v.astype(jnp.int32),
+                                     jnp.int32(fill))
+
+
+def route_pack_pallas(owner: jax.Array, vals: jax.Array, n_dest: int,
+                      cap: int, fills, interpret: bool = False
+                      ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """(buf [W, n_dest, cap], pos [M], took [M]) — see ref.route_pack."""
+    W, M = vals.shape
+    out = pl.pallas_call(
+        functools.partial(_kernel, cap, tuple(fills)),
+        grid=(n_dest,),
+        in_specs=[
+            pl.BlockSpec((1, M), lambda d: (0, 0)),       # owner (whole wave)
+            pl.BlockSpec((W, M), lambda d: (0, 0)),       # payload channels
+        ],
+        out_specs=(
+            pl.BlockSpec((W, 1, cap), lambda d: (0, d, 0)),
+            pl.BlockSpec((1, M), lambda d: (d, 0)),
+            pl.BlockSpec((1, M), lambda d: (d, 0)),
+        ),
+        out_shape=(jax.ShapeDtypeStruct((W, n_dest, cap), jnp.int32),
+                   jax.ShapeDtypeStruct((n_dest, M), jnp.int32),
+                   jax.ShapeDtypeStruct((n_dest, M), jnp.bool_)),
+        interpret=interpret,
+    )(owner.reshape(1, M), vals)
+    buf, pos_rows, took_rows = out
+    return buf, pos_rows.sum(axis=0).astype(jnp.int32), took_rows.any(axis=0)

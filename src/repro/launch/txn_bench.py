@@ -5,10 +5,12 @@
 
 The whole cc x granularity x lanes grid compiles to ONE XLA program
 (core/engine.py sweep, vmapped in lane buckets); ``--backend pallas`` routes
-every CC shared-state op (validate/probe/gather, claim/commit/timestamp
-scatters) through the TPU-native kernels via the backend surface of
-core/backend.py (interpret mode on CPU — see DESIGN.md section 5).  Each
-JSON row records the resolved backend and per-op kernel coverage.
+every CC shared-state op (the fused claim_probe pass, validate/gather,
+commit/timestamp scatters) through the TPU-native kernels via the
+twelve-op backend surface of core/backend.py (interpret mode on CPU — see
+DESIGN.md section 5).  Each JSON row records the resolved backend and
+per-op kernel coverage (CC_OPS), which benchmarks/perf_dashboard.py
+aggregates into reports/perf_dashboard.md.
 """
 from __future__ import annotations
 

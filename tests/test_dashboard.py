@@ -1,0 +1,77 @@
+"""benchmarks/perf_dashboard.py: JSON-row aggregation into the markdown
+perf dashboard (peak-point selection, kernel-op attribution cells, the
+distributed txn_scaling section)."""
+import json
+
+from benchmarks.perf_dashboard import (_ops_cell, load_rows, main,
+                                       render_markdown)
+
+MECH_ROWS = [
+    {"workload": "ycsb", "cc": "occ", "granularity": 1, "lanes": 16,
+     "throughput": 10.0, "abort_rate": 0.10, "backend": "pallas",
+     "kernel_ops": {"claim_probe": "pallas", "commit_install": "pallas",
+                    "segment_count": "pallas"}},
+    {"workload": "ycsb", "cc": "occ", "granularity": 1, "lanes": 64,
+     "throughput": 25.5, "abort_rate": 0.20, "backend": "pallas",
+     "kernel_ops": {"claim_probe": "pallas", "commit_install": "pallas",
+                    "segment_count": "pallas"}},
+    {"workload": "ycsb", "cc": "tictoc", "granularity": 0, "lanes": 64,
+     "throughput": 18.0, "abort_rate": 0.30, "backend": "jnp",
+     "kernel_ops": {"claim_probe": "xla", "ts_gather": "xla",
+                    "ts_install_max": "xla", "segment_count": "xla"}},
+]
+DIST_ROWS = [
+    {"shards": 0, "commits": 900, "waves_per_s": 50.0,
+     "coll_bytes_per_wave": 0, "backend": "jnp", "kernel_ops": {}},
+    {"shards": 8, "commits": 850, "waves_per_s": 12.5,
+     "coll_bytes_per_wave": 65536, "backend": "pallas",
+     "kernel_ops": {"route_pack": "pallas", "claim_probe": "pallas",
+                    "commit_install": "pallas"}},
+]
+
+
+def test_ops_cell_attribution():
+    assert _ops_cell({}) == "—"
+    assert _ops_cell({"a": "pallas", "b": "pallas"}) == "2/2 pallas"
+    assert _ops_cell({"a": "xla", "b": "xla"}) == "xla"
+    # a mixed map means a partial fallback — rendered loudly, per op
+    assert _ops_cell({"a": "pallas", "b": "xla"}) == "a:pallas, b:xla"
+
+
+def test_render_picks_peak_point_per_group():
+    rows = [dict(r, _src="BENCH_a.json") for r in MECH_ROWS]
+    md = render_markdown(rows, [])
+    assert "| ycsb | occ | fine | pallas | 25.500 | 64 | 20.00% " \
+           "| 3/3 pallas | BENCH_a.json |" in md
+    assert "10.000" not in md                     # dominated point dropped
+    assert "| ycsb | tictoc | coarse | jnp | 18.000 | 64 | 30.00% " \
+           "| xla | BENCH_a.json |" in md
+
+
+def test_render_distributed_section():
+    rows = [dict(r, _src="txn_scaling.json") for r in DIST_ROWS]
+    md = render_markdown([], rows)
+    assert "| 0 | 50.0 | 900 | 0.0 | jnp | — | txn_scaling.json |" in md
+    assert "| 8 | 12.5 | 850 | 64.0 | pallas | 3/3 pallas " \
+           "| txn_scaling.json |" in md
+
+
+def test_main_end_to_end(tmp_path):
+    """Glob -> split -> render -> write: the CLI path, on a synthetic
+    BENCH file mixing both row shapes plus an unreadable file."""
+    bench = tmp_path / "BENCH_mix.json"
+    bench.write_text(json.dumps(MECH_ROWS + DIST_ROWS))
+    (tmp_path / "BENCH_broken.json").write_text("{not json")
+    out = tmp_path / "reports" / "perf_dashboard.md"
+    assert main([str(tmp_path / "BENCH_*.json"), "--out", str(out)]) == 0
+    md = out.read_text()
+    assert "## Mechanisms" in md and "## Distributed engine" in md
+    assert "25.500" in md and "route_pack" not in md  # ops compressed
+    mech, dist = load_rows((str(tmp_path / "BENCH_*.json"),))
+    assert len(mech) == 3 and len(dist) == 2
+
+
+def test_main_no_rows(tmp_path):
+    out = tmp_path / "dash.md"
+    assert main([str(tmp_path / "nothing_*.json"), "--out", str(out)]) == 0
+    assert "No benchmark rows found" in out.read_text()

@@ -1,5 +1,13 @@
-"""Distributed txn engine: parity with the local engine, multi-shard
-execution in a subprocess with 8 host devices."""
+"""Distributed txn engine, routed through the kernel-backend surface:
+parity with the local engine on a 1-shard mesh, jnp vs pallas bit-identity,
+sort-free capacity-drop semantics, and multi-shard execution.
+
+The in-process tests build their mesh over every available host device, so
+running this file under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+(as CI does, in both jobs) exercises real multi-shard routing; without the
+flag they degrade to the 1-shard mesh.  The subprocess tests force 8
+devices regardless.
+"""
 import subprocess
 import sys
 import textwrap
@@ -9,6 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from hypothesis_compat import given, settings, st
 from repro.core import distributed as D
 from repro.core import types as t
 from repro.core.cc import occ_validate
@@ -17,27 +26,39 @@ from repro.core.types import CostModel, EngineConfig, TxnBatch, store_init
 EXACT = CostModel(opt_overlap=1.0, phase_overlap=1.0)
 
 
-def _batch(rng, T, K, N):
+def _batch(rng, T, K, N, with_nops=False):
     keys = jnp.asarray(rng.integers(0, N, (T, K), dtype=np.int32))
     groups = jnp.asarray(rng.integers(0, 2, (T, K), dtype=np.int32))
-    kinds = jnp.asarray(rng.choice([t.READ, t.WRITE], (T, K)).astype(
-        np.int32))
+    kinds = [t.READ, t.WRITE] + ([t.NOP] if with_nops else [])
+    kinds = jnp.asarray(rng.choice(kinds, (T, K)).astype(np.int32))
     return keys, groups, kinds
 
 
+def _full_mesh():
+    """One shard per available host device (8 under the CI XLA_FLAGS)."""
+    return jax.make_mesh((len(jax.devices()),), ("data",))
+
+
+def _run_wave(cfg, mesh, keys, groups, kinds, prio, wave=0):
+    wave_fn = jax.jit(D.make_wave_fn(cfg, mesh))
+    wts, claim_w = D.init_tables(cfg, mesh)
+    return wave_fn(keys, groups, kinds, prio, wts, claim_w,
+                   jnp.uint32(wave))
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
 @pytest.mark.parametrize("gran", [0, 1])
-def test_single_shard_parity_with_local_occ(gran):
+def test_single_shard_parity_with_local_occ(gran, backend):
+    """Acceptance criterion: the routed wave commits exactly the local
+    OCC engine's lanes on a 1-shard mesh, on either backend."""
     mesh = jax.make_mesh((1,), ("data",))
     N, T, K = 256, 16, 8
     cfg = D.DistConfig(n_records=N, n_groups=2, lanes_per_shard=T, slots=K,
-                       granularity=gran)
-    wave_fn = jax.jit(D.make_wave_fn(cfg, mesh))
+                       granularity=gran, backend=backend)
     rng = np.random.default_rng(0)
     keys, groups, kinds = _batch(rng, T, K, N)
     prio = jnp.asarray(rng.permutation(T).astype(np.uint32))
-    wts, claim_w = D.init_tables(cfg, mesh)
-    commit, wts2, _, stats = wave_fn(keys, groups, kinds, prio, wts,
-                                     claim_w, jnp.uint32(0))
+    commit, wts2, _, stats = _run_wave(cfg, mesh, keys, groups, kinds, prio)
 
     ecfg = EngineConfig(cc=t.CC_OCC, lanes=T, slots=K, n_records=N,
                         n_groups=2, n_cols=0, n_txn_types=1,
@@ -49,14 +70,59 @@ def test_single_shard_parity_with_local_occ(gran):
                      txn_type=jnp.zeros((T,), jnp.int32),
                      n_ops=jnp.full((T,), K, jnp.int32))
     _, res = occ_validate(store, batch, prio, jnp.uint32(0), ecfg)
-    store2 = res  # silence lint
     np.testing.assert_array_equal(np.asarray(commit),
                                   np.asarray(res.commit))
 
 
+@pytest.mark.parametrize("gran", [0, 1])
+@pytest.mark.parametrize("route_cap", [0, 8])
+def test_backend_bit_identity(gran, route_cap):
+    """Acceptance criterion: the distributed wave is bit-identical across
+    jnp/pallas backends — commit mask, installed versions, claim words, and
+    drop stats — over every host device, with and without capacity
+    overflow (route_cap=8 forces drops)."""
+    mesh = _full_mesh()
+    ns = D.n_shards(mesh)
+    N, Tl, K = 512, 8, 6
+    rng = np.random.default_rng(3)
+    keys, groups, kinds = _batch(rng, ns * Tl, K, N)
+    prio = jnp.asarray(rng.permutation(ns * Tl).astype(np.uint32))
+    outs = {}
+    for backend in ("jnp", "pallas"):
+        cfg = D.DistConfig(n_records=N, n_groups=2, lanes_per_shard=Tl,
+                           slots=K, granularity=gran, route_cap=route_cap,
+                           backend=backend)
+        outs[backend] = _run_wave(cfg, mesh, keys, groups, kinds, prio)
+    for a, b in zip(outs["jnp"], outs["pallas"]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    commit, _, _, stats = outs["jnp"]
+    assert int(commit.sum()) > 0
+    if route_cap:  # 1 shard x 48 ops (or more) vs cap 8: must drop
+        assert int(np.asarray(stats).reshape(ns, 4)[:, 3].sum()) > 0
+
+
+def test_no_argsort_and_no_direct_table_writes():
+    """Acceptance criterion, enforced on the source: the routed wave holds
+    no argsort and no direct claim/version table writes — every shard-local
+    table touch goes through backend.resolve(cfg)."""
+    import ast
+    import pathlib
+
+    import repro.core.distributed as dist
+    tree = ast.parse(pathlib.Path(dist.__file__).read_text())
+    # Code only — docstrings/comments may (and do) *mention* the old sort.
+    code = ast.unparse(ast.fix_missing_locations(
+        ast.Module(body=[n for n in tree.body
+                         if not isinstance(n, ast.Expr)], type_ignores=[])))
+    assert "argsort" not in code
+    assert "import claims" not in code   # no core/claims.py helpers either
+    assert ".at[" not in code            # no hand-rolled scatters
+    assert "kb.resolve" in code
+
+
 def test_multi_shard_runs_in_subprocess():
-    """8 host devices: the sharded wave must agree with the 1-shard run on
-    identical inputs (same global keys/prio => same commit set)."""
+    """8 host devices: the sharded wave must commit on 1-D and 2-D meshes
+    and stay bit-identical across backends on identical inputs."""
     prog = textwrap.dedent("""
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -69,24 +135,29 @@ def test_multi_shard_runs_in_subprocess():
         N, Tl, K = 512, 8, 6
         rng = np.random.default_rng(1)
 
-        results = []
         for shape, axes in (((8,), ("data",)), ((2, 4), ("pod", "data"))):
             mesh = jax.make_mesh(shape, axes)
             ns = D.n_shards(mesh)
-            cfg = D.DistConfig(n_records=N, n_groups=2,
-                               lanes_per_shard=Tl, slots=K)
             T = ns * Tl
             keys = jnp.asarray(rng.integers(0, N, (T, K), dtype=np.int32))
             groups = jnp.asarray(rng.integers(0, 2, (T, K), dtype=np.int32))
             kinds = jnp.asarray(
                 rng.choice([t.READ, t.WRITE], (T, K)).astype(np.int32))
             prio = jnp.asarray(rng.permutation(T).astype(np.uint32))
-            wts, cw = D.init_tables(cfg, mesh)
-            fn = jax.jit(D.make_wave_fn(cfg, mesh))
-            commit, wts2, _, stats = fn(keys, groups, kinds, prio, wts, cw,
-                                        jnp.uint32(0))
+            outs = {}
+            for backend in ("jnp", "pallas"):
+                cfg = D.DistConfig(n_records=N, n_groups=2,
+                                   lanes_per_shard=Tl, slots=K,
+                                   backend=backend)
+                wts, cw = D.init_tables(cfg, mesh)
+                fn = jax.jit(D.make_wave_fn(cfg, mesh))
+                outs[backend] = fn(keys, groups, kinds, prio, wts, cw,
+                                   jnp.uint32(0))
+            for a, b in zip(outs["jnp"], outs["pallas"]):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+            commit, wts2, _, stats = outs["jnp"]
             print(shape, "commits:", int(commit.sum()),
-                  "drops:", int(np.asarray(stats)[-1]))
+                  "drops:", int(np.asarray(stats).reshape(ns, 4)[:, 2].sum()))
             assert int(commit.sum()) > 0
         print("MULTI_SHARD_OK")
     """)
@@ -95,20 +166,106 @@ def test_multi_shard_runs_in_subprocess():
     assert "MULTI_SHARD_OK" in r.stdout, r.stdout + r.stderr
 
 
+# ------------------------------------------------- capacity-drop semantics
+def _numpy_drop_oracle(keys, kinds, cap):
+    """Per-lane capacity-drop ground truth for a 1-shard mesh: ops land in
+    flat-op order; a live op whose in-destination rank reaches cap drops."""
+    live = (np.asarray(kinds) != t.NOP).reshape(-1) & (
+        np.asarray(keys).reshape(-1) >= 0)
+    rank = np.cumsum(live) - live            # rank among live ops
+    dropped_op = live & (rank >= cap)
+    return dropped_op, dropped_op.reshape(keys.shape).any(axis=1)
+
+
 def test_capacity_drops_abort_lanes():
     mesh = jax.make_mesh((1,), ("data",))
     N, T, K = 64, 8, 8
     cfg = D.DistConfig(n_records=N, n_groups=2, lanes_per_shard=T, slots=K,
-                       route_cap=4)    # only 4 ops land; 8*8=64 sent
-    wave_fn = jax.jit(D.make_wave_fn(cfg, mesh))
+                       route_cap=8)    # only 8 ops land; 8*8=64 sent
     rng = np.random.default_rng(2)
     keys, groups, kinds = _batch(rng, T, K, N)
     prio = jnp.asarray(rng.permutation(T).astype(np.uint32))
-    wts, cw = D.init_tables(cfg, mesh)
-    commit, _, _, stats = wave_fn(keys, groups, kinds, prio, wts, cw,
-                                  jnp.uint32(0))
-    assert int(np.asarray(stats)[2]) > 0          # drops counted
-    assert int(commit.sum()) < T                  # dropped lanes aborted
+    commit, _, _, stats = _run_wave(cfg, mesh, keys, groups, kinds, prio)
+    dropped_op, dropped_lane = _numpy_drop_oracle(keys, kinds, 8)
+    stats = np.asarray(stats)
+    assert stats[2] == dropped_lane.sum() > 0     # lanes counted
+    assert stats[3] == dropped_op.sum() > 0       # ops counted
+    assert not np.asarray(commit)[dropped_lane].any()   # dropped => abort
+
+
+@pytest.fixture(scope="module")
+def drop_wave_fn():
+    """One jitted 1-shard wave shared by the property test's examples."""
+    mesh = jax.make_mesh((1,), ("data",))
+    cfg = D.DistConfig(n_records=64, n_groups=2, lanes_per_shard=8, slots=8,
+                       route_cap=8)
+    wave_fn = jax.jit(D.make_wave_fn(cfg, mesh))
+    wts0, cw0 = D.init_tables(cfg, mesh)
+    return lambda ks, gs, kd, pr: wave_fn(ks, gs, kd, pr, wts0, cw0,
+                                          jnp.uint32(0))
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_capacity_dropped_lanes_always_abort_and_are_counted(
+        drop_wave_fn, seed):
+    """Property: whatever the op mix (including NOP holes), every
+    capacity-dropped lane aborts, and the wave stats count exactly the
+    dropped lanes and ops of the flat-order routing oracle."""
+    T, K, N, cap = 8, 8, 64, 8
+    rng = np.random.default_rng(seed)
+    keys, groups, kinds = _batch(rng, T, K, N, with_nops=True)
+    prio = jnp.asarray(rng.permutation(T).astype(np.uint32))
+    commit, _, _, stats = drop_wave_fn(keys, groups, kinds, prio)
+    dropped_op, dropped_lane = _numpy_drop_oracle(keys, kinds, cap)
+    stats = np.asarray(stats)
+    assert stats[2] == dropped_lane.sum()
+    assert stats[3] == dropped_op.sum()
+    assert not np.asarray(commit)[dropped_lane].any()
+
+
+# -------------------------------------------------- DistConfig validation
+def test_route_cap_below_slots_rejected():
+    with pytest.raises(ValueError, match="route_cap"):
+        D.DistConfig(n_records=64, lanes_per_shard=8, slots=8, route_cap=4)
+
+
+def test_route_cap_negative_rejected():
+    with pytest.raises(ValueError, match="negative"):
+        D.DistConfig(n_records=64, slots=8, route_cap=-8)
+
+
+def test_route_cap_ragged_rejected():
+    """Explicit caps must honor the 8-alignment the auto path guarantees —
+    exchange buffers are the Pallas kernels' lane dimension."""
+    with pytest.raises(ValueError, match="multiple of 8"):
+        D.DistConfig(n_records=64, slots=8, route_cap=12)
+
+
+def test_unknown_backend_rejected():
+    with pytest.raises(ValueError, match="backend"):
+        D.DistConfig(n_records=64, backend="tpu")
+
+
+def test_wide_group_wire_format_rejected():
+    with pytest.raises(ValueError, match="n_groups"):
+        D.DistConfig(n_records=64, n_groups=3)
+
+
+def test_auto_cap_is_8_aligned_and_fits_one_lane():
+    """The auto capacity rounds up to a multiple of 8 (Pallas lane tiling
+    never sees ragged exchange buffers) and never drops below slots — one
+    lane routing its whole transaction to a single shard always fits, the
+    same invariant the explicit-cap validation enforces.  Explicit >= slots
+    caps pass through."""
+    for T, K, ns in ((8, 6, 8), (64, 16, 3), (5, 3, 7), (1, 1, 1),
+                     (1, 16, 8)):       # 4x fair share = 8 < slots = 16
+        cfg = D.DistConfig(n_records=64, lanes_per_shard=T, slots=K)
+        cap = cfg.cap(ns)
+        assert cap % 8 == 0 and cap >= 8
+        assert cap >= K
+        assert cap >= 4 * T * K // ns     # the 4x-fair-share floor itself
+    assert D.DistConfig(n_records=64, slots=8, route_cap=8).cap(4) == 8
 
 
 def test_moe_ep_shardmap_matches_reference_multidevice():

@@ -119,6 +119,78 @@ def test_claim_scatter_with_duplicates(T, K, N, G):
 
 @pytest.mark.parametrize("T,K,N,G", [(4, 8, 64, 2), (6, 3, 17, 1),
                                      (8, 16, 16, 2)])
+@pytest.mark.parametrize("fine", [True, False])
+def test_claim_probe_fused_with_duplicates(T, K, N, G, fine):
+    """Fused install + probe vs the two-phase oracle: the returned table
+    must equal claim_scatter's and the returned probe must equal a probe of
+    that POST-install table — duplicate cells (keys drawn from N//2), reads
+    probing cells written this wave, and masked ops included.  Table words
+    respect the monotone-wave-tag precondition (ref.claim_probe_fused)."""
+    from repro.core.claimword import EMPTY_WORD, inv_wave
+    wave = jnp.uint32(5)
+    ivw = int(inv_wave(wave))
+    # plausible table: claims from waves <= current (tag >= ivw) + empties
+    tag = RNG.integers(ivw, 0x10000, (N, G))
+    words = (tag << 16 | RNG.integers(0, 2 ** 16, (N, G))).astype(np.uint32)
+    words[RNG.random((N, G)) < 0.3] = EMPTY_WORD
+    table = jnp.asarray(words)
+    keys = jnp.asarray(RNG.integers(-1, max(N // 2, 1), (T, K),
+                                    dtype=np.int32))
+    groups = jnp.asarray(RNG.integers(0, G, (T, K), dtype=np.int32))
+    prio = jnp.asarray(RNG.integers(0, 2 ** 16, (T, K), dtype=np.uint32))
+    do = jnp.asarray(RNG.random((T, K)) < 0.6)
+    a_t, a_p = ops.claim_probe_fused(table, keys, groups, prio, do, wave,
+                                     fine, use_pallas=True)
+    b_t, b_p = ref.claim_probe_fused(table, keys, groups, prio, do, wave,
+                                     fine)
+    np.testing.assert_array_equal(np.asarray(a_t), np.asarray(b_t))
+    np.testing.assert_array_equal(np.asarray(a_p), np.asarray(b_p))
+    # the fused op IS the claim_scatter + post-install probe pair
+    np.testing.assert_array_equal(
+        np.asarray(b_t),
+        np.asarray(ref.claim_scatter(table, keys, groups, prio, do, wave)))
+    np.testing.assert_array_equal(
+        np.asarray(b_p),
+        np.asarray(ref.claim_probe(b_t, keys, groups, inv_wave(wave),
+                                   fine)))
+
+
+@pytest.mark.parametrize("M,ns,cap", [(48, 4, 8), (64, 8, 8), (33, 3, 16),
+                                      (16, 1, 8)])
+def test_route_pack(M, ns, cap):
+    """Sort-free pack vs the counting oracle: duplicate destinations force
+    in-destination ranking, M > ns*cap forces capacity drops, owner == ns
+    exercises masked ops.  Placement must equal a stable argsort by owner."""
+    owner = jnp.asarray(RNG.integers(0, ns + 1, M).astype(np.int32))
+    vals = jnp.asarray(RNG.integers(-4, 1000, (3, M)).astype(np.int32))
+    fills = (0x7FFFFFFF, 0x7FF8, -1)
+    a_buf, a_pos, a_took = ops.route_pack(owner, vals, ns, cap, fills,
+                                          use_pallas=True)
+    b_buf, b_pos, b_took = ref.route_pack(owner, vals, ns, cap, fills)
+    np.testing.assert_array_equal(np.asarray(a_buf), np.asarray(b_buf))
+    np.testing.assert_array_equal(np.asarray(a_pos), np.asarray(b_pos))
+    np.testing.assert_array_equal(np.asarray(a_took), np.asarray(b_took))
+    # independent oracle: stable argsort placement
+    own = np.asarray(owner)
+    vs = np.asarray(vals)
+    want = np.stack([np.full((ns, cap), f, np.int32) for f in fills])
+    for i in np.argsort(own, kind="stable"):
+        d = own[i]
+        if d >= ns:
+            assert not np.asarray(b_took)[i]
+            continue
+        p = int(np.asarray(b_pos)[i])
+        assert p == (own[:i] == d).sum()
+        if p < cap:
+            assert np.asarray(b_took)[i]
+            want[:, d, p] = vs[:, i]
+        else:
+            assert not np.asarray(b_took)[i]
+    np.testing.assert_array_equal(np.asarray(b_buf), want)
+
+
+@pytest.mark.parametrize("T,K,N,G", [(4, 8, 64, 2), (6, 3, 17, 1),
+                                     (8, 16, 16, 2)])
 def test_segment_count_with_duplicates(T, K, N, G):
     """All-pairs same-cell counts vs the sort-based oracle; keys drawn from
     N//2 force duplicate cells, sparse masks force sentinel handling."""

@@ -124,25 +124,31 @@ def test_txn_bench_grid_schema():
 
 def test_txn_bench_kernel_ops_attribution():
     """Pallas rows must name the ops that actually ran as kernels, per
-    mechanism (validate for OCC, probe/ts_gather/ts_install_max/
-    segment_count for TicToc, validate_dual for AutoGran, the mv ring ops
-    for the multi-version pair)."""
-    from repro.core.backend import kernel_coverage
+    mechanism: the probe family (OCC, TicToc, 2PL, SwissTM, Adaptive) runs
+    the FUSED claim_probe — the separate claim_scatter + probe pair is gone
+    from their coverage — while AutoGran keeps validate_dual and the
+    multi-version pair keeps its claim channels + mv ring ops."""
+    from repro.core.backend import dist_kernel_coverage, kernel_coverage
     occ_ops = kernel_coverage("pallas", t.CC_OCC)
     tic_ops = kernel_coverage("pallas", t.CC_TICTOC)
     ag_ops = kernel_coverage("pallas", t.CC_AUTOGRAN)
     mv_ops = kernel_coverage("pallas", t.CC_MVCC)
     # every mechanism's wave also counts same-row contention through
     # segment_count (the engine cost model) — no XLA sort on the pallas path
-    assert occ_ops == {"validate": "pallas", "claim_scatter": "pallas",
-                       "commit_install": "pallas",
+    assert occ_ops == {"claim_probe": "pallas", "commit_install": "pallas",
                        "segment_count": "pallas"}
-    assert tic_ops == {"probe": "pallas", "ts_gather": "pallas",
-                       "claim_scatter": "pallas", "ts_install_max": "pallas",
-                       "segment_count": "pallas"}
+    assert tic_ops == {"claim_probe": "pallas", "ts_gather": "pallas",
+                       "ts_install_max": "pallas", "segment_count": "pallas"}
     assert ag_ops == {"validate_dual": "pallas", "claim_scatter": "pallas",
                       "commit_install": "pallas", "segment_count": "pallas"}
     assert mv_ops == {"validate": "pallas", "claim_scatter": "pallas",
                       "mv_gather": "pallas", "mv_install": "pallas",
                       "segment_count": "pallas"}
     assert kernel_coverage("pallas", t.CC_MVOCC) == mv_ops
+    for cc in (t.CC_2PL, t.CC_SWISS, t.CC_ADAPTIVE):
+        assert kernel_coverage("pallas", cc) == occ_ops
+    # the distributed wave's shard-local coverage (benchmarks/txn_scaling)
+    assert dist_kernel_coverage("pallas") == {
+        "route_pack": "pallas", "claim_probe": "pallas",
+        "commit_install": "pallas"}
+    assert set(dist_kernel_coverage("jnp").values()) == {"xla"}
