@@ -9,8 +9,13 @@ sweeps).  Two row shapes are understood:
 - mechanism rows (txn_bench / figure sweeps: ``cc`` key) — summarized per
   (workload, cc, granularity, backend) at their peak-throughput lane
   count, with abort rate and per-op pallas/xla kernel attribution;
-- distributed rows (txn_scaling: ``shards`` key) — waves/s, collective
-  bytes per wave, and the shard-local op attribution.
+- distributed rows (txn_scaling: ``shards`` key) — waves/s, commit and
+  read-only splits, collective bytes per wave, and the shard-local op
+  attribution.
+
+Partial/truncated rows of a known shape (a killed bench run, a hand-edited
+file) are never fatal: they are skipped with a warning line in the report
+instead of aborting the whole dashboard.
 
     PYTHONPATH=src python -m benchmarks.perf_dashboard \
         [paths-or-globs ...] [--out reports/perf_dashboard.md]
@@ -25,9 +30,40 @@ import os
 DEFAULT_GLOBS = ("BENCH_*.json", "reports/*.json")
 
 
+def _num(x) -> bool:
+    """True for real JSON numbers (bool is an int in Python — excluded)."""
+    return isinstance(x, (int, float)) and not isinstance(x, bool)
+
+
+def _fnum(r: dict, key: str, default=0):
+    """Numeric field or ``default`` — malformed values never crash a cell."""
+    v = r.get(key, default)
+    return v if _num(v) else default
+
+
+def _mech_problem(r) -> str | None:
+    """Why a mechanism-shaped row can't be summarized (None = fine)."""
+    if not isinstance(r, dict):
+        return "not a JSON object"
+    if not _num(r.get("throughput")):
+        return "missing/non-numeric 'throughput'"
+    return None
+
+
+def _dist_problem(r) -> str | None:
+    """Why a distributed-shaped row can't be summarized (None = fine)."""
+    if not isinstance(r, dict):
+        return "not a JSON object"
+    if not _num(r.get("shards")):
+        return "missing/non-numeric 'shards'"
+    return None
+
+
 def load_rows(patterns=DEFAULT_GLOBS) -> tuple[list, list]:
     """Expand globs, read every JSON list, split (mechanism, distributed)
-    rows; anything else (unknown schema) is skipped."""
+    rows by shape (``cc`` vs ``shards`` key); rows of neither shape
+    (unknown schema) are skipped.  Shape-matched rows are NOT validated
+    here — render_markdown skips malformed ones with a report warning."""
     mech, dist = [], []
     for pat in patterns:
         for path in sorted(glob.glob(pat)):
@@ -42,10 +78,12 @@ def load_rows(patterns=DEFAULT_GLOBS) -> tuple[list, list]:
                 if not isinstance(r, dict):
                     continue
                 r = dict(r, _src=os.path.basename(path))
-                if "cc" in r and "throughput" in r:
-                    mech.append(r)
-                elif "shards" in r:
+                # shards discriminates first: distributed rows also carry
+                # a cc field since the MV wave went sharded
+                if "shards" in r:
                     dist.append(r)
+                elif "cc" in r:
+                    mech.append(r)
     return mech, dist
 
 
@@ -67,17 +105,38 @@ def _gran(g) -> str:
     return "fine" if g else "coarse"
 
 
+def _src_of(r) -> str:
+    return r.get("_src", "?") if isinstance(r, dict) else "?"
+
+
 def render_markdown(mech: list, dist: list) -> str:
     out = ["# Perf dashboard", "",
            "Aggregated from benchmark JSON rows (BENCH_*.json + "
            "reports/*.json); regenerate with "
            "`PYTHONPATH=src python -m benchmarks.perf_dashboard`.", ""]
 
-    if mech:
+    # Partial/malformed rows (truncated bench files, killed runs) are
+    # skipped and reported, never fatal.
+    skipped: list[tuple[str, str]] = []
+    mech_ok, dist_ok = [], []
+    for r in mech:
+        p = _mech_problem(r)
+        if p:
+            skipped.append((_src_of(r), f"mechanism row: {p}"))
+        else:
+            mech_ok.append(r)
+    for r in dist:
+        p = _dist_problem(r)
+        if p:
+            skipped.append((_src_of(r), f"distributed row: {p}"))
+        else:
+            dist_ok.append(r)
+
+    if mech_ok:
         groups: dict = {}
-        for r in mech:
-            key = (r.get("workload", "?"), r["cc"], r.get("granularity", 1),
-                   r.get("backend", "?"))
+        for r in mech_ok:
+            key = (r.get("workload", "?"), r.get("cc", "?"),
+                   r.get("granularity", 1), r.get("backend", "?"))
             best = groups.get(key)
             if best is None or r["throughput"] > best["throughput"]:
                 groups[key] = r
@@ -86,32 +145,44 @@ def render_markdown(mech: list, dist: list) -> str:
                 "| workload | cc | granularity | backend | peak thpt "
                 "(txn/us) | @lanes | abort rate | kernel ops | source |",
                 "|---|---|---|---|---|---|---|---|---|"]
-        for key in sorted(groups):
+        for key in sorted(groups, key=str):
             r = groups[key]
             out.append(
                 f"| {key[0]} | {key[1]} | {_gran(key[2])} | {key[3]} "
                 f"| {r['throughput']:.3f} | {r.get('lanes', '?')} "
-                f"| {100 * r.get('abort_rate', 0):.2f}% "
+                f"| {100 * _fnum(r, 'abort_rate'):.2f}% "
                 f"| {_ops_cell(r.get('kernel_ops', {}))} "
-                f"| {r['_src']} |")
+                f"| {_src_of(r)} |")
         out.append("")
 
-    if dist:
+    if dist_ok:
         out += ["## Distributed engine (txn_scaling; shards=0 = local "
                 "sweep() anchor)", "",
-                "| shards | waves/s | commits | coll KiB/wave | backend "
-                "| kernel ops | source |",
-                "|---|---|---|---|---|---|---|"]
-        for r in sorted(dist, key=lambda r: (r["_src"], r["shards"])):
+                "| shards | cc | waves/s | commits | ro commits | ro "
+                "aborts | coll KiB/wave | backend | kernel ops | source |",
+                "|---|---|---|---|---|---|---|---|---|---|"]
+        for r in sorted(dist_ok,
+                        key=lambda r: (_src_of(r), r.get("cc", "occ"),
+                                       r["shards"])):
             out.append(
-                f"| {r['shards']} | {r.get('waves_per_s', 0):.1f} "
+                f"| {r['shards']} | {r.get('cc', 'occ')} "
+                f"| {_fnum(r, 'waves_per_s'):.1f} "
                 f"| {r.get('commits', '?')} "
-                f"| {r.get('coll_bytes_per_wave', 0) / 1024:.1f} "
+                f"| {r.get('ro_commits', '?')} "
+                f"| {r.get('ro_aborts', '?')} "
+                f"| {_fnum(r, 'coll_bytes_per_wave') / 1024:.1f} "
                 f"| {r.get('backend', '?')} "
-                f"| {_ops_cell(r.get('kernel_ops', {}))} | {r['_src']} |")
+                f"| {_ops_cell(r.get('kernel_ops', {}))} | {_src_of(r)} |")
         out.append("")
 
-    if not mech and not dist:
+    if skipped:
+        out += [f"## Skipped rows ({len(skipped)})", "",
+                "Malformed/partial rows found while aggregating — "
+                "regenerate their source files:", ""]
+        out += [f"- ⚠ `{src}`: {why}" for src, why in skipped]
+        out.append("")
+
+    if not mech_ok and not dist_ok and not skipped:
         out += ["No benchmark rows found — run `python -m "
                 "repro.launch.txn_bench --json BENCH_x.json` or any "
                 "`benchmarks/` figure script first.", ""]

@@ -1,16 +1,20 @@
 """Beyond-paper: distributed txn-engine scaling (the paper's section 5:
 "perform similar evaluations on distributed CC mechanisms").
 
-Runs the shard_map OCC wave on 1/2/4/8 host devices (same *global* lane and
+Runs the shard_map wave on 1/2/4/8 host devices (same *global* lane and
 record counts), measuring committed txns per second of wall time and the
-per-wave collective bytes — the weak-scaling story of the routed engine.
-A ``shards=0`` anchor row first runs the single-device engine through the
-vmapped ``sweep()`` grid runner at the same global lane count, so the table
-reads "local engine vs N-shard routed engine".  ``REPRO_TXN_BACKEND``
-("jnp" | "pallas") selects the kernel-backend surface for BOTH engines —
-the distributed wave routes its shard-local route/claim/probe/install
-through core/backend.py like the local one — and every row records the
-resolved backend plus per-op kernel attribution.
+per-wave collective bytes — the weak-scaling story of the routed engine —
+for BOTH the single-version mechanism (occ) and the sharded multi-version
+ring (mvcc: snapshot reads + first-committer-wins over the distributed
+version ring of core/mvstore.py).  A ``shards=0`` anchor row first runs
+the single-device engine through the vmapped ``sweep()`` grid runner at
+the same global lane count, so the table reads "local engine vs N-shard
+routed engine".  ``REPRO_TXN_BACKEND`` ("jnp" | "pallas") selects the
+kernel-backend surface for BOTH engines — the distributed wave routes its
+shard-local route/claim/probe/gather/install through core/backend.py like
+the local one — and every row records the resolved backend, the per-op
+kernel attribution, and the read-only commit/abort split the distributed
+stats vector carries (core/distributed.py STATS_LEN layout).
 
     PYTHONPATH=src python -m benchmarks.txn_scaling
 """
@@ -52,64 +56,78 @@ PROG = textwrap.dedent("""
     t0 = time.time()
     (pt,) = engine_sweep(cfg, wl, WAVES, ccs=[t.CC_OCC], grans=(1,),
                          lane_counts=(GLOBAL_LANES,))
-    rows.append({"shards": 0, "commits": pt.commits,
+    rows.append({"shards": 0, "cc": "occ", "commits": pt.commits,
                  "waves_per_s": WAVES / (time.time() - t0),
                  "coll_bytes_per_wave": 0,
+                 # The local engine's read-only split (SweepPoint) rides
+                 # the row like the distributed stats split does.
+                 "ro_commits": pt.ro_commits, "ro_aborts": pt.ro_aborts,
                  # Attribution: which engine the anchor actually ran on.
                  "backend": BACKEND,
                  "kernel_ops": kernel_coverage(BACKEND, t.CC_OCC)})
     print(f"local  : {rows[0]['waves_per_s']:6.1f} waves/s  "
           f"{pt.commits} commits  (sweep() anchor, no collectives)")
 
-    for ns in (1, 2, 4, 8):
-        mesh = jax.make_mesh((ns,), ("data",))
-        cfg = D.DistConfig(n_records=N, n_groups=2,
-                           lanes_per_shard=GLOBAL_LANES // ns, slots=K,
-                           backend=BACKEND)
-        wave = jax.jit(D.make_wave_fn(cfg, mesh))
-        rng = np.random.default_rng(0)
-        keys = jnp.asarray(rng.integers(0, N, (GLOBAL_LANES, K),
-                                        dtype=np.int32))
-        groups = jnp.asarray(rng.integers(0, 2, (GLOBAL_LANES, K),
-                                          dtype=np.int32))
-        kinds = jnp.asarray(rng.choice([t.READ, t.WRITE],
-                                       (GLOBAL_LANES, K)).astype(np.int32))
-        wts, cw = D.init_tables(cfg, mesh)
-        coll = collective_bytes_from_hlo(
-            jax.jit(D.make_wave_fn(cfg, mesh)).lower(
+    from repro.core.backend import dist_kernel_coverage
+    for cc in ("occ", "mvcc"):
+        for ns in (1, 2, 4, 8):
+            mesh = jax.make_mesh((ns,), ("data",))
+            cfg = D.DistConfig(n_records=N, n_groups=2,
+                               lanes_per_shard=GLOBAL_LANES // ns, slots=K,
+                               backend=BACKEND, cc=cc,
+                               mv_depth=4 if cc != "occ" else 0)
+            rng = np.random.default_rng(0)
+            keys = jnp.asarray(rng.integers(0, N, (GLOBAL_LANES, K),
+                                            dtype=np.int32))
+            groups = jnp.asarray(rng.integers(0, 2, (GLOBAL_LANES, K),
+                                              dtype=np.int32))
+            kinds = jnp.asarray(rng.choice(
+                [t.READ, t.WRITE],
+                (GLOBAL_LANES, K)).astype(np.int32))
+            tables = D.init_tables(cfg, mesh)
+            # ONE compile per grid point: the executable answers the HLO
+            # collective-bytes parse AND runs the timed loop (shapes are
+            # fixed across waves), so waves/s never includes compile time.
+            wave = jax.jit(D.make_wave_fn(cfg, mesh)).lower(
                 keys, groups, kinds,
-                jnp.zeros((GLOBAL_LANES,), jnp.uint32), wts, cw,
-                jnp.uint32(0)).compile().as_text())
-        # timed waves (fresh priorities per wave)
-        commits = 0
-        t0 = time.time()
-        for w in range(WAVES):
-            prio = jnp.asarray(
-                np.random.default_rng(w).permutation(GLOBAL_LANES)
-                .astype(np.uint32))
-            c, wts, cw, stats = wave(keys, groups, kinds, prio, wts, cw,
-                                     jnp.uint32(w))
-            commits += int(c.sum())
-        jax.block_until_ready(wts)
-        dt = time.time() - t0
-        from repro.core.backend import dist_kernel_coverage
-        rows.append({"shards": ns, "commits": commits,
-                     "waves_per_s": WAVES / dt,
-                     "coll_bytes_per_wave": coll,
-                     # The routed engine claims/probes/installs through the
-                     # same backend surface as the local one; only the
-                     # exchange itself stays shard_map + XLA collectives.
-                     "backend": BACKEND,
-                     "kernel_ops": dist_kernel_coverage(BACKEND)})
-        print(f"shards={ns}: {WAVES/dt:6.1f} waves/s  "
-              f"{commits} commits  coll/wave={coll/1024:.1f} KiB")
+                jnp.zeros((GLOBAL_LANES,), jnp.uint32), tables,
+                jnp.uint32(0)).compile()
+            coll = collective_bytes_from_hlo(wave.as_text())
+            # timed waves (fresh priorities per wave)
+            commits = ro_c = ro_a = 0
+            t0 = time.time()
+            for w in range(WAVES):
+                prio = jnp.asarray(
+                    np.random.default_rng(w).permutation(GLOBAL_LANES)
+                    .astype(np.uint32))
+                c, tables, stats = wave(keys, groups, kinds, prio, tables,
+                                        jnp.uint32(w))
+                commits += int(c.sum())
+                s = np.asarray(stats).reshape(ns, D.STATS_LEN)
+                ro_c += int(s[:, D.STAT_RO_COMMITS].sum())
+                ro_a += int(s[:, D.STAT_RO_ABORTS].sum())
+            jax.block_until_ready(tables)
+            dt = time.time() - t0
+            rows.append({"shards": ns, "cc": cc, "commits": commits,
+                         "waves_per_s": WAVES / dt,
+                         "coll_bytes_per_wave": coll,
+                         "ro_commits": ro_c, "ro_aborts": ro_a,
+                         # The routed engine claims/probes/gathers/installs
+                         # through the same backend surface as the local
+                         # one; only the exchange itself stays shard_map +
+                         # XLA collectives.
+                         "backend": BACKEND,
+                         "kernel_ops": dist_kernel_coverage(BACKEND, cc)})
+            print(f"{cc:4s} shards={ns}: {WAVES/dt:6.1f} waves/s  "
+                  f"{commits} commits  ro={ro_c}/{ro_a}  "
+                  f"coll/wave={coll/1024:.1f} KiB")
     print("JSON:" + json.dumps(rows))
 """)
 
 
 def main(argv=None):
     r = subprocess.run([sys.executable, "-c", PROG], capture_output=True,
-                       text=True, cwd=".", timeout=1200)
+                       text=True, cwd=".", timeout=2400)
     print(r.stdout)
     if r.returncode:
         print(r.stderr[-2000:], file=sys.stderr)

@@ -221,10 +221,13 @@ CC_OPS = {
 }
 
 #: The surface ops one shard-local distributed wave routes through the
-#: backend (core/distributed.py): the sort-free exchange pack, the fused
-#: owner-side claim install + probe, and the install return-trip's version
-#: bumps.  Recorded by benchmarks/txn_scaling.py rows.
+#: backend (core/distributed.py), per mechanism: the sort-free exchange
+#: pack and the fused owner-side claim install + probe for everyone, plus
+#: the install return-trip — ``commit_install`` version bumps for occ,
+#: ``mv_gather`` snapshot reads + ``mv_install`` ring publishes for the
+#: multi-version pair.  Recorded by benchmarks/txn_scaling.py rows.
 DIST_OPS = ("route_pack", "claim_probe", "commit_install")
+DIST_MV_OPS = ("route_pack", "claim_probe", "mv_gather", "mv_install")
 
 
 def resolve(cfg) -> JnpBackend | PallasBackend:
@@ -240,7 +243,9 @@ def kernel_coverage(backend_name: str, cc: int) -> dict:
     return {op: engine for op in CC_OPS[cc]}
 
 
-def dist_kernel_coverage(backend_name: str) -> dict:
-    """Kernel attribution for the distributed wave's shard-local ops."""
+def dist_kernel_coverage(backend_name: str, cc: str = "occ") -> dict:
+    """Kernel attribution for the distributed wave's shard-local ops
+    (``cc`` is the DistConfig mechanism string: occ / mvcc / mvocc)."""
     engine = "pallas" if backend_name == "pallas" else "xla"
-    return {op: engine for op in DIST_OPS}
+    ops = DIST_MV_OPS if cc in ("mvcc", "mvocc") else DIST_OPS
+    return {op: engine for op in ops}

@@ -97,9 +97,10 @@ def wave_validate(store: StoreState, batch: TxnBatch, prio, wave,
 
     # Snapshot visibility: reads select their version; a reclaimed snapshot
     # aborts deterministically (never thinned — it is store state, not a
-    # racing-window event).  With wave-fresh snapshots ok is always True.
+    # racing-window event).  With wave-fresh snapshots (snapshot_age=0) ok
+    # is always True; aged snapshots can outlive the ring and abort here.
     _, ok = be.mv_gather(store.mv_begin, batch.op_key, batch.op_group,
-                         mvstore.snapshot_ts(wave), fine)
+                         mvstore.snapshot_ts(wave, cfg.snapshot_age), fine)
     conflict = conflict | (rd & ~ok)
 
     res = base.result_from_conflicts(batch, conflict, eager=False)

@@ -54,7 +54,7 @@ def wave_validate(store: StoreState, batch: TxnBatch, prio, wave,
     conflict = conflict & (u < cfg.cost.opt_overlap)   # window thinning
 
     _, ok = be.mv_gather(store.mv_begin, batch.op_key, batch.op_group,
-                         mvstore.snapshot_ts(wave), fine)
+                         mvstore.snapshot_ts(wave, cfg.snapshot_age), fine)
     conflict = conflict | (rd & ~ok)
 
     res = base.result_from_conflicts(batch, conflict, eager=False)

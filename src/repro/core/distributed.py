@@ -1,11 +1,12 @@
-"""Distributed OCC: the paper's section-5 future work ("evaluate in a
+"""Distributed CC: the paper's section-5 future work ("evaluate in a
 distributed setting"), mapped onto a TPU mesh with shard_map + all_to_all.
 
 Layout
 ------
 The record space is range-sharded over every mesh axis combined (an
 ``n_shards``-way partition); each device owns its slice of the version /
-claim tables.  Lanes (transactions) are sharded the same way.  One wave is:
+claim / multi-version tables.  Lanes (transactions) are sharded the same
+way.  One wave is:
 
   1. route    every op is routed to its key's owner shard.  Per-destination
               fixed-capacity buffers [n_shards, cap, words] are built by the
@@ -15,20 +16,35 @@ claim tables.  Lanes (transactions) are sharded the same way.  One wave is:
               ``all_to_all``.  Ops beyond a pair's capacity abort their
               lane (counted; capacity is sized for the workload).
   2. claim    owners run the backend's fused ``claim_probe`` op on their
-              claim-table shard: ONE pass min-installs the routed write
+              claim-table shard(s): ONE pass min-installs the routed write
               claims and answers every routed op's strongest-claimant
               probe — the same reset-free wave-tag tables as the local
-              engine (core/claims.py), halved kernel launches and claim-row
-              HBM round-trips (kernels/claim_probe.py).
+              engine (core/claims.py).  The MV mechanisms claim TWO
+              channels (all writes in claim_w, plain WRITEs in claim_r —
+              the ADD-commutes rule of cc/base.plain_write_claims) and
+              additionally run ``mv_gather`` on their shard of the version
+              ring: the snapshot-visibility read that replaces read
+              validation, honoring ``snapshot_age`` (aged snapshots that
+              outlive the ring report reclamation and abort — never read a
+              recycled slot).
   3. verdict  per-op conflict flags return through the inverse all_to_all;
               the sender *gathers* its verdicts back by each op's
               (owner, pos) routing coordinates from route_pack — no return
               scatter.  A lane commits iff none of its routed ops
-              conflicted and none were capacity-dropped.
-  4. install  committed write ops advance their (record, group) version
-              through the backend's ``commit_install`` op — the commit bit
-              rides the return trip, so installation reuses the routed
-              buffer (no second exchange).
+              conflicted and none were capacity-dropped.  The MV verdict
+              byte carries two bits: unconditional conflicts (FCW
+              write-write + snapshot reclamation) and the read-validation
+              bit, which only mvocc applies — and only to lanes that also
+              write, a fact the *sender* knows (read-only lanes serialize
+              at their snapshot; cc/mvocc.py), so it never travels.
+  4. install  committed write ops publish through the backend on the same
+              return trip (the commit bit rides the inverse exchange, so
+              installation reuses the routed buffer — no second exchange):
+              ``commit_install`` bumps (record, group) versions for occ;
+              ``mv_install`` claims one ring slot per written record and
+              publishes begin timestamps for mvcc/mvocc (concurrent group
+              writers of a record merge into the slot, exactly the local
+              mv_commit).
 
 Every shard-local table touch goes through ``backend.resolve(cfg)``
 (core/backend.py): ``DistConfig.backend`` selects XLA gather/scatter or the
@@ -37,12 +53,22 @@ sharded wave is the local wave's op pipeline behind one exchange
 (DESIGN.md section 10).
 
 Granularity (the paper's mechanism) is carried per op exactly as in the
-local engine: coarse probes the whole row, fine probes the op's group.
+local engine: coarse probes the whole row (and the MV visibility check
+reduces each ring slot over the row), fine probes the op's group.
 
-In-wave conflict semantics match the local engine (DESIGN.md section 2):
-a read aborts iff a *higher-priority* lane claimed its cell this wave,
-regardless of that lane's own fate — STO's non-waiting prevention — which is
-what makes one round trip sufficient.
+In-wave conflict semantics match the local engine (DESIGN.md sections 2
+and 9): a single-version read aborts iff a *higher-priority* lane claimed
+its cell this wave, regardless of that lane's own fate — STO's non-waiting
+prevention — which is what makes one round trip sufficient; an MV read
+never aborts on writers, only on reclamation (plus mvocc's update-lane
+read validation).
+
+State threading: ``make_wave_fn`` takes and returns one ``tables`` tuple
+whose layout depends on the mechanism — ``(wts, claim_w)`` for occ,
+``(claim_w, claim_r, mv_begin, mv_head)`` for mvcc/mvocc (the version ring
+of core/mvstore.py, range-sharded like every other table).  Values are not
+tracked on the distributed path (``mv_vals`` stays local-engine-only, as in
+the throughput benchmarks — the wire carries no value channel).
 """
 from __future__ import annotations
 
@@ -57,6 +83,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core.compat import shard_map
 
 from repro.core import backend as kb
+from repro.core import mvstore
 from repro.core import types as t
 
 # Python ints (not jnp scalars): route_pack bakes the buffer fills into the
@@ -64,6 +91,17 @@ from repro.core import types as t
 NO_OP = 0x7FFFFFFF       # empty buffer cell in the key channel
 META_FILL = 0x7FFF8      # empty meta: group 0, kind NOP, prio16 NO_PRIO
 LANE_FILL = -1           # empty cell in the local slot -> lane map
+
+#: Mechanisms the routed wave implements (string-keyed like
+#: DistConfig.backend; the local engine's int ids stay in core/types.py).
+DIST_CCS = ("occ", "mvcc", "mvocc")
+DIST_MV_CCS = ("mvcc", "mvocc")
+
+#: stats vector layout per shard (int32[STATS_LEN]; ro = read-only lanes,
+#: the multi-version headline split SimResult/dashboard rows expect).
+STATS_LEN = 6
+STAT_COMMITS, STAT_ABORTS, STAT_DROPPED_LANES, STAT_DROPPED_OPS, \
+    STAT_RO_COMMITS, STAT_RO_ABORTS = range(STATS_LEN)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,11 +116,39 @@ class DistConfig:
                                    # every shard-local table touch
                                    # (core/backend.py): "jnp" XLA, "pallas"
                                    # TPU kernels (interpret mode off-TPU)
+    cc: str = "occ"                # routed mechanism: "occ" (single-version
+                                   # timestamps) or "mvcc"/"mvocc" (the
+                                   # multi-version ring of core/mvstore.py,
+                                   # sharded with the claim tables)
+    mv_depth: int = 0              # version-ring depth D (mvcc/mvocc only;
+                                   # required >= 1 there, must stay 0 for
+                                   # occ — it has no ring)
+    snapshot_age: int = 0          # MV readers pin snapshots this many
+                                   # waves back (mvstore.snapshot_ts); > 0
+                                   # makes ring reclamation fire under load
 
     def __post_init__(self):
         if self.backend not in ("jnp", "pallas"):
             raise ValueError(f"unknown backend {self.backend!r} "
                              "(expected 'jnp' or 'pallas')")
+        if self.cc not in DIST_CCS:
+            raise ValueError(f"unknown distributed cc {self.cc!r} "
+                             f"(expected one of {DIST_CCS})")
+        if self.cc in DIST_MV_CCS and self.mv_depth < 1:
+            raise ValueError(
+                f"cc={self.cc!r} needs the multi-version ring: set "
+                "DistConfig.mv_depth >= 1 (the local benchmarks use 4)")
+        if self.cc not in DIST_MV_CCS and self.mv_depth:
+            raise ValueError(
+                f"mv_depth={self.mv_depth} is set but cc={self.cc!r} has "
+                "no version ring — use cc='mvcc' or 'mvocc'")
+        if self.snapshot_age < 0:
+            raise ValueError(
+                f"snapshot_age must be >= 0, got {self.snapshot_age}")
+        if self.snapshot_age > 0 and self.cc not in DIST_MV_CCS:
+            raise ValueError(
+                f"snapshot_age={self.snapshot_age} needs a multi-version "
+                f"cc (mvcc/mvocc): {self.cc!r} has no snapshots to age")
         if self.route_cap < 0:
             raise ValueError(
                 f"route_cap={self.route_cap} is negative (0 = auto, "
@@ -102,6 +168,10 @@ class DistConfig:
             raise ValueError(
                 f"n_groups={self.n_groups}: the wire meta word packs the "
                 "group id into one bit (group | kind << 1 | prio16 << 3)")
+
+    @property
+    def is_mv(self) -> bool:
+        return self.cc in DIST_MV_CCS
 
     def cap(self, n_shards: int) -> int:
         """Per-destination buffer capacity: explicit, or 4x the fair share
@@ -125,26 +195,29 @@ def n_shards(mesh) -> int:
 
 
 def make_wave_fn(cfg: DistConfig, mesh):
-    """Returns wave(keys, groups, kinds, prio, wts, claim_w, wave_idx) ->
-    (commit [T], new_wts, new_claim_w, stats) — all arguments globally
-    shaped, sharded over the combined mesh axes.  ``stats`` is int32[4]
-    per shard: [commits, aborts, capacity-dropped lanes, dropped ops].
+    """Returns wave(keys, groups, kinds, prio, tables, wave_idx) ->
+    (commit [T], tables', stats) — all arguments globally shaped, sharded
+    over the combined mesh axes.  ``tables`` is the mechanism's state tuple
+    (see module docstring / ``init_tables``); ``stats`` is
+    int32[STATS_LEN] per shard: [commits, aborts, capacity-dropped lanes,
+    dropped ops, read-only commits, read-only aborts].
 
     The resolved backend (``cfg.backend``) is threaded into the
-    shard-local wave; route/claim/probe/install all run through its
-    surface ops on the shard's table slice.
+    shard-local wave; route/claim/probe/gather/install all run through its
+    surface ops on the shard's table slices.
     """
     ax = _axes(mesh)
     ns = n_shards(mesh)
     cap = cfg.cap(ns)
     rec_per = -(-cfg.n_records // ns)
     T, K, G = cfg.lanes_per_shard, cfg.slots, cfg.n_groups
-    fine = cfg.granularity == 1
+    fine = cfg.granularity == 1 and G > 1
     be = kb.resolve(cfg)
+    mv = cfg.is_mv
 
-    def local_wave(keys, groups, kinds, prio, wts, claim_w, wave_idx):
+    def local_wave(keys, groups, kinds, prio, tables, wave_idx):
         # keys/groups/kinds: [T, K] local lanes; prio: [T]
-        # wts/claim_w: [rec_per, G] local shard.
+        # tables: per-mechanism state tuple, each [rec_per, ...] local shard.
         live = (kinds != t.NOP) & (keys >= 0)
         owner = jnp.where(live, keys // rec_per, ns)         # dest shard
         lkey = jnp.where(live, keys % rec_per, NO_OP)
@@ -180,20 +253,57 @@ def make_wave_fn(cfg: DistConfig, mesh):
         r_kind = (r_meta >> 1) & 3
         r_prio = ((r_meta >> 3) & 0xFFFF).astype(jnp.uint32)
 
-        # --- owner side: fused claim install + probe (ONE table pass) ---
         is_w = r_live & ((r_kind == t.WRITE) | (r_kind == t.ADD))
         is_r = r_live & (r_kind == t.READ)
-        claim_w, wprio = be.claim_probe(claim_w, rk, r_grp, r_prio,
-                                        wave_idx, is_w, fine)
-        conflict = is_r & (wprio < r_prio)
+
+        # --- owner side: claims + probes (and MV snapshot reads) --------
+        if not mv:
+            # Single-version OCC: fused claim install + probe, ONE table
+            # pass; verdict bit 0 = read claimed by a stronger lane.
+            wts, claim_w = tables
+            claim_w, wprio = be.claim_probe(claim_w, rk, r_grp, r_prio,
+                                            wave_idx, is_w, fine)
+            v = (is_r & (wprio < r_prio)).astype(jnp.int8)
+        else:
+            # The local fcw_conflicts + mv snapshot check (cc/mvcc.py),
+            # per shard: claim_w carries ALL writes, claim_r only plain
+            # WRITEs (so ADD-ADD pairs commute); reads consult the ring.
+            claim_w, claim_r, mv_begin, mv_head = tables
+            is_pw = r_live & (r_kind == t.WRITE)
+            is_ad = r_live & (r_kind == t.ADD)
+            claim_w, wprio_w = be.claim_probe(claim_w, rk, r_grp, r_prio,
+                                              wave_idx, is_w, fine)
+            claim_r, wprio_r = be.claim_probe(claim_r, rk, r_grp, r_prio,
+                                              wave_idx, is_pw, fine)
+            _, ok = be.mv_gather(
+                mv_begin, rk, r_grp,
+                mvstore.snapshot_ts(wave_idx, cfg.snapshot_age), fine)
+            # bit 0: unconditional — FCW write-write (a plain WRITE loses
+            # to any stronger writer, an ADD only to a stronger plain
+            # WRITE) and snapshot reclamation (the aged-reader abort).
+            uncond = ((is_pw & (wprio_w < r_prio))
+                      | (is_ad & (wprio_r < r_prio))
+                      | (is_r & ~ok))
+            # bit 1: read-validation — only mvocc applies it, and only to
+            # update lanes; the sender owns that mask (lane composition
+            # never travels).
+            rdval = is_r & (wprio_w < r_prio)
+            v = uncond.astype(jnp.int8) | (rdval.astype(jnp.int8) << 1)
 
         # --- verdicts return to lane owners (1 byte per op) -------------
         # Gathered back by each op's routing coordinates — sort-free and
         # scatter-free, the inverse of route_pack's placement.
-        v_conf = a2a(conflict.astype(jnp.int8))               # [ns, cap]
+        v_conf = a2a(v)                                       # [ns, cap]
         oo = jnp.clip(owner.reshape(-1), 0, ns - 1)
         pp = jnp.clip(pos, 0, cap - 1)
-        op_conf = (v_conf[oo, pp] > 0) & took
+        vv = v_conf[oo, pp]
+        has_write = (live & ((kinds == t.WRITE)
+                             | (kinds == t.ADD))).any(axis=1)
+        op_conf = (vv & 1) > 0
+        if cfg.cc == "mvocc":
+            hw_op = jnp.broadcast_to(has_write[:, None], (T, K)).reshape(-1)
+            op_conf = op_conf | (((vv & 2) > 0) & hw_op)
+        op_conf = op_conf & took
         commit = ~op_conf.reshape(T, K).any(axis=1) & ~lane_dropped
 
         # --- install: commit bits ride back to owners (1 byte) ----------
@@ -203,27 +313,48 @@ def make_wave_fn(cfg: DistConfig, mesh):
             jnp.int8(0))
         r_commit = a2a(b_commit)
         bump = is_w & (r_commit > 0)
-        wts = be.commit_install(wts, rk, r_grp, bump)
+        if not mv:
+            wts = be.commit_install(wts, rk, r_grp, bump)
+            tables = (wts, claim_w)
+        else:
+            mv_begin, mv_head = be.mv_install(
+                mv_begin, mv_head, rk, r_grp, bump,
+                mvstore.install_ts(wave_idx))
+            tables = (claim_w, claim_r, mv_begin, mv_head)
 
+        ro = ~has_write
         stats = jnp.stack([commit.sum(), (~commit).sum(),
-                           lane_dropped.sum(),
-                           dropped_op.sum()]).astype(jnp.int32)
-        return commit, wts, claim_w, stats
+                           lane_dropped.sum(), dropped_op.sum(),
+                           (commit & ro).sum(),
+                           (~commit & ro).sum()]).astype(jnp.int32)
+        return commit, tables, stats
 
     spec_ops = P(ax if len(ax) > 1 else ax[0])
+    tab_spec = (spec_ops,) * (4 if mv else 2)
     wave = shard_map(
         local_wave, mesh=mesh,
-        in_specs=(spec_ops, spec_ops, spec_ops, spec_ops, spec_ops,
-                  spec_ops, P()),
-        out_specs=(spec_ops, spec_ops, spec_ops, spec_ops))
+        in_specs=(spec_ops, spec_ops, spec_ops, spec_ops, tab_spec, P()),
+        out_specs=(spec_ops, tab_spec, spec_ops))
     return wave
 
 
 def init_tables(cfg: DistConfig, mesh):
+    """Fresh sharded state for ``cfg.cc``:
+
+    - occ:         ``(wts, claim_w)``
+    - mvcc/mvocc:  ``(claim_w, claim_r, mv_begin, mv_head)`` — the version
+      ring of core/mvstore.py (slot 0 live at begin 0, head 0) plus the two
+      claim channels, all range-sharded over the padded record space.
+    """
     ns = n_shards(mesh)
     rec_per = -(-cfg.n_records // ns)
-    return (jnp.zeros((ns * rec_per, cfg.n_groups), jnp.uint32),
-            jnp.full((ns * rec_per, cfg.n_groups), t.NO_CLAIM, jnp.uint32))
+    N, G = ns * rec_per, cfg.n_groups
+    claim_w = jnp.full((N, G), t.NO_CLAIM, jnp.uint32)
+    if cfg.is_mv:
+        mv_begin, mv_head, _ = mvstore.mv_init(N, cfg.mv_depth, G)
+        claim_r = jnp.full((N, G), t.NO_CLAIM, jnp.uint32)
+        return (claim_w, claim_r, mv_begin, mv_head)
+    return (jnp.zeros((N, G), jnp.uint32), claim_w)
 
 
 def abstract_args(cfg: DistConfig, mesh):
@@ -238,10 +369,18 @@ def abstract_args(cfg: DistConfig, mesh):
     def sds(shape, dtype):
         return jax.ShapeDtypeStruct(shape, dtype, sharding=sh2)
 
+    N = ns * rec_per
+    if cfg.is_mv:
+        tables = (sds((N, G), jnp.uint32),              # claim_w
+                  sds((N, G), jnp.uint32),              # claim_r
+                  sds((N, cfg.mv_depth, G), jnp.uint32),  # mv_begin
+                  sds((N,), jnp.int32))                 # mv_head
+    else:
+        tables = (sds((N, G), jnp.uint32),              # wts
+                  sds((N, G), jnp.uint32))              # claim_w
     return (sds((ns * T, K), jnp.int32),    # keys
             sds((ns * T, K), jnp.int32),    # groups
             sds((ns * T, K), jnp.int32),    # kinds
             sds((ns * T,), jnp.uint32),     # prio
-            sds((ns * rec_per, G), jnp.uint32),
-            sds((ns * rec_per, G), jnp.uint32),
+            tables,
             jax.ShapeDtypeStruct((), jnp.uint32))

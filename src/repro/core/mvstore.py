@@ -63,11 +63,24 @@ import jax.numpy as jnp
 MV_EMPTY = 0xFFFFFFFF   # begin value of a never-installed ring slot
 
 
-def snapshot_ts(wave: jax.Array) -> jax.Array:
+def snapshot_ts(wave: jax.Array, age: int = 0) -> jax.Array:
     """A wave-w transaction reads as of the wave's start: installs from
     waves < w (begin <= w) are visible, this wave's (begin = w + 1) are
-    not."""
-    return wave.astype(jnp.uint32)
+    not.
+
+    ``age`` (EngineConfig.snapshot_age / DistConfig.snapshot_age) pins the
+    snapshot that many waves further in the past — the long-lived-reader
+    model: an analytic client that opened its snapshot ``age`` waves ago and
+    is still reading.  Saturates at 0 (the initial versions stay visible to
+    the earliest waves), so aged snapshots are always well-formed; what they
+    are NOT guaranteed is retention — a ring of depth D only keeps the D
+    newest versions, so ``age`` beyond the ring's reach makes ``mv_gather``
+    report reclamation (ok=False) and the reader aborts cleanly instead of
+    reading a recycled slot."""
+    w = wave.astype(jnp.uint32)
+    if age:
+        w = w - jnp.minimum(w, jnp.uint32(age))
+    return w
 
 
 def install_ts(wave: jax.Array) -> jax.Array:

@@ -281,6 +281,15 @@ class EngineConfig:
                                 # benchmarks default to 4.  Depth bounds how
                                 # far behind a snapshot may trail before its
                                 # version is reclaimed and the reader aborts.
+    snapshot_age: int = 0       # MV readers pin their snapshot this many
+                                # waves in the past (0 = wave-fresh, the
+                                # classic path).  Age > 0 models long-lived
+                                # reader snapshots: once writers have pushed
+                                # a record's ring past the aged snapshot,
+                                # mv_gather reports reclamation and the
+                                # reader aborts cleanly (ok=False) — the
+                                # knob that makes epoch reclamation actually
+                                # fire under load (mvstore.snapshot_ts).
     cost: CostModel = dataclasses.field(default_factory=CostModel)
     # Adaptive CC state machine:
     adapt_up: float = 0.20      # abort-heat threshold -> pessimistic
@@ -307,6 +316,14 @@ class EngineConfig:
             raise ValueError(
                 f"{CC_NAMES[self.cc]} needs the multi-version store: "
                 "set EngineConfig.mv_depth >= 1 (benchmarks use 4)")
+        if self.snapshot_age < 0:
+            raise ValueError(
+                f"snapshot_age must be >= 0, got {self.snapshot_age}")
+        if self.snapshot_age > 0 and self.cc not in MV_CCS:
+            raise ValueError(
+                f"snapshot_age={self.snapshot_age} needs a multi-version "
+                f"mechanism (mvcc/mvocc): {CC_NAMES[self.cc]} has no "
+                "snapshots to age")
 
 
 def txn_batch_zeros(lanes: int, slots: int) -> TxnBatch:

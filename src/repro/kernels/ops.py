@@ -129,6 +129,9 @@ def claim_scatter(table, keys, groups, prio, do, wave, use_pallas=None):
 def claim_probe_fused(table, keys, groups, prio, do, wave, fine: bool,
                       use_pallas=None):
     if _use_pallas(use_pallas):
+        # Same debug-mode precondition check as the jnp oracle path (eager
+        # calls only; free under jit — see ref.check_claim_tag_monotone).
+        ref.check_claim_tag_monotone(table, keys, wave)
         return claim_probe_fused_pallas(table, keys, groups, prio, do,
                                         _inv_wave(wave), fine,
                                         interpret=_interp())
@@ -159,6 +162,7 @@ def mv_gather(begin, keys, groups, ts, fine: bool, use_pallas=None):
 
 def mv_install(begin, head, keys, groups, do, ts, use_pallas=None):
     if _use_pallas(use_pallas):
+        ref.check_mv_begin_monotone(begin, keys, do, ts)
         return mv_install_pallas(begin, head, keys, groups, do, ts,
                                  interpret=_interp())
     return ref.mv_install(begin, head, keys, groups, do, ts)

@@ -1,13 +1,76 @@
 """Pure-jnp oracles for every Pallas kernel (the ground truth in tests)."""
 from __future__ import annotations
 
+import os
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.claimword import (EMPTY_WORD, NO_PRIO, claim_word, inv_wave,
-                                  live_prio)
+from repro.core.claimword import (EMPTY_WORD, NO_PRIO, WAVE_SHIFT,
+                                  claim_word, inv_wave, live_prio)
 from repro.core.mvstore import MV_EMPTY
 from repro.core.types import OOB_KEY  # negative indices wrap, OOB drops
+
+
+# -------------------------------------------------- precondition validation
+# claim_probe_fused and mv_install only answer from ONE row pass because the
+# engine maintains monotone tags: claim cells hold waves <= the current one,
+# begin cells hold timestamps < the install ts.  A caller that violates this
+# gets silently wrong answers — so the documented preconditions are checked
+# here whenever the check is free: on *eager* (concrete, non-traced) calls,
+# i.e. the kernel-oracle tests and interactive/interpret use.  Inside jit
+# (every engine wave) the inputs are tracers and the check compiles to
+# nothing.  Disable with REPRO_PRECONDITION_CHECKS=0 (resolved per call).
+def _checks_enabled(*arrays) -> bool:
+    if any(isinstance(a, jax.core.Tracer) for a in arrays):
+        return False
+    return os.environ.get("REPRO_PRECONDITION_CHECKS", "1") != "0"
+
+
+def check_claim_tag_monotone(table, keys, wave) -> None:
+    """Raise if any cell the wave touches carries a wave tag NEWER than
+    ``wave`` — the monotone-wave-tag precondition of claim_probe_fused
+    (claim tables are claimed once per wave; tags only age)."""
+    if not _checks_enabled(table, keys, wave):
+        return
+    k = np.where(np.asarray(keys) >= 0, np.asarray(keys), 0).reshape(-1)
+    rows = np.asarray(table)[np.minimum(k, table.shape[0] - 1)]
+    tags = rows >> WAVE_SHIFT     # inv_wave: smaller = newer
+    bad = (tags < int(inv_wave(jnp.asarray(wave)))) \
+        & (np.asarray(keys).reshape(-1) >= 0)[:, None]
+    if bad.any():
+        raise ValueError(
+            f"claim_probe precondition violated: {int(bad.sum())} touched "
+            "claim cell(s) carry a wave tag newer than the current wave "
+            f"({int(np.asarray(wave))}) — claim tables must only hold "
+            "claims from waves <= the current one (core/claimword.py "
+            "monotone tags); the fused one-pass probe would silently "
+            "return wrong answers.  Set REPRO_PRECONDITION_CHECKS=0 to "
+            "bypass.")
+
+
+def check_mv_begin_monotone(begin, keys, do, ts) -> None:
+    """Raise if any installed-into ring row already holds a begin >= ``ts``
+    — the monotone install-timestamp precondition of mv_install (same-wave
+    revisit detection reads begin == ts as 'claimed this wave')."""
+    if not _checks_enabled(begin, keys, do, ts):
+        return
+    m = (np.asarray(do) & (np.asarray(keys) >= 0)).reshape(-1)
+    if not m.any():
+        return
+    k = np.where(m, np.asarray(keys).reshape(-1), 0)
+    rows = np.asarray(begin)[np.minimum(k, begin.shape[0] - 1)]
+    bad = (rows != MV_EMPTY) & (rows >= int(np.asarray(ts))) & m[:, None,
+                                                                 None]
+    if bad.any():
+        raise ValueError(
+            f"mv_install precondition violated: {int(bad.sum())} begin "
+            f"cell(s) in installed-into rows already hold >= ts="
+            f"{int(np.asarray(ts))} — install timestamps must advance "
+            "strictly per wave (core/mvstore.install_ts), else the kernel's "
+            "same-wave revisit detection silently merges distinct waves.  "
+            "Set REPRO_PRECONDITION_CHECKS=0 to bypass.")
 
 
 # ---------------------------------------------------------------- OCC kernels
@@ -110,8 +173,10 @@ def claim_probe_fused(table: jax.Array, keys: jax.Array, groups: jax.Array,
     of core/claimword.py; claim tables are claimed once per wave).  Under
     it the probe of the final table equals min(probe of the pre-wave
     table, strongest same-wave claimant of the cell), which is what lets
-    the kernel answer both from ONE row DMA per op.
+    the kernel answer both from ONE row DMA per op.  Violations are caught
+    on eager calls by ``check_claim_tag_monotone``.
     """
+    check_claim_tag_monotone(table, keys, wave)
     table = claim_scatter(table, keys, groups, prio, do, wave)
     return table, claim_probe(table, keys, groups, inv_wave(wave), fine)
 
@@ -205,8 +270,10 @@ def mv_install(begin: jax.Array, head: jax.Array, keys: jax.Array,
     Precondition (the engine invariant both backends rely on): every
     pre-existing begin value is < ``ts`` — install timestamps advance
     per wave (core/mvstore.install_ts), which is what lets the Pallas
-    kernel detect same-wave revisits from the row alone.
+    kernel detect same-wave revisits from the row alone.  Violations are
+    caught on eager calls by ``check_mv_begin_monotone``.
     """
+    check_mv_begin_monotone(begin, keys, do, ts)
     D = begin.shape[1]
     k = jnp.where(do & (keys >= 0), keys, OOB_KEY).reshape(-1)
     g = groups.reshape(-1)

@@ -53,7 +53,7 @@ def _row(workload: str, cc_name: str, p, wall_s: float,
 
 def run_grid(workload: str, ccs: list, grans, lanes: list, waves: int, *,
              scale: float = 1.0, n_keys: int = 1_000_000, seed: int = 0,
-             backend: str = "jnp", mv_depth: int = 4,
+             backend: str = "jnp", mv_depth: int = 4, snapshot_age: int = 0,
              write_frac: float = 0.5, ro_frac: float = 0.0,
              theta: float = 0.9) -> list:
     """Run the whole benchmark grid in one jitted sweep; returns row dicts.
@@ -61,7 +61,9 @@ def run_grid(workload: str, ccs: list, grans, lanes: list, waves: int, *,
     ``wall_s`` in each row is the grid's wall time amortized over its rows
     (the grid runs as one XLA program, so per-point timing does not exist).
     The multi-version ring (``mv_depth``) is only allocated when the grid
-    contains an MV mechanism.
+    contains an MV mechanism; ``snapshot_age`` (aged reader snapshots —
+    mvstore.snapshot_ts) requires an all-MV grid, since only snapshot
+    readers have a snapshot to age.
     """
     from repro.core import types as t
     from repro.core.engine import sweep
@@ -69,11 +71,18 @@ def run_grid(workload: str, ccs: list, grans, lanes: list, waves: int, *,
     wl = _make_workload(workload, scale=scale, n_keys=n_keys,
                         write_frac=write_frac, ro_frac=ro_frac, theta=theta)
     need_mv = any(t.CC_IDS[c] in t.MV_CCS for c in ccs)
+    if snapshot_age and not all(t.CC_IDS[c] in t.MV_CCS for c in ccs):
+        raise ValueError("snapshot_age > 0 needs an all-MV cc grid "
+                         "(mvcc/mvocc): single-version mechanisms have no "
+                         "snapshots to age")
+    # The base cfg must itself validate: an aged-snapshot grid is all-MV,
+    # so anchor it on the first requested mechanism instead of CC_OCC.
     cfg = t.EngineConfig(
-        cc=t.CC_OCC, lanes=max(lanes), slots=wl.slots,
+        cc=t.CC_IDS[ccs[0]] if snapshot_age else t.CC_OCC,
+        lanes=max(lanes), slots=wl.slots,
         n_records=wl.n_records, n_groups=wl.n_groups, n_cols=wl.n_cols,
         n_txn_types=wl.n_txn_types, n_rings=wl.n_rings, backend=backend,
-        mv_depth=mv_depth if need_mv else 0)
+        mv_depth=mv_depth if need_mv else 0, snapshot_age=snapshot_age)
     t0 = time.time()
     points = sweep(cfg, wl, waves, ccs=[t.CC_IDS[c] for c in ccs],
                    grans=tuple(grans), lane_counts=tuple(lanes),
@@ -85,7 +94,7 @@ def run_grid(workload: str, ccs: list, grans, lanes: list, waves: int, *,
 
 def run_one(workload: str, cc_name: str, gran: int, lanes: int, waves: int,
             *, scale: float = 1.0, n_keys: int = 1_000_000, seed: int = 0,
-            backend: str = "jnp", mv_depth: int = 4):
+            backend: str = "jnp", mv_depth: int = 4, snapshot_age: int = 0):
     """Single grid point (one compiled run; prefer run_grid for grids)."""
     from repro.core import types as t
     from repro.core.engine import run
@@ -96,7 +105,8 @@ def run_one(workload: str, cc_name: str, gran: int, lanes: int, waves: int,
         n_records=wl.n_records, n_groups=wl.n_groups, n_cols=wl.n_cols,
         n_txn_types=wl.n_txn_types, granularity=gran, n_rings=wl.n_rings,
         backend=backend,
-        mv_depth=mv_depth if t.CC_IDS[cc_name] in t.MV_CCS else 0)
+        mv_depth=mv_depth if t.CC_IDS[cc_name] in t.MV_CCS else 0,
+        snapshot_age=snapshot_age)
     from repro.core.backend import kernel_coverage
     t0 = time.time()
     res = run(cfg, wl, n_waves=waves, seed=seed)
@@ -135,6 +145,11 @@ def main(argv=None):
     ap.add_argument("--mv-depth", type=int, default=4,
                     help="version-ring depth for mvcc/mvocc grids "
                          "(core/mvstore.py; ignored without an MV cc)")
+    ap.add_argument("--snapshot-age", type=int, default=0,
+                    help="pin MV reader snapshots this many waves in the "
+                         "past (aged readers; ring reclamation aborts fire "
+                         "once writers outrun the ring — requires an "
+                         "all-mvcc/mvocc --cc list)")
     # None sentinels so the tpcc guard below detects flag *presence*, not
     # just non-default values.
     ap.add_argument("--write-frac", type=float, default=None,
@@ -151,10 +166,16 @@ def main(argv=None):
     if args.workload == "tpcc" and any(v is not None for v in ycsb_flags):
         ap.error("--write-frac/--ro-frac/--theta shape the ycsb workload "
                  "only; TPC-C's mix is fixed by the standard")
+    if args.snapshot_age:
+        from repro.core import types as t
+        if not all(t.CC_IDS[c] in t.MV_CCS for c in args.cc):
+            ap.error("--snapshot-age only ages multi-version snapshots: "
+                     "use it with an all-mvcc/mvocc --cc list")
     grans = {"coarse": (0,), "fine": (1,), "both": (0, 1)}[args.granularity]
     rows = run_grid(args.workload, args.cc, grans, args.lanes, args.waves,
                     scale=args.scale, n_keys=args.n_keys, seed=args.seed,
                     backend=args.backend, mv_depth=args.mv_depth,
+                    snapshot_age=args.snapshot_age,
                     write_frac=(0.5 if args.write_frac is None
                                 else args.write_frac),
                     ro_frac=0.0 if args.ro_frac is None else args.ro_frac,

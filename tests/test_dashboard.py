@@ -1,6 +1,6 @@
 """benchmarks/perf_dashboard.py: JSON-row aggregation into the markdown
 perf dashboard (peak-point selection, kernel-op attribution cells, the
-distributed txn_scaling section)."""
+distributed txn_scaling section, and malformed-row resilience)."""
 import json
 
 from benchmarks.perf_dashboard import (_ops_cell, load_rows, main,
@@ -23,10 +23,11 @@ MECH_ROWS = [
 DIST_ROWS = [
     {"shards": 0, "commits": 900, "waves_per_s": 50.0,
      "coll_bytes_per_wave": 0, "backend": "jnp", "kernel_ops": {}},
-    {"shards": 8, "commits": 850, "waves_per_s": 12.5,
+    {"shards": 8, "cc": "mvcc", "commits": 850, "waves_per_s": 12.5,
+     "ro_commits": 120, "ro_aborts": 3,
      "coll_bytes_per_wave": 65536, "backend": "pallas",
      "kernel_ops": {"route_pack": "pallas", "claim_probe": "pallas",
-                    "commit_install": "pallas"}},
+                    "mv_gather": "pallas", "mv_install": "pallas"}},
 ]
 
 
@@ -51,24 +52,66 @@ def test_render_picks_peak_point_per_group():
 def test_render_distributed_section():
     rows = [dict(r, _src="txn_scaling.json") for r in DIST_ROWS]
     md = render_markdown([], rows)
-    assert "| 0 | 50.0 | 900 | 0.0 | jnp | — | txn_scaling.json |" in md
-    assert "| 8 | 12.5 | 850 | 64.0 | pallas | 3/3 pallas " \
+    # rows without the cc / read-only fields (pre-MV txn_scaling files)
+    # default to occ and render unknown splits as '?'
+    assert "| 0 | occ | 50.0 | 900 | ? | ? | 0.0 | jnp | — " \
            "| txn_scaling.json |" in md
+    assert "| 8 | mvcc | 12.5 | 850 | 120 | 3 | 64.0 | pallas " \
+           "| 4/4 pallas | txn_scaling.json |" in md
+
+
+# ------------------------------------------------ malformed-row resilience
+def test_truncated_mech_row_is_skipped_with_warning():
+    """Regression (ISSUE 5 satellite): a partial row — e.g. the tail of a
+    killed bench run — must not abort the whole dashboard; it is skipped
+    and called out in the report."""
+    rows = [dict(r, _src="BENCH_a.json") for r in MECH_ROWS]
+    rows.append({"workload": "ycsb", "cc": "occ", "_src": "BENCH_cut.json"})
+    rows.append({"cc": "occ", "throughput": "fast?",
+                 "_src": "BENCH_bad.json"})
+    md = render_markdown(rows, [])
+    assert "25.500" in md                          # good rows still render
+    assert "## Skipped rows (2)" in md
+    assert "`BENCH_cut.json`: mechanism row: missing/non-numeric " \
+           "'throughput'" in md
+    assert "`BENCH_bad.json`" in md
+
+
+def test_truncated_dist_row_is_skipped_with_warning():
+    rows = [dict(r, _src="txn_scaling.json") for r in DIST_ROWS]
+    rows.append({"shards": None, "commits": 7, "_src": "txn_cut.json"})
+    md = render_markdown([], rows)
+    assert "| 8 | mvcc |" in md                    # good rows still render
+    assert "## Skipped rows (1)" in md
+    assert "`txn_cut.json`: distributed row: missing/non-numeric " \
+           "'shards'" in md
+
+
+def test_only_bad_rows_still_renders_warnings():
+    md = render_markdown([{"cc": "x", "_src": "a.json"}], [])
+    assert "## Skipped rows (1)" in md
+    assert "No benchmark rows found" not in md
 
 
 def test_main_end_to_end(tmp_path):
     """Glob -> split -> render -> write: the CLI path, on a synthetic
-    BENCH file mixing both row shapes plus an unreadable file."""
+    BENCH file mixing both row shapes plus an unreadable file and a
+    truncated row."""
     bench = tmp_path / "BENCH_mix.json"
-    bench.write_text(json.dumps(MECH_ROWS + DIST_ROWS))
+    bench.write_text(json.dumps(
+        MECH_ROWS + DIST_ROWS
+        + [{"cc": "occ", "workload": "ycsb"}]))       # truncated row
     (tmp_path / "BENCH_broken.json").write_text("{not json")
     out = tmp_path / "reports" / "perf_dashboard.md"
     assert main([str(tmp_path / "BENCH_*.json"), "--out", str(out)]) == 0
     md = out.read_text()
     assert "## Mechanisms" in md and "## Distributed engine" in md
     assert "25.500" in md and "route_pack" not in md  # ops compressed
+    assert "## Skipped rows (1)" in md
     mech, dist = load_rows((str(tmp_path / "BENCH_*.json"),))
-    assert len(mech) == 3 and len(dist) == 2
+    assert len(mech) == 4 and len(dist) == 2          # truncated row loads…
+    md2 = render_markdown(mech, dist)                 # …and only warns
+    assert "## Skipped rows (1)" in md2
 
 
 def test_main_no_rows(tmp_path):

@@ -6,7 +6,8 @@ The in-process tests build their mesh over every available host device, so
 running this file under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
 (as CI does, in both jobs) exercises real multi-shard routing; without the
 flag they degrade to the 1-shard mesh.  The subprocess tests force 8
-devices regardless.
+devices regardless.  The multi-version (mvcc/mvocc) routed wave has its own
+suite in tests/test_distributed_mv.py.
 """
 import subprocess
 import sys
@@ -41,9 +42,8 @@ def _full_mesh():
 
 def _run_wave(cfg, mesh, keys, groups, kinds, prio, wave=0):
     wave_fn = jax.jit(D.make_wave_fn(cfg, mesh))
-    wts, claim_w = D.init_tables(cfg, mesh)
-    return wave_fn(keys, groups, kinds, prio, wts, claim_w,
-                   jnp.uint32(wave))
+    tables = D.init_tables(cfg, mesh)
+    return wave_fn(keys, groups, kinds, prio, tables, jnp.uint32(wave))
 
 
 @pytest.mark.parametrize("backend", ["jnp", "pallas"])
@@ -58,7 +58,8 @@ def test_single_shard_parity_with_local_occ(gran, backend):
     rng = np.random.default_rng(0)
     keys, groups, kinds = _batch(rng, T, K, N)
     prio = jnp.asarray(rng.permutation(T).astype(np.uint32))
-    commit, wts2, _, stats = _run_wave(cfg, mesh, keys, groups, kinds, prio)
+    commit, (wts2, _), stats = _run_wave(cfg, mesh, keys, groups, kinds,
+                                         prio)
 
     ecfg = EngineConfig(cc=t.CC_OCC, lanes=T, slots=K, n_records=N,
                         n_groups=2, n_cols=0, n_txn_types=1,
@@ -93,12 +94,37 @@ def test_backend_bit_identity(gran, route_cap):
                            slots=K, granularity=gran, route_cap=route_cap,
                            backend=backend)
         outs[backend] = _run_wave(cfg, mesh, keys, groups, kinds, prio)
-    for a, b in zip(outs["jnp"], outs["pallas"]):
+    for a, b in zip(jax.tree.leaves(outs["jnp"]),
+                    jax.tree.leaves(outs["pallas"])):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
-    commit, _, _, stats = outs["jnp"]
+    commit, _, stats = outs["jnp"]
     assert int(commit.sum()) > 0
     if route_cap:  # 1 shard x 48 ops (or more) vs cap 8: must drop
-        assert int(np.asarray(stats).reshape(ns, 4)[:, 3].sum()) > 0
+        s = np.asarray(stats).reshape(ns, D.STATS_LEN)
+        assert int(s[:, D.STAT_DROPPED_OPS].sum()) > 0
+
+
+def test_stats_vector_carries_readonly_split():
+    """The distributed stats vector is int32[6] and its read-only
+    commit/abort split counts exactly the lanes with no live write ops
+    (the split SimResult/dashboard rows expect — ISSUE 5 satellite)."""
+    mesh = jax.make_mesh((1,), ("data",))
+    N, T, K = 128, 8, 4
+    cfg = D.DistConfig(n_records=N, n_groups=2, lanes_per_shard=T, slots=K)
+    rng = np.random.default_rng(11)
+    keys, groups, kinds = _batch(rng, T, K, N, with_nops=True)
+    prio = jnp.asarray(rng.permutation(T).astype(np.uint32))
+    commit, _, stats = _run_wave(cfg, mesh, keys, groups, kinds, prio)
+    s = np.asarray(stats)
+    assert s.shape == (D.STATS_LEN,)
+    c = np.asarray(commit)
+    ro = ~((np.asarray(kinds) != t.READ) & (np.asarray(kinds) != t.NOP)
+           & (np.asarray(keys) >= 0)).any(axis=1)
+    assert s[D.STAT_COMMITS] == c.sum()
+    assert s[D.STAT_ABORTS] == (~c).sum()
+    assert s[D.STAT_RO_COMMITS] == (c & ro).sum()
+    assert s[D.STAT_RO_ABORTS] == (~c & ro).sum()
+    assert ro.any()     # the split is exercised, not vacuous
 
 
 def test_no_argsort_and_no_direct_table_writes():
@@ -149,15 +175,17 @@ def test_multi_shard_runs_in_subprocess():
                 cfg = D.DistConfig(n_records=N, n_groups=2,
                                    lanes_per_shard=Tl, slots=K,
                                    backend=backend)
-                wts, cw = D.init_tables(cfg, mesh)
+                tables = D.init_tables(cfg, mesh)
                 fn = jax.jit(D.make_wave_fn(cfg, mesh))
-                outs[backend] = fn(keys, groups, kinds, prio, wts, cw,
+                outs[backend] = fn(keys, groups, kinds, prio, tables,
                                    jnp.uint32(0))
-            for a, b in zip(outs["jnp"], outs["pallas"]):
+            for a, b in zip(jax.tree.leaves(outs["jnp"]),
+                            jax.tree.leaves(outs["pallas"])):
                 np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
-            commit, wts2, _, stats = outs["jnp"]
+            commit, _, stats = outs["jnp"]
+            s = np.asarray(stats).reshape(ns, D.STATS_LEN)
             print(shape, "commits:", int(commit.sum()),
-                  "drops:", int(np.asarray(stats).reshape(ns, 4)[:, 2].sum()))
+                  "drops:", int(s[:, D.STAT_DROPPED_LANES].sum()))
             assert int(commit.sum()) > 0
         print("MULTI_SHARD_OK")
     """)
@@ -185,11 +213,11 @@ def test_capacity_drops_abort_lanes():
     rng = np.random.default_rng(2)
     keys, groups, kinds = _batch(rng, T, K, N)
     prio = jnp.asarray(rng.permutation(T).astype(np.uint32))
-    commit, _, _, stats = _run_wave(cfg, mesh, keys, groups, kinds, prio)
+    commit, _, stats = _run_wave(cfg, mesh, keys, groups, kinds, prio)
     dropped_op, dropped_lane = _numpy_drop_oracle(keys, kinds, 8)
     stats = np.asarray(stats)
-    assert stats[2] == dropped_lane.sum() > 0     # lanes counted
-    assert stats[3] == dropped_op.sum() > 0       # ops counted
+    assert stats[D.STAT_DROPPED_LANES] == dropped_lane.sum() > 0
+    assert stats[D.STAT_DROPPED_OPS] == dropped_op.sum() > 0
     assert not np.asarray(commit)[dropped_lane].any()   # dropped => abort
 
 
@@ -200,8 +228,8 @@ def drop_wave_fn():
     cfg = D.DistConfig(n_records=64, n_groups=2, lanes_per_shard=8, slots=8,
                        route_cap=8)
     wave_fn = jax.jit(D.make_wave_fn(cfg, mesh))
-    wts0, cw0 = D.init_tables(cfg, mesh)
-    return lambda ks, gs, kd, pr: wave_fn(ks, gs, kd, pr, wts0, cw0,
+    tables0 = D.init_tables(cfg, mesh)
+    return lambda ks, gs, kd, pr: wave_fn(ks, gs, kd, pr, tables0,
                                           jnp.uint32(0))
 
 
@@ -216,11 +244,11 @@ def test_capacity_dropped_lanes_always_abort_and_are_counted(
     rng = np.random.default_rng(seed)
     keys, groups, kinds = _batch(rng, T, K, N, with_nops=True)
     prio = jnp.asarray(rng.permutation(T).astype(np.uint32))
-    commit, _, _, stats = drop_wave_fn(keys, groups, kinds, prio)
+    commit, _, stats = drop_wave_fn(keys, groups, kinds, prio)
     dropped_op, dropped_lane = _numpy_drop_oracle(keys, kinds, cap)
     stats = np.asarray(stats)
-    assert stats[2] == dropped_lane.sum()
-    assert stats[3] == dropped_op.sum()
+    assert stats[D.STAT_DROPPED_LANES] == dropped_lane.sum()
+    assert stats[D.STAT_DROPPED_OPS] == dropped_op.sum()
     assert not np.asarray(commit)[dropped_lane].any()
 
 
@@ -245,6 +273,28 @@ def test_route_cap_ragged_rejected():
 def test_unknown_backend_rejected():
     with pytest.raises(ValueError, match="backend"):
         D.DistConfig(n_records=64, backend="tpu")
+
+
+def test_unknown_cc_rejected():
+    with pytest.raises(ValueError, match="distributed cc"):
+        D.DistConfig(n_records=64, cc="tictoc")
+
+
+def test_mv_cc_requires_depth():
+    with pytest.raises(ValueError, match="mv_depth"):
+        D.DistConfig(n_records=64, cc="mvcc")
+
+
+def test_occ_with_ring_rejected():
+    with pytest.raises(ValueError, match="no version ring"):
+        D.DistConfig(n_records=64, mv_depth=4)
+
+
+def test_snapshot_age_requires_mv_cc():
+    with pytest.raises(ValueError, match="snapshot_age"):
+        D.DistConfig(n_records=64, snapshot_age=2)
+    with pytest.raises(ValueError, match="snapshot_age"):
+        D.DistConfig(n_records=64, cc="mvcc", mv_depth=4, snapshot_age=-1)
 
 
 def test_wide_group_wire_format_rejected():

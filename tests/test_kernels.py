@@ -271,6 +271,77 @@ def test_mv_install_with_duplicates(T, K, N, D, G):
     assert (np.asarray(head) >= 0).all() and (np.asarray(head) < D).all()
 
 
+# ------------------------------------------- precondition validation (new)
+def _future_tagged_table():
+    """A claim table holding a wave-7 claim — newer than the wave-3 calls
+    below, violating the monotone-wave-tag precondition."""
+    from repro.core.claimword import claim_word
+    from repro.core.types import NO_CLAIM
+    table = jnp.full((8, 2), NO_CLAIM, jnp.uint32)
+    return table.at[2, 0].set(claim_word(jnp.uint32(7), jnp.uint32(5)))
+
+
+def test_claim_probe_fused_rejects_future_wave_tags():
+    """The documented monotone-wave-tag precondition of claim_probe is now
+    CHECKED on eager calls (both backends): a table cell claimed by a wave
+    newer than the current one raises instead of silently answering wrong
+    (ISSUE 5 satellite).  Untouched violating cells don't fire — the check
+    is per touched row, so it stays cheap."""
+    table = _future_tagged_table()
+    keys = jnp.asarray([[2]], jnp.int32)
+    groups = jnp.zeros((1, 1), jnp.int32)
+    prio = jnp.asarray([[1]], jnp.uint32)
+    do = jnp.asarray([[True]])
+    wave = jnp.uint32(3)
+    with pytest.raises(ValueError, match="precondition"):
+        ref.claim_probe_fused(table, keys, groups, prio, do, wave, True)
+    with pytest.raises(ValueError, match="precondition"):
+        ops.claim_probe_fused(table, keys, groups, prio, do, wave, True,
+                              use_pallas=True)
+    # the same wave's own tag is NOT a violation (claims land per wave)...
+    ref.claim_probe_fused(table, keys, groups, prio, do, jnp.uint32(7),
+                          True)
+    # ...and ops that don't touch the poisoned row never see it
+    ref.claim_probe_fused(table, jnp.asarray([[4]], jnp.int32), groups,
+                          prio, do, wave, True)
+
+
+def test_mv_install_rejects_non_monotone_begin():
+    """Same for mv_install: an installed-into ring row already holding a
+    begin >= the install ts (a wave driven backwards / a reused ts) raises
+    on eager calls instead of silently merging distinct waves."""
+    from repro.core import mvstore
+    begin, head, _ = mvstore.mv_init(8, 3, 2)
+    begin = begin.at[2, 0, 0].set(jnp.uint32(9))
+    keys = jnp.asarray([[2]], jnp.int32)
+    groups = jnp.zeros((1, 1), jnp.int32)
+    do = jnp.asarray([[True]])
+    with pytest.raises(ValueError, match="precondition"):
+        ref.mv_install(begin, head, keys, groups, do, jnp.uint32(5))
+    with pytest.raises(ValueError, match="precondition"):
+        ops.mv_install(begin, head, keys, groups, do, jnp.uint32(5),
+                       use_pallas=True)
+    # strictly newer ts passes; so does a masked (do=False) touch of the row
+    ref.mv_install(begin, head, keys, groups, do, jnp.uint32(10))
+    ref.mv_install(begin, head, keys, groups, jnp.asarray([[False]]),
+                   jnp.uint32(5))
+
+
+def test_precondition_checks_jit_free_and_env_gated(monkeypatch):
+    """Under jit the inputs are tracers and the check compiles to nothing;
+    REPRO_PRECONDITION_CHECKS=0 disables it eagerly too."""
+    table = _future_tagged_table()
+    keys = jnp.asarray([[2]], jnp.int32)
+    groups = jnp.zeros((1, 1), jnp.int32)
+    prio = jnp.asarray([[1]], jnp.uint32)
+    do = jnp.asarray([[True]])
+    jax.jit(lambda t_: ref.claim_probe_fused(t_, keys, groups, prio, do,
+                                             jnp.uint32(3), True))(table)
+    monkeypatch.setenv("REPRO_PRECONDITION_CHECKS", "0")
+    ref.claim_probe_fused(table, keys, groups, prio, do, jnp.uint32(3),
+                          True)
+
+
 def test_repro_kernels_env_resolved_per_call(monkeypatch):
     """REPRO_KERNELS must be read per call, not frozen at import time."""
     monkeypatch.setenv("REPRO_KERNELS", "pallas")

@@ -1,7 +1,7 @@
 """Multi-version store + mechanism semantics: snapshot reads, FCW
-write-write rules, the read-only no-abort guarantee, ring reclamation, and
-the value-oracle serializability check (thinning disabled where rules must
-be deterministic)."""
+write-write rules, the read-only no-abort guarantee, ring reclamation,
+aged reader snapshots (snapshot_age), and the value-oracle serializability
+check (thinning disabled where rules must be deterministic)."""
 import dataclasses
 
 import jax
@@ -9,6 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from hypothesis_compat import given, settings, st
 from repro.core import mvstore
 from repro.core import types as t
 from repro.core.cc import mvcc, mvocc
@@ -308,3 +309,116 @@ def test_mv_requires_depth():
     with pytest.raises(ValueError, match="mv_depth"):
         EngineConfig(cc=t.CC_MVCC, lanes=4, slots=4, n_records=16,
                      n_groups=2, n_cols=0, n_txn_types=1)
+
+
+# ------------------------------------------------- aged reader snapshots
+def test_snapshot_age_config_validation():
+    with pytest.raises(ValueError, match="snapshot_age"):
+        EngineConfig(cc=t.CC_OCC, lanes=4, slots=4, n_records=16,
+                     n_groups=2, n_cols=0, n_txn_types=1, snapshot_age=2)
+    with pytest.raises(ValueError, match="snapshot_age"):
+        EngineConfig(cc=t.CC_MVCC, lanes=4, slots=4, n_records=16,
+                     n_groups=2, n_cols=0, n_txn_types=1, mv_depth=2,
+                     snapshot_age=-1)
+
+
+def test_snapshot_ts_ages_and_saturates():
+    """snapshot_ts(w, age) = w - age, saturating at 0 so the earliest waves
+    still see the initial versions."""
+    assert int(mvstore.snapshot_ts(jnp.uint32(9), 3)) == 6
+    assert int(mvstore.snapshot_ts(jnp.uint32(2), 5)) == 0
+    assert int(mvstore.snapshot_ts(jnp.uint32(7))) == 7
+
+
+def test_aged_reader_aborts_once_ring_outruns_it():
+    """Mechanism level: a reader whose snapshot is pinned ``age`` waves back
+    commits while the ring still retains its version and aborts cleanly
+    (reclamation, ok=False) once writers have recycled it — deterministic,
+    never thinned."""
+    D_, age = 2, 4
+    begin, head, _ = mvstore.mv_init(4, D_, 2)
+    keys = jnp.asarray([[0]], jnp.int32)
+    grps = jnp.zeros((1, 1), jnp.int32)
+    do = jnp.asarray([[True]])
+    rd = batch_of([[(0, 0, t.READ)]], 1, 2)
+    prio = jnp.asarray([0], jnp.uint32)
+    cfg = make_cfg(t.CC_MVCC, 1, 2, n_rec=4, depth=D_, snapshot_age=age)
+    for wave in range(8):
+        store = store_init(4, 2, 0, mv_depth=D_)
+        store = dataclasses.replace(store, mv_begin=begin, mv_head=head)
+        _, res = mvcc.wave_validate(store, rd, prio, jnp.uint32(wave), cfg)
+        # retained begins after w installs: {w-1, w} (plus initial 0 early);
+        # aged snapshot max(wave-age, 0) falls off once wave-age < wave-1.
+        snap = max(wave - age, 0)
+        retained = {max(wave - 1, 0), wave}
+        want = any(b <= snap for b in retained)
+        assert bool(np.asarray(res.commit)[0]) == want, wave
+        # writers push one new version per wave
+        begin, head = ref.mv_install(begin, head, keys, grps, do,
+                                     jnp.uint32(wave + 1))
+    assert not bool(np.asarray(res.commit)[0])   # it did eventually abort
+
+
+def test_engine_snapshot_age_reclamation_aborts_end_to_end():
+    """Engine level: under a write-heavy contended YCSB mix with read-only
+    clients and a shallow ring, snapshot_age > 0 produces nonzero
+    reclamation (read-only) aborts where the age-0 control has none."""
+    wl = YCSBWorkload.make(n_keys=32, theta=0.95, write_frac=0.9,
+                           ro_frac=0.3, ops_per_txn=4)
+    base = dict(lanes=16, slots=wl.slots, n_records=wl.n_records,
+                n_groups=wl.n_groups, n_cols=wl.n_cols,
+                n_txn_types=wl.n_txn_types, n_rings=wl.n_rings,
+                granularity=1, mv_depth=2)
+    aged = run(EngineConfig(cc=t.CC_MVCC, snapshot_age=6, **base), wl,
+               n_waves=30, seed=0)
+    fresh = run(EngineConfig(cc=t.CC_MVCC, **base), wl, n_waves=30, seed=0)
+    assert fresh.ro_aborts == 0
+    assert aged.ro_aborts > 0
+    assert aged.ro_commits > 0           # early waves still commit
+    assert aged.commits + aged.aborts == fresh.commits + fresh.aborts
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_property_stale_snapshots_abort_and_never_read_reclaimed(seed):
+    """Property (ISSUE 5 satellite): under snapshot_age > 0 and ring
+    overflow, every stale snapshot gets ok=False, and whenever ok is True
+    the value oracle returns exactly the version a serial history would —
+    never a reclaimed slot's bytes."""
+    rng = np.random.default_rng(seed)
+    N, D_, G = 4, int(rng.integers(2, 4)), 1
+    age = int(rng.integers(1, 6))
+    begin, head, vals = mvstore.mv_init(N, D_, G, n_cols=1)
+    # serial history per record: [(begin_ts, value)], initial version 0.0
+    hist = {r: [(0, 0.0)] for r in range(N)}
+    for wave in range(8):
+        ts = wave + 1
+        for r in range(N):
+            if rng.random() < 0.5:
+                continue
+            k = jnp.asarray([[r]], jnp.int32)
+            g = jnp.zeros((1, 1), jnp.int32)
+            do = jnp.asarray([[True]])
+            h_old = int(head[r])
+            begin, head = ref.mv_install(begin, head, k, g, do,
+                                         jnp.uint32(ts))
+            h_new = int(head[r])
+            v = float(ts * 10 + r)
+            vals = vals.at[r, h_new, :].set(vals[r, h_old, :])
+            vals = vals.at[r, h_new, 0].set(v)
+            hist[r].append((ts, v))
+        # aged snapshot of a wave-`wave` reader
+        snap = max(wave - age, 0)
+        keys = jnp.asarray([[r for r in range(N)]], jnp.int32)
+        zz = jnp.zeros((1, N), jnp.int32)
+        got_v, got_ok = mvstore.snapshot_values(
+            vals, begin, keys, zz, zz, jnp.uint32(snap), True)
+        for r in range(N):
+            retained = hist[r][-D_:]
+            visible = [(b, v) for b, v in retained if b <= snap]
+            ok = bool(np.asarray(got_ok)[0, r])
+            assert ok == bool(visible), (wave, r)
+            if ok:
+                # newest visible retained version — the serial answer; a
+                # reclaimed slot's bytes would differ (every value unique)
+                assert np.asarray(got_v)[0, r] == max(visible)[1], (wave, r)

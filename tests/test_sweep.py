@@ -147,8 +147,15 @@ def test_txn_bench_kernel_ops_attribution():
     assert kernel_coverage("pallas", t.CC_MVOCC) == mv_ops
     for cc in (t.CC_2PL, t.CC_SWISS, t.CC_ADAPTIVE):
         assert kernel_coverage("pallas", cc) == occ_ops
-    # the distributed wave's shard-local coverage (benchmarks/txn_scaling)
+    # the distributed wave's shard-local coverage (benchmarks/txn_scaling):
+    # occ bumps versions on the return trip, the MV pair gathers snapshots
+    # and publishes into the sharded ring instead
     assert dist_kernel_coverage("pallas") == {
         "route_pack": "pallas", "claim_probe": "pallas",
         "commit_install": "pallas"}
+    for cc in ("mvcc", "mvocc"):
+        assert dist_kernel_coverage("pallas", cc) == {
+            "route_pack": "pallas", "claim_probe": "pallas",
+            "mv_gather": "pallas", "mv_install": "pallas"}
     assert set(dist_kernel_coverage("jnp").values()) == {"xla"}
+    assert set(dist_kernel_coverage("jnp", "mvcc").values()) == {"xla"}
