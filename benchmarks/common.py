@@ -21,11 +21,15 @@ def sweep(workload: str, *, ccs=None, lanes=None, grans=(0, 1), waves=300,
                     seed=seed, backend=backend, **wl_kw)
     if not quiet:
         for r in rows:
-            print(f"  {workload} {r['cc']:9s} "
-                  f"{'fine' if r['granularity'] else 'coarse'} "
-                  f"T={r['lanes']:4d}  "
-                  f"thpt={r['throughput']:8.3f}  "
-                  f"abort={100*r['abort_rate']:6.2f}%")
+            line = (f"  {workload} {r['cc']:9s} "
+                    f"{'fine' if r['granularity'] else 'coarse'} "
+                    f"T={r['lanes']:4d}  "
+                    f"thpt={r['throughput']:8.3f}  "
+                    f"abort={100*r['abort_rate']:6.2f}%")
+            if r.get("open_loop"):
+                line += (f"  goodput={r['goodput']:8.3f}  "
+                         f"p99ttc={max(r['p99_ttc_waves']):g}w")
+            print(line)
     return rows
 
 

@@ -35,17 +35,34 @@ def _num(x) -> bool:
     return isinstance(x, (int, float)) and not isinstance(x, bool)
 
 
+def _coerce(x):
+    """Numeric value as float, or None.  Numeric STRINGS coerce too:
+    hand-edited or CSV-converted bench files store "12.3", and comparing
+    such strings lexically would rank "0.9" above "12.3" — every
+    comparison in this module must go through here, never compare raw
+    field values."""
+    if _num(x):
+        return float(x)
+    if isinstance(x, str):
+        try:
+            return float(x)
+        except ValueError:
+            return None
+    return None
+
+
 def _fnum(r: dict, key: str, default=0):
-    """Numeric field or ``default`` — malformed values never crash a cell."""
-    v = r.get(key, default)
-    return v if _num(v) else default
+    """Numeric field (coerced) or ``default`` — malformed values never
+    crash a cell."""
+    v = _coerce(r.get(key))
+    return default if v is None else v
 
 
 def _mech_problem(r) -> str | None:
     """Why a mechanism-shaped row can't be summarized (None = fine)."""
     if not isinstance(r, dict):
         return "not a JSON object"
-    if not _num(r.get("throughput")):
+    if _coerce(r.get("throughput")) is None:
         return "missing/non-numeric 'throughput'"
     return None
 
@@ -54,7 +71,7 @@ def _dist_problem(r) -> str | None:
     """Why a distributed-shaped row can't be summarized (None = fine)."""
     if not isinstance(r, dict):
         return "not a JSON object"
-    if not _num(r.get("shards")):
+    if _coerce(r.get("shards")) is None:
         return "missing/non-numeric 'shards'"
     return None
 
@@ -105,6 +122,17 @@ def _gran(g) -> str:
     return "fine" if g else "coarse"
 
 
+def _ttc_cell(v) -> str:
+    """Per-txn-class time-to-commit list -> 'a/b/c' cell ('—' when
+    absent/malformed)."""
+    if isinstance(v, (list, tuple)) and v:
+        nums = [_coerce(x) for x in v]
+        if all(n is not None for n in nums):
+            return "/".join(f"{n:g}" for n in nums)
+    n = _coerce(v)
+    return f"{n:g}" if n is not None else "—"
+
+
 def _src_of(r) -> str:
     return r.get("_src", "?") if isinstance(r, dict) else "?"
 
@@ -138,7 +166,10 @@ def render_markdown(mech: list, dist: list) -> str:
             key = (r.get("workload", "?"), r.get("cc", "?"),
                    r.get("granularity", 1), r.get("backend", "?"))
             best = groups.get(key)
-            if best is None or r["throughput"] > best["throughput"]:
+            # Coerced comparison: string throughputs ("0.9" vs "12.3")
+            # must rank numerically, never lexically.
+            if best is None or (_fnum(r, "throughput")
+                                > _fnum(best, "throughput")):
                 groups[key] = r
         out += ["## Mechanisms (peak-throughput point per "
                 "workload × cc × granularity × backend)", "",
@@ -149,9 +180,41 @@ def render_markdown(mech: list, dist: list) -> str:
             r = groups[key]
             out.append(
                 f"| {key[0]} | {key[1]} | {_gran(key[2])} | {key[3]} "
-                f"| {r['throughput']:.3f} | {r.get('lanes', '?')} "
+                f"| {_fnum(r, 'throughput'):.3f} | {r.get('lanes', '?')} "
                 f"| {100 * _fnum(r, 'abort_rate'):.2f}% "
                 f"| {_ops_cell(r.get('kernel_ops', {}))} "
+                f"| {_src_of(r)} |")
+        out.append("")
+
+    open_rows = [r for r in mech_ok if r.get("open_loop")]
+    if open_rows:
+        groups = {}
+        for r in open_rows:
+            key = (r.get("workload", "?"), r.get("cc", "?"),
+                   r.get("granularity", 1), r.get("backend", "?"))
+            best = groups.get(key)
+            if best is None or (_fnum(r, "goodput")
+                                > _fnum(best, "goodput")):
+                groups[key] = r
+        out += ["## Open-loop latency (peak-goodput point per "
+                "workload × cc × granularity × backend)", "",
+                "Goodput = unique committed txns per simulated us; "
+                "time-to-commit percentiles are per txn class, in waves "
+                "from first admission to commit (DESIGN.md section 11).",
+                "",
+                "| workload | cc | granularity | backend | goodput "
+                "(txn/us) | p50 ttc (waves) | p99 ttc (waves) "
+                "| inc drops | arrival drops | source |",
+                "|---|---|---|---|---|---|---|---|---|---|"]
+        for key in sorted(groups, key=str):
+            r = groups[key]
+            out.append(
+                f"| {key[0]} | {key[1]} | {_gran(key[2])} | {key[3]} "
+                f"| {_fnum(r, 'goodput'):.3f} "
+                f"| {_ttc_cell(r.get('p50_ttc_waves'))} "
+                f"| {_ttc_cell(r.get('p99_ttc_waves'))} "
+                f"| {r.get('inc_drops', '?')} "
+                f"| {r.get('arrival_drops', '?')} "
                 f"| {_src_of(r)} |")
         out.append("")
 

@@ -20,7 +20,7 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     from benchmarks import (abort_rates, auto_granularity, fig2_ycsb,
-                            fig3_tpcc)
+                            fig3_tpcc, open_loop)
     from benchmarks.common import one
 
     results = []
@@ -45,16 +45,20 @@ def main(argv=None):
     print("\n== Auto-granularity (beyond paper) ==", flush=True)
     rg = timed("auto_granularity", auto_granularity.main,
                ["--waves", str(waves)])
+    print("\n== Open-loop load-latency (beyond paper) ==", flush=True)
+    ro = timed("open_loop", open_loop.main, ["--waves", str(waves)])
 
     print("\n== CSV summary ==")
     print("name,wall_s,headline")
     occ128f = one(r3, cc="occ", granularity=1, lanes=128)["throughput"]
     tic128f = one(r3, cc="tictoc", granularity=1, lanes=128)["throughput"]
+    peak = max(r["goodput"] for r in ro)
     heads = {
         "fig2_ycsb": "see orderings above",
         "fig3_tpcc": f"OCCfine/TicTocfine@128={occ128f/tic128f:.2f}x",
         "abort_rates": "see table above",
         "auto_granularity": "see recovery above",
+        "open_loop": f"peak goodput={peak:.2f} txn/us",
     }
     for name, wall, _rows in results:
         print(f"{name},{wall:.1f},{heads[name]}")

@@ -1,0 +1,277 @@
+"""Fixed-capacity admission queue for the open-loop traffic front-end.
+
+Closed-loop benchmarks (the paper's) pin one transaction per lane and
+retry it in place; production traffic is *open-loop*: transactions arrive
+on a Poisson schedule (workloads/arrivals.py), queue for admission into
+the next wave, and an abort re-enqueues the SAME transaction — same
+read/write set, incremented **incarnation** counter — until it commits or
+exceeds ``max_incarnations`` (then it is dropped, and counted).  This
+module is the queue: a fixed-capacity ring of transaction entries whose
+every operation is a fixed-shape gather/scatter, so the whole open-loop
+wave stays inside one jitted ``lax.scan`` (and under ``vmap`` in the
+sweep grid runner) exactly like the closed-loop engine.
+
+Ring discipline (DESIGN.md section 11)
+--------------------------------------
+``head``/``size`` scalars index a capacity-``C`` ring.  Within one wave:
+
+  1. ``enqueue`` the wave's arrivals (admit_wave = now, incarnation 0).
+     Arrivals beyond the free space overflow — dropped and counted.
+  2. ``dequeue`` up to T entries into the lane grid (FIFO from ``head``).
+  3. run the wave; committed lanes leave the system, recording
+     ``time-to-commit = commit_wave - admit_wave + 1`` waves.
+  4. ``enqueue`` the aborted lanes back (same ops, incarnation + 1) unless
+     the new incarnation would exceed the cap.
+
+Because arrivals enqueue BEFORE the dequeue and re-enqueues come after,
+step 4 can never overflow: dequeuing d entries frees d slots and at most
+d lanes abort.  The conservation oracle (tests/test_open_loop.py) checks
+the resulting invariant exactly: every admitted transaction is committed
+exactly once, still queued, or dropped at the incarnation cap.
+
+Occupancy never exceeds capacity and every overflow is counted — the
+hypothesis properties in tests/test_open_loop.py drive random
+enqueue/dequeue sequences against both.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import types as t
+from repro.core.types import OOB_KEY, TxnBatch
+
+#: lat_hist's last bin is the overflow bin: a time-to-commit of
+#: >= lat_bins - 1 waves lands there (percentiles saturate at it).
+MIN_LAT_BINS = 2
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["op_key", "op_group", "op_col", "op_kind", "op_val",
+                      "txn_type", "n_ops", "admit_wave", "incarnation",
+                      "txn_id", "head", "size"],
+         meta_fields=[])
+@dataclasses.dataclass
+class QueueState:
+    """A capacity-C ring of queued transactions (C entries x K op slots).
+
+    Entry fields mirror TxnBatch row-for-row — a re-enqueued transaction's
+    ops are stored bit-identically to its first incarnation (the property
+    tests assert this) — plus the open-loop metadata: ``admit_wave`` (the
+    wave the transaction FIRST entered the queue; retries keep it),
+    ``incarnation`` (0 on arrival, +1 per re-enqueue), and ``txn_id``
+    (unique admission serial, the conservation oracle's tracking key).
+    """
+    op_key: jax.Array       # int32[C, K]
+    op_group: jax.Array     # int32[C, K]
+    op_col: jax.Array       # int32[C, K]
+    op_kind: jax.Array      # int32[C, K]
+    op_val: jax.Array       # f32[C, K]
+    txn_type: jax.Array     # int32[C]
+    n_ops: jax.Array        # int32[C]
+    admit_wave: jax.Array   # int32[C]  wave of FIRST admission (kept on retry)
+    incarnation: jax.Array  # int32[C]  execution attempt counter
+    txn_id: jax.Array       # int32[C]  unique admission serial number
+    head: jax.Array         # int32 scalar: ring read cursor
+    size: jax.Array         # int32 scalar: live entries (never > cap)
+
+    @property
+    def cap(self) -> int:
+        return self.op_key.shape[0]
+
+    @property
+    def slots(self) -> int:
+        return self.op_key.shape[1]
+
+
+def queue_init(cap: int, slots: int) -> QueueState:
+    zi2 = jnp.zeros((cap, slots), jnp.int32)
+    zi1 = jnp.zeros((cap,), jnp.int32)
+    return QueueState(
+        op_key=jnp.full((cap, slots), -1, jnp.int32),
+        op_group=zi2, op_col=zi2, op_kind=zi2,
+        op_val=jnp.zeros((cap, slots), jnp.float32),
+        txn_type=zi1, n_ops=zi1, admit_wave=zi1, incarnation=zi1,
+        txn_id=zi1,
+        head=jnp.int32(0), size=jnp.int32(0))
+
+
+def ring_enqueue(cap: int, head: jax.Array, size: jax.Array,
+                 mask: jax.Array, tables: tuple, cols: tuple) -> tuple[
+                     tuple, jax.Array, jax.Array, jax.Array]:
+    """The one ring-append primitive: scatter masked lanes of each column
+    in ``cols`` into the matching capacity-``cap`` ring table, packed by
+    cumsum rank in ascending lane order.  Rejected lanes route to the
+    ``OOB_KEY`` sentinel slot — the one scatter index that actually drops
+    under ``mode="drop"`` (types.OOB_KEY rationale; ``cap`` itself is
+    already out of bounds but keep the convention of one loud sentinel).
+    Shared by the local QueueState ``enqueue`` and the distributed
+    per-shard rings (core/distributed.py carries no hand-rolled scatters).
+    Returns ``(tables', size', n_accepted, n_overflow)``.
+    """
+    m = mask.astype(jnp.int32)
+    rank = jnp.cumsum(m) - m                    # rank among masked lanes
+    accept = mask & (rank < cap - size)
+    slot = jnp.where(accept, (head + size + rank) % cap, OOB_KEY)
+    n_acc = accept.sum().astype(jnp.int32)
+    tabs = tuple(tab.at[slot].set(col, mode="drop")
+                 for tab, col in zip(tables, cols))
+    return tabs, size + n_acc, n_acc, m.sum().astype(jnp.int32) - n_acc
+
+
+def enqueue(q: QueueState, batch: TxnBatch, admit_wave: jax.Array,
+            incarnation: jax.Array, txn_id: jax.Array,
+            mask: jax.Array) -> tuple[QueueState, jax.Array, jax.Array]:
+    """Append ``batch`` lanes where ``mask`` into the ring, FIFO order.
+
+    admit_wave/incarnation/txn_id: int32[T] per-lane metadata stored with
+    the entry.  Lanes are packed in ascending lane order; once the ring is
+    full the remaining masked lanes overflow (dropped, counted).  Returns
+    ``(q', n_accepted, n_overflow)``.
+    """
+    tabs, size, n_acc, n_ovf = ring_enqueue(
+        q.cap, q.head, q.size, mask,
+        (q.op_key, q.op_group, q.op_col, q.op_kind, q.op_val,
+         q.txn_type, q.n_ops, q.admit_wave, q.incarnation, q.txn_id),
+        (batch.op_key, batch.op_group, batch.op_col, batch.op_kind,
+         batch.op_val, batch.txn_type, batch.n_ops,
+         admit_wave.astype(jnp.int32), incarnation.astype(jnp.int32),
+         txn_id.astype(jnp.int32)))
+    (op_key, op_group, op_col, op_kind, op_val, txn_type, n_ops,
+     admit_w, incarn, tid) = tabs
+    q = dataclasses.replace(
+        q, op_key=op_key, op_group=op_group, op_col=op_col,
+        op_kind=op_kind, op_val=op_val, txn_type=txn_type, n_ops=n_ops,
+        admit_wave=admit_w, incarnation=incarn, txn_id=tid, size=size)
+    return q, n_acc, n_ovf
+
+
+def dequeue(q: QueueState, lanes: int, n_active=None) -> tuple[
+        QueueState, TxnBatch, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Pop up to ``min(size, n_active)`` entries into a ``lanes``-wide
+    TxnBatch (FIFO).  ``n_active`` (int scalar, default ``lanes``) is the
+    sweep runner's live-lane count: padded grid points fill only their
+    real lane prefix.  Unfilled lanes carry the empty transaction (no ops,
+    no claims — the engine's padding convention).  Returns
+    ``(q', batch, admit_wave, incarnation, txn_id, got)`` with ``got``
+    bool[lanes] marking filled lanes.
+    """
+    if n_active is None:
+        n_active = lanes
+    take = jnp.minimum(q.size, jnp.asarray(n_active, jnp.int32))
+    i = jnp.arange(lanes, dtype=jnp.int32)
+    got = i < take
+    pos = (q.head + i) % q.cap
+
+    def take2(tab, fill):
+        return jnp.where(got[:, None], tab[pos, :], fill)
+
+    def take1(tab, fill=0):
+        return jnp.where(got, tab[pos], fill)
+
+    batch = TxnBatch(
+        op_key=take2(q.op_key, -1),
+        op_group=take2(q.op_group, 0),
+        op_col=take2(q.op_col, 0),
+        op_kind=take2(q.op_kind, t.NOP),
+        op_val=jnp.where(got[:, None], q.op_val[pos, :], 0.0),
+        txn_type=take1(q.txn_type),
+        n_ops=take1(q.n_ops))
+    admit_wave = take1(q.admit_wave)
+    incarnation = take1(q.incarnation)
+    txn_id = take1(q.txn_id, -1)
+    q = dataclasses.replace(q, head=(q.head + take) % q.cap,
+                            size=q.size - take)
+    return q, batch, admit_wave, incarnation, txn_id, got
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["queue", "next_id", "offered", "admitted",
+                      "arrival_drops", "inc_drops", "reenq_drops",
+                      "lat_hist"],
+         meta_fields=[])
+@dataclasses.dataclass
+class OpenLoopState:
+    """Open-loop front-end state carried through the wave scan
+    (EngineState.ol): the admission queue plus the goodput-conservation
+    counters and the per-class time-to-commit histogram."""
+    queue: QueueState
+    next_id: jax.Array       # int32: next admission serial number
+    offered: jax.Array       # int32: Poisson arrivals offered (post lane-cap)
+    admitted: jax.Array      # int32: arrivals accepted into the queue
+    arrival_drops: jax.Array  # int32: arrivals lost to a full queue
+    inc_drops: jax.Array     # int32: txns dropped past max_incarnations
+    reenq_drops: jax.Array   # int32: re-enqueue overflow — structurally 0
+                             #   (arrivals land before the dequeue frees
+                             #   lanes; the oracle asserts it stays 0)
+    lat_hist: jax.Array      # int32[n_txn_types, lat_bins] time-to-commit
+                             #   histogram, bin = min(ttc_waves, bins - 1)
+
+    @property
+    def lat_bins(self) -> int:
+        return self.lat_hist.shape[1]
+
+
+def open_loop_init(cap: int, slots: int, n_txn_types: int,
+                   lat_bins: int) -> OpenLoopState:
+    z = jnp.int32(0)
+    return OpenLoopState(
+        queue=queue_init(cap, slots),
+        next_id=z, offered=z, admitted=z, arrival_drops=z, inc_drops=z,
+        reenq_drops=z,
+        lat_hist=jnp.zeros((n_txn_types, lat_bins), jnp.int32))
+
+
+def open_loop_placeholder() -> OpenLoopState:
+    """Minimal-footprint stand-in carried by closed-loop runs (the
+    mvstore.mv_placeholder pattern): EngineState keeps one pytree
+    structure either way."""
+    return open_loop_init(1, 1, 1, MIN_LAT_BINS)
+
+
+def record_commits(ol: OpenLoopState, txn_type: jax.Array, ttc: jax.Array,
+                   commit: jax.Array) -> OpenLoopState:
+    """Accumulate committed lanes' time-to-commit (waves, >= 1) into the
+    per-class histogram; the last bin absorbs overflow."""
+    b = jnp.clip(ttc, 0, ol.lat_bins - 1)
+    tt = jnp.where(commit, txn_type, OOB_KEY)
+    return dataclasses.replace(
+        ol, lat_hist=ol.lat_hist.at[tt, b].add(1, mode="drop"))
+
+
+def record_ttc(lat_hist: jax.Array, ttc: jax.Array,
+               commit: jax.Array) -> jax.Array:
+    """Classless 1-D time-to-commit scatter: ``lat_hist`` is int32[bins],
+    committed lanes land in ``min(ttc, bins - 1)`` (last bin = overflow),
+    others route to the OOB_KEY drop sentinel.  The distributed engine's
+    per-shard histogram (core/distributed.py); ``record_commits`` is the
+    local engine's per-txn-class variant."""
+    b = jnp.where(commit, jnp.clip(ttc, 0, lat_hist.shape[0] - 1), OOB_KEY)
+    return lat_hist.at[b].add(1, mode="drop")
+
+
+def ttc_percentiles(lat_hist, qs=(0.5, 0.99)) -> list[list[float]]:
+    """Host-side percentile read-out of a time-to-commit histogram.
+
+    lat_hist: int[n_classes, bins] with bin index == time-to-commit in
+    waves (last bin = overflow).  Returns, per quantile in ``qs``, a list
+    of per-class values in waves; a class with no commits reports 0.0.
+    """
+    h = np.asarray(lat_hist)
+    out: list[list[float]] = []
+    for q in qs:
+        row = []
+        for c in range(h.shape[0]):
+            cum = np.cumsum(h[c])
+            total = int(cum[-1]) if cum.size else 0
+            if total == 0:
+                row.append(0.0)
+                continue
+            k = int(np.searchsorted(cum, np.ceil(q * total)))
+            row.append(float(k))
+        out.append(row)
+    return out

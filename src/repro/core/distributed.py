@@ -82,6 +82,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.compat import shard_map
 
+from repro.core import admission
 from repro.core import backend as kb
 from repro.core import mvstore
 from repro.core import types as t
@@ -99,9 +100,14 @@ DIST_MV_CCS = ("mvcc", "mvocc")
 
 #: stats vector layout per shard (int32[STATS_LEN]; ro = read-only lanes,
 #: the multi-version headline split SimResult/dashboard rows expect).
-STATS_LEN = 6
+#: Slots 6..9 are the open-loop front-end counters (make_open_wave_fn);
+#: the closed wave reports zeros there.  ADMITTED / ARRIVAL_DROPS /
+#: INC_DROPS are per-wave deltas the driver accumulates; QUEUED is the
+#: post-wave queue-occupancy snapshot (NOT a delta).
+STATS_LEN = 10
 STAT_COMMITS, STAT_ABORTS, STAT_DROPPED_LANES, STAT_DROPPED_OPS, \
-    STAT_RO_COMMITS, STAT_RO_ABORTS = range(STATS_LEN)
+    STAT_RO_COMMITS, STAT_RO_ABORTS, STAT_ADMITTED, STAT_ARRIVAL_DROPS, \
+    STAT_INC_DROPS, STAT_QUEUED = range(STATS_LEN)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -126,6 +132,16 @@ class DistConfig:
     snapshot_age: int = 0          # MV readers pin snapshots this many
                                    # waves back (mvstore.snapshot_ts); > 0
                                    # makes ring reclamation fire under load
+    # ---- open-loop front-end (make_open_wave_fn; DESIGN.md section 11).
+    # queue_cap >= 1 turns on the per-shard admission ring; arrival counts
+    # are driver-supplied per wave (workloads/arrivals.PoissonArrivals
+    # .shard_counts), so there is no arrival_rate knob here.
+    queue_cap: int = 0             # per-SHARD admission-ring capacity
+                                   # (0 = closed loop)
+    max_incarnations: int = 0      # max re-executions after first attempt;
+                                   # past it a txn drops (counted)
+    lat_bins: int = 32             # per-shard time-to-commit histogram
+                                   # width in waves (last bin = overflow)
 
     def __post_init__(self):
         if self.backend not in ("jnp", "pallas"):
@@ -168,6 +184,26 @@ class DistConfig:
             raise ValueError(
                 f"n_groups={self.n_groups}: the wire meta word packs the "
                 "group id into one bit (group | kind << 1 | prio16 << 3)")
+        if self.queue_cap < 0:
+            raise ValueError(
+                f"queue_cap={self.queue_cap} is negative (0 = closed "
+                "loop, >= 1 = per-shard admission-ring capacity)")
+        if self.max_incarnations < 0:
+            raise ValueError(f"max_incarnations must be >= 0, got "
+                             f"{self.max_incarnations}")
+        if self.queue_cap and self.lat_bins < 2:
+            raise ValueError(
+                f"lat_bins={self.lat_bins}: the time-to-commit histogram "
+                "needs >= 2 bins (the last bin is the overflow bin)")
+        if self.max_incarnations and not self.queue_cap:
+            raise ValueError(
+                f"max_incarnations={self.max_incarnations} shapes the "
+                "open-loop admission queue only — set queue_cap >= 1 "
+                "(the open-loop switch) to use it")
+
+    @property
+    def open_loop(self) -> bool:
+        return self.queue_cap >= 1
 
     @property
     def is_mv(self) -> bool:
@@ -194,17 +230,14 @@ def n_shards(mesh) -> int:
     return math.prod(mesh.shape[a] for a in mesh.axis_names)
 
 
-def make_wave_fn(cfg: DistConfig, mesh):
-    """Returns wave(keys, groups, kinds, prio, tables, wave_idx) ->
-    (commit [T], tables', stats) — all arguments globally shaped, sharded
-    over the combined mesh axes.  ``tables`` is the mechanism's state tuple
-    (see module docstring / ``init_tables``); ``stats`` is
-    int32[STATS_LEN] per shard: [commits, aborts, capacity-dropped lanes,
-    dropped ops, read-only commits, read-only aborts].
-
-    The resolved backend (``cfg.backend``) is threaded into the
-    shard-local wave; route/claim/probe/gather/install all run through its
-    surface ops on the shard's table slices.
+def _make_shard_body(cfg: DistConfig, mesh):
+    """The shard-local routed wave: route -> claim -> verdict -> install
+    (module docstring).  Returns ``body(keys, groups, kinds, prio, tables,
+    wave_idx) -> (commit, tables', lane_dropped, has_write, dropped_op)``
+    — the one op pipeline shared by the closed-loop wave (make_wave_fn)
+    and the open-loop wave (make_open_wave_fn); only the traffic model
+    around it differs.  Must be called inside shard_map over ``mesh``'s
+    axes (the body's all_to_all exchanges name them).
     """
     ax = _axes(mesh)
     ns = n_shards(mesh)
@@ -215,7 +248,7 @@ def make_wave_fn(cfg: DistConfig, mesh):
     be = kb.resolve(cfg)
     mv = cfg.is_mv
 
-    def local_wave(keys, groups, kinds, prio, tables, wave_idx):
+    def body(keys, groups, kinds, prio, tables, wave_idx):
         # keys/groups/kinds: [T, K] local lanes; prio: [T]
         # tables: per-mechanism state tuple, each [rec_per, ...] local shard.
         live = (kinds != t.NOP) & (keys >= 0)
@@ -322,20 +355,229 @@ def make_wave_fn(cfg: DistConfig, mesh):
                 mvstore.install_ts(wave_idx))
             tables = (claim_w, claim_r, mv_begin, mv_head)
 
+        return commit, tables, lane_dropped, has_write, dropped_op
+
+    return body
+
+
+def _spec_ops(mesh):
+    ax = _axes(mesh)
+    return P(ax if len(ax) > 1 else ax[0])
+
+
+def make_wave_fn(cfg: DistConfig, mesh):
+    """Returns wave(keys, groups, kinds, prio, tables, wave_idx) ->
+    (commit [T], tables', stats) — all arguments globally shaped, sharded
+    over the combined mesh axes.  ``tables`` is the mechanism's state tuple
+    (see module docstring / ``init_tables``); ``stats`` is
+    int32[STATS_LEN] per shard: [commits, aborts, capacity-dropped lanes,
+    dropped ops, read-only commits, read-only aborts, then zeros in the
+    open-loop slots — this is the closed-loop wave].
+
+    The resolved backend (``cfg.backend``) is threaded into the
+    shard-local wave; route/claim/probe/gather/install all run through its
+    surface ops on the shard's table slices.
+    """
+    body = _make_shard_body(cfg, mesh)
+    mv = cfg.is_mv
+
+    def local_wave(keys, groups, kinds, prio, tables, wave_idx):
+        commit, tables, lane_dropped, has_write, dropped_op = body(
+            keys, groups, kinds, prio, tables, wave_idx)
         ro = ~has_write
+        z = jnp.int32(0)
         stats = jnp.stack([commit.sum(), (~commit).sum(),
                            lane_dropped.sum(), dropped_op.sum(),
                            (commit & ro).sum(),
-                           (~commit & ro).sum()]).astype(jnp.int32)
+                           (~commit & ro).sum(),
+                           z, z, z, z]).astype(jnp.int32)
         return commit, tables, stats
 
-    spec_ops = P(ax if len(ax) > 1 else ax[0])
+    spec_ops = _spec_ops(mesh)
     tab_spec = (spec_ops,) * (4 if mv else 2)
     wave = shard_map(
         local_wave, mesh=mesh,
         in_specs=(spec_ops, spec_ops, spec_ops, spec_ops, tab_spec, P()),
         out_specs=(spec_ops, tab_spec, spec_ops))
     return wave
+
+
+def make_open_wave_fn(cfg: DistConfig, mesh):
+    """The OPEN-LOOP routed wave (DESIGN.md section 11): each shard runs a
+    fixed-capacity admission ring in front of the shared shard body
+    (_make_shard_body), mirroring the local engine's core/admission.py.
+
+    Returns ``open_wave(keys, groups, kinds, prio, n_arrive, tables,
+    qstate, wave_idx) -> (commit, tables', qstate', stats)``:
+
+    - keys/groups/kinds [ns*T, K]: the wave's FRESH arrival candidates
+      (the front-end materializes at most T per shard per wave); the first
+      ``n_arrive[shard]`` lanes of each shard's slice actually arrive —
+      the driver draws the counts host-side
+      (workloads/arrivals.PoissonArrivals.shard_counts).
+    - prio [ns*T]: per-lane wave priorities for the DEQUEUED lanes.
+    - qstate: the sharded queue tuple from ``init_open_queue``.
+    - stats int32[ns, STATS_LEN] flattened: slots 6..9 carry
+      admitted/arrival_drops/inc_drops (per-wave deltas) and the post-wave
+      queue occupancy snapshot.
+
+    Ring discipline per shard and wave — enqueue arrivals, dequeue up to T
+    lanes FIFO, run the routed wave, re-enqueue aborted lanes with
+    incarnation + 1 (drop + count past ``cfg.max_incarnations``), record
+    committed lanes' time-to-commit (waves) in the shard's histogram.
+    Arrivals land before the dequeue frees lanes, so the re-enqueue can
+    never overflow (the core/admission.py invariant; the conservation
+    oracle in tests/test_open_loop.py reconciles the counters exactly).
+    """
+    if not cfg.open_loop:
+        raise ValueError("make_open_wave_fn needs queue_cap >= 1 "
+                         "(the open-loop switch); use make_wave_fn for "
+                         "closed-loop waves")
+    body = _make_shard_body(cfg, mesh)
+    mv = cfg.is_mv
+    T, K = cfg.lanes_per_shard, cfg.slots
+    C = cfg.queue_cap
+
+    def local_wave(keys, groups, kinds, prio, n_arrive, tables, qstate,
+                   wave_idx):
+        (qk, qg, qi, qa, qc, qd, head, size, next_id, lat_hist) = qstate
+        head, size, nid = head[0], size[0], next_id[0]
+        w = wave_idx.astype(jnp.int32)
+
+        def enq(head, size, mask, ek, eg, ei, ea, ec, ed):
+            """Append masked lanes into the ring (ascending lane order);
+            the cumsum-rank placement of admission.ring_enqueue."""
+            tabs, size, n_acc, n_ovf = admission.ring_enqueue(
+                C, head, size, mask, (qk, qg, qi, qa, qc, qd),
+                (ek, eg, ei, ea, ec, ed))
+            return tabs + (size, n_acc, n_ovf)
+
+        # --- arrivals: first n_arrive fresh lanes enter the ring --------
+        n_arr = jnp.minimum(n_arrive[0], T)
+        arr = jnp.arange(T, dtype=jnp.int32) < n_arr
+        ids = nid + jnp.arange(T, dtype=jnp.int32)
+        qk, qg, qi, qa, qc, qd, size, n_adm, n_ovf = enq(
+            head, size, arr, keys, groups, kinds,
+            jnp.full((T,), w, jnp.int32), jnp.zeros((T,), jnp.int32), ids)
+
+        # --- admit: fill the shard's T lanes FIFO -----------------------
+        take = jnp.minimum(size, T)
+        i = jnp.arange(T, dtype=jnp.int32)
+        got = i < take
+        pos = (head + i) % C
+        dk = jnp.where(got[:, None], qk[pos, :], -1)
+        dg = jnp.where(got[:, None], qg[pos, :], 0)
+        di = jnp.where(got[:, None], qi[pos, :], t.NOP)
+        admit_w = jnp.where(got, qa[pos], 0)
+        incarn = jnp.where(got, qc[pos], 0)
+        head, size = (head + take) % C, size - take
+
+        # --- the routed wave on the admitted lanes ----------------------
+        commit, tables, lane_dropped, has_write, dropped_op = body(
+            dk, dg, di, prio, tables, wave_idx)
+        commit = commit & got
+        aborted = got & ~commit
+
+        # --- retry incarnations / latency -------------------------------
+        retry = aborted & (incarn < cfg.max_incarnations)
+        inc_drop = aborted & ~retry
+        # Arrivals enqueued before the dequeue freed these slots, so this
+        # can never overflow (n_re_ovf stays 0; the oracle asserts it via
+        # the exact counter reconciliation).
+        qk, qg, qi, qa, qc, qd, size, _, n_re_ovf = enq(
+            head, size, retry, dk, dg, di, admit_w, incarn + 1,
+            jnp.where(got, qd[pos], -1))
+        lat_hist = admission.record_ttc(lat_hist, w - admit_w + 1, commit)
+
+        ro = ~has_write
+        stats = jnp.stack([
+            commit.sum(), aborted.sum(), lane_dropped.sum(),
+            dropped_op.sum(),
+            (commit & ro).sum(), (aborted & ro).sum(),
+            n_adm, n_ovf + n_re_ovf,
+            inc_drop.sum(), size]).astype(jnp.int32)
+        qstate = (qk, qg, qi, qa, qc, qd, head[None], size[None],
+                  (nid + n_arr)[None], lat_hist)
+        return commit, tables, qstate, stats
+
+    spec = _spec_ops(mesh)
+    tab_spec = (spec,) * (4 if mv else 2)
+    q_spec = (spec,) * 10
+    wave = shard_map(
+        local_wave, mesh=mesh,
+        in_specs=(spec, spec, spec, spec, spec, tab_spec, q_spec, P()),
+        out_specs=(spec, tab_spec, q_spec, spec))
+    return wave
+
+
+def init_open_queue(cfg: DistConfig, mesh):
+    """Fresh sharded open-loop queue state for ``make_open_wave_fn``:
+    ``(q_key, q_grp, q_kind, q_admit, q_inc, q_id, head, size, next_id,
+    lat_hist)`` — per-shard ring buffers (globally [ns*cap, ...]), ring
+    cursors ([ns], local scalars inside shard_map), and the per-shard
+    time-to-commit histogram ([ns*lat_bins]).  ``next_id`` starts at
+    ``shard * 2^20`` so admission serials are globally unique without any
+    cross-shard coordination (up to 2^20 admissions per shard)."""
+    if not cfg.open_loop:
+        raise ValueError("init_open_queue needs queue_cap >= 1")
+    ns = n_shards(mesh)
+    C, K, L = cfg.queue_cap, cfg.slots, cfg.lat_bins
+    zi1 = jnp.zeros((ns * C,), jnp.int32)
+    return (jnp.full((ns * C, K), -1, jnp.int32),          # q_key
+            jnp.zeros((ns * C, K), jnp.int32),             # q_grp
+            jnp.full((ns * C, K), t.NOP, jnp.int32),       # q_kind
+            zi1,                                           # q_admit
+            zi1,                                           # q_inc
+            zi1,                                           # q_id
+            jnp.zeros((ns,), jnp.int32),                   # head
+            jnp.zeros((ns,), jnp.int32),                   # size
+            jnp.arange(ns, dtype=jnp.int32) * (1 << 20),   # next_id
+            jnp.zeros((ns * L,), jnp.int32))               # lat_hist
+
+
+def run_open_loop(cfg: DistConfig, mesh, arrive_counts, gen_fn,
+                  n_waves: int):
+    """Host-side open-loop driver: loop ``n_waves`` jitted open waves and
+    reconcile the per-shard stats into one summary dict.
+
+    ``arrive_counts`` is int[n_waves, n_shards] (PoissonArrivals
+    .shard_counts); ``gen_fn(wave) -> (keys, groups, kinds, prio)``
+    supplies the wave's globally-shaped fresh-arrival candidates and lane
+    priorities (seeded host-side, so reruns and backends see identical
+    traffic).  The summary carries the conservation identities the oracle
+    test asserts: admitted == commits + queued_final + inc_drops and
+    offered == admitted + arrival_drops, both exact.
+    """
+    ns = n_shards(mesh)
+    wave = jax.jit(make_open_wave_fn(cfg, mesh))
+    tables = init_tables(cfg, mesh)
+    qstate = init_open_queue(cfg, mesh)
+    import numpy as np
+    acc = np.zeros((ns, STATS_LEN), np.int64)
+    offered = 0
+    for w in range(n_waves):
+        keys, groups, kinds, prio = gen_fn(w)
+        n_arr = jnp.asarray(arrive_counts[w], jnp.int32)
+        offered += int(jnp.minimum(n_arr, cfg.lanes_per_shard).sum())
+        commit, tables, qstate, stats = wave(
+            keys, groups, kinds, prio, n_arr, tables, qstate,
+            jnp.uint32(w))
+        acc += np.asarray(stats).reshape(ns, STATS_LEN)
+    lat_hist = np.asarray(qstate[-1]).reshape(ns, cfg.lat_bins)
+    queued = int(np.asarray(qstate[7]).sum())
+    return {
+        "commits": int(acc[:, STAT_COMMITS].sum()),
+        "aborts": int(acc[:, STAT_ABORTS].sum()),
+        "ro_commits": int(acc[:, STAT_RO_COMMITS].sum()),
+        "ro_aborts": int(acc[:, STAT_RO_ABORTS].sum()),
+        "offered": offered,
+        "admitted": int(acc[:, STAT_ADMITTED].sum()),
+        "arrival_drops": int(acc[:, STAT_ARRIVAL_DROPS].sum()),
+        "inc_drops": int(acc[:, STAT_INC_DROPS].sum()),
+        "queued_final": queued,
+        "lat_hist": lat_hist,
+        "per_shard_stats": acc,
+    }
 
 
 def init_tables(cfg: DistConfig, mesh):

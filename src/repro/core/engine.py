@@ -132,6 +132,63 @@ def apply_values(values: jax.Array, batch: TxnBatch, commit: jax.Array,
     return values
 
 
+def _lane_cost(cfg: EngineConfig, batch: TxnBatch, commit: jax.Array,
+               res: ValidationResult) -> tuple[jax.Array, jax.Array]:
+    """Per-lane simulated microseconds for one wave (DESIGN.md section 4).
+
+    Returns ``(lane_dt, has_write)``: committed lanes pay execution +
+    install contention, aborted optimistic lanes waste their full
+    execution, eager mechanisms cut losses at the first conflict.
+    ``has_write`` is the one definition of "read-only lane" (no live write
+    ops) shared by the MV-OCC validation-cost exemption and the ro
+    metrics.  Shared verbatim by the closed-loop and open-loop wave steps
+    — one cost model, two traffic models.
+    """
+    c = cfg.cost
+    kappa = _kappa(cfg, res)
+    n_ops = batch.n_ops.astype(jnp.float32)
+    n_reads = (batch.is_read() & batch.live()).sum(axis=1).astype(
+        jnp.float32)
+    has_write = (batch.is_write() & batch.live()).any(axis=1)
+    t_exec = c.c_txn + n_ops * c.c_op * kappa
+    if _optimistic(cfg):
+        val_reads = n_reads
+        if cfg.cc == t.CC_MVOCC:
+            # MV-OCC exempts read-only transactions from commit-time
+            # validation (they serialize at their snapshot — see
+            # cc/mvocc.py), so they don't pay for it either.
+            val_reads = jnp.where(has_write, n_reads, 0.0)
+        t_exec = t_exec + val_reads * c.c_validate
+    # Install contention: committed writers of the same *row* serialize
+    # on its cacheline (lock + version + data write): quadratic chain in
+    # the number of same-row committers.  Mechanism-agnostic, and
+    # granularity-independent — a row's version words share a cacheline
+    # whether there are one or two of them (the paper's "fine-grained
+    # timestamps show no measurable slowdown").  Same-row counts route
+    # through the backend's segment_count op like every shared-state
+    # access, so the pallas wave program carries no XLA sort.
+    be = kb.resolve(cfg)
+    wmask = batch.is_write() & batch.live() & commit[:, None]
+    n_w = be.segment_count(batch.op_key,
+                           jnp.zeros_like(batch.op_group), 1, wmask)
+    # Concurrent readers of the line interleave their probes with the
+    # writer chain, stretching each hold (the 8-socket effect that bends
+    # every optimistic curve past ~96 threads in the paper's Fig 3a).
+    rmask = batch.is_read() & batch.live()
+    n_r = be.segment_count(batch.op_key,
+                           jnp.zeros_like(batch.op_group), 1, rmask)
+    install_pen = (0.5 * jnp.float32(c.lam_w)
+                   * jnp.maximum(n_w - 1.0, 0.0)
+                   * (1.0 + 0.15 * n_r)).sum(axis=1)
+    t_commit = t_exec + res.ext_penalty + install_pen
+    if res.eager:
+        done = jnp.minimum(res.first_conflict.astype(jnp.float32), n_ops)
+        t_abort = c.c_txn + done * c.c_op * kappa + c.c_abort + c.backoff
+    else:
+        t_abort = t_exec + c.c_abort + c.backoff
+    return jnp.where(commit, t_commit, t_abort), has_write
+
+
 def make_wave_step(cfg: EngineConfig, workload: Workload,
                    active: Optional[jax.Array] = None) -> Callable:
     """Build the scan body for one wave.
@@ -179,50 +236,7 @@ def make_wave_step(cfg: EngineConfig, workload: Workload,
             store = dataclasses.replace(store, values=vals)
 
         # ---- cost model ----
-        kappa = _kappa(cfg, res)
-        n_ops = batch.n_ops.astype(jnp.float32)
-        n_reads = (batch.is_read() & batch.live()).sum(axis=1).astype(
-            jnp.float32)
-        # One definition of "read-only lane" (no live write ops) serves
-        # both the MV-OCC validation-cost exemption and the ro metrics.
-        has_write = (batch.is_write() & batch.live()).any(axis=1)
-        t_exec = c.c_txn + n_ops * c.c_op * kappa
-        if _optimistic(cfg):
-            val_reads = n_reads
-            if cfg.cc == t.CC_MVOCC:
-                # MV-OCC exempts read-only transactions from commit-time
-                # validation (they serialize at their snapshot — see
-                # cc/mvocc.py), so they don't pay for it either.
-                val_reads = jnp.where(has_write, n_reads, 0.0)
-            t_exec = t_exec + val_reads * c.c_validate
-        # Install contention: committed writers of the same *row* serialize
-        # on its cacheline (lock + version + data write): quadratic chain in
-        # the number of same-row committers.  Mechanism-agnostic, and
-        # granularity-independent — a row's version words share a cacheline
-        # whether there are one or two of them (the paper's "fine-grained
-        # timestamps show no measurable slowdown").  Same-row counts route
-        # through the backend's segment_count op like every shared-state
-        # access, so the pallas wave program carries no XLA sort.
-        be = kb.resolve(cfg)
-        wmask = batch.is_write() & batch.live() & commit[:, None]
-        n_w = be.segment_count(batch.op_key,
-                               jnp.zeros_like(batch.op_group), 1, wmask)
-        # Concurrent readers of the line interleave their probes with the
-        # writer chain, stretching each hold (the 8-socket effect that bends
-        # every optimistic curve past ~96 threads in the paper's Fig 3a).
-        rmask = batch.is_read() & batch.live()
-        n_r = be.segment_count(batch.op_key,
-                               jnp.zeros_like(batch.op_group), 1, rmask)
-        install_pen = (0.5 * jnp.float32(c.lam_w)
-                       * jnp.maximum(n_w - 1.0, 0.0)
-                       * (1.0 + 0.15 * n_r)).sum(axis=1)
-        t_commit = t_exec + res.ext_penalty + install_pen
-        if res.eager:
-            done = jnp.minimum(res.first_conflict.astype(jnp.float32), n_ops)
-            t_abort = c.c_txn + done * c.c_op * kappa + c.c_abort + c.backoff
-        else:
-            t_abort = t_exec + c.c_abort + c.backoff
-        lane_dt = jnp.where(commit, t_commit, t_abort)
+        lane_dt, has_write = _lane_cost(cfg, batch, commit, res)
 
         # ---- metrics + retry bookkeeping ----
         if active is None:
@@ -255,9 +269,136 @@ def make_wave_step(cfg: EngineConfig, workload: Workload,
                        + (committed & ro).sum().astype(state.ro_commits.dtype),
             ro_aborts=state.ro_aborts
                       + (aborted & ro).sum().astype(state.ro_aborts.dtype),
+            ol=state.ol,
         )
         ys = (committed.sum().astype(jnp.int32),
               aborted.sum().astype(jnp.int32))
+        return new_state, ys
+
+    return wave_step
+
+
+def make_open_wave_step(cfg: EngineConfig, workload: Workload,
+                        active: Optional[jax.Array] = None,
+                        trace: bool = False) -> Callable:
+    """Build the scan body for one OPEN-LOOP wave (DESIGN.md section 11).
+
+    Instead of the closed-loop one-transaction-per-lane retry buffer,
+    lanes are filled each wave from the admission queue
+    (core/admission.py): Poisson arrivals enqueue first (overflow drops
+    counted), the queue then fills up to T lanes FIFO, the wave runs, and
+    aborted lanes re-enqueue the SAME transaction with incarnation + 1 —
+    or drop (counted) past ``cfg.max_incarnations``.  Committed lanes
+    record time-to-commit = commit_wave - admit_wave + 1 waves into the
+    per-class latency histogram.  ``active`` is the sweep runner's padded
+    live-lane prefix mask, as in make_wave_step.
+
+    ``trace=True`` adds per-wave lane forensics to the scan output
+    (txn_id, incarnation, got, admit_wave, op_key, op_kind, commit) — the
+    conservation-oracle and incarnation-property tests replay them
+    (tests/test_open_loop.py); benchmarks leave it off.
+    """
+    from repro.core import admission
+    from repro.workloads.arrivals import poisson_offered
+    validator = VALIDATORS[cfg.cc]
+    T = cfg.lanes
+    n_active = T if active is None else active.sum().astype(jnp.int32)
+
+    def wave_step(state: EngineState, _):
+        rng, rng_gen, rng_perm, rng_arr = jax.random.split(state.rng, 4)
+        wave = state.wave
+        ol = state.ol
+
+        # ---- arrivals: the wave's fresh transactions, Poisson-thinned ---
+        fresh, tails = workload.gen(rng_gen, wave, T, state.store.ring_tails)
+        if active is not None:
+            fresh = dataclasses.replace(
+                fresh,
+                op_key=jnp.where(active[:, None], fresh.op_key, -1),
+                op_kind=jnp.where(active[:, None], fresh.op_kind, t.NOP),
+                n_ops=jnp.where(active, fresh.n_ops, 0))
+        offered = poisson_offered(rng_arr, cfg.arrival_rate, T)
+        offered = jnp.minimum(offered, n_active)
+        arr_mask = jnp.arange(T, dtype=jnp.int32) < offered
+        ids = state.ol.next_id + jnp.arange(T, dtype=jnp.int32)
+        queue, n_adm, n_ovf = admission.enqueue(
+            ol.queue, fresh, jnp.full((T,), wave, jnp.int32),
+            jnp.zeros((T,), jnp.int32), ids, arr_mask)
+
+        # ---- admit: fill the lane grid FIFO from the queue -------------
+        queue, batch, admit_w, incarn, txn_id, got = admission.dequeue(
+            queue, T, n_active)
+        store = dataclasses.replace(state.store, ring_tails=tails)
+
+        perm = jax.random.permutation(rng_perm, T).astype(jnp.uint32)
+        prio = claims.prio16(incarn, perm, use_age=(cfg.cc == t.CC_SWISS))
+
+        store, res = validator(store, batch, prio, wave, cfg)
+        commit = res.commit & got
+
+        if cfg.track_values:
+            vals = apply_values(store.values, batch, commit, prio)
+            store = dataclasses.replace(store, values=vals)
+
+        # ---- cost model (shared with the closed loop) ------------------
+        lane_dt, has_write = _lane_cost(cfg, batch, commit, res)
+        lane_dt = jnp.where(got, lane_dt, 0.0)
+
+        # ---- retry incarnations / latency accounting -------------------
+        aborted = got & ~commit
+        retry = aborted & (incarn < cfg.max_incarnations)
+        inc_drop = aborted & ~retry
+        # Arrivals enqueued before the dequeue freed these lanes, so the
+        # re-enqueue can never overflow (module invariant); reenq_drops
+        # stays 0 and the conservation oracle asserts it.
+        queue, _, n_re_ovf = admission.enqueue(
+            queue, batch, admit_w, incarn + 1, txn_id, retry)
+        ttc = wave.astype(jnp.int32) - admit_w + 1
+        new_ol = admission.record_commits(
+            dataclasses.replace(
+                ol, queue=queue,
+                next_id=ol.next_id + offered,
+                offered=ol.offered + offered,
+                admitted=ol.admitted + n_adm,
+                arrival_drops=ol.arrival_drops + n_ovf,
+                inc_drops=ol.inc_drops
+                          + inc_drop.sum().astype(jnp.int32),
+                reenq_drops=ol.reenq_drops + n_re_ovf),
+            batch.txn_type, ttc, commit)
+
+        # ---- metrics ---------------------------------------------------
+        committed = commit
+        commits_by_type = state.commits_by_type.at[batch.txn_type].add(
+            committed.astype(state.commits_by_type.dtype))
+        ro = ~has_write
+        new_state = EngineState(
+            rng=rng,
+            wave=wave + 1,
+            store=store,
+            pending=state.pending,           # unused in open loop: the
+            pending_live=state.pending_live,  # queue owns every retry
+            age=state.age,
+            lane_time=state.lane_time + lane_dt,
+            commits=state.commits
+                    + committed.sum().astype(state.commits.dtype),
+            aborts=state.aborts + aborted.sum().astype(state.aborts.dtype),
+            commits_by_type=commits_by_type,
+            wasted_time=state.wasted_time
+                        + jnp.where(committed, 0.0, lane_dt).sum(),
+            ext_events=state.ext_events + res.ext_count,
+            ro_commits=state.ro_commits
+                       + (committed & ro).sum().astype(state.ro_commits.dtype),
+            ro_aborts=state.ro_aborts
+                      + (aborted & ro).sum().astype(state.ro_aborts.dtype),
+            ol=new_ol,
+        )
+        ys = (committed.sum().astype(jnp.int32),
+              aborted.sum().astype(jnp.int32),
+              offered, n_adm, n_ovf,
+              inc_drop.sum().astype(jnp.int32))
+        if trace:
+            ys = ys + ((txn_id, incarn, got, admit_w, batch.op_key,
+                        batch.op_kind, commit),)
         return new_state, ys
 
     return wave_step
@@ -280,6 +421,20 @@ class SimResult:
     ro_abort_rate: float = 0.0
     per_wave_commits: Optional[jax.Array] = None
     final_state: Optional[EngineState] = None
+    # ---- open-loop front-end (cfg.open_loop; DESIGN.md section 11) ----
+    open_loop: bool = False
+    goodput: float = 0.0       # unique committed txns per simulated us (an
+                               #   admitted txn commits at most once)
+    offered: int = 0           # Poisson arrivals offered (post lane cap)
+    admitted: int = 0          # arrivals accepted into the admission queue
+    arrival_drops: int = 0     # arrivals lost to a full queue
+    inc_drops: int = 0         # txns dropped past max_incarnations
+    reenq_drops: int = 0       # re-enqueue overflow (structurally 0)
+    queued_final: int = 0      # entries still queued at the end of the run
+    p50_ttc: Optional[list] = None  # per-txn-class time-to-commit (waves)
+    p99_ttc: Optional[list] = None
+    lat_hist: Optional[jax.Array] = None  # int32[n_txn_types, lat_bins]
+    trace: Optional[tuple] = None  # per-wave lane forensics (run(trace=True))
 
 
 @dataclasses.dataclass
@@ -299,6 +454,16 @@ class SweepPoint:
     ro_commits: int = 0
     ro_aborts: int = 0
     ro_abort_rate: float = 0.0
+    # ---- open-loop front-end (cfg.open_loop) ----
+    open_loop: bool = False
+    goodput: float = 0.0
+    offered: int = 0
+    admitted: int = 0
+    arrival_drops: int = 0
+    inc_drops: int = 0
+    queued_final: int = 0
+    p50_ttc: Optional[list] = None  # per-txn-class time-to-commit (waves)
+    p99_ttc: Optional[list] = None
 
 
 def lane_buckets(lane_counts: Sequence[int],
@@ -357,13 +522,18 @@ def sweep(cfg: EngineConfig, workload: Workload, n_waves: int, *,
         for b in buckets)
 
     def point_fn(ccfg, T_pad):
+        mk = make_open_wave_step if ccfg.open_loop else make_wave_step
+
         def point(n_lanes, seed):
             active = jnp.arange(T_pad, dtype=jnp.int32) < n_lanes
             state0 = engine_state_init(ccfg, jax.random.PRNGKey(seed), store)
-            step = make_wave_step(ccfg, workload, active=active)
+            step = mk(ccfg, workload, active=active)
             state, _ = jax.lax.scan(step, state0, None, length=n_waves)
+            ol = state.ol
             return (state.commits, state.aborts, state.lane_time.sum(),
-                    state.ext_events, state.ro_commits, state.ro_aborts)
+                    state.ext_events, state.ro_commits, state.ro_aborts,
+                    ol.offered, ol.admitted, ol.arrival_drops, ol.inc_drops,
+                    ol.queue.size, ol.lat_hist)
         return point
 
     @jax.jit
@@ -390,38 +560,76 @@ def sweep(cfg: EngineConfig, workload: Workload, n_waves: int, *,
         for T in lane_counts:
             for sd in seeds:
                 bi, i = where[(T, sd)]
-                commits, aborts, lane_time, ext, roc, roa = per_bucket[bi]
+                (commits, aborts, lane_time, ext, roc, roa,
+                 off, adm, adrop, idrop, qsz, lhist) = per_bucket[bi]
                 c, a = int(commits[i]), int(aborts[i])
                 rc, ra = int(roc[i]), int(roa[i])
                 wall = float(lane_time[i]) / T
+                extra = {}
+                if cfg.open_loop:
+                    from repro.core.admission import ttc_percentiles
+                    p50, p99 = ttc_percentiles(lhist[i])
+                    extra = dict(
+                        open_loop=True, goodput=c / max(wall, 1e-9),
+                        offered=int(off[i]), admitted=int(adm[i]),
+                        arrival_drops=int(adrop[i]),
+                        inc_drops=int(idrop[i]), queued_final=int(qsz[i]),
+                        p50_ttc=p50, p99_ttc=p99)
                 points.append(SweepPoint(
                     cc=cc, granularity=g, lanes=T, seed=sd, commits=c,
                     aborts=a, abort_rate=a / max(c + a, 1),
                     throughput=c / max(wall, 1e-9), sim_time_us=wall,
                     ext_events=int(ext[i]), waves=n_waves,
                     ro_commits=rc, ro_aborts=ra,
-                    ro_abort_rate=ra / max(rc + ra, 1)))
+                    ro_abort_rate=ra / max(rc + ra, 1), **extra))
     return points
 
 
 def run(cfg: EngineConfig, workload: Workload, n_waves: int,
-        seed: int = 0, keep_state: bool = False) -> SimResult:
-    """Run a simulation: jit(scan(wave_step)) and summarize."""
+        seed: int = 0, keep_state: bool = False,
+        trace: bool = False) -> SimResult:
+    """Run a simulation: jit(scan(wave_step)) and summarize.
+
+    cfg.open_loop selects the open-loop wave step (Poisson arrivals +
+    admission queue + retry incarnations); ``trace=True`` (open loop only)
+    returns per-wave lane forensics in ``SimResult.trace`` for the
+    conservation-oracle tests.
+    """
     rng = jax.random.PRNGKey(seed)
     store = _init_store(workload, cfg)
     state0 = engine_state_init(cfg, rng, store)
-    step = make_wave_step(cfg, workload)
+    if cfg.open_loop:
+        step = make_open_wave_step(cfg, workload, trace=trace)
+    else:
+        step = make_wave_step(cfg, workload)
 
     @jax.jit
     def go(state0):
         return jax.lax.scan(step, state0, None, length=n_waves)
 
-    state, (cw, aw) = go(state0)
+    state, ys = go(state0)
+    cw = ys[0]
     commits = int(state.commits)
     aborts = int(state.aborts)
     ro_c, ro_a = int(state.ro_commits), int(state.ro_aborts)
     total_time = float(state.lane_time.sum())
     wall = total_time / cfg.lanes if cfg.lanes else 0.0
+    extra = {}
+    if cfg.open_loop:
+        from repro.core.admission import ttc_percentiles
+        ol = state.ol
+        p50, p99 = ttc_percentiles(ol.lat_hist)
+        extra = dict(
+            open_loop=True,
+            goodput=commits / max(wall, 1e-9),
+            offered=int(ol.offered), admitted=int(ol.admitted),
+            arrival_drops=int(ol.arrival_drops),
+            inc_drops=int(ol.inc_drops),
+            reenq_drops=int(ol.reenq_drops),
+            queued_final=int(ol.queue.size),
+            p50_ttc=p50, p99_ttc=p99,
+            lat_hist=jax.device_get(ol.lat_hist),
+            trace=jax.device_get(ys[6]) if trace else None)
     return SimResult(
         commits=commits,
         aborts=aborts,
@@ -437,4 +645,5 @@ def run(cfg: EngineConfig, workload: Workload, n_waves: int,
         ro_abort_rate=ro_a / max(ro_c + ro_a, 1),
         per_wave_commits=cw,
         final_state=state if keep_state else None,
+        **extra,
     )

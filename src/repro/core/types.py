@@ -184,7 +184,7 @@ class StoreState:
          data_fields=["rng", "wave", "store", "pending", "pending_live",
                       "age", "lane_time", "commits", "aborts",
                       "commits_by_type", "wasted_time", "ext_events",
-                      "ro_commits", "ro_aborts"],
+                      "ro_commits", "ro_aborts", "ol"],
          meta_fields=[])
 @dataclasses.dataclass
 class EngineState:
@@ -205,6 +205,11 @@ class EngineState:
     ro_aborts: jax.Array    # int scalar: aborts of read-only transactions
                             #   (the MV headline metric: snapshot readers
                             #   never abort — DESIGN.md section 9)
+    ol: Any = None          # core/admission.OpenLoopState: the open-loop
+                            #   front-end (admission queue + goodput
+                            #   counters + time-to-commit histograms);
+                            #   a minimal placeholder on closed-loop runs
+                            #   (DESIGN.md section 11)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -290,6 +295,21 @@ class EngineConfig:
                                 # reader aborts cleanly (ok=False) — the
                                 # knob that makes epoch reclamation actually
                                 # fire under load (mvstore.snapshot_ts).
+    # Open-loop traffic front-end (core/admission.py; DESIGN.md section
+    # 11).  arrival_rate > 0 switches the engine from the closed-loop
+    # one-txn-per-lane retry model to open-loop admission: transactions
+    # arrive ~ Poisson(arrival_rate) per wave (capped at the lane width),
+    # queue in a fixed-capacity ring, and an abort re-enqueues the SAME
+    # transaction with an incremented incarnation counter.
+    arrival_rate: float = 0.0   # expected arrivals per wave (0 = closed)
+    queue_cap: int = 0          # admission-queue ring capacity (>= 1 when
+                                # open-loop; overflow arrivals are dropped
+                                # and counted)
+    max_incarnations: int = 0   # max re-executions after the first attempt;
+                                # an abort at this incarnation drops the
+                                # transaction (counted, never silent)
+    lat_bins: int = 64          # time-to-commit histogram width in waves,
+                                # per txn class (last bin = overflow)
     cost: CostModel = dataclasses.field(default_factory=CostModel)
     # Adaptive CC state machine:
     adapt_up: float = 0.20      # abort-heat threshold -> pessimistic
@@ -324,6 +344,32 @@ class EngineConfig:
                 f"snapshot_age={self.snapshot_age} needs a multi-version "
                 f"mechanism (mvcc/mvocc): {CC_NAMES[self.cc]} has no "
                 "snapshots to age")
+        if self.arrival_rate < 0:
+            raise ValueError(
+                f"arrival_rate must be >= 0, got {self.arrival_rate}")
+        if self.open_loop:
+            if self.queue_cap < 1:
+                raise ValueError(
+                    f"open-loop runs (arrival_rate={self.arrival_rate}) "
+                    "need an admission queue: set queue_cap >= 1")
+            if self.max_incarnations < 0:
+                raise ValueError(f"max_incarnations must be >= 0, got "
+                                 f"{self.max_incarnations}")
+            if self.lat_bins < 2:
+                raise ValueError(
+                    f"lat_bins={self.lat_bins}: the time-to-commit "
+                    "histogram needs >= 2 bins (last bin = overflow)")
+        elif self.queue_cap or self.max_incarnations:
+            raise ValueError(
+                f"queue_cap={self.queue_cap} / max_incarnations="
+                f"{self.max_incarnations} shape the open-loop admission "
+                "queue only: set arrival_rate > 0 (closed-loop lanes "
+                "retry in place and never queue)")
+
+    @property
+    def open_loop(self) -> bool:
+        """Open-loop traffic front-end active (DESIGN.md section 11)."""
+        return self.arrival_rate > 0
 
 
 def txn_batch_zeros(lanes: int, slots: int) -> TxnBatch:
@@ -371,7 +417,11 @@ def store_init(n_records: int, n_groups: int, n_cols: int,
 
 def engine_state_init(cfg: EngineConfig, rng: jax.Array,
                       store: StoreState) -> EngineState:
+    from repro.core import admission
     T = cfg.lanes
+    ol = (admission.open_loop_init(cfg.queue_cap, cfg.slots,
+                                   cfg.n_txn_types, cfg.lat_bins)
+          if cfg.open_loop else admission.open_loop_placeholder())
     return EngineState(
         rng=rng,
         wave=jnp.uint32(0),
@@ -388,4 +438,5 @@ def engine_state_init(cfg: EngineConfig, rng: jax.Array,
         ext_events=jnp.int32(0),
         ro_commits=jnp.int64(0) if jax.config.jax_enable_x64 else jnp.int32(0),
         ro_aborts=jnp.int64(0) if jax.config.jax_enable_x64 else jnp.int32(0),
+        ol=ol,
     )

@@ -33,7 +33,7 @@ def _row(workload: str, cc_name: str, p, wall_s: float,
          backend: str) -> dict:
     from repro.core import types as t
     from repro.core.backend import kernel_coverage
-    return {
+    row = {
         "workload": workload, "cc": cc_name, "granularity": p.granularity,
         "lanes": p.lanes, "waves": p.waves,
         "commits": p.commits, "aborts": p.aborts,
@@ -49,13 +49,27 @@ def _row(workload: str, cc_name: str, p, wall_s: float,
         # attributable to an execution engine (DESIGN.md section 5).
         "kernel_ops": kernel_coverage(backend, t.CC_IDS[cc_name]),
     }
+    if getattr(p, "open_loop", False):
+        # Goodput (unique committed txns per simulated us) and the
+        # per-txn-class time-to-commit percentiles (waves) the dashboard's
+        # latency section reads (DESIGN.md section 11).
+        row.update({
+            "open_loop": True,
+            "goodput": round(p.goodput, 4),
+            "offered": p.offered, "admitted": p.admitted,
+            "arrival_drops": p.arrival_drops, "inc_drops": p.inc_drops,
+            "queued_final": p.queued_final,
+            "p50_ttc_waves": p.p50_ttc, "p99_ttc_waves": p.p99_ttc,
+        })
+    return row
 
 
 def run_grid(workload: str, ccs: list, grans, lanes: list, waves: int, *,
              scale: float = 1.0, n_keys: int = 1_000_000, seed: int = 0,
              backend: str = "jnp", mv_depth: int = 4, snapshot_age: int = 0,
              write_frac: float = 0.5, ro_frac: float = 0.0,
-             theta: float = 0.9) -> list:
+             theta: float = 0.9, arrival_rate: float = 0.0,
+             queue_cap: int = 0, max_incarnations: int = 0) -> list:
     """Run the whole benchmark grid in one jitted sweep; returns row dicts.
 
     ``wall_s`` in each row is the grid's wall time amortized over its rows
@@ -63,7 +77,11 @@ def run_grid(workload: str, ccs: list, grans, lanes: list, waves: int, *,
     The multi-version ring (``mv_depth``) is only allocated when the grid
     contains an MV mechanism; ``snapshot_age`` (aged reader snapshots —
     mvstore.snapshot_ts) requires an all-MV grid, since only snapshot
-    readers have a snapshot to age.
+    readers have a snapshot to age.  ``arrival_rate > 0`` switches every
+    grid point to the open-loop front-end (core/admission.py) — rows then
+    carry goodput, the admission counters, and the per-class
+    time-to-commit percentiles; queue_cap defaults to 4x the widest lane
+    count and max_incarnations to 8 when left at 0.
     """
     from repro.core import types as t
     from repro.core.engine import sweep
@@ -75,6 +93,9 @@ def run_grid(workload: str, ccs: list, grans, lanes: list, waves: int, *,
         raise ValueError("snapshot_age > 0 needs an all-MV cc grid "
                          "(mvcc/mvocc): single-version mechanisms have no "
                          "snapshots to age")
+    if arrival_rate > 0:
+        queue_cap = queue_cap or 4 * max(lanes)
+        max_incarnations = max_incarnations or 8
     # The base cfg must itself validate: an aged-snapshot grid is all-MV,
     # so anchor it on the first requested mechanism instead of CC_OCC.
     cfg = t.EngineConfig(
@@ -82,7 +103,9 @@ def run_grid(workload: str, ccs: list, grans, lanes: list, waves: int, *,
         lanes=max(lanes), slots=wl.slots,
         n_records=wl.n_records, n_groups=wl.n_groups, n_cols=wl.n_cols,
         n_txn_types=wl.n_txn_types, n_rings=wl.n_rings, backend=backend,
-        mv_depth=mv_depth if need_mv else 0, snapshot_age=snapshot_age)
+        mv_depth=mv_depth if need_mv else 0, snapshot_age=snapshot_age,
+        arrival_rate=arrival_rate, queue_cap=queue_cap,
+        max_incarnations=max_incarnations)
     t0 = time.time()
     points = sweep(cfg, wl, waves, ccs=[t.CC_IDS[c] for c in ccs],
                    grans=tuple(grans), lane_counts=tuple(lanes),
@@ -94,24 +117,30 @@ def run_grid(workload: str, ccs: list, grans, lanes: list, waves: int, *,
 
 def run_one(workload: str, cc_name: str, gran: int, lanes: int, waves: int,
             *, scale: float = 1.0, n_keys: int = 1_000_000, seed: int = 0,
-            backend: str = "jnp", mv_depth: int = 4, snapshot_age: int = 0):
+            backend: str = "jnp", mv_depth: int = 4, snapshot_age: int = 0,
+            arrival_rate: float = 0.0, queue_cap: int = 0,
+            max_incarnations: int = 0):
     """Single grid point (one compiled run; prefer run_grid for grids)."""
     from repro.core import types as t
     from repro.core.engine import run
 
     wl = _make_workload(workload, scale=scale, n_keys=n_keys)
+    if arrival_rate > 0:
+        queue_cap = queue_cap or 4 * lanes
+        max_incarnations = max_incarnations or 8
     cfg = t.EngineConfig(
         cc=t.CC_IDS[cc_name], lanes=lanes, slots=wl.slots,
         n_records=wl.n_records, n_groups=wl.n_groups, n_cols=wl.n_cols,
         n_txn_types=wl.n_txn_types, granularity=gran, n_rings=wl.n_rings,
         backend=backend,
         mv_depth=mv_depth if t.CC_IDS[cc_name] in t.MV_CCS else 0,
-        snapshot_age=snapshot_age)
+        snapshot_age=snapshot_age, arrival_rate=arrival_rate,
+        queue_cap=queue_cap, max_incarnations=max_incarnations)
     from repro.core.backend import kernel_coverage
     t0 = time.time()
     res = run(cfg, wl, n_waves=waves, seed=seed)
     wall = time.time() - t0
-    return {
+    row = {
         "workload": workload, "cc": cc_name, "granularity": gran,
         "lanes": lanes, "waves": waves,
         "commits": res.commits, "aborts": res.aborts,
@@ -124,6 +153,16 @@ def run_one(workload: str, cc_name: str, gran: int, lanes: int, waves: int,
         "backend": backend,
         "kernel_ops": kernel_coverage(backend, t.CC_IDS[cc_name]),
     }
+    if res.open_loop:
+        row.update({
+            "open_loop": True, "goodput": round(res.goodput, 4),
+            "offered": res.offered, "admitted": res.admitted,
+            "arrival_drops": res.arrival_drops,
+            "inc_drops": res.inc_drops,
+            "queued_final": res.queued_final,
+            "p50_ttc_waves": res.p50_ttc, "p99_ttc_waves": res.p99_ttc,
+        })
+    return row
 
 
 def main(argv=None):
@@ -150,8 +189,20 @@ def main(argv=None):
                          "past (aged readers; ring reclamation aborts fire "
                          "once writers outrun the ring — requires an "
                          "all-mvcc/mvocc --cc list)")
-    # None sentinels so the tpcc guard below detects flag *presence*, not
-    # just non-default values.
+    # None sentinels so the guards below detect flag *presence*, not just
+    # non-default values (the --snapshot-age validation pattern).
+    ap.add_argument("--arrival-rate", type=float, default=None,
+                    help="open-loop traffic: expected Poisson arrivals per "
+                         "wave (capped at the lane width); switches every "
+                         "grid point from the closed-loop retry buffer to "
+                         "the admission queue (DESIGN.md section 11)")
+    ap.add_argument("--queue-cap", type=int, default=None,
+                    help="admission-queue ring capacity (open loop only; "
+                         "default 4x the widest --lanes)")
+    ap.add_argument("--max-incarnations", type=int, default=None,
+                    help="re-executions allowed per transaction before it "
+                         "is dropped and counted (open loop only; "
+                         "default 8)")
     ap.add_argument("--write-frac", type=float, default=None,
                     help="YCSB per-op write probability (default 0.5)")
     ap.add_argument("--ro-frac", type=float, default=None,
@@ -171,6 +222,14 @@ def main(argv=None):
         if not all(t.CC_IDS[c] in t.MV_CCS for c in args.cc):
             ap.error("--snapshot-age only ages multi-version snapshots: "
                      "use it with an all-mvcc/mvocc --cc list")
+    if args.arrival_rate is None:
+        if args.queue_cap is not None or args.max_incarnations is not None:
+            ap.error("--queue-cap/--max-incarnations shape the open-loop "
+                     "admission queue only: set --arrival-rate > 0 (the "
+                     "open-loop switch) to use them")
+    elif args.arrival_rate <= 0:
+        ap.error(f"--arrival-rate must be > 0 (got {args.arrival_rate}); "
+                 "omit the flag for the closed-loop retry buffer")
     grans = {"coarse": (0,), "fine": (1,), "both": (0, 1)}[args.granularity]
     rows = run_grid(args.workload, args.cc, grans, args.lanes, args.waves,
                     scale=args.scale, n_keys=args.n_keys, seed=args.seed,
@@ -179,13 +238,21 @@ def main(argv=None):
                     write_frac=(0.5 if args.write_frac is None
                                 else args.write_frac),
                     ro_frac=0.0 if args.ro_frac is None else args.ro_frac,
-                    theta=0.9 if args.theta is None else args.theta)
+                    theta=0.9 if args.theta is None else args.theta,
+                    arrival_rate=args.arrival_rate or 0.0,
+                    queue_cap=args.queue_cap or 0,
+                    max_incarnations=args.max_incarnations or 0)
     for r in rows:
-        print(f"{r['workload']} {r['cc']:9s} "
-              f"{'fine' if r['granularity'] else 'coarse'} "
-              f"T={r['lanes']:4d}: "
-              f"thpt={r['throughput']:8.3f} txn/us  "
-              f"abort={100*r['abort_rate']:6.2f}%")
+        line = (f"{r['workload']} {r['cc']:9s} "
+                f"{'fine' if r['granularity'] else 'coarse'} "
+                f"T={r['lanes']:4d}: "
+                f"thpt={r['throughput']:8.3f} txn/us  "
+                f"abort={100*r['abort_rate']:6.2f}%")
+        if r.get("open_loop"):
+            line += (f"  goodput={r['goodput']:8.3f} txn/us  "
+                     f"p50/p99 ttc={max(r['p50_ttc_waves']):g}/"
+                     f"{max(r['p99_ttc_waves']):g} waves")
+        print(line)
     if args.json:
         with open(args.json, "w") as f:
             json.dump(rows, f, indent=1)

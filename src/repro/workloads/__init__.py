@@ -1,4 +1,6 @@
-from repro.workloads.ycsb import YCSBWorkload
+from repro.workloads.arrivals import PoissonArrivals, poisson_offered
 from repro.workloads.tpcc import TPCCWorkload
+from repro.workloads.ycsb import YCSBWorkload
 
-__all__ = ["YCSBWorkload", "TPCCWorkload"]
+__all__ = ["YCSBWorkload", "TPCCWorkload", "PoissonArrivals",
+           "poisson_offered"]

@@ -1,0 +1,61 @@
+"""Poisson arrival schedules for the open-loop traffic front-end.
+
+An open-loop benchmark decouples transaction *arrival* from transaction
+*service*: clients submit on their own clock (here, a Poisson process of
+``rate`` expected transactions per wave) and the engine admits from the
+queue (core/admission.py).  Two seeded streams serve the two engines:
+
+- ``poisson_offered`` — the in-scan draw the local engine uses: a JAX
+  Poisson sample per wave, capped at the lane-grid width (the front-end
+  materializes at most T fresh transactions per wave; arrivals beyond
+  that cap are deferred to the offered count of no wave — the cap is the
+  generator's width, not a queue drop, so size rates accordingly).
+- ``PoissonArrivals`` — a host-side pre-drawn schedule (NumPy
+  ``default_rng``) for the distributed driver, whose wave loop runs in
+  Python: ``counts(n_waves, max_per_wave)`` yields the same kind of
+  capped per-wave arrival counts, reproducibly from ``seed``.
+
+Both are deliberately tiny: the schedule is a seeded PRNG stream, nothing
+more, so bit-identity across backends (jnp vs pallas) and across reruns
+is inherited from the seeds.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def poisson_offered(rng: jax.Array, rate: float, max_n: int) -> jax.Array:
+    """One wave's arrival count: min(Poisson(rate), max_n), int32."""
+    draw = jax.random.poisson(rng, jnp.float32(rate))
+    return jnp.minimum(draw, max_n).astype(jnp.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class PoissonArrivals:
+    """Seeded host-side arrival schedule (the distributed wave driver's
+    stream; benchmarks/txn_scaling.py)."""
+    rate: float          # expected arrivals per wave
+    seed: int = 0
+
+    def counts(self, n_waves: int, max_per_wave: int) -> np.ndarray:
+        """int32[n_waves] per-wave arrival counts, capped at the
+        front-end's per-wave generation width."""
+        rng = np.random.default_rng(self.seed)
+        return np.minimum(rng.poisson(self.rate, n_waves),
+                          max_per_wave).astype(np.int32)
+
+    def shard_counts(self, n_waves: int, n_shards: int,
+                     max_per_shard: int) -> np.ndarray:
+        """int32[n_waves, n_shards]: the distributed front-end's arrival
+        counts — each shard's admission queue runs its own thinned
+        Poisson stream (rate / n_shards), capped at the shard's lane
+        width."""
+        rng = np.random.default_rng(self.seed)
+        return np.minimum(
+            rng.poisson(self.rate / max(n_shards, 1),
+                        (n_waves, n_shards)),
+            max_per_shard).astype(np.int32)

@@ -154,6 +154,62 @@ def test_sweep_backend_parity_all_mechanisms():
     assert a == b  # SweepPoint dataclass equality: every field, every point
 
 
+# --------------------------------------------------- open-loop parity
+@pytest.mark.parametrize("cc", [t.CC_OCC, t.CC_TICTOC, t.CC_MVCC])
+def test_open_loop_run_backend_parity(cc):
+    """The open-loop front-end rides the same backend surface: queue state
+    (ring buffers AND cursors), latency histograms, and every conservation
+    counter must be bit-identical jnp vs pallas (ISSUE 6 satellite)."""
+    wl = YCSBWorkload.make(n_keys=256, theta=0.8)
+    cfg = EngineConfig(cc=cc, lanes=8, slots=wl.slots,
+                       n_records=wl.n_records, n_groups=wl.n_groups,
+                       n_cols=wl.n_cols, n_txn_types=wl.n_txn_types,
+                       n_rings=wl.n_rings,
+                       mv_depth=3 if cc in t.MV_CCS else 0,
+                       arrival_rate=6.0, queue_cap=32, max_incarnations=3,
+                       lat_bins=16)
+    a = run(cfg, wl, n_waves=12, seed=4, keep_state=True)
+    b = run(dataclasses.replace(cfg, backend="pallas"), wl, n_waves=12,
+            seed=4, keep_state=True)
+    np.testing.assert_array_equal(np.asarray(a.per_wave_commits),
+                                  np.asarray(b.per_wave_commits))
+    assert (a.commits, a.aborts, a.offered, a.admitted, a.arrival_drops,
+            a.inc_drops, a.queued_final) == \
+           (b.commits, b.aborts, b.offered, b.admitted, b.arrival_drops,
+            b.inc_drops, b.queued_final)
+    assert a.p50_ttc == b.p50_ttc and a.p99_ttc == b.p99_ttc
+    np.testing.assert_array_equal(np.asarray(a.lat_hist),
+                                  np.asarray(b.lat_hist))
+    qa, qb = a.final_state.ol.queue, b.final_state.ol.queue
+    for f in ("op_key", "op_kind", "admit_wave", "incarnation", "txn_id",
+              "head", "size"):
+        np.testing.assert_array_equal(np.asarray(getattr(qa, f)),
+                                      np.asarray(getattr(qb, f)), err_msg=f)
+    assert a.commits > 0 and a.aborts > 0  # parity over real traffic
+
+
+def test_open_loop_sweep_backend_parity():
+    """Open-loop SweepPoints (goodput, queue counters, ttc percentiles)
+    bit-identical jnp vs pallas across occ/mvcc x both granularities."""
+    wl = YCSBWorkload.make(n_keys=256, theta=0.8)
+    cfg = EngineConfig(cc=t.CC_OCC, lanes=8, slots=wl.slots,
+                       n_records=wl.n_records, n_groups=wl.n_groups,
+                       n_cols=wl.n_cols, n_txn_types=wl.n_txn_types,
+                       n_rings=wl.n_rings, mv_depth=3,
+                       arrival_rate=6.0, queue_cap=32, max_incarnations=3,
+                       lat_bins=16)
+    ccs = [t.CC_OCC, t.CC_MVCC]
+    a = sweep(cfg, wl, 8, ccs=ccs, grans=(0, 1), lane_counts=(8,),
+              seeds=(4,))
+    b = sweep(dataclasses.replace(cfg, backend="pallas"), wl, 8, ccs=ccs,
+              grans=(0, 1), lane_counts=(8,), seeds=(4,))
+    for pa, pb in zip(a, b):
+        # goodput/throughput divide by identical sim time; compare the
+        # whole dataclass minus nothing — they must match exactly.
+        assert pa == pb, (pa.cc, pa.granularity)
+        assert pa.open_loop
+
+
 # ------------------------------------- shared layout: claims vs kernel oracle
 @pytest.mark.parametrize("fine", [True, False])
 def test_claims_probe_matches_kernel_oracle(fine):

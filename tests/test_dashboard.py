@@ -60,6 +60,65 @@ def test_render_distributed_section():
            "| 4/4 pallas | txn_scaling.json |" in md
 
 
+def test_string_throughput_compares_numerically():
+    """Regression (ISSUE 6 satellite): CSV-converted/hand-edited bench
+    files store throughput as STRINGS — "0.9" vs "12.3" must compare
+    numerically (12.3 wins), not lexically ("0.9" > "12.3")."""
+    rows = [
+        {"workload": "ycsb", "cc": "occ", "granularity": 1, "lanes": 8,
+         "throughput": "0.9", "abort_rate": 0.1, "backend": "jnp",
+         "kernel_ops": {}, "_src": "BENCH_csv.json"},
+        {"workload": "ycsb", "cc": "occ", "granularity": 1, "lanes": 64,
+         "throughput": "12.3", "abort_rate": 0.2, "backend": "jnp",
+         "kernel_ops": {}, "_src": "BENCH_csv.json"},
+    ]
+    md = render_markdown(rows, [])
+    assert "| 12.300 | 64 |" in md          # the numeric peak
+    assert "| 0.900 | 8 |" not in md        # lexical "winner" dropped
+    assert "## Skipped rows" not in md      # numeric strings aren't skipped
+
+
+def test_string_throughput_mixed_with_numeric():
+    """A numeric 5.0 row and a string "12.3" row rank on one scale."""
+    rows = [dict(MECH_ROWS[0], throughput=5.0, _src="a.json"),
+            dict(MECH_ROWS[0], lanes=32, throughput="12.3", _src="a.json")]
+    md = render_markdown(rows, [])
+    assert "| 12.300 | 32 |" in md
+    assert "| 5.000 |" not in md
+
+
+OPEN_ROWS = [
+    {"workload": "ycsb", "cc": "occ", "granularity": 1, "lanes": 64,
+     "throughput": 9.0, "abort_rate": 0.2, "backend": "jnp",
+     "kernel_ops": {}, "open_loop": True, "goodput": 7.25,
+     "p50_ttc_waves": [1.0], "p99_ttc_waves": [4.0, 6.0],
+     "inc_drops": 12, "arrival_drops": 3, "arrival_rate": 48.0},
+    {"workload": "ycsb", "cc": "occ", "granularity": 1, "lanes": 8,
+     "throughput": 2.0, "abort_rate": 0.1, "backend": "jnp",
+     "kernel_ops": {}, "open_loop": True, "goodput": "1.5",
+     "p50_ttc_waves": [1.0], "p99_ttc_waves": [2.0],
+     "inc_drops": 0, "arrival_drops": 0, "arrival_rate": 6.0},
+]
+
+
+def test_render_open_loop_latency_section():
+    """Open-loop rows get their own latency section: peak-GOODPUT point
+    per group (string goodputs coerced too), per-class ttc cells."""
+    rows = [dict(r, _src="open_loop.json") for r in OPEN_ROWS]
+    md = render_markdown(rows, [])
+    assert "## Open-loop latency" in md
+    assert "| ycsb | occ | fine | jnp | 7.250 | 1 | 4/6 | 12 | 3 " \
+           "| open_loop.json |" in md
+    assert "1.500" not in md               # dominated (and string) goodput
+    # closed-loop section still renders these rows by throughput
+    assert "| 9.000 | 64 |" in md
+
+
+def test_no_open_loop_rows_no_section():
+    md = render_markdown([dict(r, _src="a.json") for r in MECH_ROWS], [])
+    assert "## Open-loop latency" not in md
+
+
 # ------------------------------------------------ malformed-row resilience
 def test_truncated_mech_row_is_skipped_with_warning():
     """Regression (ISSUE 5 satellite): a partial row — e.g. the tail of a

@@ -105,9 +105,10 @@ def test_backend_bit_identity(gran, route_cap):
 
 
 def test_stats_vector_carries_readonly_split():
-    """The distributed stats vector is int32[6] and its read-only
-    commit/abort split counts exactly the lanes with no live write ops
-    (the split SimResult/dashboard rows expect — ISSUE 5 satellite)."""
+    """The distributed stats vector is int32[STATS_LEN] (closed-loop waves
+    zero the open-loop slots) and its read-only commit/abort split counts
+    exactly the lanes with no live write ops (the split SimResult/dashboard
+    rows expect — ISSUE 5 satellite)."""
     mesh = jax.make_mesh((1,), ("data",))
     N, T, K = 128, 8, 4
     cfg = D.DistConfig(n_records=N, n_groups=2, lanes_per_shard=T, slots=K)

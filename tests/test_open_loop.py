@@ -1,0 +1,428 @@
+"""Open-loop traffic front-end (DESIGN.md section 11): the goodput
+conservation oracle, incarnation/queue safety properties, distributed
+open-loop waves, and the open-loop config validation.
+
+The conservation oracle is the module's spine: a numpy sequential replay
+of the engine's per-wave trace that tracks every admitted transaction by
+its admission serial and asserts the exact partition — every admitted
+transaction is committed exactly once, still queued at the end, or
+dropped at the incarnation cap — reconciling bit-for-bit with the
+engine's own counters for occ/tictoc/mvcc at both granularities on both
+backends.
+
+Multi-shard behaviour scales with available devices like
+tests/test_distributed.py; the subprocess test forces 8 host devices.
+"""
+import dataclasses
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, settings, st
+from repro.core import admission
+from repro.core import distributed as D
+from repro.core import types as t
+from repro.core.cc import occ_validate
+from repro.core.engine import run, sweep
+from repro.core.types import CostModel, EngineConfig, TxnBatch, store_init
+from repro.workloads import PoissonArrivals, YCSBWorkload
+
+# Small but contended: aborts, retries, and incarnation drops all fire.
+WL = YCSBWorkload.make(n_keys=64, theta=0.9)
+
+
+def _cfg(cc, gran=1, backend="jnp", lanes=8, rate=8.0, cap=32,
+         max_inc=2, mv_depth=None, **kw):
+    return EngineConfig(
+        cc=cc, lanes=lanes, slots=WL.slots, n_records=WL.n_records,
+        n_groups=WL.n_groups, n_cols=WL.n_cols, n_txn_types=WL.n_txn_types,
+        granularity=gran, n_rings=WL.n_rings, backend=backend,
+        mv_depth=(3 if cc in t.MV_CCS else 0) if mv_depth is None
+        else mv_depth,
+        arrival_rate=rate, queue_cap=cap, max_incarnations=max_inc,
+        lat_bins=16, **kw)
+
+
+def _replay_oracle(res, max_incarnations):
+    """Sequential numpy replay of the trace: track every admitted txn by
+    its serial; assert per-id sanity (no resurrection after commit/drop,
+    incarnations count 0,1,2,... with a bit-identical read/write set and a
+    stable admit wave) and return (committed, dropped) id -> wave maps."""
+    txn_id, incarn, got, admit_w, op_key, op_kind, commit = (
+        np.asarray(x) for x in res.trace)
+    W, T = txn_id.shape
+    committed, dropped, last = {}, {}, {}
+    for w in range(W):
+        for lane in range(T):
+            if not got[w, lane]:
+                continue
+            i = int(txn_id[w, lane])
+            inc = int(incarn[w, lane])
+            assert i not in committed, f"txn {i} ran again after commit"
+            assert i not in dropped, f"txn {i} ran again after inc-drop"
+            assert inc <= max_incarnations
+            sig = (op_key[w, lane].tobytes(), op_kind[w, lane].tobytes(),
+                   int(admit_w[w, lane]))
+            if i in last:
+                prev_sig, prev_inc = last[i]
+                assert sig == prev_sig, \
+                    f"txn {i}: ops/admit_wave changed across incarnations"
+                assert inc == prev_inc + 1, \
+                    f"txn {i}: incarnation {prev_inc} -> {inc}"
+            else:
+                assert inc == 0, f"txn {i} first ran at incarnation {inc}"
+            last[i] = (sig, inc)
+            if commit[w, lane]:
+                committed[i] = w
+            elif inc == max_incarnations:
+                dropped[i] = w
+    return committed, dropped
+
+
+# --------------------------------------------- goodput conservation oracle
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+@pytest.mark.parametrize("gran", [0, 1])
+@pytest.mark.parametrize("cc", [t.CC_OCC, t.CC_TICTOC, t.CC_MVCC])
+def test_conservation_oracle(cc, gran, backend):
+    """ISSUE acceptance criterion: every admitted transaction is committed
+    exactly once, still queued, or dropped at the incarnation cap — the
+    replayed trace reconciles exactly with the engine's counters."""
+    res = run(_cfg(cc, gran, backend), WL, n_waves=25, seed=3, trace=True)
+    committed, dropped = _replay_oracle(res, 2)
+    assert res.commits == len(committed)       # exactly-once by dict key
+    assert res.inc_drops == len(dropped)
+    assert res.admitted == res.commits + res.queued_final + res.inc_drops
+    assert res.offered == res.admitted + res.arrival_drops
+    assert res.reenq_drops == 0                # structural ring invariant
+    assert res.commits > 0 and res.aborts > 0  # the oracle saw real traffic
+    assert res.inc_drops > 0                   # ...including inc drops
+    # The latency histogram counts exactly the committed transactions, and
+    # every recorded time-to-commit is >= 1 wave.
+    assert int(res.lat_hist.sum()) == res.commits
+    for i, w in committed.items():
+        assert w >= 0
+
+
+def test_time_to_commit_matches_replay():
+    """The histogram percentiles come from the same ttc the replay
+    computes: commit_wave - admit_wave + 1, clipped to the last bin."""
+    res = run(_cfg(t.CC_OCC), WL, n_waves=25, seed=3, trace=True)
+    txn_id, incarn, got, admit_w, op_key, op_kind, commit = (
+        np.asarray(x) for x in res.trace)
+    ttcs = []
+    W, T = txn_id.shape
+    for w in range(W):
+        for lane in range(T):
+            if got[w, lane] and commit[w, lane]:
+                ttcs.append(min(w - int(admit_w[w, lane]) + 1, 15))
+    hist = np.bincount(np.asarray(ttcs, np.int64), minlength=16)
+    np.testing.assert_array_equal(np.asarray(res.lat_hist)[0], hist)
+    p50, p99 = admission.ttc_percentiles(res.lat_hist)
+    s = np.sort(np.asarray(ttcs))
+    assert p50[0] == float(s[int(np.ceil(0.5 * len(s))) - 1])
+    assert p99[0] == float(s[int(np.ceil(0.99 * len(s))) - 1])
+
+
+def test_goodput_counts_unique_commits():
+    """Goodput is unique committed txns per simulated us: in the open loop
+    a committed transaction leaves the system, so commits == unique
+    committed serials (the oracle's dict) and goodput uses that count."""
+    res = run(_cfg(t.CC_OCC), WL, n_waves=20, seed=5, trace=True)
+    committed, _ = _replay_oracle(res, 2)
+    assert res.commits == len(set(committed))
+    assert res.goodput == pytest.approx(
+        res.commits / max(res.sim_time_us, 1e-9))
+
+
+def test_max_incarnations_zero_drops_every_abort():
+    """max_incarnations=0 is drop-on-first-abort: nothing ever retries, so
+    admitted == commits + drops + queued with no second incarnations."""
+    res = run(_cfg(t.CC_OCC, max_inc=0), WL, n_waves=20, seed=1,
+              trace=True)
+    _, incarn, got, *_ = (np.asarray(x) for x in res.trace)
+    assert int(incarn[np.asarray(got)].max(initial=0)) == 0
+    assert res.inc_drops > 0
+    assert res.admitted == res.commits + res.queued_final + res.inc_drops
+
+
+# ------------------------------------------------- hypothesis properties
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 3), st.integers(0, 2 ** 31 - 1))
+def test_property_incarnations_bounded_and_bit_identical(max_inc, seed):
+    """Property (a): incarnation counters never exceed max_incarnations,
+    and a re-enqueued transaction's read/write set is bit-identical to its
+    first incarnation — whatever the cap and seed."""
+    res = run(_cfg(t.CC_OCC, max_inc=max_inc), WL, n_waves=12, seed=seed,
+              trace=True)
+    # _replay_oracle asserts both properties per transaction.
+    committed, dropped = _replay_oracle(res, max_inc)
+    assert res.admitted == len(committed) + len(dropped) + res.queued_final
+
+
+@pytest.fixture(scope="module")
+def queue_batch():
+    """A fixed 8-lane batch for driving the admission ring directly."""
+    rng = np.random.default_rng(0)
+    T, K = 8, 2
+    return TxnBatch(
+        op_key=jnp.asarray(rng.integers(0, 32, (T, K), dtype=np.int32)),
+        op_group=jnp.asarray(rng.integers(0, 2, (T, K), dtype=np.int32)),
+        op_col=jnp.zeros((T, K), jnp.int32),
+        op_kind=jnp.asarray(rng.choice([t.READ, t.WRITE],
+                                       (T, K)).astype(np.int32)),
+        op_val=jnp.zeros((T, K), jnp.float32),
+        txn_type=jnp.zeros((T,), jnp.int32),
+        n_ops=jnp.full((T,), K, jnp.int32))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 12),
+       st.lists(st.tuples(st.integers(0, 8), st.integers(0, 8)),
+                min_size=1, max_size=12))
+def test_property_occupancy_bounded_and_overflow_counted(queue_batch, cap,
+                                                         seq):
+    """Property (b): under any enqueue/dequeue sequence the ring's
+    occupancy never exceeds its capacity, and every offered lane is either
+    accepted or counted as an overflow drop — nothing vanishes."""
+    q = admission.queue_init(cap, queue_batch.slots)
+    zero = jnp.zeros((8,), jnp.int32)
+    for n_enq, n_deq in seq:
+        mask = jnp.arange(8) < n_enq
+        before = int(q.size)
+        q, n_acc, n_ovf = admission.enqueue(q, queue_batch, zero, zero,
+                                            zero, mask)
+        assert int(n_acc) + int(n_ovf) == n_enq          # drops counted
+        assert int(n_acc) == min(n_enq, cap - before)
+        assert 0 <= int(q.size) <= cap                   # never over cap
+        before = int(q.size)
+        q, _b, _aw, _inc, _id, got = admission.dequeue(q, 8, n_deq)
+        assert int(got.sum()) == min(before, n_deq)
+        assert int(q.size) == before - min(before, n_deq)
+
+
+def test_dequeue_returns_fifo_bit_identical(queue_batch):
+    """What goes into the ring comes out FIFO and bit-identical — the
+    queue stores the transaction, not a summary of it."""
+    q = admission.queue_init(16, queue_batch.slots)
+    ids = jnp.arange(8, dtype=jnp.int32) * 10
+    aw = jnp.full((8,), 4, jnp.int32)
+    inc = jnp.arange(8, dtype=jnp.int32) % 3
+    q, _, _ = admission.enqueue(q, queue_batch, aw, inc, ids,
+                                jnp.ones((8,), bool))
+    q, batch, aw2, inc2, ids2, got = admission.dequeue(q, 8)
+    assert bool(got.all())
+    np.testing.assert_array_equal(np.asarray(batch.op_key),
+                                  np.asarray(queue_batch.op_key))
+    np.testing.assert_array_equal(np.asarray(batch.op_kind),
+                                  np.asarray(queue_batch.op_kind))
+    np.testing.assert_array_equal(np.asarray(ids2), np.asarray(ids))
+    np.testing.assert_array_equal(np.asarray(aw2), np.asarray(aw))
+    np.testing.assert_array_equal(np.asarray(inc2), np.asarray(inc))
+
+
+# ------------------------------------------------------- sweep integration
+def test_open_loop_sweep_matches_run_at_bucket_max():
+    """The sweep contract extends to the open loop: a point at its
+    bucket's max lane count is bit-identical to run() (same queue, same
+    counters, same percentiles)."""
+    cfg = _cfg(t.CC_OCC, gran=0, lanes=8, mv_depth=3)
+    pts = sweep(cfg, WL, 15, ccs=[t.CC_OCC, t.CC_MVCC], grans=(0, 1),
+                lane_counts=(8,), seeds=(3,))
+    for p in pts:
+        assert p.open_loop
+        assert p.admitted == p.commits + p.queued_final + p.inc_drops
+    r = run(dataclasses.replace(cfg, cc=t.CC_MVCC, granularity=1,
+                                mv_depth=3), WL, 15, seed=3)
+    p = [x for x in pts if x.cc == t.CC_MVCC and x.granularity == 1][0]
+    assert (r.commits, r.aborts, r.admitted, r.arrival_drops, r.inc_drops,
+            r.queued_final) == (p.commits, p.aborts, p.admitted,
+                                p.arrival_drops, p.inc_drops,
+                                p.queued_final)
+    assert r.p50_ttc == p.p50_ttc and r.p99_ttc == p.p99_ttc
+
+
+def test_closed_loop_unaffected_by_open_loop_fields():
+    """A closed-loop run carries only the placeholder OpenLoopState: same
+    commits as ever, no open-loop row fields."""
+    cfg = EngineConfig(cc=t.CC_OCC, lanes=8, slots=WL.slots,
+                       n_records=WL.n_records, n_groups=WL.n_groups,
+                       n_cols=WL.n_cols, n_txn_types=WL.n_txn_types)
+    res = run(cfg, WL, n_waves=10, seed=0)
+    assert not res.open_loop
+    assert res.commits + res.aborts == 8 * 10   # every lane, every wave
+    assert res.p50_ttc is None and res.lat_hist is None
+
+
+# --------------------------------------------------- config validation
+def test_engine_config_queue_without_rate_rejected():
+    with pytest.raises(ValueError, match="open-loop admission queue"):
+        _cfg(t.CC_OCC, rate=0.0, cap=8)
+
+
+def test_engine_config_open_loop_needs_queue():
+    with pytest.raises(ValueError, match="queue_cap"):
+        _cfg(t.CC_OCC, rate=4.0, cap=0)
+
+
+def test_engine_config_negative_rate_rejected():
+    with pytest.raises(ValueError, match="arrival_rate"):
+        _cfg(t.CC_OCC, rate=-1.0)
+
+
+def test_engine_config_lat_bins_floor():
+    with pytest.raises(ValueError, match="lat_bins"):
+        EngineConfig(cc=t.CC_OCC, lanes=8, slots=4, n_records=64,
+                     n_groups=2, n_cols=0, n_txn_types=1,
+                     arrival_rate=4.0, queue_cap=8, lat_bins=1)
+
+
+def test_dist_config_open_loop_validation():
+    with pytest.raises(ValueError, match="queue_cap"):
+        D.DistConfig(n_records=64, lanes_per_shard=8, slots=8,
+                     queue_cap=-1)
+    with pytest.raises(ValueError, match="max_incarnations"):
+        D.DistConfig(n_records=64, lanes_per_shard=8, slots=8,
+                     max_incarnations=3)        # no queue_cap switch
+    with pytest.raises(ValueError, match="lat_bins"):
+        D.DistConfig(n_records=64, lanes_per_shard=8, slots=8,
+                     queue_cap=16, lat_bins=1)
+    with pytest.raises(ValueError, match="queue_cap"):
+        D.make_open_wave_fn(
+            D.DistConfig(n_records=64, lanes_per_shard=8, slots=8),
+            jax.make_mesh((1,), ("data",)))
+
+
+# ----------------------------------------------- distributed open loop
+def _dist_gen(n_total, K, N, seed_base=900):
+    def gen(w):
+        rng = np.random.default_rng(seed_base + w)
+        keys = jnp.asarray(rng.integers(0, N, (n_total, K),
+                                        dtype=np.int32))
+        groups = jnp.asarray(rng.integers(0, 2, (n_total, K),
+                                          dtype=np.int32))
+        kinds = jnp.asarray(rng.choice([t.READ, t.WRITE],
+                                       (n_total, K)).astype(np.int32))
+        prio = jnp.asarray(rng.permutation(n_total).astype(np.uint32))
+        return keys, groups, kinds, prio
+    return gen
+
+
+@pytest.mark.parametrize("cc", ["occ", "mvcc"])
+def test_distributed_open_loop_conservation(cc):
+    """The sharded admission rings obey the same conservation identity,
+    over every available host device."""
+    mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+    ns = len(jax.devices())
+    N, T, K = 128, 8, 4
+    cfg = D.DistConfig(n_records=N, n_groups=2, lanes_per_shard=T,
+                       slots=K, cc=cc, mv_depth=3 if cc != "occ" else 0,
+                       queue_cap=24, max_incarnations=2, lat_bins=8)
+    arr = PoissonArrivals(rate=0.9 * ns * T, seed=5).shard_counts(
+        18, ns, T)
+    s = D.run_open_loop(cfg, mesh, arr, _dist_gen(ns * T, K, N), 18)
+    assert s["admitted"] == (s["commits"] + s["queued_final"]
+                             + s["inc_drops"])
+    assert s["offered"] == s["admitted"] + s["arrival_drops"]
+    assert int(s["lat_hist"].sum()) == s["commits"]
+    assert s["commits"] > 0
+
+
+def test_distributed_one_shard_matches_local_composition():
+    """Parity: the 1-shard distributed open-loop wave == the local
+    admission ring (core/admission.py) composed with the local OCC
+    validator, wave by wave — same commit masks, same counters."""
+    mesh = jax.make_mesh((1,), ("data",))
+    N, T, K, CAP, MAXI = 64, 8, 4, 24, 2
+    cfg = D.DistConfig(n_records=N, n_groups=2, lanes_per_shard=T,
+                       slots=K, queue_cap=CAP, max_incarnations=MAXI,
+                       lat_bins=8)
+    wave_fn = jax.jit(D.make_open_wave_fn(cfg, mesh))
+    tables = D.init_tables(cfg, mesh)
+    qstate = D.init_open_queue(cfg, mesh)
+    arr = PoissonArrivals(rate=6.0, seed=2).counts(12, T)
+    gen = _dist_gen(T, K, N, seed_base=70)
+
+    ecfg = EngineConfig(cc=t.CC_OCC, lanes=T, slots=K, n_records=N,
+                        n_groups=2, n_cols=0, n_txn_types=1, granularity=1,
+                        cost=CostModel(opt_overlap=1.0, phase_overlap=1.0))
+    store = store_init(N, 2, 0)
+    q = admission.queue_init(CAP, K)
+    next_id = 0
+    for w in range(12):
+        keys, groups, kinds, prio = gen(w)
+        commit_d, tables, qstate, stats = wave_fn(
+            keys, groups, kinds, prio, jnp.asarray(arr[w:w + 1]),
+            tables, qstate, jnp.uint32(w))
+        # local composition: enqueue arrivals -> dequeue -> validate ->
+        # re-enqueue, exactly the open-loop wave step's ring discipline
+        fresh = TxnBatch(op_key=keys, op_group=groups,
+                         op_col=jnp.zeros_like(keys), op_kind=kinds,
+                         op_val=jnp.zeros(keys.shape, jnp.float32),
+                         txn_type=jnp.zeros((T,), jnp.int32),
+                         n_ops=jnp.full((T,), K, jnp.int32))
+        mask = jnp.arange(T) < int(arr[w])
+        ids = next_id + jnp.arange(T, dtype=jnp.int32)
+        next_id += int(arr[w])
+        q, n_acc, _ = admission.enqueue(
+            q, fresh, jnp.full((T,), w, jnp.int32),
+            jnp.zeros((T,), jnp.int32), ids, mask)
+        q, batch, aw, inc, tid, got = admission.dequeue(q, T)
+        store, res = occ_validate(store, batch, prio, jnp.uint32(w), ecfg)
+        commit_l = res.commit & got
+        retry = got & ~commit_l & (inc < MAXI)
+        q, _, _ = admission.enqueue(q, batch, aw, inc + 1, tid, retry)
+        np.testing.assert_array_equal(np.asarray(commit_d),
+                                      np.asarray(commit_l), err_msg=f"w{w}")
+        s = np.asarray(stats)
+        assert s[D.STAT_ADMITTED] == int(n_acc)
+        assert s[D.STAT_QUEUED] == int(q.size)
+
+
+def test_distributed_open_loop_backend_parity_8shard_subprocess():
+    """8 forced host devices: the open-loop routed wave's summary — queue
+    counters AND per-shard latency histograms — is bit-identical between
+    the jnp and pallas(interpret) backends (CI runs this in both jobs)."""
+    prog = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys; sys.path.insert(0, "src")
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import distributed as D
+        from repro.core import types as t
+        from repro.workloads.arrivals import PoissonArrivals
+        mesh = jax.make_mesh((8,), ("data",))
+        N, T, K = 256, 8, 4
+        def gen(w):
+            rng = np.random.default_rng(40 + w)
+            return (jnp.asarray(rng.integers(0, N, (64, K), dtype=np.int32)),
+                    jnp.asarray(rng.integers(0, 2, (64, K), dtype=np.int32)),
+                    jnp.asarray(rng.choice([t.READ, t.WRITE],
+                                           (64, K)).astype(np.int32)),
+                    jnp.asarray(rng.permutation(64).astype(np.uint32)))
+        arr = PoissonArrivals(rate=48.0, seed=9).shard_counts(10, 8, T)
+        outs = {}
+        for backend in ("jnp", "pallas"):
+            cfg = D.DistConfig(n_records=N, n_groups=2, lanes_per_shard=T,
+                               slots=K, backend=backend, queue_cap=24,
+                               max_incarnations=2, lat_bins=8)
+            outs[backend] = D.run_open_loop(cfg, mesh, arr, gen, 10)
+        a, b = outs["jnp"], outs["pallas"]
+        for k in ("commits", "aborts", "offered", "admitted",
+                  "arrival_drops", "inc_drops", "queued_final"):
+            assert a[k] == b[k], (k, a[k], b[k])
+        np.testing.assert_array_equal(a["lat_hist"], b["lat_hist"])
+        np.testing.assert_array_equal(a["per_shard_stats"],
+                                      b["per_shard_stats"])
+        assert a["admitted"] == (a["commits"] + a["queued_final"]
+                                 + a["inc_drops"])
+        assert a["commits"] > 0
+        print("OPEN_LOOP_8SHARD_PARITY_OK")
+    """)
+    r = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                       text=True, cwd=".", timeout=600)
+    assert "OPEN_LOOP_8SHARD_PARITY_OK" in r.stdout, r.stdout + r.stderr
