@@ -9,9 +9,11 @@ sweeps).  Two row shapes are understood:
 - mechanism rows (txn_bench / figure sweeps: ``cc`` key) — summarized per
   (workload, cc, granularity, backend) at their peak-throughput lane
   count, with abort rate and per-op pallas/xla kernel attribution;
-- distributed rows (txn_scaling: ``shards`` key) — waves/s, commit and
-  read-only splits, collective bytes per wave, and the shard-local op
-  attribution.
+- distributed rows (txn_scaling: ``shards`` key) — waves/s, pipeline
+  depth, commit and read-only splits, collective bytes per wave (HLO-
+  parsed) plus the modeled wire split (route / bit-packed verdict bytes,
+  with the retired 1-byte-per-op verdict baseline), and the shard-local
+  op attribution.
 
 Partial/truncated rows of a known shape (a killed bench run, a hand-edited
 file) are never fatal: they are skipped with a warning line in the report
@@ -221,19 +223,33 @@ def render_markdown(mech: list, dist: list) -> str:
     if dist_ok:
         out += ["## Distributed engine (txn_scaling; shards=0 = local "
                 "sweep() anchor)", "",
-                "| shards | cc | waves/s | commits | ro commits | ro "
-                "aborts | coll KiB/wave | backend | kernel ops | source |",
-                "|---|---|---|---|---|---|---|---|---|---|"]
+                "depth = software-pipeline depth of the scanned runner "
+                "(1 = synchronous three-exchange wave, >= 2 = ONE fused "
+                "all_to_all per wave); wire KiB/wave = modeled exchange "
+                "payload per shard; verdict B/wave shows the bit-packed "
+                "wire next to the retired 1-byte-per-op baseline.", "",
+                "| shards | cc | depth | waves/s | commits | ro commits "
+                "| ro aborts | coll KiB/wave | wire KiB/wave | verdict "
+                "B/wave (packed/legacy) | backend | kernel ops | source |",
+                "|---|---|---|---|---|---|---|---|---|---|---|---|---|"]
         for r in sorted(dist_ok,
                         key=lambda r: (_src_of(r), r.get("cc", "occ"),
-                                       r["shards"])):
+                                       r["shards"],
+                                       _fnum(r, "pipeline_depth", 0))):
+            depth = _coerce(r.get("pipeline_depth"))
+            wire = _coerce(r.get("wire_bytes_per_wave"))
+            vp = _coerce(r.get("verdict_bytes_per_wave"))
+            vl = _coerce(r.get("verdict_bytes_per_wave_legacy"))
             out.append(
                 f"| {r['shards']} | {r.get('cc', 'occ')} "
+                f"| {'—' if depth is None else f'{depth:g}'} "
                 f"| {_fnum(r, 'waves_per_s'):.1f} "
                 f"| {r.get('commits', '?')} "
                 f"| {r.get('ro_commits', '?')} "
                 f"| {r.get('ro_aborts', '?')} "
                 f"| {_fnum(r, 'coll_bytes_per_wave') / 1024:.1f} "
+                f"| {'—' if wire is None else f'{wire / 1024:.1f}'} "
+                f"| {'—' if vp is None or vl is None else f'{vp:g} / {vl:g}'} "
                 f"| {r.get('backend', '?')} "
                 f"| {_ops_cell(r.get('kernel_ops', {}))} | {_src_of(r)} |")
         out.append("")

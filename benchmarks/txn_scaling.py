@@ -16,10 +16,26 @@ the local one — and every row records the resolved backend, the per-op
 kernel attribution, and the read-only commit/abort split the distributed
 stats vector carries (core/distributed.py STATS_LEN layout).
 
-    PYTHONPATH=src python -m benchmarks.txn_scaling
+Every multi-shard grid point runs at TWO pipeline depths through the
+scanned ``make_run_fn`` runner (one XLA program per run, so waves/s
+measures the wave, not host dispatch): depth 1 — the synchronous
+three-exchange wave — and the software-pipelined depth (default 2, ONE
+fused all_to_all per steady-state wave; ``--pipeline-depth``).  Rows
+carry both the HLO-parsed collective bytes per wave and the modeled wire
+split (``route_bytes_per_wave`` / ``verdict_bytes_per_wave`` / the
+retired 1-byte-per-op ``verdict_bytes_per_wave_legacy`` baseline the
+bit-packed wire beats >= 4x) from ``distributed.wire_bytes_per_wave``.
+
+    PYTHONPATH=src python -m benchmarks.txn_scaling \\
+        [--waves N] [--pipeline-depth D] [--shards 1 8] [--json out.json]
+
+``--shards`` (or ``REPRO_TXN_SHARDS=1,8``) subsets the shard sweep — the
+CI pallas-interpret smoke runs the 1/8 endpoints only, since every grid
+point pays an interpret-mode compile there.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import subprocess
@@ -34,8 +50,19 @@ PROG = textwrap.dedent("""
     from repro.core import distributed as D, types as t
     from repro.analysis.roofline import collective_bytes_from_hlo
 
-    GLOBAL_LANES, K, N, WAVES = 256, 16, 1_000_000, 30
+    K, N = 16, 1_000_000
+    # Global lane count (kept at the default for real sweeps; the CI
+    # pallas-interpret smoke shrinks it — interpret mode validates the
+    # kernel semantics inside the pipelined wave, not speed, and its
+    # route_pack cost grows superlinearly in the wave size).
+    GLOBAL_LANES = int(os.environ.get("REPRO_TXN_LANES", "256"))
+    WAVES = int(os.environ.get("REPRO_TXN_WAVES", "30"))
+    DEPTH = int(os.environ.get("REPRO_TXN_DEPTH", "2"))
     BACKEND = os.environ.get("REPRO_TXN_BACKEND", "jnp")
+    # Shard-count subset (e.g. "1,8" for the CI interpret-mode smoke,
+    # where each grid point pays a pallas interpret compile).
+    SHARDS = tuple(int(s) for s in os.environ.get(
+        "REPRO_TXN_SHARDS", "1,2,4,8").split(","))
     rows = []
 
     # shards=0 anchor: the local (single-device) engine at the same global
@@ -70,12 +97,14 @@ PROG = textwrap.dedent("""
 
     from repro.core.backend import dist_kernel_coverage
     for cc in ("occ", "mvcc"):
-        for ns in (1, 2, 4, 8):
+        for ns in SHARDS:
             mesh = jax.make_mesh((ns,), ("data",))
-            cfg = D.DistConfig(n_records=N, n_groups=2,
-                               lanes_per_shard=GLOBAL_LANES // ns, slots=K,
-                               backend=BACKEND, cc=cc,
-                               mv_depth=4 if cc != "occ" else 0)
+            # Effective depths at this shard count, deduplicated (1-shard
+            # meshes auto-fall back to depth 1 — one row, not two).
+            depths = sorted({D.DistConfig(
+                n_records=N, lanes_per_shard=GLOBAL_LANES // ns, slots=K,
+                cc=cc, mv_depth=4 if cc != "occ" else 0,
+                pipeline_depth=d).depth(ns) for d in (1, DEPTH)})
             rng = np.random.default_rng(0)
             keys = jnp.asarray(rng.integers(0, N, (GLOBAL_LANES, K),
                                             dtype=np.int32))
@@ -84,48 +113,68 @@ PROG = textwrap.dedent("""
             kinds = jnp.asarray(rng.choice(
                 [t.READ, t.WRITE],
                 (GLOBAL_LANES, K)).astype(np.int32))
-            tables = D.init_tables(cfg, mesh)
-            # ONE compile per grid point: the executable answers the HLO
-            # collective-bytes parse AND runs the timed loop (shapes are
-            # fixed across waves), so waves/s never includes compile time.
-            wave = jax.jit(D.make_wave_fn(cfg, mesh)).lower(
-                keys, groups, kinds,
-                jnp.zeros((GLOBAL_LANES,), jnp.uint32), tables,
-                jnp.uint32(0)).compile()
-            coll = collective_bytes_from_hlo(wave.as_text())
-            # timed waves (fresh priorities per wave)
-            commits = ro_c = ro_a = 0
-            t0 = time.time()
-            for w in range(WAVES):
-                prio = jnp.asarray(
-                    np.random.default_rng(w).permutation(GLOBAL_LANES)
-                    .astype(np.uint32))
-                c, tables, stats = wave(keys, groups, kinds, prio, tables,
-                                        jnp.uint32(w))
-                commits += int(c.sum())
-                s = np.asarray(stats).reshape(ns, D.STATS_LEN)
-                ro_c += int(s[:, D.STAT_RO_COMMITS].sum())
-                ro_a += int(s[:, D.STAT_RO_ABORTS].sum())
-            jax.block_until_ready(tables)
-            dt = time.time() - t0
-            rows.append({"shards": ns, "cc": cc, "commits": commits,
-                         "waves_per_s": WAVES / dt,
-                         "coll_bytes_per_wave": coll,
-                         "ro_commits": ro_c, "ro_aborts": ro_a,
-                         # The routed engine claims/probes/gathers/installs
-                         # through the same backend surface as the local
-                         # one; only the exchange itself stays shard_map +
-                         # XLA collectives.
-                         "backend": BACKEND,
-                         "kernel_ops": dist_kernel_coverage(BACKEND, cc)})
-            print(f"{cc:4s} shards={ns}: {WAVES/dt:6.1f} waves/s  "
-                  f"{commits} commits  ro={ro_c}/{ro_a}  "
-                  f"coll/wave={coll/1024:.1f} KiB")
+            Ks = jnp.broadcast_to(keys, (WAVES,) + keys.shape)
+            Gs = jnp.broadcast_to(groups, (WAVES,) + groups.shape)
+            Is = jnp.broadcast_to(kinds, (WAVES,) + kinds.shape)
+            Ps = jnp.asarray(np.stack(
+                [np.random.default_rng(w).permutation(GLOBAL_LANES)
+                 for w in range(WAVES)]).astype(np.uint32))
+            for depth in depths:
+                cfg = D.DistConfig(n_records=N, n_groups=2,
+                                   lanes_per_shard=GLOBAL_LANES // ns,
+                                   slots=K, backend=BACKEND, cc=cc,
+                                   mv_depth=4 if cc != "occ" else 0,
+                                   pipeline_depth=depth)
+                tables = D.init_tables(cfg, mesh)
+                # ONE compile per grid point: the scanned runner is one
+                # XLA program for all WAVES waves; the executable answers
+                # the HLO collective-bytes parse (trip-count aware, so
+                # dividing by WAVES yields per-wave bytes) AND runs the
+                # timed call — waves/s never includes compile time.
+                run = jax.jit(D.make_run_fn(cfg, mesh, WAVES)).lower(
+                    Ks, Gs, Is, Ps, tables, jnp.uint32(0)).compile()
+                # Per-wave = per-scan-step: the pipelined scan runs three
+                # extra drain steps beyond WAVES (each with the same one
+                # fused exchange), so divide by the real trip count.
+                steps = WAVES + (3 if depth >= 2 else 0)
+                coll = collective_bytes_from_hlo(run.as_text()) / steps
+                c, tb, stats = run(Ks, Gs, Is, Ps, tables, jnp.uint32(0))
+                jax.block_until_ready(tb)          # warm (cached) call
+                t0 = time.time()
+                c, tb, stats = run(Ks, Gs, Is, Ps, tables, jnp.uint32(0))
+                jax.block_until_ready(tb)
+                dt = time.time() - t0
+                commits = int(np.asarray(c).sum())
+                s = np.asarray(stats).reshape(WAVES, ns, D.STATS_LEN)
+                ro_c = int(s[:, :, D.STAT_RO_COMMITS].sum())
+                ro_a = int(s[:, :, D.STAT_RO_ABORTS].sum())
+                wire = D.wire_bytes_per_wave(cfg, mesh)
+                rows.append({"shards": ns, "cc": cc, "commits": commits,
+                             "waves_per_s": WAVES / dt,
+                             "pipeline_depth": depth,
+                             "coll_bytes_per_wave": coll,
+                             "ro_commits": ro_c, "ro_aborts": ro_a,
+                             # The routed engine claims/probes/gathers/
+                             # installs through the same backend surface
+                             # as the local one; only the exchange itself
+                             # stays shard_map + XLA collectives.
+                             "backend": BACKEND,
+                             "kernel_ops": dist_kernel_coverage(BACKEND,
+                                                                cc),
+                             **wire})
+                print(f"{cc:4s} shards={ns} depth={depth}: "
+                      f"{WAVES/dt:6.1f} waves/s  {commits} commits  "
+                      f"ro={ro_c}/{ro_a}  coll/wave={coll/1024:.1f} KiB  "
+                      f"wire/wave={wire['wire_bytes_per_wave']/1024:.1f} "
+                      f"KiB")
 
     # Open-loop row family (DESIGN.md section 11): the same routed wave
     # behind per-shard admission queues — Poisson arrivals, bounded retry
     # incarnations, goodput (unique committed txns/s of wall time) and
     # p50/p99 time-to-commit in waves from the summed shard histograms.
+    # Multi-shard points run at the pipelined depth (run_open_loop scans
+    # ONE fused-exchange program); retries land two waves later there, the
+    # conservation identities stay exact at every depth.
     from repro.core.admission import ttc_percentiles
     from repro.workloads.arrivals import PoissonArrivals
 
@@ -144,7 +193,7 @@ PROG = textwrap.dedent("""
 
     for cc in ("occ", "mvcc"):
         for gran in (0, 1):
-            for ns in (1, 8):
+            for ns in [n for n in (1, 8) if n in SHARDS]:
                 mesh = jax.make_mesh((ns,), ("data",))
                 T_loc = GLOBAL_LANES // ns
                 cfg = D.DistConfig(n_records=N, n_groups=2,
@@ -152,6 +201,7 @@ PROG = textwrap.dedent("""
                                    granularity=gran, backend=BACKEND,
                                    cc=cc,
                                    mv_depth=4 if cc != "occ" else 0,
+                                   pipeline_depth=DEPTH,
                                    queue_cap=4 * T_loc,
                                    max_incarnations=8, lat_bins=32)
                 arr = PoissonArrivals(
@@ -166,6 +216,7 @@ PROG = textwrap.dedent("""
                 rows.append({
                     "shards": ns, "cc": cc, "mode": "open_loop",
                     "granularity": gran,
+                    "pipeline_depth": cfg.depth(ns),
                     "commits": s["commits"],
                     "waves_per_s": WAVES / dt,
                     "coll_bytes_per_wave": 0,
@@ -178,8 +229,10 @@ PROG = textwrap.dedent("""
                     "ro_commits": s["ro_commits"],
                     "ro_aborts": s["ro_aborts"],
                     "backend": BACKEND,
-                    "kernel_ops": dist_kernel_coverage(BACKEND, cc)})
-                print(f"open {cc:4s} g={gran} shards={ns}: "
+                    "kernel_ops": dist_kernel_coverage(BACKEND, cc),
+                    **D.wire_bytes_per_wave(cfg, mesh)})
+                print(f"open {cc:4s} g={gran} shards={ns} "
+                      f"depth={cfg.depth(ns)}: "
                       f"goodput={s['commits']/dt:8.1f} txn/s  "
                       f"p50/p99 ttc={p50:g}/{p99:g} waves  "
                       f"dropped={s['inc_drops']}")
@@ -188,8 +241,39 @@ PROG = textwrap.dedent("""
 
 
 def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--waves", type=int, default=None,
+                    help="waves per grid point (default 30)")
+    ap.add_argument("--pipeline-depth", type=int, default=None,
+                    help="software-pipeline depth of the second depth "
+                         "sweep (default 2; 1 collapses the sweep to the "
+                         "synchronous wave only)")
+    ap.add_argument("--shards", type=int, nargs="+", default=None,
+                    help="shard counts to sweep (default 1 2 4 8; the "
+                         "open-loop family keeps its 1/8 endpoints "
+                         "intersected with this set)")
+    ap.add_argument("--json", default="reports/txn_scaling.json")
+    args = ap.parse_args(argv)
+    # Presence-validated: the flags are optional, but a PROVIDED value
+    # must be sane (argparse type=int already rejects non-integers).
+    if args.waves is not None and args.waves < 1:
+        ap.error(f"--waves must be >= 1, got {args.waves}")
+    if args.pipeline_depth is not None and args.pipeline_depth < 1:
+        ap.error(f"--pipeline-depth must be >= 1 (1 = synchronous wave), "
+                 f"got {args.pipeline_depth}")
+    if args.shards is not None and any(
+            s < 1 or s > 8 or s & (s - 1) for s in args.shards):
+        ap.error(f"--shards must be powers of two in [1, 8] (the forced "
+                 f"host-device count), got {args.shards}")
+    env = dict(os.environ)
+    if args.waves is not None:
+        env["REPRO_TXN_WAVES"] = str(args.waves)
+    if args.pipeline_depth is not None:
+        env["REPRO_TXN_DEPTH"] = str(args.pipeline_depth)
+    if args.shards is not None:
+        env["REPRO_TXN_SHARDS"] = ",".join(str(s) for s in args.shards)
     r = subprocess.run([sys.executable, "-c", PROG], capture_output=True,
-                       text=True, cwd=".", timeout=2400)
+                       text=True, cwd=".", timeout=2400, env=env)
     print(r.stdout)
     if r.returncode:
         print(r.stderr[-2000:], file=sys.stderr)
@@ -197,10 +281,12 @@ def main(argv=None):
     for line in r.stdout.splitlines():
         if line.startswith("JSON:"):
             rows = json.loads(line[5:])
-            os.makedirs("reports", exist_ok=True)
-            with open("reports/txn_scaling.json", "w") as f:
+            out_dir = os.path.dirname(args.json)
+            if out_dir:
+                os.makedirs(out_dir, exist_ok=True)
+            with open(args.json, "w") as f:
                 json.dump(rows, f, indent=1)
-            print("[saved] reports/txn_scaling.json")
+            print(f"[saved] {args.json}")
     return 0
 
 

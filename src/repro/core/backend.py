@@ -2,7 +2,7 @@
 
 Every concurrency-control mechanism in ``core/cc/`` — and the distributed
 engine's shard-local wave (``core/distributed.py``) — touches shared state
-through exactly twelve ops, the full surface a wave needs (DESIGN.md
+through exactly fourteen ops, the full surface a wave needs (DESIGN.md
 sections 5, 9 and 10):
 
     validate        read-set verdicts vs the writer-claim table (OCC rule;
@@ -29,6 +29,11 @@ sections 5, 9 and 10):
     mv_gather       snapshot version select on the multi-version ring
                     (mvcc/mvocc reads; core/mvstore.py)
     mv_install      ring-slot claim + version publish (mvcc/mvocc commits)
+    verdict_pack    bit-pack per-op verdict bytes for the wire — 2 bits/op
+                    (conflict + read-validation), 16 ops per int32 word, a
+                    4x byte cut on the distributed verdict/commit return
+                    channels (kernels/verdict_pack.py)
+    verdict_unpack  the inverse: wire words back to per-op verdict bytes
 
 ``resolve(cfg)`` maps ``EngineConfig.backend`` (or ``DistConfig.backend`` —
 any config with a ``backend`` field) to one of two stateless singleton
@@ -44,7 +49,7 @@ Both decode the one claim-word layout in ``core/claimword.py`` and are
 bit-identical (tests/test_backend_parity.py, tests/test_kernels.py).  CC
 mechanisms hold no ``cfg.backend`` branches: they call ``resolve(cfg)`` once
 per wave and use only this surface, so a new mechanism gets TPU execution for
-free and a new backend only has to implement these twelve ops.
+free and a new backend only has to implement these fourteen ops.
 """
 from __future__ import annotations
 
@@ -126,6 +131,16 @@ class JnpBackend:
         from repro.kernels import ref
         return ref.mv_install(begin, head, keys, groups, do, ts)
 
+    def verdict_pack(self, v):
+        """Bit-pack verdict bytes: 2 bits/op, 16 ops per int32 wire word."""
+        from repro.kernels import ref
+        return ref.verdict_pack(v)
+
+    def verdict_unpack(self, words, n: int):
+        """Inverse of verdict_pack: wire words -> int8[..., n] verdicts."""
+        from repro.kernels import ref
+        return ref.verdict_unpack(words, n)
+
 
 class PallasBackend:
     """TPU-native kernels (compiled on TPU, interpret mode elsewhere)."""
@@ -191,6 +206,14 @@ class PallasBackend:
         return ops.mv_install(begin, head, keys, groups, do, ts,
                               use_pallas=True)
 
+    def verdict_pack(self, v):
+        from repro.kernels import ops
+        return ops.verdict_pack(v, use_pallas=True)
+
+    def verdict_unpack(self, words, n: int):
+        from repro.kernels import ops
+        return ops.verdict_unpack(words, n, use_pallas=True)
+
 
 _BACKENDS = {"jnp": JnpBackend(), "pallas": PallasBackend()}
 
@@ -222,12 +245,16 @@ CC_OPS = {
 
 #: The surface ops one shard-local distributed wave routes through the
 #: backend (core/distributed.py), per mechanism: the sort-free exchange
-#: pack and the fused owner-side claim install + probe for everyone, plus
-#: the install return-trip — ``commit_install`` version bumps for occ,
-#: ``mv_gather`` snapshot reads + ``mv_install`` ring publishes for the
-#: multi-version pair.  Recorded by benchmarks/txn_scaling.py rows.
-DIST_OPS = ("route_pack", "claim_probe", "commit_install")
-DIST_MV_OPS = ("route_pack", "claim_probe", "mv_gather", "mv_install")
+#: pack, the verdict bit-pack/unpack pair riding every verdict and commit
+#: return channel, and the fused owner-side claim install + probe for
+#: everyone, plus the install return-trip — ``commit_install`` version
+#: bumps for occ, ``mv_gather`` snapshot reads + ``mv_install`` ring
+#: publishes for the multi-version pair.  Recorded by
+#: benchmarks/txn_scaling.py rows.
+DIST_OPS = ("route_pack", "verdict_pack", "verdict_unpack", "claim_probe",
+            "commit_install")
+DIST_MV_OPS = ("route_pack", "verdict_pack", "verdict_unpack",
+               "claim_probe", "mv_gather", "mv_install")
 
 
 def resolve(cfg) -> JnpBackend | PallasBackend:

@@ -12,9 +12,10 @@ way.  One wave is:
               fixed-capacity buffers [n_shards, cap, words] are built by the
               backend's ``route_pack`` op — a counting/offset scan (the
               placement a stable argsort by owner would give, WITHOUT the
-              sort; kernels/route_pack.py) — and exchanged with one
-              ``all_to_all``.  Ops beyond a pair's capacity abort their
-              lane (counted; capacity is sized for the workload).
+              sort; kernels/route_pack.py) — and exchanged through the one
+              ``_make_exchange`` collective.  Ops beyond a pair's capacity
+              abort their lane (counted; capacity is sized for the
+              workload).
   2. claim    owners run the backend's fused ``claim_probe`` op on their
               claim-table shard(s): ONE pass min-installs the routed write
               claims and answers every routed op's strongest-claimant
@@ -27,24 +28,57 @@ way.  One wave is:
               validation, honoring ``snapshot_age`` (aged snapshots that
               outlive the ring report reclamation and abort — never read a
               recycled slot).
-  3. verdict  per-op conflict flags return through the inverse all_to_all;
-              the sender *gathers* its verdicts back by each op's
-              (owner, pos) routing coordinates from route_pack — no return
-              scatter.  A lane commits iff none of its routed ops
-              conflicted and none were capacity-dropped.  The MV verdict
-              byte carries two bits: unconditional conflicts (FCW
-              write-write + snapshot reclamation) and the read-validation
-              bit, which only mvocc applies — and only to lanes that also
-              write, a fact the *sender* knows (read-only lanes serialize
-              at their snapshot; cc/mvocc.py), so it never travels.
+  3. verdict  per-op conflict flags return through the inverse exchange,
+              BIT-PACKED 16 ops per int32 word by the backend's
+              ``verdict_pack`` op (2 bits per op — a 4x wire cut vs the
+              old 1-int8-per-op scheme); the sender unpacks and *gathers*
+              its verdicts back by each op's (owner, pos) routing
+              coordinates from route_pack — no return scatter.  A lane
+              commits iff none of its routed ops conflicted and none were
+              capacity-dropped.  The verdict carries two bits:
+              unconditional conflicts (FCW write-write + snapshot
+              reclamation; single-version OCC uses only this bit) and the
+              read-validation bit, which only mvocc applies — and only to
+              lanes that also write, a fact the *sender* knows (read-only
+              lanes serialize at their snapshot; cc/mvocc.py), so it never
+              travels.
   4. install  committed write ops publish through the backend on the same
-              return trip (the commit bit rides the inverse exchange, so
-              installation reuses the routed buffer — no second exchange):
-              ``commit_install`` bumps (record, group) versions for occ;
-              ``mv_install`` claims one ring slot per written record and
-              publishes begin timestamps for mvcc/mvocc (concurrent group
-              writers of a record merge into the slot, exactly the local
-              mv_commit).
+              return trip (the commit bits ride the inverse exchange
+              packed like the verdicts, so installation reuses the routed
+              buffer — no extra payload): ``commit_install`` bumps
+              (record, group) versions for occ; ``mv_install`` claims one
+              ring slot per written record and publishes begin timestamps
+              for mvcc/mvocc (concurrent group writers of a record merge
+              into the slot, exactly the local mv_commit).
+
+Software pipeline (``pipeline_depth >= 2``; DESIGN.md section 10)
+-----------------------------------------------------------------
+The synchronous wave serializes three exchanges against shard-local
+compute.  The scanned runners (``make_run_fn`` / the pipelined open loop
+behind ``run_open_loop``) overlap them: ``route_pack`` never reads the CC
+tables, so wave N's routing runs while owners claim/probe/gather wave
+N-1, and the verdict + commit return words are FUSED with the next wave's
+outbound buffers into ONE ``all_to_all`` per steady-state wave.  Step s
+of the scan (wave w = wave0 + s):
+
+    1. owner-install  wave w-3  (commit bits arrived last step)
+    2. owner-claim    wave w-1  (routed buffers arrived last step) -> V
+    3. sender-commit  wave w-2  (verdict words arrived last step)  -> C
+    4. route          wave w                                       -> O
+    5. one fused exchange of [O_key | O_meta | V | C]
+
+In-flight wave buffers thread through the scan carry (three owner-side
+routed-buffer slots, two sender-side coordinate slots); warmup steps run
+on NO_OP-filled buffers (masked everywhere, so they are table no-ops) and
+three trailing NOP-padded waves drain the pipe (wave w's verdicts land at
+step w + 2, its installs at w + 3).  Depth 1 keeps today's
+synchronous schedule bit-identically; depth >= 2 is bit-identical to it
+for occ always and for mvcc/mvocc at ``snapshot_age == 0`` (the claim
+scatter-min commutes across waves, probes only see current-wave claims,
+occ's wts is write-only inside the wave, and a wave-fresh MV snapshot
+never depends on the one install the pipelined gather has not seen yet);
+aged snapshots are validation-rejected at depth >= 2 because that missing
+install's reclamation CAN flip an aged reader's verdict.
 
 Every shard-local table touch goes through ``backend.resolve(cfg)``
 (core/backend.py): ``DistConfig.backend`` selects XLA gather/scatter or the
@@ -74,7 +108,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -98,6 +131,9 @@ LANE_FILL = -1           # empty cell in the local slot -> lane map
 DIST_CCS = ("occ", "mvcc", "mvocc")
 DIST_MV_CCS = ("mvcc", "mvocc")
 
+#: Exchange factorings of the routed wave (DistConfig.topology).
+TOPOLOGIES = ("flat", "axiswise")
+
 #: stats vector layout per shard (int32[STATS_LEN]; ro = read-only lanes,
 #: the multi-version headline split SimResult/dashboard rows expect).
 #: Slots 6..9 are the open-loop front-end counters (make_open_wave_fn);
@@ -108,6 +144,12 @@ STATS_LEN = 10
 STAT_COMMITS, STAT_ABORTS, STAT_DROPPED_LANES, STAT_DROPPED_OPS, \
     STAT_RO_COMMITS, STAT_RO_ABORTS, STAT_ADMITTED, STAT_ARRIVAL_DROPS, \
     STAT_INC_DROPS, STAT_QUEUED = range(STATS_LEN)
+
+
+def verdict_words(cap: int) -> int:
+    """int32 wire words per ``cap``-op verdict row: 2 bits per op, 16 ops
+    per word (kernels/verdict_pack.py)."""
+    return -(-cap // 16)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -132,6 +174,20 @@ class DistConfig:
     snapshot_age: int = 0          # MV readers pin snapshots this many
                                    # waves back (mvstore.snapshot_ts); > 0
                                    # makes ring reclamation fire under load
+    pipeline_depth: int = 1        # software-pipeline depth of the scanned
+                                   # runners: 1 = the synchronous wave
+                                   # (bit-identical to make_wave_fn), >= 2
+                                   # overlaps wave N's route/exchange with
+                                   # wave N-1's owner compute behind ONE
+                                   # fused all_to_all per wave (module
+                                   # docstring; 1-shard meshes auto-fall
+                                   # back to 1 — see ``depth()``)
+    topology: str = "flat"         # exchange factoring: "flat" = one
+                                   # n_shards-way all_to_all over the
+                                   # combined mesh axes, "axiswise" = one
+                                   # smaller exchange per mesh axis on
+                                   # >= 2-D meshes (falls back to flat on
+                                   # 1-axis meshes)
     # ---- open-loop front-end (make_open_wave_fn; DESIGN.md section 11).
     # queue_cap >= 1 turns on the per-shard admission ring; arrival counts
     # are driver-supplied per wave (workloads/arrivals.PoissonArrivals
@@ -165,6 +221,25 @@ class DistConfig:
             raise ValueError(
                 f"snapshot_age={self.snapshot_age} needs a multi-version "
                 f"cc (mvcc/mvocc): {self.cc!r} has no snapshots to age")
+        if self.pipeline_depth < 1:
+            raise ValueError(
+                f"pipeline_depth={self.pipeline_depth} must be >= 1 "
+                "(1 = the synchronous wave; >= 2 = the software pipeline "
+                "of the scanned runners)")
+        if self.pipeline_depth > 1 and self.snapshot_age > 0:
+            raise ValueError(
+                f"pipeline_depth={self.pipeline_depth} with snapshot_age="
+                f"{self.snapshot_age}: the pipelined wave's mv_gather runs "
+                "one wave before the previous wave's mv_install lands, so "
+                "an AGED snapshot could read a ring slot the synchronous "
+                "engine had already reclaimed — wave-fresh snapshots "
+                "(age 0) are provably unaffected (module docstring), aged "
+                "readers must run at pipeline_depth=1")
+        if self.topology not in TOPOLOGIES:
+            raise ValueError(
+                f"unknown topology {self.topology!r} (expected one of "
+                f"{TOPOLOGIES}; 'axiswise' falls back to 'flat' on 1-axis "
+                "meshes)")
         if self.route_cap < 0:
             raise ValueError(
                 f"route_cap={self.route_cap} is negative (0 = auto, "
@@ -221,6 +296,13 @@ class DistConfig:
         fair = self.lanes_per_shard * self.slots / max(n_shards, 1)
         return -(-max(8, int(4 * fair), self.slots) // 8) * 8
 
+    def depth(self, n_shards: int) -> int:
+        """Effective pipeline depth on an ``n_shards`` mesh: 1-shard
+        meshes auto-fall back to the synchronous wave (the exchange is a
+        local copy there — nothing to overlap), larger meshes run the
+        configured ``pipeline_depth``."""
+        return 1 if n_shards <= 1 else self.pipeline_depth
+
 
 def _axes(mesh) -> tuple:
     return tuple(mesh.axis_names)
@@ -230,16 +312,97 @@ def n_shards(mesh) -> int:
     return math.prod(mesh.shape[a] for a in mesh.axis_names)
 
 
-def _make_shard_body(cfg: DistConfig, mesh):
-    """The shard-local routed wave: route -> claim -> verdict -> install
-    (module docstring).  Returns ``body(keys, groups, kinds, prio, tables,
-    wave_idx) -> (commit, tables', lane_dropped, has_write, dropped_op)``
-    — the one op pipeline shared by the closed-loop wave (make_wave_fn)
-    and the open-loop wave (make_open_wave_fn); only the traffic model
-    around it differs.  Must be called inside shard_map over ``mesh``'s
-    axes (the body's all_to_all exchanges name them).
+def wire_bytes_per_wave(cfg: DistConfig, mesh) -> dict:
+    """Modeled steady-state exchange payload per shard per wave, in bytes
+    — the honest-wire columns of the perf dashboard (this CPU container
+    cannot time real interconnects, so the speed story reports what the
+    fused collective actually carries):
+
+    - ``route_bytes_per_wave``:   key + meta int32 channels,
+      ``n_shards * cap * 8``;
+    - ``verdict_bytes_per_wave``: the bit-packed verdict return,
+      ``n_shards * verdict_words(cap) * 4``;
+    - ``commit_bytes_per_wave``:  the packed commit-bit return, same words;
+    - ``verdict_bytes_per_wave_legacy``: the retired 1-int8-per-op scheme
+      (``n_shards * cap``), the >= 4x-reduction baseline for 16-aligned
+      caps;
+    - ``wire_bytes_per_wave``: route + verdict + commit.
+
+    The axiswise topology re-sends the payload once per mesh axis (each
+    exchange only crosses one axis), so its bytes count ``len(axes)``
+    times on >= 2-D meshes.
+    """
+    ns = n_shards(mesh)
+    cap = cfg.cap(ns)
+    W = verdict_words(cap)
+    ax = _axes(mesh)
+    hops = len(ax) if (cfg.topology == "axiswise" and len(ax) > 1) else 1
+    route = ns * cap * 2 * 4
+    verdict = ns * W * 4
+    commit = ns * W * 4
+    return {"route_bytes_per_wave": route * hops,
+            "verdict_bytes_per_wave": verdict * hops,
+            "commit_bytes_per_wave": commit * hops,
+            "verdict_bytes_per_wave_legacy": ns * cap * hops,
+            "wire_bytes_per_wave": (route + verdict + commit) * hops}
+
+
+def _make_exchange(cfg: DistConfig, mesh):
+    """The ONE exchange collective of the routed wave.
+
+    Returns ``exchange(buf [n_shards, B]) -> [n_shards, B]`` (arrived row
+    i = what shard i sent us), for use inside shard_map over ``mesh``.
+    ``topology="flat"`` runs a single n_shards-way ``all_to_all`` over the
+    combined mesh axes; ``"axiswise"`` factors it on >= 2-D meshes into
+    one exchange per mesh axis (reshape [n_shards, B] to mesh.shape + [B]
+    and exchange dim i over axis i — the row-major composition equals the
+    flat exchange exactly, with a smaller peer fan-out per collective at
+    len(axes)x the wire bytes), falling back to flat on 1-axis meshes.
+
+    Every wave body routes its exchanges through this closure — the AST
+    guard in tests/test_pipeline.py pins ``all_to_all`` to this function
+    and counts one ``exchange(`` call in the pipelined step bodies.
     """
     ax = _axes(mesh)
+    dims = tuple(mesh.shape[a] for a in ax)
+    if cfg.topology == "axiswise" and len(ax) > 1:
+        steps = [(dims, i, ax[i]) for i in range(len(ax))]
+    else:
+        steps = [((math.prod(dims),), 0, ax if len(ax) > 1 else ax[0])]
+
+    def exchange(buf):
+        x = buf.reshape(steps[0][0] + buf.shape[1:])
+        for _, i, name in steps:
+            x = jax.lax.all_to_all(x, axis_name=name, split_axis=i,
+                                   concat_axis=i, tiled=True)
+        return x.reshape(buf.shape)
+
+    return exchange
+
+
+def _make_phases(cfg: DistConfig, mesh):
+    """The four shard-local phases of the routed wave, factored so the
+    synchronous body (``_make_shard_body``) and the software-pipelined
+    steps (``_make_pipeline_step`` / ``_make_open_pipeline_step``) share
+    one implementation:
+
+    - ``route(keys, groups, kinds, prio) -> (out [ns, 2*cap], send)`` —
+      sender side; ``out`` is the concatenated key|meta wire buffer and
+      ``send`` the sender's coordinate state
+      ``(owner, pos, took, b_lane, lane_dropped, has_write, dropped_op)``;
+    - ``owner_claim(tables, r_buf, wave) -> (tables', v_words [ns, W])`` —
+      owner side: fused claim install + probe (and MV snapshot gather),
+      verdicts bit-packed for the wire;
+    - ``sender_commit(send, v_words) -> (commit [T], c_words [ns, W])`` —
+      sender side: unpack + gather verdicts by routing coordinates, pack
+      the commit bits for the return trip;
+    - ``owner_install(tables, r_buf, c_words, wave) -> tables'`` — owner
+      side: version bumps (occ) or ring publishes (mvcc/mvocc) for
+      committed writes.
+
+    route never touches the CC tables — the fact that makes the pipeline
+    overlap semantics-free (module docstring).
+    """
     ns = n_shards(mesh)
     cap = cfg.cap(ns)
     rec_per = -(-cfg.n_records // ns)
@@ -248,17 +411,14 @@ def _make_shard_body(cfg: DistConfig, mesh):
     be = kb.resolve(cfg)
     mv = cfg.is_mv
 
-    def body(keys, groups, kinds, prio, tables, wave_idx):
+    def route(keys, groups, kinds, prio):
         # keys/groups/kinds: [T, K] local lanes; prio: [T]
-        # tables: per-mechanism state tuple, each [rec_per, ...] local shard.
         live = (kinds != t.NOP) & (keys >= 0)
         owner = jnp.where(live, keys // rec_per, ns)         # dest shard
         lkey = jnp.where(live, keys % rec_per, NO_OP)
-
-        # --- build per-destination buffers (backend route_pack) ---------
-        # Perf iteration (txn-engine): pack (group | kind | prio16) into ONE
-        # int32 rider word — 2 words per op on the wire instead of 4; the
-        # lane id never travels (the sender keeps the slot->lane map).
+        # Pack (group | kind | prio16) into ONE int32 rider word — 2 words
+        # per op on the wire; the lane id never travels (the sender keeps
+        # the slot->lane map).
         meta = (groups | (kinds << 1)
                 | (jnp.broadcast_to(prio[:, None], (T, K)).astype(jnp.int32)
                    << 3))
@@ -269,27 +429,32 @@ def _make_shard_body(cfg: DistConfig, mesh):
         buf, pos, took = be.route_pack(owner.reshape(-1), vals, ns, cap,
                                        (NO_OP, META_FILL, LANE_FILL))
         b_key, b_meta, b_lane = buf[0], buf[1], buf[2]
-
         # capacity-dropped ops abort their lane (no scatter: took is
         # flat-op aligned, so a reshape + any does the lane reduce)
         dropped_op = ~took & (owner.reshape(-1) < ns)
         lane_dropped = dropped_op.reshape(T, K).any(axis=1)
+        has_write = (live & ((kinds == t.WRITE)
+                             | (kinds == t.ADD))).any(axis=1)
+        out = jnp.concatenate([b_key, b_meta], axis=-1)      # [ns, 2*cap]
+        send = (jnp.clip(owner.reshape(-1), 0, ns - 1),
+                jnp.clip(pos, 0, cap - 1), took, b_lane,
+                lane_dropped, has_write, dropped_op)
+        return out, send
 
-        # --- exchange: rows -> owners ----------------------------------
-        a2a = partial(jax.lax.all_to_all, axis_name=ax, split_axis=0,
-                      concat_axis=0, tiled=True)
-        r_key = a2a(b_key)
-        r_meta = a2a(b_meta)
+    def _decode(r_buf):
+        """Arrived [ns, 2*cap] wire buffer -> owner-side op arrays."""
+        r_key, r_meta = r_buf[:, :cap], r_buf[:, cap:]
         r_live = r_key != NO_OP
-        rk = jnp.where(r_live, r_key, -1)     # masked-op convention of the
-        r_grp = r_meta & 1                    # backend surface: key -1
+        rk = jnp.where(r_live, r_key, -1)    # masked-op convention of the
+        r_grp = r_meta & 1                   # backend surface: key -1
         r_kind = (r_meta >> 1) & 3
         r_prio = ((r_meta >> 3) & 0xFFFF).astype(jnp.uint32)
+        return rk, r_grp, r_kind, r_prio, r_live
 
+    def owner_claim(tables, r_buf, wave_idx):
+        rk, r_grp, r_kind, r_prio, r_live = _decode(r_buf)
         is_w = r_live & ((r_kind == t.WRITE) | (r_kind == t.ADD))
         is_r = r_live & (r_kind == t.READ)
-
-        # --- owner side: claims + probes (and MV snapshot reads) --------
         if not mv:
             # Single-version OCC: fused claim install + probe, ONE table
             # pass; verdict bit 0 = read claimed by a stronger lane.
@@ -297,6 +462,7 @@ def _make_shard_body(cfg: DistConfig, mesh):
             claim_w, wprio = be.claim_probe(claim_w, rk, r_grp, r_prio,
                                             wave_idx, is_w, fine)
             v = (is_r & (wprio < r_prio)).astype(jnp.int8)
+            tables = (wts, claim_w)
         else:
             # The local fcw_conflicts + mv snapshot check (cc/mvcc.py),
             # per shard: claim_w carries ALL writes, claim_r only plain
@@ -322,47 +488,141 @@ def _make_shard_body(cfg: DistConfig, mesh):
             # never travels).
             rdval = is_r & (wprio_w < r_prio)
             v = uncond.astype(jnp.int8) | (rdval.astype(jnp.int8) << 1)
+            tables = (claim_w, claim_r, mv_begin, mv_head)
+        return tables, be.verdict_pack(v)
 
-        # --- verdicts return to lane owners (1 byte per op) -------------
+    def sender_commit(send, v_words):
         # Gathered back by each op's routing coordinates — sort-free and
         # scatter-free, the inverse of route_pack's placement.
-        v_conf = a2a(v)                                       # [ns, cap]
-        oo = jnp.clip(owner.reshape(-1), 0, ns - 1)
-        pp = jnp.clip(pos, 0, cap - 1)
-        vv = v_conf[oo, pp]
-        has_write = (live & ((kinds == t.WRITE)
-                             | (kinds == t.ADD))).any(axis=1)
+        owner_c, pos_c, took, b_lane, lane_dropped, has_write, _ = send
+        vv = be.verdict_unpack(v_words, cap)[owner_c, pos_c]
         op_conf = (vv & 1) > 0
         if cfg.cc == "mvocc":
             hw_op = jnp.broadcast_to(has_write[:, None], (T, K)).reshape(-1)
             op_conf = op_conf | (((vv & 2) > 0) & hw_op)
         op_conf = op_conf & took
         commit = ~op_conf.reshape(T, K).any(axis=1) & ~lane_dropped
-
-        # --- install: commit bits ride back to owners (1 byte) ----------
         b_commit = jnp.where(
             b_lane >= 0,
             commit[jnp.clip(b_lane, 0, T - 1)].astype(jnp.int8),
             jnp.int8(0))
-        r_commit = a2a(b_commit)
-        bump = is_w & (r_commit > 0)
-        if not mv:
-            wts = be.commit_install(wts, rk, r_grp, bump)
-            tables = (wts, claim_w)
-        else:
-            mv_begin, mv_head = be.mv_install(
-                mv_begin, mv_head, rk, r_grp, bump,
-                mvstore.install_ts(wave_idx))
-            tables = (claim_w, claim_r, mv_begin, mv_head)
+        return commit, be.verdict_pack(b_commit)
 
+    def owner_install(tables, r_buf, c_words, wave_idx):
+        rk, r_grp, r_kind, _, r_live = _decode(r_buf)
+        is_w = r_live & ((r_kind == t.WRITE) | (r_kind == t.ADD))
+        bump = is_w & (be.verdict_unpack(c_words, cap) > 0)
+        if not mv:
+            wts, claim_w = tables
+            wts = be.commit_install(wts, rk, r_grp, bump)
+            return (wts, claim_w)
+        claim_w, claim_r, mv_begin, mv_head = tables
+        mv_begin, mv_head = be.mv_install(
+            mv_begin, mv_head, rk, r_grp, bump,
+            mvstore.install_ts(wave_idx))
+        return (claim_w, claim_r, mv_begin, mv_head)
+
+    return route, owner_claim, sender_commit, owner_install
+
+
+def _make_shard_body(cfg: DistConfig, mesh):
+    """The SYNCHRONOUS (pipeline_depth 1) shard-local routed wave: route ->
+    claim -> verdict -> install within one call (module docstring), three
+    ``exchange`` round trips.  Returns ``body(keys, groups, kinds, prio,
+    tables, wave_idx) -> (commit, tables', lane_dropped, has_write,
+    dropped_op)`` — the op pipeline shared by the closed-loop wave
+    (make_wave_fn) and the open-loop wave (make_open_wave_fn); only the
+    traffic model around it differs.  Must be called inside shard_map over
+    ``mesh``'s axes (the exchange closure names them).
+    """
+    route, owner_claim, sender_commit, owner_install = _make_phases(cfg,
+                                                                    mesh)
+    exchange = _make_exchange(cfg, mesh)
+
+    def body(keys, groups, kinds, prio, tables, wave_idx):
+        out, send = route(keys, groups, kinds, prio)
+        r_buf = exchange(out)
+        tables, v_words = owner_claim(tables, r_buf, wave_idx)
+        commit, c_words = sender_commit(send, exchange(v_words))
+        tables = owner_install(tables, r_buf, exchange(c_words), wave_idx)
+        _, _, _, _, lane_dropped, has_write, dropped_op = send
         return commit, tables, lane_dropped, has_write, dropped_op
 
     return body
 
 
+def _closed_stats(commit, lane_dropped, has_write, dropped_op):
+    ro = ~has_write
+    z = jnp.int32(0)
+    return jnp.stack([commit.sum(), (~commit).sum(), lane_dropped.sum(),
+                      dropped_op.sum(), (commit & ro).sum(),
+                      (~commit & ro).sum(), z, z, z, z]).astype(jnp.int32)
+
+
+def _pipe_carry_init(cfg: DistConfig, ns: int, tables):
+    """Zero pipeline state: NO_OP-filled routed buffers and empty sender
+    coordinates, so the warmup steps' owner/sender phases are fully masked
+    table no-ops (every op dead, every commit bit 0)."""
+    cap = cfg.cap(ns)
+    T, K = cfg.lanes_per_shard, cfg.slots
+    W = verdict_words(cap)
+    rb = jnp.concatenate([jnp.full((ns, cap), NO_OP, jnp.int32),
+                          jnp.full((ns, cap), META_FILL, jnp.int32)],
+                         axis=-1)
+    vz = jnp.zeros((ns, W), jnp.int32)
+    st = (jnp.zeros((T * K,), jnp.int32),              # owner (clipped)
+          jnp.zeros((T * K,), jnp.int32),              # pos (clipped)
+          jnp.zeros((T * K,), jnp.bool_),              # took
+          jnp.full((ns, cap), LANE_FILL, jnp.int32),   # b_lane
+          jnp.zeros((T,), jnp.bool_),                  # lane_dropped
+          jnp.zeros((T,), jnp.bool_),                  # has_write
+          jnp.zeros((T * K,), jnp.bool_))              # dropped_op
+    return (tables, rb, rb, rb, vz, vz, st, st)
+
+
+def _make_pipeline_step(cfg: DistConfig, mesh):
+    """One steady-state step of the software-pipelined CLOSED-LOOP wave
+    (module docstring schedule): install wave w-3, claim wave w-1, commit
+    wave w-2, route wave w, then ONE fused exchange of
+    ``[O_key | O_meta | V_{w-1} | C_{w-2}]``.  Emits wave w-2's (commit,
+    stats); the scanned runner drops the two warmup rows and appends three
+    NOP drain waves (the third flushes the final wave's installs)."""
+    route, owner_claim, sender_commit, owner_install = _make_phases(cfg,
+                                                                    mesh)
+    exchange = _make_exchange(cfg, mesh)
+    ns = n_shards(mesh)
+    cap = cfg.cap(ns)
+    W = verdict_words(cap)
+
+    def step(carry, x):
+        tables, rb1, rb2, rb3, v_in, c_in, st1, st2 = carry
+        keys, groups, kinds, prio, wave = x
+        tables = owner_install(tables, rb3, c_in, wave - jnp.uint32(3))
+        tables, v_words = owner_claim(tables, rb1, wave - jnp.uint32(1))
+        commit, c_words = sender_commit(st2, v_in)
+        out, st0 = route(keys, groups, kinds, prio)
+        arrived = exchange(jnp.concatenate([out, v_words, c_words],
+                                           axis=-1))
+        r_out = arrived[:, :2 * cap]
+        v_nxt = arrived[:, 2 * cap:2 * cap + W]
+        c_nxt = arrived[:, 2 * cap + W:]
+        stats = _closed_stats(commit, st2[4], st2[5], st2[6])
+        carry = (tables, r_out, rb1, rb2, v_nxt, c_nxt, st0, st1)
+        return carry, (commit, stats)
+
+    return step
+
+
 def _spec_ops(mesh):
     ax = _axes(mesh)
     return P(ax if len(ax) > 1 else ax[0])
+
+
+def _spec_stack(mesh):
+    """Sharding for wave-stacked arrays ([n_waves, ...]: wave axis
+    replicated, lane/shard axis split)."""
+    ax = _axes(mesh)
+    return P(None, ax if len(ax) > 1 else ax[0])
 
 
 def make_wave_fn(cfg: DistConfig, mesh):
@@ -374,23 +634,29 @@ def make_wave_fn(cfg: DistConfig, mesh):
     dropped ops, read-only commits, read-only aborts, then zeros in the
     open-loop slots — this is the closed-loop wave].
 
+    This is the one-wave-per-call SYNCHRONOUS driver: it cannot overlap
+    waves, so configs whose effective depth exceeds 1 are rejected — use
+    ``make_run_fn`` for the pipelined scanned runner (on a 1-shard mesh
+    ``pipeline_depth`` auto-falls back to 1 and this driver still works).
+
     The resolved backend (``cfg.backend``) is threaded into the
     shard-local wave; route/claim/probe/gather/install all run through its
     surface ops on the shard's table slices.
     """
+    ns = n_shards(mesh)
+    if cfg.depth(ns) > 1:
+        raise ValueError(
+            f"make_wave_fn is the one-wave-per-call synchronous driver: "
+            f"pipeline_depth={cfg.pipeline_depth} on a {ns}-shard mesh "
+            "needs the scanned runner — use make_run_fn(cfg, mesh, "
+            "n_waves) (1-shard meshes auto-fall back to depth 1)")
     body = _make_shard_body(cfg, mesh)
     mv = cfg.is_mv
 
     def local_wave(keys, groups, kinds, prio, tables, wave_idx):
         commit, tables, lane_dropped, has_write, dropped_op = body(
             keys, groups, kinds, prio, tables, wave_idx)
-        ro = ~has_write
-        z = jnp.int32(0)
-        stats = jnp.stack([commit.sum(), (~commit).sum(),
-                           lane_dropped.sum(), dropped_op.sum(),
-                           (commit & ro).sum(),
-                           (~commit & ro).sum(),
-                           z, z, z, z]).astype(jnp.int32)
+        stats = _closed_stats(commit, lane_dropped, has_write, dropped_op)
         return commit, tables, stats
 
     spec_ops = _spec_ops(mesh)
@@ -402,10 +668,75 @@ def make_wave_fn(cfg: DistConfig, mesh):
     return wave
 
 
+def make_run_fn(cfg: DistConfig, mesh, n_waves: int):
+    """The scanned CLOSED-LOOP runner: returns ``run(keys [n_waves, ns*T,
+    K], groups, kinds, prio [n_waves, ns*T], tables, wave0) -> (commit
+    [n_waves, ns*T], tables', stats [n_waves, ns*STATS_LEN])`` — the whole
+    run is ONE XLA program (lax.scan inside shard_map), so waves/s
+    measures the wave, not host dispatch.
+
+    ``cfg.depth(n_shards)`` selects the schedule: depth 1 scans the
+    synchronous body (three exchanges per wave — bit-identical to a
+    make_wave_fn loop), depth >= 2 scans the software-pipelined step (ONE
+    fused exchange per wave; the scan runs ``n_waves + 3`` steps, the
+    three NOP-padded drain waves flushing the in-flight buffers, and the
+    two warmup output rows are dropped) — bit-identical to depth 1 for occ
+    always and mvcc/mvocc at snapshot_age 0 (module docstring)."""
+    ns = n_shards(mesh)
+    depth = cfg.depth(ns)
+    mv = cfg.is_mv
+    T, K = cfg.lanes_per_shard, cfg.slots
+
+    if depth == 1:
+        body = _make_shard_body(cfg, mesh)
+
+        def local_run(keys, groups, kinds, prio, tables, wave0):
+            def step(tables, x):
+                k, g, i, p, w = x
+                commit, tables, lane_dropped, has_write, dropped_op = body(
+                    k, g, i, p, tables, w)
+                stats = _closed_stats(commit, lane_dropped, has_write,
+                                      dropped_op)
+                return tables, (commit, stats)
+
+            waves = wave0 + jnp.arange(n_waves, dtype=jnp.uint32)
+            tables, (commit, stats) = jax.lax.scan(
+                step, tables, (keys, groups, kinds, prio, waves))
+            return commit, tables, stats
+    else:
+        pstep = _make_pipeline_step(cfg, mesh)
+
+        def local_run(keys, groups, kinds, prio, tables, wave0):
+            keys = jnp.concatenate(
+                [keys, jnp.full((3, T, K), -1, jnp.int32)])
+            groups = jnp.concatenate(
+                [groups, jnp.zeros((3, T, K), jnp.int32)])
+            kinds = jnp.concatenate(
+                [kinds, jnp.full((3, T, K), t.NOP, jnp.int32)])
+            prio = jnp.concatenate([prio, jnp.zeros((3, T), jnp.uint32)])
+            waves = wave0 + jnp.arange(n_waves + 3, dtype=jnp.uint32)
+            carry = _pipe_carry_init(cfg, ns, tables)
+            carry, (commit, stats) = jax.lax.scan(
+                pstep, carry, (keys, groups, kinds, prio, waves))
+            return (commit[2:2 + n_waves], carry[0],
+                    stats[2:2 + n_waves])
+
+    spec = _spec_stack(mesh)
+    tab_spec = (_spec_ops(mesh),) * (4 if mv else 2)
+    run = shard_map(
+        local_run, mesh=mesh,
+        in_specs=(spec, spec, spec, spec, tab_spec, P()),
+        out_specs=(spec, tab_spec, spec))
+    return run
+
+
 def make_open_wave_fn(cfg: DistConfig, mesh):
     """The OPEN-LOOP routed wave (DESIGN.md section 11): each shard runs a
     fixed-capacity admission ring in front of the shared shard body
     (_make_shard_body), mirroring the local engine's core/admission.py.
+    Like ``make_wave_fn`` this is the one-wave-per-call synchronous driver
+    — pipelined open-loop runs go through ``run_open_loop`` (which scans
+    ``_make_open_pipeline_step``).
 
     Returns ``open_wave(keys, groups, kinds, prio, n_arrive, tables,
     qstate, wave_idx) -> (commit, tables', qstate', stats)``:
@@ -433,6 +764,13 @@ def make_open_wave_fn(cfg: DistConfig, mesh):
         raise ValueError("make_open_wave_fn needs queue_cap >= 1 "
                          "(the open-loop switch); use make_wave_fn for "
                          "closed-loop waves")
+    ns = n_shards(mesh)
+    if cfg.depth(ns) > 1:
+        raise ValueError(
+            f"make_open_wave_fn is the one-wave-per-call synchronous "
+            f"driver: pipeline_depth={cfg.pipeline_depth} on a {ns}-shard "
+            "mesh needs the scanned runner — use run_open_loop (1-shard "
+            "meshes auto-fall back to depth 1)")
     body = _make_shard_body(cfg, mesh)
     mv = cfg.is_mv
     T, K = cfg.lanes_per_shard, cfg.slots
@@ -510,6 +848,164 @@ def make_open_wave_fn(cfg: DistConfig, mesh):
     return wave
 
 
+def _make_open_pipeline_step(cfg: DistConfig, mesh):
+    """One steady-state step of the software-pipelined OPEN-LOOP wave: the
+    closed pipeline schedule (_make_pipeline_step) with the per-shard
+    admission ring threaded through the carry.  Wave w-2's verdicts land
+    this step, so its aborted lanes re-enqueue TWO waves after they ran —
+    the retry latency the pipeline buys its overlap with.  Retries
+    re-enter the ring before this step's fresh arrivals (oldest first);
+    with two waves in flight the depth-1 "re-enqueue can never overflow"
+    invariant no longer holds, so a retry the full ring rejects leaves the
+    system as an incarnation drop (counted — the conservation identity
+    ``admitted == commits + queued_final + inc_drops`` stays exact)."""
+    route, owner_claim, sender_commit, owner_install = _make_phases(cfg,
+                                                                    mesh)
+    exchange = _make_exchange(cfg, mesh)
+    ns = n_shards(mesh)
+    cap = cfg.cap(ns)
+    W = verdict_words(cap)
+    T, K = cfg.lanes_per_shard, cfg.slots
+    C = cfg.queue_cap
+
+    def step(carry, x):
+        (tables, rb1, rb2, rb3, v_in, c_in, st1, st2, os1, os2,
+         qk, qg, qi, qa, qc, qd, head, size, nid, lat_hist) = carry
+        keys, groups, kinds, prio, n_arrive, wave, live_w = x
+
+        # --- owner phases: install wave w-3, claim wave w-1 -------------
+        tables = owner_install(tables, rb3, c_in, wave - jnp.uint32(3))
+        tables, v_words = owner_claim(tables, rb1, wave - jnp.uint32(1))
+
+        # --- sender: commit wave w-2, ring bookkeeping -------------------
+        commit, c_words = sender_commit(st2, v_in)
+        dk2, dg2, di2, admit2, inc2, got2, qid2, n_adm2, n_ovf2 = os2
+        commit = commit & got2
+        aborted = got2 & ~commit
+        retry = aborted & (inc2 < cfg.max_incarnations)
+        (qk, qg, qi, qa, qc, qd), size, _, n_re_ovf = admission.ring_enqueue(
+            C, head, size, retry, (qk, qg, qi, qa, qc, qd),
+            (dk2, dg2, di2, admit2, inc2 + 1, qid2))
+        inc_drop = (aborted & ~retry).sum() + n_re_ovf
+        w2 = (wave.astype(jnp.int32) - 2)
+        lat_hist = admission.record_ttc(lat_hist, w2 - admit2 + 1, commit)
+
+        # --- arrivals for wave w -----------------------------------------
+        n_arr = jnp.where(live_w, jnp.minimum(n_arrive, T), 0)
+        arr = jnp.arange(T, dtype=jnp.int32) < n_arr
+        ids = nid + jnp.arange(T, dtype=jnp.int32)
+        (qk, qg, qi, qa, qc, qd), size, n_adm, n_ovf = admission.ring_enqueue(
+            C, head, size, arr, (qk, qg, qi, qa, qc, qd),
+            (keys, groups, kinds,
+             jnp.full((T,), wave.astype(jnp.int32), jnp.int32),
+             jnp.zeros((T,), jnp.int32), ids))
+        nid = nid + n_arr
+
+        # --- dequeue wave w's lanes (never on drain steps) ---------------
+        take = jnp.where(live_w, jnp.minimum(size, T), 0)
+        i = jnp.arange(T, dtype=jnp.int32)
+        got = i < take
+        pos = (head + i) % C
+        dk = jnp.where(got[:, None], qk[pos, :], -1)
+        dg = jnp.where(got[:, None], qg[pos, :], 0)
+        di = jnp.where(got[:, None], qi[pos, :], t.NOP)
+        admit_w = jnp.where(got, qa[pos], 0)
+        incarn = jnp.where(got, qc[pos], 0)
+        qid = jnp.where(got, qd[pos], -1)
+        head, size = (head + take) % C, size - take
+
+        # --- route wave w, ONE fused exchange ----------------------------
+        out, st0 = route(dk, dg, di, prio)
+        arrived = exchange(jnp.concatenate([out, v_words, c_words],
+                                           axis=-1))
+        r_out = arrived[:, :2 * cap]
+        v_nxt = arrived[:, 2 * cap:2 * cap + W]
+        c_nxt = arrived[:, 2 * cap + W:]
+
+        # Every counter in the emitted row belongs to wave w-2 (the wave
+        # whose fate resolved this step): its admission counters rode the
+        # os carry from the step that enqueued it, so the runner's
+        # [2 : 2+n_waves] slice conserves exactly.  QUEUED stays a current
+        # occupancy snapshot (informational; the driver's queued_final
+        # reads the final qstate, not this column).
+        ro = ~st2[5]
+        stats = jnp.stack([
+            commit.sum(), aborted.sum(), st2[4].sum(), st2[6].sum(),
+            (commit & ro).sum(), (aborted & ro).sum(),
+            n_adm2, n_ovf2, inc_drop, size]).astype(jnp.int32)
+        os0 = (dk, dg, di, admit_w, incarn, got, qid, n_adm, n_ovf)
+        carry = (tables, r_out, rb1, rb2, v_nxt, c_nxt, st0, st1, os0, os1,
+                 qk, qg, qi, qa, qc, qd, head, size, nid, lat_hist)
+        return carry, (commit, stats)
+
+    return step
+
+
+def make_open_run_fn(cfg: DistConfig, mesh, n_waves: int):
+    """The scanned PIPELINED open-loop runner (cfg.depth(n_shards) >= 2):
+    returns ``run(keys [n_waves, ns*T, K], groups, kinds, prio [n_waves,
+    ns*T], n_arrive [n_waves, ns], tables, qstate, wave0) -> (commit
+    [n_waves, ns*T], tables', qstate', stats [n_waves, ns*STATS_LEN])``.
+    The scan runs ``n_waves + 3`` steps — the three drain steps admit no
+    arrivals and dequeue no lanes, they only flush the in-flight waves —
+    and drops the two warmup output rows, so row w is wave w's commit."""
+    if not cfg.open_loop:
+        raise ValueError("make_open_run_fn needs queue_cap >= 1 "
+                         "(the open-loop switch)")
+    ns = n_shards(mesh)
+    if cfg.depth(ns) < 2:
+        raise ValueError(
+            "make_open_run_fn is the pipelined scanned runner: "
+            f"effective depth {cfg.depth(ns)} on this mesh runs the "
+            "synchronous make_open_wave_fn instead (run_open_loop picks)")
+    pstep = _make_open_pipeline_step(cfg, mesh)
+    mv = cfg.is_mv
+    T, K = cfg.lanes_per_shard, cfg.slots
+
+    def local_run(keys, groups, kinds, prio, n_arrive, tables, qstate,
+                  wave0):
+        (qk, qg, qi, qa, qc, qd, head, size, next_id, lat_hist) = qstate
+        keys = jnp.concatenate([keys, jnp.full((3, T, K), -1, jnp.int32)])
+        groups = jnp.concatenate([groups, jnp.zeros((3, T, K), jnp.int32)])
+        kinds = jnp.concatenate(
+            [kinds, jnp.full((3, T, K), t.NOP, jnp.int32)])
+        prio = jnp.concatenate([prio, jnp.zeros((3, T), jnp.uint32)])
+        n_arr = jnp.concatenate([n_arrive[:, 0],
+                                 jnp.zeros((3,), n_arrive.dtype)])
+        n_steps = n_waves + 3
+        waves = wave0 + jnp.arange(n_steps, dtype=jnp.uint32)
+        live = jnp.arange(n_steps) < n_waves
+        open_slot = (jnp.full((T, K), -1, jnp.int32),
+                     jnp.zeros((T, K), jnp.int32),
+                     jnp.full((T, K), t.NOP, jnp.int32),
+                     jnp.zeros((T,), jnp.int32),
+                     jnp.zeros((T,), jnp.int32),
+                     jnp.zeros((T,), jnp.bool_),
+                     jnp.full((T,), -1, jnp.int32),
+                     jnp.int32(0), jnp.int32(0))
+        carry = _pipe_carry_init(cfg, ns, tables) + (
+            open_slot, open_slot,
+            qk, qg, qi, qa, qc, qd, head[0], size[0], next_id[0], lat_hist)
+        carry, (commit, stats) = jax.lax.scan(
+            pstep, carry, (keys, groups, kinds, prio, n_arr, waves, live))
+        (tables, _, _, _, _, _, _, _, _, _,
+         qk, qg, qi, qa, qc, qd, head, size, nid, lat_hist) = carry
+        qstate = (qk, qg, qi, qa, qc, qd, head[None], size[None],
+                  nid[None], lat_hist)
+        return (commit[2:2 + n_waves], tables, qstate,
+                stats[2:2 + n_waves])
+
+    spec = _spec_stack(mesh)
+    spec1 = _spec_ops(mesh)
+    tab_spec = (spec1,) * (4 if mv else 2)
+    q_spec = (spec1,) * 10
+    run = shard_map(
+        local_run, mesh=mesh,
+        in_specs=(spec, spec, spec, spec, spec, tab_spec, q_spec, P()),
+        out_specs=(spec, tab_spec, q_spec, spec))
+    return run
+
+
 def init_open_queue(cfg: DistConfig, mesh):
     """Fresh sharded open-loop queue state for ``make_open_wave_fn``:
     ``(q_key, q_grp, q_kind, q_admit, q_inc, q_id, head, size, next_id,
@@ -537,8 +1033,11 @@ def init_open_queue(cfg: DistConfig, mesh):
 
 def run_open_loop(cfg: DistConfig, mesh, arrive_counts, gen_fn,
                   n_waves: int):
-    """Host-side open-loop driver: loop ``n_waves`` jitted open waves and
-    reconcile the per-shard stats into one summary dict.
+    """Host-side open-loop driver: run ``n_waves`` open waves and
+    reconcile the per-shard stats into one summary dict.  The effective
+    pipeline depth picks the engine — a host loop of jitted synchronous
+    waves at depth 1, the one-XLA-program pipelined scan
+    (``make_open_run_fn``) at depth >= 2.
 
     ``arrive_counts`` is int[n_waves, n_shards] (PoissonArrivals
     .shard_counts); ``gen_fn(wave) -> (keys, groups, kinds, prio)``
@@ -546,23 +1045,38 @@ def run_open_loop(cfg: DistConfig, mesh, arrive_counts, gen_fn,
     priorities (seeded host-side, so reruns and backends see identical
     traffic).  The summary carries the conservation identities the oracle
     test asserts: admitted == commits + queued_final + inc_drops and
-    offered == admitted + arrival_drops, both exact.
+    offered == admitted + arrival_drops, both exact — at EVERY pipeline
+    depth (a pipelined retry re-enqueues two waves later and may find the
+    ring full, in which case it drops into inc_drops).
     """
+    import numpy as np
     ns = n_shards(mesh)
-    wave = jax.jit(make_open_wave_fn(cfg, mesh))
+    acc = np.zeros((ns, STATS_LEN), np.int64)
     tables = init_tables(cfg, mesh)
     qstate = init_open_queue(cfg, mesh)
-    import numpy as np
-    acc = np.zeros((ns, STATS_LEN), np.int64)
     offered = 0
-    for w in range(n_waves):
-        keys, groups, kinds, prio = gen_fn(w)
-        n_arr = jnp.asarray(arrive_counts[w], jnp.int32)
-        offered += int(jnp.minimum(n_arr, cfg.lanes_per_shard).sum())
-        commit, tables, qstate, stats = wave(
+    if cfg.depth(ns) >= 2:
+        run = jax.jit(make_open_run_fn(cfg, mesh, n_waves))
+        per_wave = [gen_fn(w) for w in range(n_waves)]
+        keys, groups, kinds, prio = (jnp.stack(col)
+                                     for col in zip(*per_wave))
+        n_arr = jnp.asarray(arrive_counts, jnp.int32)
+        offered = int(jnp.minimum(n_arr, cfg.lanes_per_shard).sum())
+        commit, tables, qstate, stats = run(
             keys, groups, kinds, prio, n_arr, tables, qstate,
-            jnp.uint32(w))
-        acc += np.asarray(stats).reshape(ns, STATS_LEN)
+            jnp.uint32(0))
+        acc += np.asarray(stats).reshape(n_waves, ns, STATS_LEN)\
+            .sum(axis=0)
+    else:
+        wave = jax.jit(make_open_wave_fn(cfg, mesh))
+        for w in range(n_waves):
+            keys, groups, kinds, prio = gen_fn(w)
+            n_arr = jnp.asarray(arrive_counts[w], jnp.int32)
+            offered += int(jnp.minimum(n_arr, cfg.lanes_per_shard).sum())
+            commit, tables, qstate, stats = wave(
+                keys, groups, kinds, prio, n_arr, tables, qstate,
+                jnp.uint32(w))
+            acc += np.asarray(stats).reshape(ns, STATS_LEN)
     lat_hist = np.asarray(qstate[-1]).reshape(ns, cfg.lat_bins)
     queued = int(np.asarray(qstate[7]).sum())
     return {

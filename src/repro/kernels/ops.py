@@ -37,6 +37,8 @@ from repro.kernels.rwkv6_scan import rwkv6_pallas
 from repro.kernels.segment_count import segment_count_pallas
 from repro.kernels.ts_gather import ts_gather_pallas
 from repro.kernels.ts_install import ts_install_max_pallas
+from repro.kernels.verdict_pack import (verdict_pack_pallas,
+                                        verdict_unpack_pallas)
 
 
 def _force() -> str:
@@ -143,6 +145,18 @@ def route_pack(owner, vals, n_dest: int, cap: int, fills, use_pallas=None):
         return route_pack_pallas(owner, vals, n_dest, cap, fills,
                                  interpret=_interp())
     return ref.route_pack(owner, vals, n_dest, cap, fills)
+
+
+def verdict_pack(v, use_pallas=None):
+    if _use_pallas(use_pallas):
+        return verdict_pack_pallas(v, interpret=_interp())
+    return ref.verdict_pack(v)
+
+
+def verdict_unpack(words, n: int, use_pallas=None):
+    if _use_pallas(use_pallas):
+        return verdict_unpack_pallas(words, n, interpret=_interp())
+    return ref.verdict_unpack(words, n)
 
 
 def segment_count(keys, groups, G: int, mask, use_pallas=None):

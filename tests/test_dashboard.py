@@ -52,12 +52,36 @@ def test_render_picks_peak_point_per_group():
 def test_render_distributed_section():
     rows = [dict(r, _src="txn_scaling.json") for r in DIST_ROWS]
     md = render_markdown([], rows)
-    # rows without the cc / read-only fields (pre-MV txn_scaling files)
-    # default to occ and render unknown splits as '?'
-    assert "| 0 | occ | 50.0 | 900 | ? | ? | 0.0 | jnp | — " \
+    # rows without the cc / read-only / pipeline-wire fields (pre-MV,
+    # pre-pipeline txn_scaling files) default to occ and render unknown
+    # splits as '?' and unknown depth/wire columns as '—'
+    assert "| 0 | occ | — | 50.0 | 900 | ? | ? | 0.0 | — | — | jnp | — " \
            "| txn_scaling.json |" in md
-    assert "| 8 | mvcc | 12.5 | 850 | 120 | 3 | 64.0 | pallas " \
-           "| 4/4 pallas | txn_scaling.json |" in md
+    assert "| 8 | mvcc | — | 12.5 | 850 | 120 | 3 | 64.0 | — | — " \
+           "| pallas | 4/4 pallas | txn_scaling.json |" in md
+
+
+def test_render_distributed_depth_and_wire_columns():
+    """Pipelined txn_scaling rows carry pipeline_depth + the modeled wire
+    split; the dashboard renders depth, wire KiB/wave, and the packed vs
+    legacy verdict bytes side by side, and orders depth-1 before depth-2
+    within one (source, cc, shards) group."""
+    base = {"shards": 8, "cc": "occ", "commits": 800, "waves_per_s": 100.0,
+            "ro_commits": 0, "ro_aborts": 0, "coll_bytes_per_wave": 16384,
+            "backend": "jnp", "kernel_ops": {}, "_src": "txn_scaling.json",
+            "wire_bytes_per_wave": 18432, "route_bytes_per_wave": 16384,
+            "verdict_bytes_per_wave": 1024, "commit_bytes_per_wave": 1024,
+            "verdict_bytes_per_wave_legacy": 4096}
+    rows = [dict(base, pipeline_depth=2, waves_per_s=150.0),
+            dict(base, pipeline_depth=1)]
+    md = render_markdown([], rows)
+    assert "| 8 | occ | 1 | 100.0 | 800 | 0 | 0 | 16.0 | 18.0 " \
+           "| 1024 / 4096 | jnp | — | txn_scaling.json |" in md
+    assert "| 8 | occ | 2 | 150.0 | 800 | 0 | 0 | 16.0 | 18.0 " \
+           "| 1024 / 4096 | jnp | — | txn_scaling.json |" in md
+    assert md.index("| 8 | occ | 1 |") < md.index("| 8 | occ | 2 |")
+    # the legend explains the columns
+    assert "verdict B/wave" in md and "depth" in md
 
 
 def test_string_throughput_compares_numerically():

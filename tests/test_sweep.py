@@ -149,13 +149,16 @@ def test_txn_bench_kernel_ops_attribution():
         assert kernel_coverage("pallas", cc) == occ_ops
     # the distributed wave's shard-local coverage (benchmarks/txn_scaling):
     # occ bumps versions on the return trip, the MV pair gathers snapshots
-    # and publishes into the sharded ring instead
+    # and publishes into the sharded ring instead; both ship verdicts and
+    # commit bits bit-packed through the verdict_pack/verdict_unpack pair
     assert dist_kernel_coverage("pallas") == {
-        "route_pack": "pallas", "claim_probe": "pallas",
+        "route_pack": "pallas", "verdict_pack": "pallas",
+        "verdict_unpack": "pallas", "claim_probe": "pallas",
         "commit_install": "pallas"}
     for cc in ("mvcc", "mvocc"):
         assert dist_kernel_coverage("pallas", cc) == {
-            "route_pack": "pallas", "claim_probe": "pallas",
+            "route_pack": "pallas", "verdict_pack": "pallas",
+            "verdict_unpack": "pallas", "claim_probe": "pallas",
             "mv_gather": "pallas", "mv_install": "pallas"}
     assert set(dist_kernel_coverage("jnp").values()) == {"xla"}
     assert set(dist_kernel_coverage("jnp", "mvcc").values()) == {"xla"}
