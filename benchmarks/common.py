@@ -16,9 +16,12 @@ def sweep(workload: str, *, ccs=None, lanes=None, grans=(0, 1), waves=300,
     Extra keywords (write_frac, ro_frac, theta, mv_depth) pass through to
     ``run_grid``."""
     from repro.launch.txn_bench import run_grid
-    rows = run_grid(workload, list(ccs or CCS), tuple(grans),
-                    list(lanes or LANES), waves, scale=scale, n_keys=n_keys,
-                    seed=seed, backend=backend, **wl_kw)
+    ret = run_grid(workload, list(ccs or CCS), tuple(grans),
+                   list(lanes or LANES), waves, scale=scale, n_keys=n_keys,
+                   seed=seed, backend=backend, **wl_kw)
+    # return_points=True (the trace exporters) makes run_grid return
+    # (rows, SweepPoints); plain callers get the row list as before.
+    rows = ret[0] if isinstance(ret, tuple) else ret
     if not quiet:
         for r in rows:
             line = (f"  {workload} {r['cc']:9s} "
@@ -30,7 +33,7 @@ def sweep(workload: str, *, ccs=None, lanes=None, grans=(0, 1), waves=300,
                 line += (f"  goodput={r['goodput']:8.3f}  "
                          f"p99ttc={max(r['p99_ttc_waves']):g}w")
             print(line)
-    return rows
+    return ret
 
 
 def save_rows(rows, path):

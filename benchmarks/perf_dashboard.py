@@ -8,12 +8,16 @@ sweeps).  Two row shapes are understood:
 
 - mechanism rows (txn_bench / figure sweeps: ``cc`` key) — summarized per
   (workload, cc, granularity, backend) at their peak-throughput lane
-  count, with abort rate and per-op pallas/xla kernel attribution;
+  count, with abort rate, the per-cause abort breakdown, the analytic
+  bytes/flops-per-txn + fraction-of-roofline cost model
+  (analysis/txn_cost.py), and per-op pallas/xla kernel attribution;
 - distributed rows (txn_scaling: ``shards`` key) — waves/s, pipeline
-  depth, commit and read-only splits, collective bytes per wave (HLO-
-  parsed) plus the modeled wire split (route / bit-packed verdict bytes,
-  with the retired 1-byte-per-op verdict baseline), and the shard-local
-  op attribution.
+  depth, commit and read-only splits, abort causes, collective bytes per
+  wave (HLO-parsed) plus the modeled wire split (route / bit-packed
+  verdict bytes, with the retired 1-byte-per-op verdict baseline), and
+  the shard-local op attribution.  Distributed rows are DEDUPED by
+  (cc, shards, depth, backend): txn_scaling appends on every run, so
+  only the latest row per configuration renders.
 
 Partial/truncated rows of a known shape (a killed bench run, a hand-edited
 file) are never fatal: they are skipped with a warning line in the report
@@ -139,6 +143,44 @@ def _src_of(r) -> str:
     return r.get("_src", "?") if isinstance(r, dict) else "?"
 
 
+#: types.CAUSE_NAMES order, duplicated here so the dashboard stays
+#: import-free of jax-loading modules (it renders list-shaped cause rows
+#: from txn_scaling too).
+_CAUSE_ORDER = ("inc_cap", "capacity", "stale_snapshot", "lock_wound",
+                "ww", "read_val")
+
+
+def _causes_cell(v) -> str:
+    """Abort-cause breakdown cell: nonzero '<cause>:<n>' entries in code
+    order.  Accepts the bench rows' name-keyed dict or txn_scaling's
+    code-ordered list; '—' when absent/malformed, 'none' when all zero."""
+    if isinstance(v, dict):
+        pairs = [(k, _coerce(v.get(k))) for k in _CAUSE_ORDER if k in v]
+    elif isinstance(v, (list, tuple)):
+        pairs = list(zip(_CAUSE_ORDER, (_coerce(x) for x in v)))
+    else:
+        return "—"
+    if not pairs or any(n is None for _, n in pairs):
+        return "—"
+    nz = [f"{k}:{n:g}" for k, n in pairs if n]
+    return " ".join(nz) if nz else "none"
+
+
+def _roofline_cell(r: dict) -> str:
+    """'0.10% (memory)' — the mechanism's fraction of the modeled chip
+    roofline and which roof binds (analysis/txn_cost.py)."""
+    frac = _coerce(r.get("roofline_frac"))
+    if frac is None:
+        return "—"
+    bound = r.get("roofline_bound", "?")
+    return f"{100 * frac:.2f}% ({bound})"
+
+
+def _per_txn_cell(r: dict, key: str) -> str:
+    v = _coerce(r.get(key))
+    return "—" if v is None else f"{v:g}"
+
+
 def render_markdown(mech: list, dist: list) -> str:
     out = ["# Perf dashboard", "",
            "Aggregated from benchmark JSON rows (BENCH_*.json + "
@@ -175,15 +217,25 @@ def render_markdown(mech: list, dist: list) -> str:
                 groups[key] = r
         out += ["## Mechanisms (peak-throughput point per "
                 "workload × cc × granularity × backend)", "",
+                "B/txn and flop/txn are the analytic per-transaction "
+                "roofline cost model (analysis/txn_cost.py) at the peak "
+                "point's wave shape; roofline = fraction of the modeled "
+                "chip's binding roof; abort causes sum exactly to the "
+                "abort count (core/types.py ABORT_CAUSE taxonomy).", "",
                 "| workload | cc | granularity | backend | peak thpt "
-                "(txn/us) | @lanes | abort rate | kernel ops | source |",
-                "|---|---|---|---|---|---|---|---|---|"]
+                "(txn/us) | @lanes | abort rate | abort causes | B/txn "
+                "| flop/txn | roofline | kernel ops | source |",
+                "|---|---|---|---|---|---|---|---|---|---|---|---|---|"]
         for key in sorted(groups, key=str):
             r = groups[key]
             out.append(
                 f"| {key[0]} | {key[1]} | {_gran(key[2])} | {key[3]} "
                 f"| {_fnum(r, 'throughput'):.3f} | {r.get('lanes', '?')} "
                 f"| {100 * _fnum(r, 'abort_rate'):.2f}% "
+                f"| {_causes_cell(r.get('abort_causes'))} "
+                f"| {_per_txn_cell(r, 'bytes_per_txn')} "
+                f"| {_per_txn_cell(r, 'flops_per_txn')} "
+                f"| {_roofline_cell(r)} "
                 f"| {_ops_cell(r.get('kernel_ops', {}))} "
                 f"| {_src_of(r)} |")
         out.append("")
@@ -221,18 +273,38 @@ def render_markdown(mech: list, dist: list) -> str:
         out.append("")
 
     if dist_ok:
+        # Dedupe: one row per CONFIG, last in file order wins (= the most
+        # recent run's numbers).  The config key is everything that makes
+        # a txn_scaling grid point distinct — mechanism, shard count,
+        # pipeline depth, backend, plus the open-loop family's mode and
+        # granularity; without mode/granularity in the key (and in the cc
+        # cell below) the closed-loop row and both open-loop rows of one
+        # (cc, shards, depth) rendered as three identical-looking stacked
+        # rows.
+        latest: dict = {}
+        for r in dist_ok:
+            key = (r.get("mode", ""), r.get("granularity"),
+                   r.get("cc", "occ"), _fnum(r, "shards"),
+                   _fnum(r, "pipeline_depth", 0), r.get("backend", "?"))
+            latest[key] = r
+        dist_rows = list(latest.values())
         out += ["## Distributed engine (txn_scaling; shards=0 = local "
                 "sweep() anchor)", "",
                 "depth = software-pipeline depth of the scanned runner "
                 "(1 = synchronous three-exchange wave, >= 2 = ONE fused "
                 "all_to_all per wave); wire KiB/wave = modeled exchange "
                 "payload per shard; verdict B/wave shows the bit-packed "
-                "wire next to the retired 1-byte-per-op baseline.", "",
+                "wire next to the retired 1-byte-per-op baseline; one row "
+                "per config — cc × shards × depth × backend (× mode × "
+                "granularity for the open-loop family, marked in the cc "
+                "column) — latest run wins.", "",
                 "| shards | cc | depth | waves/s | commits | ro commits "
                 "| ro aborts | coll KiB/wave | wire KiB/wave | verdict "
-                "B/wave (packed/legacy) | backend | kernel ops | source |",
-                "|---|---|---|---|---|---|---|---|---|---|---|---|---|"]
-        for r in sorted(dist_ok,
+                "B/wave (packed/legacy) | abort causes | backend "
+                "| kernel ops | source |",
+                "|---|---|---|---|---|---|---|---|---|---|---|---|---|"
+                "---|"]
+        for r in sorted(dist_rows,
                         key=lambda r: (_src_of(r), r.get("cc", "occ"),
                                        r["shards"],
                                        _fnum(r, "pipeline_depth", 0))):
@@ -240,8 +312,11 @@ def render_markdown(mech: list, dist: list) -> str:
             wire = _coerce(r.get("wire_bytes_per_wave"))
             vp = _coerce(r.get("verdict_bytes_per_wave"))
             vl = _coerce(r.get("verdict_bytes_per_wave_legacy"))
+            cc_cell = r.get("cc", "occ")
+            if r.get("mode") == "open_loop":
+                cc_cell += f" open/{_gran(r.get('granularity', 1))}"
             out.append(
-                f"| {r['shards']} | {r.get('cc', 'occ')} "
+                f"| {r['shards']} | {cc_cell} "
                 f"| {'—' if depth is None else f'{depth:g}'} "
                 f"| {_fnum(r, 'waves_per_s'):.1f} "
                 f"| {r.get('commits', '?')} "
@@ -250,6 +325,7 @@ def render_markdown(mech: list, dist: list) -> str:
                 f"| {_fnum(r, 'coll_bytes_per_wave') / 1024:.1f} "
                 f"| {'—' if wire is None else f'{wire / 1024:.1f}'} "
                 f"| {'—' if vp is None or vl is None else f'{vp:g} / {vl:g}'} "
+                f"| {_causes_cell(r.get('abort_causes'))} "
                 f"| {r.get('backend', '?')} "
                 f"| {_ops_cell(r.get('kernel_ops', {}))} | {_src_of(r)} |")
         out.append("")

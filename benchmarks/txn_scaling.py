@@ -13,8 +13,9 @@ routed engine".  ``REPRO_TXN_BACKEND`` ("jnp" | "pallas") selects the
 kernel-backend surface for BOTH engines — the distributed wave routes its
 shard-local route/claim/probe/gather/install through core/backend.py like
 the local one — and every row records the resolved backend, the per-op
-kernel attribution, and the read-only commit/abort split the distributed
-stats vector carries (core/distributed.py STATS_LEN layout).
+kernel attribution, the read-only commit/abort split, and the per-cause
+abort breakdown the distributed stats vector carries (core/distributed.py
+STATS_LEN layout; the six cause slots sum exactly to total aborts).
 
 Every multi-shard grid point runs at TWO pipeline depths through the
 scanned ``make_run_fn`` runner (one XLA program per run, so waves/s
@@ -89,6 +90,7 @@ PROG = textwrap.dedent("""
                  # The local engine's read-only split (SweepPoint) rides
                  # the row like the distributed stats split does.
                  "ro_commits": pt.ro_commits, "ro_aborts": pt.ro_aborts,
+                 "abort_causes": pt.abort_causes,
                  # Attribution: which engine the anchor actually ran on.
                  "backend": BACKEND,
                  "kernel_ops": kernel_coverage(BACKEND, t.CC_OCC)})
@@ -148,12 +150,17 @@ PROG = textwrap.dedent("""
                 s = np.asarray(stats).reshape(WAVES, ns, D.STATS_LEN)
                 ro_c = int(s[:, :, D.STAT_RO_COMMITS].sum())
                 ro_a = int(s[:, :, D.STAT_RO_ABORTS].sum())
+                # Per-cause abort breakdown summed over waves x shards;
+                # conserves exactly: sum == total aborts at every depth.
+                causes = [int(x) for x
+                          in s[:, :, D.STAT_CAUSES].sum(axis=(0, 1))]
                 wire = D.wire_bytes_per_wave(cfg, mesh)
                 rows.append({"shards": ns, "cc": cc, "commits": commits,
                              "waves_per_s": WAVES / dt,
                              "pipeline_depth": depth,
                              "coll_bytes_per_wave": coll,
                              "ro_commits": ro_c, "ro_aborts": ro_a,
+                             "abort_causes": causes,
                              # The routed engine claims/probes/gathers/
                              # installs through the same backend surface
                              # as the local one; only the exchange itself
@@ -228,6 +235,7 @@ PROG = textwrap.dedent("""
                     "queued_final": s["queued_final"],
                     "ro_commits": s["ro_commits"],
                     "ro_aborts": s["ro_aborts"],
+                    "abort_causes": s["abort_causes"],
                     "backend": BACKEND,
                     "kernel_ops": dist_kernel_coverage(BACKEND, cc),
                     **D.wire_bytes_per_wave(cfg, mesh)})

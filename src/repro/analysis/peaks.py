@@ -1,0 +1,35 @@
+"""Hardware peak table — the single source of truth for roofline math.
+
+One dict per chip: peak_flops (FLOP/s), hbm_bw (B/s), and link_bw (B/s,
+one interconnect link, conservative).  Both the model roofline
+(``analysis/roofline.py``) and the transaction-engine cost model
+(``analysis/txn_cost.py``) read THESE numbers — a chip is added or
+corrected in exactly one place.
+
+``ridge(chip)`` is the chip's arithmetic-intensity ridge point
+(FLOP/byte): kernels below it are memory-bound, above it compute-bound.
+"""
+from __future__ import annotations
+
+HW_PEAKS = {
+    # bf16 matmul peak, HBM stream, one ICI link (see EXPERIMENTS.md for
+    # the multi-link caveat).
+    "tpu_v5e": {"peak_flops": 197e12, "hbm_bw": 819e9, "link_bw": 50e9},
+    # A100 SXM 80G: bf16 tensor-core peak, HBM2e, one NVLink3 direction.
+    "gpu_a100": {"peak_flops": 312e12, "hbm_bw": 2039e9, "link_bw": 300e9},
+    # H100 SXM: bf16 tensor-core peak (dense), HBM3, one NVLink4 direction.
+    "gpu_h100": {"peak_flops": 989e12, "hbm_bw": 3350e9, "link_bw": 450e9},
+}
+
+#: The repro's reference part (every report that does not name a chip).
+DEFAULT_CHIP = "tpu_v5e"
+
+PEAK_FLOPS = HW_PEAKS[DEFAULT_CHIP]["peak_flops"]
+HBM_BW = HW_PEAKS[DEFAULT_CHIP]["hbm_bw"]
+LINK_BW = HW_PEAKS[DEFAULT_CHIP]["link_bw"]
+
+
+def ridge(chip: str = DEFAULT_CHIP) -> float:
+    """Arithmetic-intensity ridge point (FLOP/byte) of ``chip``."""
+    p = HW_PEAKS[chip]
+    return p["peak_flops"] / p["hbm_bw"]

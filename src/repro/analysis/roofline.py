@@ -29,10 +29,11 @@ import dataclasses
 import math
 import re
 
-# ---------------------------------------------------------- hardware model
-PEAK_FLOPS = 197e12         # bf16 FLOP/s per v5e chip
-HBM_BW = 819e9              # B/s per chip
-LINK_BW = 50e9              # B/s per ICI link
+# ------------------------------------------------------------ hardware model
+# The chip peaks live in analysis/peaks.py (shared with the transaction
+# cost model, analysis/txn_cost.py); the module-level names stay importable
+# here for back-compat.
+from repro.analysis.peaks import HBM_BW, LINK_BW, PEAK_FLOPS  # noqa: F401
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,

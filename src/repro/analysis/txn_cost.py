@@ -1,0 +1,181 @@
+"""Per-op roofline cost model of the transaction engine's backend surface.
+
+Every mechanism's wave is a fixed pipeline of the fourteen kernel-backend
+ops (core/backend.py); each op's traffic is analytic in the wave shape —
+T lanes x K op slots against uint32 claim/version tables of ``cells``
+words per op probe (``n_groups`` at coarse granularity, 1 at fine; the
+paper's switch is literally the probe width, which is why coarse and fine
+have different bytes-per-txn here).  From the per-op descriptors we roll
+up bytes/flops per wave per mechanism, divide by the lane count for the
+dashboard's **bytes-per-txn / flops-per-txn** columns (per *attempt* — an
+aborted incarnation pays the same traffic), and place each mechanism on
+the roofline of ``analysis/peaks.py`` (the shared hardware peak table):
+
+    intensity       = flops_per_wave / bytes_per_wave        [FLOP/B]
+    frac_of_roofline= min(1, intensity / ridge(chip))
+    bound           = memory below the ridge, compute above
+
+The engine's ops are all gather/scatter over uint32 words with a handful
+of compares per cell, so intensities sit far below any chip's ridge: the
+model says (and the dashboard shows) the engine is **memory-bound
+everywhere**, and mechanism cost differences are byte differences.
+
+The op-call counts per wave (``WAVE_OPS``) mirror the mechanism sources
+one-to-one — e.g. tictoc's 1 claim_probe + 2 ts_gather + 2 segment_count
++ 3 ts_install_max is exactly cc/tictoc.py's backend call sequence —
+and tests/test_txn_cost.py pins them against the source so they cannot
+drift silently.  ``DIST_WAVE_OPS`` does the same for the routed
+distributed wave (core/distributed.py), whose exchange payload is already
+accounted honestly by ``distributed.wire_bytes_per_wave``.
+
+Nothing here imports jax — the model is closed-form, cheap enough to run
+inside the bench row builder (launch/txn_bench.py) for every grid point.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.analysis import peaks
+
+#: Claim / version tables are packed uint32 words (core/claims.py).
+WORD = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class OpCost:
+    """Analytic traffic of ONE backend-op call at a given wave shape."""
+    bytes_per_call: float
+    flops_per_call: float
+
+
+@dataclasses.dataclass(frozen=True)
+class WaveShape:
+    """The shape terms the per-op descriptors depend on."""
+    lanes: int                 # T
+    slots: int                 # K ops per txn
+    n_groups: int = 2          # G column groups per record
+    granularity: int = 1       # 0 coarse / 1 fine — the paper's switch
+    mv_depth: int = 0          # version-ring depth D (mv mechanisms)
+    n_shards: int = 1          # distributed: mesh size
+    route_cap: int = 0         # distributed: per-destination buffer cap
+
+    @property
+    def ops(self) -> int:
+        return self.lanes * self.slots
+
+    @property
+    def cells(self) -> int:
+        """Claim words touched per op probe: the whole row at coarse
+        granularity, one group word at fine — the byte-level face of the
+        paper's timestamp-granularity switch."""
+        fine = self.granularity == 1 and self.n_groups > 1
+        return 1 if fine else self.n_groups
+
+
+def op_costs(s: WaveShape) -> dict:
+    """OpCost per backend-surface op name at shape ``s``.
+
+    Reads and read-modify-writes count actual table words (WORD bytes
+    each; RMW = read + write).  Flops are the compare/select ALU work per
+    cell — deliberately generous, and still orders of magnitude below any
+    ridge point.
+    """
+    n, c, D = s.ops, s.cells, max(s.mv_depth, 1)
+    ns, cap = s.n_shards, max(s.route_cap, 1)
+    return {
+        # one claim-word read + priority compare per cell
+        "validate": OpCost(WORD * n * c, 2.0 * n * c),
+        # both widths in one pass (autogran's dual verdict)
+        "validate_dual": OpCost(WORD * n * (1 + s.n_groups),
+                                2.0 * n * (1 + s.n_groups)),
+        "probe": OpCost(WORD * n * c, 1.0 * n * c),
+        # fused min-install + probe: one RMW pass answers both
+        "claim_probe": OpCost(2 * WORD * n * c, 3.0 * n * c),
+        # scatter-min RMW
+        "claim_scatter": OpCost(2 * WORD * n * c, 1.0 * n * c),
+        "ts_gather": OpCost(WORD * n * c, 1.0 * n),
+        # scatter-add RMW (version bumps / conflict-hit histogram)
+        "commit_install": OpCost(2 * WORD * n * c, 1.0 * n * c),
+        # scatter-max RMW
+        "ts_install_max": OpCost(2 * WORD * n * c, 1.0 * n * c),
+        # sort-free per-cell counts: key read + counter scatter-add
+        "segment_count": OpCost(2 * WORD * n, 2.0 * n),
+        # 3 int32 channels in, 3 [ns, cap] buffers out + offset scan
+        "route_pack": OpCost(WORD * 3 * (n + ns * cap), 4.0 * n),
+        # ring scan: D slots x cells begin-words + head read per op
+        "mv_gather": OpCost(WORD * n * (D * c + 1), 2.0 * n * D * c),
+        # slot claim + begin publish (RMW) + head bump
+        "mv_install": OpCost(2 * WORD * n * (c + 1), 2.0 * n * c),
+        # 16 2-bit verdicts per int32 word + the int8 source/dest
+        "verdict_pack": OpCost(n + WORD * -(-n // 16), 1.0 * n),
+        "verdict_unpack": OpCost(n + WORD * -(-n // 16), 1.0 * n),
+    }
+
+
+#: Backend-op calls per wave per LOCAL mechanism — a one-to-one mirror of
+#: each cc/*.py source (claim_and_probe -> claim_probe, write_claims /
+#: plain_write_claims -> claim_scatter, bump_versions -> commit_install).
+WAVE_OPS = {
+    "occ": {"claim_probe": 1, "commit_install": 1},
+    "tictoc": {"claim_probe": 1, "ts_gather": 2, "segment_count": 2,
+               "ts_install_max": 3},
+    "2pl": {"claim_probe": 2, "commit_install": 1},
+    "swisstm": {"claim_probe": 1, "commit_install": 1},
+    "adaptive": {"claim_probe": 2, "commit_install": 1},
+    "autogran": {"claim_scatter": 1, "validate_dual": 1,
+                 "commit_install": 1},
+    "mvcc": {"claim_scatter": 2, "validate": 2, "mv_gather": 1,
+             "mv_install": 1},
+    "mvocc": {"claim_scatter": 2, "validate": 3, "mv_gather": 1,
+              "mv_install": 1},
+}
+
+#: Shard-local op calls per wave of the routed DISTRIBUTED wave
+#: (core/distributed.py _make_phases; wire bytes live in
+#: distributed.wire_bytes_per_wave, not here).
+DIST_WAVE_OPS = {
+    "occ": {"route_pack": 1, "claim_probe": 1, "verdict_pack": 2,
+            "verdict_unpack": 2, "commit_install": 1},
+    "mvcc": {"route_pack": 1, "claim_probe": 2, "mv_gather": 1,
+             "verdict_pack": 2, "verdict_unpack": 2, "mv_install": 1},
+    "mvocc": {"route_pack": 1, "claim_probe": 2, "mv_gather": 1,
+              "verdict_pack": 2, "verdict_unpack": 2, "mv_install": 1},
+}
+
+
+def wave_cost(cc: str, s: WaveShape, distributed: bool = False) -> dict:
+    """Roll up mechanism ``cc``'s per-wave traffic at shape ``s``:
+    {bytes_per_wave, flops_per_wave, ops: {name: count}}."""
+    table = DIST_WAVE_OPS if distributed else WAVE_OPS
+    if cc not in table:
+        raise KeyError(f"unknown mechanism {cc!r} (expected one of "
+                       f"{sorted(table)})")
+    costs = op_costs(s)
+    counts = table[cc]
+    b = sum(costs[op].bytes_per_call * k for op, k in counts.items())
+    f = sum(costs[op].flops_per_call * k for op, k in counts.items())
+    return {"bytes_per_wave": b, "flops_per_wave": f, "ops": dict(counts)}
+
+
+def txn_cost(cc: str, s: WaveShape, distributed: bool = False,
+             chip: str = peaks.DEFAULT_CHIP) -> dict:
+    """The dashboard row fields: per-ATTEMPT per-transaction traffic and
+    the mechanism's place on ``chip``'s roofline.
+
+    bytes_per_txn / flops_per_txn divide the wave rollup by the lane
+    count — each incarnation of an aborted transaction pays this again,
+    so goodput-per-byte divides further by the commit rate (the dashboard
+    already carries commit rates; this model stays traffic-only).
+    """
+    w = wave_cost(cc, s, distributed)
+    lanes = max(s.lanes, 1)
+    intensity = w["flops_per_wave"] / max(w["bytes_per_wave"], 1.0)
+    r = peaks.ridge(chip)
+    return {
+        "bytes_per_txn": w["bytes_per_wave"] / lanes,
+        "flops_per_txn": w["flops_per_wave"] / lanes,
+        "intensity": intensity,
+        "roofline_frac": min(1.0, intensity / r),
+        "bound": "memory" if intensity < r else "compute",
+        "chip": chip,
+    }

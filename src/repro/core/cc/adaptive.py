@@ -22,6 +22,7 @@ import dataclasses
 import jax.numpy as jnp
 
 from repro.core import claims
+from repro.core import types as t
 from repro.core.cc import base
 from repro.core.types import OOB_KEY, EngineConfig, StoreState, TxnBatch
 
@@ -52,7 +53,12 @@ def wave_validate(store: StoreState, batch: TxnBatch, prio, wave,
                 | (rd & pess & (wprio < myp) & lock_ok)   # r-lock vs w-lock
                 | (wr & pess & (wprio < myp) & lock_ok)   # w-lock vs w-lock
                 | (wr & pess & (rprio < myp) & lock_ok))  # w-lock vs r-lock
-    res = base.result_from_conflicts(batch, conflict, eager=True)
+    # Pessimistic-mode conflicts are failed eager lock acquisitions;
+    # optimistic-mode conflicts are commit-time read-validation failures.
+    cause = jnp.where(pess, jnp.int32(t.CAUSE_LOCK_WOUND),
+                      jnp.int32(t.CAUSE_READ_VAL))
+    res = base.result_from_conflicts(batch, conflict, eager=True,
+                                     cause_op=cause)
     # Eager detection only on pessimistic ops; optimistic conflicts surface at
     # commit-time validation (full work wasted).
     K = batch.slots

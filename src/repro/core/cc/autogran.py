@@ -28,6 +28,7 @@ import jax.numpy as jnp
 
 from repro.core import backend as kb
 from repro.core import claims
+from repro.core import types as t
 from repro.core.cc import base
 from repro.core.types import OOB_KEY, EngineConfig, StoreState, TxnBatch
 
@@ -47,7 +48,9 @@ def wave_validate(store: StoreState, batch: TxnBatch, prio, wave,
     conflict = jnp.where(is_fine_rec, conflict_fine, conflict_coarse)
     u = claims.hash01(wave, claims.lane_op_ids(*batch.op_key.shape))
     conflict = conflict & (u < cfg.cost.opt_overlap)   # window thinning
-    res = base.result_from_conflicts(batch, conflict, eager=False)
+    # OCC rule at either probe width: all aborts are read validation.
+    res = base.result_from_conflicts(batch, conflict, eager=False,
+                                     cause_op=t.CAUSE_READ_VAL)
 
     # False-conflict evidence: aborted under coarse, clean under fine.
     false_ev = conflict_coarse & ~conflict_fine & ~is_fine_rec

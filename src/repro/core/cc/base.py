@@ -22,12 +22,14 @@ import jax.numpy as jnp
 
 from repro.core import backend as kb
 from repro.core import claims
+from repro.core import types as t
 from repro.core.types import EngineConfig, StoreState, TxnBatch
 
 
 @partial(jax.tree_util.register_dataclass,
          data_fields=["commit", "conflict_op", "first_conflict",
-                      "ext_penalty", "ext_count", "pess_frac", "ext_mask"],
+                      "ext_penalty", "ext_count", "pess_frac", "ext_mask",
+                      "cause_op"],
          meta_fields=["eager"])
 @dataclasses.dataclass
 class ValidationResult:
@@ -40,13 +42,34 @@ class ValidationResult:
     ext_mask: jax.Array        # bool[T, K] rts-extension CASes: writes to
                                #   shared lines, so they join the install
                                #   contention chain (TicToc only)
+    cause_op: jax.Array        # int32[T, K] ABORT_CAUSE code per conflicting
+                               #   op, CAUSE_NONE elsewhere; the lane's abort
+                               #   cause is min over its ops (types.CAUSE_*)
     eager: bool                # aborts cut work at first_conflict (2PL/Swiss)
+
+    def lane_cause(self) -> jax.Array:
+        """Per-lane abort cause: min cause code over the lane's ops
+        (CAUSE_NONE for committing lanes — every cause code is set under
+        the same final conflict mask that decides the abort)."""
+        return self.cause_op.min(axis=1)
 
 
 def result_from_conflicts(batch: TxnBatch, conflict_op: jax.Array,
-                          eager: bool) -> ValidationResult:
+                          eager: bool,
+                          cause_op: jax.Array | int = t.CAUSE_READ_VAL
+                          ) -> ValidationResult:
+    """Build a ValidationResult from per-op conflict flags.
+
+    ``cause_op`` is either one ABORT_CAUSE code for every conflicting op
+    (mechanisms with a single abort channel) or an int32[T, K] array of
+    codes; either way it is forced to CAUSE_NONE off the conflict mask so
+    the per-lane min only sees real causes."""
     T, K = batch.op_key.shape
     commit = ~conflict_op.any(axis=1)
+    if isinstance(cause_op, int):
+        cause_op = jnp.full((T, K), cause_op, jnp.int32)
+    cause_op = jnp.where(conflict_op, cause_op.astype(jnp.int32),
+                         jnp.int32(t.CAUSE_NONE))
     return ValidationResult(
         commit=commit,
         conflict_op=conflict_op,
@@ -55,6 +78,7 @@ def result_from_conflicts(batch: TxnBatch, conflict_op: jax.Array,
         ext_count=jnp.int32(0),
         pess_frac=jnp.zeros((T,), jnp.float32),
         ext_mask=jnp.zeros((T, K), jnp.bool_),
+        cause_op=cause_op,
         eager=eager,
     )
 
@@ -70,8 +94,9 @@ def bump_versions(store: StoreState, batch: TxnBatch, commit: jax.Array,
     ``commit_install`` op — the sequential-grid Pallas kernel or an XLA
     scatter-add, identical results (DESIGN.md section 5)."""
     w = batch.is_write() & batch.live() & commit[:, None]
-    wts = kb.resolve(cfg).commit_install(store.wts, batch.op_key,
-                                         batch.op_group, w)
+    with jax.named_scope("repro:install"):
+        wts = kb.resolve(cfg).commit_install(store.wts, batch.op_key,
+                                             batch.op_group, w)
     return dataclasses.replace(store, wts=wts)
 
 
@@ -104,9 +129,10 @@ def claim_and_probe(store: StoreState, batch: TxnBatch, prio: jax.Array,
     if mask is not None:
         m = m & mask
     field = "claim_w" if table == "w" else "claim_r"
-    tbl, wprio = kb.resolve(cfg).claim_probe(
-        getattr(store, field), batch.op_key, batch.op_group,
-        my_prio_per_op(batch, prio), wave, m, fine)
+    with jax.named_scope("repro:claim"):
+        tbl, wprio = kb.resolve(cfg).claim_probe(
+            getattr(store, field), batch.op_key, batch.op_group,
+            my_prio_per_op(batch, prio), wave, m, fine)
     return dataclasses.replace(store, **{field: tbl}), wprio
 
 

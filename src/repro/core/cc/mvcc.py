@@ -38,8 +38,12 @@ from __future__ import annotations
 
 import dataclasses
 
+import jax
+import jax.numpy as jnp
+
 from repro.core import backend as kb
 from repro.core import claims, mvstore
+from repro.core import types as t
 from repro.core.cc import base
 from repro.core.types import EngineConfig, StoreState, TxnBatch
 
@@ -74,9 +78,10 @@ def mv_commit(store: StoreState, batch: TxnBatch, commit, prio, wave,
     be = kb.resolve(cfg)
     do = batch.is_write() & batch.live() & commit[:, None]
     head_old = store.mv_head
-    mv_begin, mv_head = be.mv_install(store.mv_begin, head_old,
-                                      batch.op_key, batch.op_group, do,
-                                      mvstore.install_ts(wave))
+    with jax.named_scope("repro:mv_install"):
+        mv_begin, mv_head = be.mv_install(store.mv_begin, head_old,
+                                          batch.op_key, batch.op_group, do,
+                                          mvstore.install_ts(wave))
     store = dataclasses.replace(store, mv_begin=mv_begin, mv_head=mv_head)
     if cfg.track_values:
         vals = mvstore.install_values(store.mv_vals, head_old, mv_head,
@@ -103,6 +108,11 @@ def wave_validate(store: StoreState, batch: TxnBatch, prio, wave,
                          mvstore.snapshot_ts(wave, cfg.snapshot_age), fine)
     conflict = conflict | (rd & ~ok)
 
-    res = base.result_from_conflicts(batch, conflict, eager=False)
+    # Write-side conflicts are first-committer-wins w-w losses; the only
+    # read-side abort is ring reclamation (the disjoint rd & ~ok term).
+    cause = jnp.where(rd & ~ok, jnp.int32(t.CAUSE_STALE_SNAPSHOT),
+                      jnp.int32(t.CAUSE_WW))
+    res = base.result_from_conflicts(batch, conflict, eager=False,
+                                     cause_op=cause)
     store = mv_commit(store, batch, res.commit, prio, wave, cfg)
     return store, res

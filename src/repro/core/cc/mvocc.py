@@ -28,8 +28,11 @@ mv_install), Pallas or XLA, bit-identical (DESIGN.md section 9).
 """
 from __future__ import annotations
 
+import jax.numpy as jnp
+
 from repro.core import backend as kb
 from repro.core import claims, mvstore
+from repro.core import types as t
 from repro.core.cc import base, mvcc
 from repro.core.types import EngineConfig, StoreState, TxnBatch
 
@@ -57,6 +60,14 @@ def wave_validate(store: StoreState, batch: TxnBatch, prio, wave,
                          mvstore.snapshot_ts(wave, cfg.snapshot_age), fine)
     conflict = conflict | (rd & ~ok)
 
-    res = base.result_from_conflicts(batch, conflict, eager=False)
+    # Three disjoint abort channels by op kind and term: reclaimed aged
+    # snapshots (read op, ~ok), first-committer-wins losses (write op),
+    # and the update-txn read validation (read op, ok).
+    cause = jnp.where(
+        rd & ~ok, jnp.int32(t.CAUSE_STALE_SNAPSHOT),
+        jnp.where(batch.is_write(), jnp.int32(t.CAUSE_WW),
+                  jnp.int32(t.CAUSE_READ_VAL)))
+    res = base.result_from_conflicts(batch, conflict, eager=False,
+                                     cause_op=cause)
     store = mvcc.mv_commit(store, batch, res.commit, prio, wave, cfg)
     return store, res

@@ -25,6 +25,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core import claims
+from repro.core import types as t
 from repro.core.cc import base
 from repro.core.types import EngineConfig, StoreState, TxnBatch
 
@@ -37,6 +38,8 @@ def wave_validate(store: StoreState, batch: TxnBatch, prio, wave,
     T, K = batch.op_key.shape
     u = claims.hash01(wave, claims.lane_op_ids(T, K))
     conflict = conflict & (u < cfg.cost.opt_overlap)   # window thinning
-    res = base.result_from_conflicts(batch, conflict, eager=False)
+    # Every OCC abort is a commit-time read-validation failure.
+    res = base.result_from_conflicts(batch, conflict, eager=False,
+                                     cause_op=t.CAUSE_READ_VAL)
     store = base.bump_versions(store, batch, res.commit, cfg)
     return store, res

@@ -22,6 +22,7 @@ import dataclasses
 import jax.numpy as jnp
 
 from repro.core import claims
+from repro.core import types as t
 from repro.core.cc import base
 from repro.core.types import EngineConfig, StoreState, TxnBatch
 
@@ -46,7 +47,12 @@ def wave_validate(store: StoreState, batch: TxnBatch, prio, wave,
     u = claims.hash01(wave, claims.lane_op_ids(T, K))
     ww = ww & (u < cfg.cost.phase_overlap)
     conflict = ww | rw
-    res = base.result_from_conflicts(batch, conflict, eager=True)
+    # Eager write-lock losses are lock-wounds (the CM wounds the younger
+    # txn); invisible-read invalidations are read-validation failures.
+    cause = jnp.where(ww, jnp.int32(t.CAUSE_LOCK_WOUND),
+                      jnp.int32(t.CAUSE_READ_VAL))
+    res = base.result_from_conflicts(batch, conflict, eager=True,
+                                     cause_op=cause)
     # Only write conflicts cut work early; a lane whose first conflict is a
     # read conflict wastes the whole execution (commit-time validation).
     K = batch.slots

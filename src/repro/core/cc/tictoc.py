@@ -37,6 +37,7 @@ import jax.numpy as jnp
 
 from repro.core import backend as kb
 from repro.core import claims
+from repro.core import types as t
 from repro.core.cc import base
 from repro.core.types import EngineConfig, StoreState, TxnBatch
 
@@ -78,7 +79,10 @@ def wave_validate(store: StoreState, batch: TxnBatch, prio, wave,
                        claims.lane_op_ids(*batch.op_key.shape))
     ext_fail = ext_need & other_writer & (u2 < cfg.cost.phase_overlap)
     conflict = conflict | ext_fail
-    res = base.result_from_conflicts(batch, conflict, eager=False)
+    # Both abort channels (no-room-to-time-travel and the failed rts
+    # extension CAS) invalidate a READ — one read-validation cause.
+    res = base.result_from_conflicts(batch, conflict, eager=False,
+                                     cause_op=t.CAUSE_READ_VAL)
     commit = res.commit
 
     # rts extension: committed reads whose commit_ts > rts CAS rts upward.

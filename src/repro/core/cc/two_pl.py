@@ -20,6 +20,7 @@ op, so a 2PL wave makes exactly two claim-table passes instead of four.
 from __future__ import annotations
 
 from repro.core import claims
+from repro.core import types as t
 from repro.core.cc import base
 from repro.core.types import EngineConfig, StoreState, TxnBatch
 
@@ -45,6 +46,9 @@ def wave_validate(store: StoreState, batch: TxnBatch, prio, wave,
     T, K = batch.op_key.shape
     u = claims.hash01(wave, claims.lane_op_ids(T, K))
     conflict = conflict & (u < cfg.cost.phase_overlap)
-    res = base.result_from_conflicts(batch, conflict, eager=True)
+    # All three terms are failed eager lock acquisitions: the younger lane
+    # of the pair is wounded.
+    res = base.result_from_conflicts(batch, conflict, eager=True,
+                                     cause_op=t.CAUSE_LOCK_WOUND)
     store = base.bump_versions(store, batch, res.commit, cfg)
     return store, res

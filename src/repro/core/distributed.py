@@ -139,11 +139,16 @@ TOPOLOGIES = ("flat", "axiswise")
 #: Slots 6..9 are the open-loop front-end counters (make_open_wave_fn);
 #: the closed wave reports zeros there.  ADMITTED / ARRIVAL_DROPS /
 #: INC_DROPS are per-wave deltas the driver accumulates; QUEUED is the
-#: post-wave queue-occupancy snapshot (NOT a delta).
-STATS_LEN = 10
+#: post-wave queue-occupancy snapshot (NOT a delta).  Slots 10..15 are
+#: the per-cause abort counts, indexed by types.CAUSE_* code; they sum
+#: to the ABORTS slot exactly, at every shard count and pipeline depth
+#: (the conservation invariant tests/test_abort_causes.py asserts).
+STATS_LEN = 10 + t.N_ABORT_CAUSES
 STAT_COMMITS, STAT_ABORTS, STAT_DROPPED_LANES, STAT_DROPPED_OPS, \
     STAT_RO_COMMITS, STAT_RO_ABORTS, STAT_ADMITTED, STAT_ARRIVAL_DROPS, \
-    STAT_INC_DROPS, STAT_QUEUED = range(STATS_LEN)
+    STAT_INC_DROPS, STAT_QUEUED = range(10)
+STAT_CAUSE0 = 10
+STAT_CAUSES = slice(STAT_CAUSE0, STAT_CAUSE0 + t.N_ABORT_CAUSES)
 
 
 def verdict_words(cap: int) -> int:
@@ -388,14 +393,17 @@ def _make_phases(cfg: DistConfig, mesh):
 
     - ``route(keys, groups, kinds, prio) -> (out [ns, 2*cap], send)`` —
       sender side; ``out`` is the concatenated key|meta wire buffer and
-      ``send`` the sender's coordinate state
-      ``(owner, pos, took, b_lane, lane_dropped, has_write, dropped_op)``;
+      ``send`` the sender's coordinate state ``(owner, pos, took, b_lane,
+      lane_dropped, has_write, dropped_op, kinds_flat)`` (the kind channel
+      never travels — the sender keeps it to classify abort causes);
     - ``owner_claim(tables, r_buf, wave) -> (tables', v_words [ns, W])`` —
       owner side: fused claim install + probe (and MV snapshot gather),
       verdicts bit-packed for the wire;
-    - ``sender_commit(send, v_words) -> (commit [T], c_words [ns, W])`` —
-      sender side: unpack + gather verdicts by routing coordinates, pack
-      the commit bits for the return trip;
+    - ``sender_commit(send, v_words) -> (commit [T], c_words [ns, W],
+      cause [T])`` — sender side: unpack + gather verdicts by routing
+      coordinates, pack the commit bits for the return trip, and classify
+      each aborted lane's ABORT_CAUSE code (types.CAUSE_*: min over the
+      lane's per-op codes, CAUSE_NONE for committing lanes);
     - ``owner_install(tables, r_buf, c_words, wave) -> tables'`` — owner
       side: version bumps (occ) or ring publishes (mvcc/mvocc) for
       committed writes.
@@ -438,7 +446,7 @@ def _make_phases(cfg: DistConfig, mesh):
         out = jnp.concatenate([b_key, b_meta], axis=-1)      # [ns, 2*cap]
         send = (jnp.clip(owner.reshape(-1), 0, ns - 1),
                 jnp.clip(pos, 0, cap - 1), took, b_lane,
-                lane_dropped, has_write, dropped_op)
+                lane_dropped, has_write, dropped_op, kinds.reshape(-1))
         return out, send
 
     def _decode(r_buf):
@@ -494,19 +502,41 @@ def _make_phases(cfg: DistConfig, mesh):
     def sender_commit(send, v_words):
         # Gathered back by each op's routing coordinates — sort-free and
         # scatter-free, the inverse of route_pack's placement.
-        owner_c, pos_c, took, b_lane, lane_dropped, has_write, _ = send
+        (owner_c, pos_c, took, b_lane, lane_dropped, has_write, dropped_op,
+         kind_f) = send
         vv = be.verdict_unpack(v_words, cap)[owner_c, pos_c]
-        op_conf = (vv & 1) > 0
-        if cfg.cc == "mvocc":
-            hw_op = jnp.broadcast_to(has_write[:, None], (T, K)).reshape(-1)
-            op_conf = op_conf | (((vv & 2) > 0) & hw_op)
-        op_conf = op_conf & took
+        bit0 = ((vv & 1) > 0) & took
+        op_conf = bit0
+        # Per-op ABORT_CAUSE codes mirror the verdict channels exactly
+        # (the owner's bit semantics in owner_claim): the sender holds the
+        # op-kind channel, so no cause ever travels on the wire.
+        if not mv:
+            cause = jnp.where(bit0, jnp.int32(t.CAUSE_READ_VAL),
+                              jnp.int32(t.CAUSE_NONE))
+        else:
+            cause = jnp.full_like(kind_f, t.CAUSE_NONE)
+            if cfg.cc == "mvocc":
+                hw_op = jnp.broadcast_to(has_write[:, None],
+                                         (T, K)).reshape(-1)
+                rdval = ((vv & 2) > 0) & hw_op & took
+                op_conf = op_conf | rdval
+                cause = jnp.where(rdval, jnp.int32(t.CAUSE_READ_VAL),
+                                  cause)
+            # bit 0 on a write op is a first-committer-wins w-w loss; on a
+            # read op it is snapshot reclamation (cc/mvcc.py's disjoint
+            # channels) — reclamation outranks the mvocc read validation.
+            is_wr = (kind_f == t.WRITE) | (kind_f == t.ADD)
+            cause = jnp.where(bit0 & is_wr, jnp.int32(t.CAUSE_WW), cause)
+            cause = jnp.where(bit0 & ~is_wr,
+                              jnp.int32(t.CAUSE_STALE_SNAPSHOT), cause)
+        cause = jnp.where(dropped_op, jnp.int32(t.CAUSE_CAPACITY), cause)
         commit = ~op_conf.reshape(T, K).any(axis=1) & ~lane_dropped
+        lane_cause = cause.reshape(T, K).min(axis=1)
         b_commit = jnp.where(
             b_lane >= 0,
             commit[jnp.clip(b_lane, 0, T - 1)].astype(jnp.int8),
             jnp.int8(0))
-        return commit, be.verdict_pack(b_commit)
+        return commit, be.verdict_pack(b_commit), lane_cause
 
     def owner_install(tables, r_buf, c_words, wave_idx):
         rk, r_grp, r_kind, _, r_live = _decode(r_buf)
@@ -522,6 +552,12 @@ def _make_phases(cfg: DistConfig, mesh):
             mvstore.install_ts(wave_idx))
         return (claim_w, claim_r, mv_begin, mv_head)
 
+    # Profiler-visible phase attribution (jax.profiler / Perfetto): each
+    # phase's ops group under one named scope in the trace viewer.
+    route = jax.named_scope("repro:route")(route)
+    owner_claim = jax.named_scope("repro:claim")(owner_claim)
+    sender_commit = jax.named_scope("repro:commit")(sender_commit)
+    owner_install = jax.named_scope("repro:install")(owner_install)
     return route, owner_claim, sender_commit, owner_install
 
 
@@ -543,20 +579,21 @@ def _make_shard_body(cfg: DistConfig, mesh):
         out, send = route(keys, groups, kinds, prio)
         r_buf = exchange(out)
         tables, v_words = owner_claim(tables, r_buf, wave_idx)
-        commit, c_words = sender_commit(send, exchange(v_words))
+        commit, c_words, cause = sender_commit(send, exchange(v_words))
         tables = owner_install(tables, r_buf, exchange(c_words), wave_idx)
-        _, _, _, _, lane_dropped, has_write, dropped_op = send
-        return commit, tables, lane_dropped, has_write, dropped_op
+        _, _, _, _, lane_dropped, has_write, dropped_op, _ = send
+        return commit, tables, lane_dropped, has_write, dropped_op, cause
 
     return body
 
 
-def _closed_stats(commit, lane_dropped, has_write, dropped_op):
+def _closed_stats(commit, lane_dropped, has_write, dropped_op, cause):
     ro = ~has_write
     z = jnp.int32(0)
-    return jnp.stack([commit.sum(), (~commit).sum(), lane_dropped.sum(),
+    head = jnp.stack([commit.sum(), (~commit).sum(), lane_dropped.sum(),
                       dropped_op.sum(), (commit & ro).sum(),
                       (~commit & ro).sum(), z, z, z, z]).astype(jnp.int32)
+    return jnp.concatenate([head, t.cause_counts(cause, ~commit)])
 
 
 def _pipe_carry_init(cfg: DistConfig, ns: int, tables):
@@ -576,7 +613,8 @@ def _pipe_carry_init(cfg: DistConfig, ns: int, tables):
           jnp.full((ns, cap), LANE_FILL, jnp.int32),   # b_lane
           jnp.zeros((T,), jnp.bool_),                  # lane_dropped
           jnp.zeros((T,), jnp.bool_),                  # has_write
-          jnp.zeros((T * K,), jnp.bool_))              # dropped_op
+          jnp.zeros((T * K,), jnp.bool_),              # dropped_op
+          jnp.full((T * K,), t.NOP, jnp.int32))        # kinds_flat
     return (tables, rb, rb, rb, vz, vz, st, st)
 
 
@@ -599,14 +637,14 @@ def _make_pipeline_step(cfg: DistConfig, mesh):
         keys, groups, kinds, prio, wave = x
         tables = owner_install(tables, rb3, c_in, wave - jnp.uint32(3))
         tables, v_words = owner_claim(tables, rb1, wave - jnp.uint32(1))
-        commit, c_words = sender_commit(st2, v_in)
+        commit, c_words, cause = sender_commit(st2, v_in)
         out, st0 = route(keys, groups, kinds, prio)
         arrived = exchange(jnp.concatenate([out, v_words, c_words],
                                            axis=-1))
         r_out = arrived[:, :2 * cap]
         v_nxt = arrived[:, 2 * cap:2 * cap + W]
         c_nxt = arrived[:, 2 * cap + W:]
-        stats = _closed_stats(commit, st2[4], st2[5], st2[6])
+        stats = _closed_stats(commit, st2[4], st2[5], st2[6], cause)
         carry = (tables, r_out, rb1, rb2, v_nxt, c_nxt, st0, st1)
         return carry, (commit, stats)
 
@@ -631,8 +669,9 @@ def make_wave_fn(cfg: DistConfig, mesh):
     over the combined mesh axes.  ``tables`` is the mechanism's state tuple
     (see module docstring / ``init_tables``); ``stats`` is
     int32[STATS_LEN] per shard: [commits, aborts, capacity-dropped lanes,
-    dropped ops, read-only commits, read-only aborts, then zeros in the
-    open-loop slots — this is the closed-loop wave].
+    dropped ops, read-only commits, read-only aborts, zeros in the
+    open-loop slots (this is the closed-loop wave), then the six per-cause
+    abort counts (slots STAT_CAUSES, summing exactly to aborts)].
 
     This is the one-wave-per-call SYNCHRONOUS driver: it cannot overlap
     waves, so configs whose effective depth exceeds 1 are rejected — use
@@ -654,9 +693,10 @@ def make_wave_fn(cfg: DistConfig, mesh):
     mv = cfg.is_mv
 
     def local_wave(keys, groups, kinds, prio, tables, wave_idx):
-        commit, tables, lane_dropped, has_write, dropped_op = body(
+        commit, tables, lane_dropped, has_write, dropped_op, cause = body(
             keys, groups, kinds, prio, tables, wave_idx)
-        stats = _closed_stats(commit, lane_dropped, has_write, dropped_op)
+        stats = _closed_stats(commit, lane_dropped, has_write, dropped_op,
+                              cause)
         return commit, tables, stats
 
     spec_ops = _spec_ops(mesh)
@@ -693,10 +733,10 @@ def make_run_fn(cfg: DistConfig, mesh, n_waves: int):
         def local_run(keys, groups, kinds, prio, tables, wave0):
             def step(tables, x):
                 k, g, i, p, w = x
-                commit, tables, lane_dropped, has_write, dropped_op = body(
-                    k, g, i, p, tables, w)
+                (commit, tables, lane_dropped, has_write, dropped_op,
+                 cause) = body(k, g, i, p, tables, w)
                 stats = _closed_stats(commit, lane_dropped, has_write,
-                                      dropped_op)
+                                      dropped_op, cause)
                 return tables, (commit, stats)
 
             waves = wave0 + jnp.arange(n_waves, dtype=jnp.uint32)
@@ -750,7 +790,9 @@ def make_open_wave_fn(cfg: DistConfig, mesh):
     - qstate: the sharded queue tuple from ``init_open_queue``.
     - stats int32[ns, STATS_LEN] flattened: slots 6..9 carry
       admitted/arrival_drops/inc_drops (per-wave deltas) and the post-wave
-      queue occupancy snapshot.
+      queue occupancy snapshot; slots 10..15 are the per-cause abort
+      counts (terminal aborts reclassify as CAUSE_INC_CAP, so
+      causes[CAUSE_INC_CAP] == inc_drops here at depth 1).
 
     Ring discipline per shard and wave — enqueue arrivals, dequeue up to T
     lanes FIFO, run the routed wave, re-enqueue aborted lanes with
@@ -811,7 +853,7 @@ def make_open_wave_fn(cfg: DistConfig, mesh):
         head, size = (head + take) % C, size - take
 
         # --- the routed wave on the admitted lanes ----------------------
-        commit, tables, lane_dropped, has_write, dropped_op = body(
+        commit, tables, lane_dropped, has_write, dropped_op, cause = body(
             dk, dg, di, prio, tables, wave_idx)
         commit = commit & got
         aborted = got & ~commit
@@ -819,6 +861,10 @@ def make_open_wave_fn(cfg: DistConfig, mesh):
         # --- retry incarnations / latency -------------------------------
         retry = aborted & (incarn < cfg.max_incarnations)
         inc_drop = aborted & ~retry
+        # A terminal abort leaves the system as an incarnation drop — that
+        # outcome outranks whatever validation verdict killed the attempt
+        # (CAUSE_INC_CAP is the lowest code), mirroring the local engine.
+        cause = jnp.where(inc_drop, jnp.int32(t.CAUSE_INC_CAP), cause)
         # Arrivals enqueued before the dequeue freed these slots, so this
         # can never overflow (n_re_ovf stays 0; the oracle asserts it via
         # the exact counter reconciliation).
@@ -828,12 +874,14 @@ def make_open_wave_fn(cfg: DistConfig, mesh):
         lat_hist = admission.record_ttc(lat_hist, w - admit_w + 1, commit)
 
         ro = ~has_write
-        stats = jnp.stack([
+        head_stats = jnp.stack([
             commit.sum(), aborted.sum(), lane_dropped.sum(),
             dropped_op.sum(),
             (commit & ro).sum(), (aborted & ro).sum(),
             n_adm, n_ovf + n_re_ovf,
             inc_drop.sum(), size]).astype(jnp.int32)
+        stats = jnp.concatenate([head_stats, t.cause_counts(cause,
+                                                            aborted)])
         qstate = (qk, qg, qi, qa, qc, qd, head[None], size[None],
                   (nid + n_arr)[None], lat_hist)
         return commit, tables, qstate, stats
@@ -878,11 +926,18 @@ def _make_open_pipeline_step(cfg: DistConfig, mesh):
         tables, v_words = owner_claim(tables, rb1, wave - jnp.uint32(1))
 
         # --- sender: commit wave w-2, ring bookkeeping -------------------
-        commit, c_words = sender_commit(st2, v_in)
+        commit, c_words, cause = sender_commit(st2, v_in)
         dk2, dg2, di2, admit2, inc2, got2, qid2, n_adm2, n_ovf2 = os2
         commit = commit & got2
         aborted = got2 & ~commit
         retry = aborted & (inc2 < cfg.max_incarnations)
+        # Terminal aborts reclassify as CAUSE_INC_CAP like the synchronous
+        # wave; a retry the full ring rejects (n_re_ovf) KEEPS its
+        # validation cause — ring_enqueue exposes no per-lane overflow
+        # mask — so causes[CAUSE_INC_CAP] <= inc_drops at depth >= 2
+        # while the per-cause sum still equals aborts exactly.
+        cause = jnp.where(aborted & ~retry, jnp.int32(t.CAUSE_INC_CAP),
+                          cause)
         (qk, qg, qi, qa, qc, qd), size, _, n_re_ovf = admission.ring_enqueue(
             C, head, size, retry, (qk, qg, qi, qa, qc, qd),
             (dk2, dg2, di2, admit2, inc2 + 1, qid2))
@@ -929,10 +984,12 @@ def _make_open_pipeline_step(cfg: DistConfig, mesh):
         # occupancy snapshot (informational; the driver's queued_final
         # reads the final qstate, not this column).
         ro = ~st2[5]
-        stats = jnp.stack([
+        head_stats = jnp.stack([
             commit.sum(), aborted.sum(), st2[4].sum(), st2[6].sum(),
             (commit & ro).sum(), (aborted & ro).sum(),
             n_adm2, n_ovf2, inc_drop, size]).astype(jnp.int32)
+        stats = jnp.concatenate([head_stats, t.cause_counts(cause,
+                                                            aborted)])
         os0 = (dk, dg, di, admit_w, incarn, got, qid, n_adm, n_ovf)
         carry = (tables, r_out, rb1, rb2, v_nxt, c_nxt, st0, st1, os0, os1,
                  qk, qg, qi, qa, qc, qd, head, size, nid, lat_hist)
@@ -1089,6 +1146,7 @@ def run_open_loop(cfg: DistConfig, mesh, arrive_counts, gen_fn,
         "arrival_drops": int(acc[:, STAT_ARRIVAL_DROPS].sum()),
         "inc_drops": int(acc[:, STAT_INC_DROPS].sum()),
         "queued_final": queued,
+        "abort_causes": [int(x) for x in acc[:, STAT_CAUSES].sum(axis=0)],
         "lat_hist": lat_hist,
         "per_shard_stats": acc,
     }

@@ -189,6 +189,25 @@ def _lane_cost(cfg: EngineConfig, batch: TxnBatch, commit: jax.Array,
     return jnp.where(commit, t_commit, t_abort), has_write
 
 
+def _conflict_histogram(cfg: EngineConfig, hits: jax.Array, peak: jax.Array,
+                        batch: TxnBatch, res: ValidationResult
+                        ) -> tuple[jax.Array, jax.Array]:
+    """Hot-record accounting (cfg.track_conflicts): per-cell conflicting-op
+    totals via the backend's ``commit_install`` +1 scatter, and the
+    per-wave same-cell conflict peak via ``segment_count`` maxed into the
+    table through ``ts_install_max`` — everything stays on the 14-op
+    surface, so both backends agree bit-for-bit.  Cells are always fine
+    resolution (claims are scattered fine regardless of granularity)."""
+    be = kb.resolve(cfg)
+    conf = res.conflict_op & batch.live()
+    hits = be.commit_install(hits, batch.op_key, batch.op_group, conf)
+    n_conf = be.segment_count(batch.op_key, batch.op_group,
+                              cfg.n_groups, conf)
+    peak = be.ts_install_max(peak, batch.op_key, batch.op_group,
+                             n_conf.astype(jnp.uint32), conf)
+    return hits, peak
+
+
 def make_wave_step(cfg: EngineConfig, workload: Workload,
                    active: Optional[jax.Array] = None) -> Callable:
     """Build the scan body for one wave.
@@ -228,7 +247,8 @@ def make_wave_step(cfg: EngineConfig, workload: Workload,
         perm = jax.random.permutation(rng_perm, T).astype(jnp.uint32)
         prio = claims.prio16(age, perm, use_age=(cfg.cc == t.CC_SWISS))
 
-        store, res = validator(store, batch, prio, wave, cfg)
+        with jax.named_scope("repro:validate"):
+            store, res = validator(store, batch, prio, wave, cfg)
         commit = res.commit
 
         if cfg.track_values:
@@ -236,7 +256,8 @@ def make_wave_step(cfg: EngineConfig, workload: Workload,
             store = dataclasses.replace(store, values=vals)
 
         # ---- cost model ----
-        lane_dt, has_write = _lane_cost(cfg, batch, commit, res)
+        with jax.named_scope("repro:cost"):
+            lane_dt, has_write = _lane_cost(cfg, batch, commit, res)
 
         # ---- metrics + retry bookkeeping ----
         if active is None:
@@ -244,6 +265,12 @@ def make_wave_step(cfg: EngineConfig, workload: Workload,
         else:
             committed, aborted = commit & active, ~commit & active
             lane_dt = jnp.where(active, lane_dt, 0.0)
+        causes_wave = t.cause_counts(res.lane_cause(), aborted)
+        if cfg.track_conflicts:
+            hits, peak = _conflict_histogram(
+                cfg, state.conflict_hits, state.conflict_peak, batch, res)
+        else:
+            hits, peak = state.conflict_hits, state.conflict_peak
         commits_by_type = state.commits_by_type.at[batch.txn_type].add(
             committed.astype(state.commits_by_type.dtype))
         # Read-only lanes: the MV mechanisms' headline is that these never
@@ -269,10 +296,14 @@ def make_wave_step(cfg: EngineConfig, workload: Workload,
                        + (committed & ro).sum().astype(state.ro_commits.dtype),
             ro_aborts=state.ro_aborts
                       + (aborted & ro).sum().astype(state.ro_aborts.dtype),
+            abort_causes=state.abort_causes + causes_wave,
+            conflict_hits=hits,
+            conflict_peak=peak,
             ol=state.ol,
         )
         ys = (committed.sum().astype(jnp.int32),
-              aborted.sum().astype(jnp.int32))
+              aborted.sum().astype(jnp.int32),
+              causes_wave, lane_dt.sum())
         return new_state, ys
 
     return wave_step
@@ -333,7 +364,8 @@ def make_open_wave_step(cfg: EngineConfig, workload: Workload,
         perm = jax.random.permutation(rng_perm, T).astype(jnp.uint32)
         prio = claims.prio16(incarn, perm, use_age=(cfg.cc == t.CC_SWISS))
 
-        store, res = validator(store, batch, prio, wave, cfg)
+        with jax.named_scope("repro:validate"):
+            store, res = validator(store, batch, prio, wave, cfg)
         commit = res.commit & got
 
         if cfg.track_values:
@@ -341,13 +373,27 @@ def make_open_wave_step(cfg: EngineConfig, workload: Workload,
             store = dataclasses.replace(store, values=vals)
 
         # ---- cost model (shared with the closed loop) ------------------
-        lane_dt, has_write = _lane_cost(cfg, batch, commit, res)
+        with jax.named_scope("repro:cost"):
+            lane_dt, has_write = _lane_cost(cfg, batch, commit, res)
         lane_dt = jnp.where(got, lane_dt, 0.0)
 
         # ---- retry incarnations / latency accounting -------------------
         aborted = got & ~commit
         retry = aborted & (incarn < cfg.max_incarnations)
         inc_drop = aborted & ~retry
+        # Abort-cause attribution: the TERMINAL abort of a transaction at
+        # its incarnation cap is the one that ejects it from the system —
+        # reclassified CAUSE_INC_CAP (it dominates every validation
+        # cause), so cause[CAUSE_INC_CAP] == inc_drops exactly and the
+        # per-cause counts still sum to total aborts.
+        lane_cause = jnp.where(inc_drop, jnp.int32(t.CAUSE_INC_CAP),
+                               res.lane_cause())
+        causes_wave = t.cause_counts(lane_cause, aborted)
+        if cfg.track_conflicts:
+            hits, peak = _conflict_histogram(
+                cfg, state.conflict_hits, state.conflict_peak, batch, res)
+        else:
+            hits, peak = state.conflict_hits, state.conflict_peak
         # Arrivals enqueued before the dequeue freed these lanes, so the
         # re-enqueue can never overflow (module invariant); reenq_drops
         # stays 0 and the conservation oracle asserts it.
@@ -390,12 +436,16 @@ def make_open_wave_step(cfg: EngineConfig, workload: Workload,
                        + (committed & ro).sum().astype(state.ro_commits.dtype),
             ro_aborts=state.ro_aborts
                       + (aborted & ro).sum().astype(state.ro_aborts.dtype),
+            abort_causes=state.abort_causes + causes_wave,
+            conflict_hits=hits,
+            conflict_peak=peak,
             ol=new_ol,
         )
         ys = (committed.sum().astype(jnp.int32),
               aborted.sum().astype(jnp.int32),
               offered, n_adm, n_ovf,
-              inc_drop.sum().astype(jnp.int32))
+              inc_drop.sum().astype(jnp.int32),
+              causes_wave, lane_dt.sum())
         if trace:
             ys = ys + ((txn_id, incarn, got, admit_w, batch.op_key,
                         batch.op_kind, commit),)
@@ -419,7 +469,15 @@ class SimResult:
     ro_aborts: int = 0         #   multi-version headline metric (snapshot
                                #   readers never abort — DESIGN.md section 9)
     ro_abort_rate: float = 0.0
+    abort_causes: Optional[list] = None  # int[N_ABORT_CAUSES], ordered by
+                               #   types.CAUSE_* code; sums to `aborts`
+                               #   (the conservation invariant)
     per_wave_commits: Optional[jax.Array] = None
+    per_wave_aborts: Optional[jax.Array] = None
+    per_wave_causes: Optional[jax.Array] = None  # int32[waves, N_ABORT_CAUSES]
+    per_wave_us: Optional[jax.Array] = None      # f32[waves] simulated us
+    hot_records: Optional[list] = None  # track_conflicts top-k:
+                               #   (record, group, total_hits, peak_per_wave)
     final_state: Optional[EngineState] = None
     # ---- open-loop front-end (cfg.open_loop; DESIGN.md section 11) ----
     open_loop: bool = False
@@ -464,6 +522,12 @@ class SweepPoint:
     queued_final: int = 0
     p50_ttc: Optional[list] = None  # per-txn-class time-to-commit (waves)
     p99_ttc: Optional[list] = None
+    abort_causes: Optional[list] = None  # int[N_ABORT_CAUSES] (types.CAUSE_*)
+    # Per-wave timeline (sweep(..., per_wave=True); analysis/trace.py):
+    per_wave_commits: Optional[jax.Array] = None
+    per_wave_aborts: Optional[jax.Array] = None
+    per_wave_causes: Optional[jax.Array] = None
+    per_wave_us: Optional[jax.Array] = None
 
 
 def lane_buckets(lane_counts: Sequence[int],
@@ -492,7 +556,8 @@ def sweep(cfg: EngineConfig, workload: Workload, n_waves: int, *,
           ccs: Sequence[int], grans: Sequence[int] = (0, 1),
           lane_counts: Sequence[int] = (16, 64, 128),
           seeds: Sequence[int] = (0,),
-          lane_bucket_ratio: Optional[float] = 2.0) -> list[SweepPoint]:
+          lane_bucket_ratio: Optional[float] = 2.0,
+          per_wave: bool = False) -> list[SweepPoint]:
     """Run an entire benchmark grid as ONE jitted XLA program.
 
     The grid is ccs x grans x lane_counts x seeds.  (cc, granularity) pairs
@@ -528,12 +593,19 @@ def sweep(cfg: EngineConfig, workload: Workload, n_waves: int, *,
             active = jnp.arange(T_pad, dtype=jnp.int32) < n_lanes
             state0 = engine_state_init(ccfg, jax.random.PRNGKey(seed), store)
             step = mk(ccfg, workload, active=active)
-            state, _ = jax.lax.scan(step, state0, None, length=n_waves)
+            state, ys = jax.lax.scan(step, state0, None, length=n_waves)
             ol = state.ol
-            return (state.commits, state.aborts, state.lane_time.sum(),
-                    state.ext_events, state.ro_commits, state.ro_aborts,
-                    ol.offered, ol.admitted, ol.arrival_drops, ol.inc_drops,
-                    ol.queue.size, ol.lat_hist)
+            out = (state.commits, state.aborts, state.lane_time.sum(),
+                   state.ext_events, state.ro_commits, state.ro_aborts,
+                   ol.offered, ol.admitted, ol.arrival_drops, ol.inc_drops,
+                   ol.queue.size, ol.lat_hist, state.abort_causes)
+            if per_wave:
+                # Per-wave timeline (commits, aborts, cause deltas, sim
+                # us) for the trace exporter; the cause/us slots sit at
+                # different ys indices in the two traffic models.
+                ci, ui = (6, 7) if ccfg.open_loop else (2, 3)
+                out = out + (ys[0], ys[1], ys[ci], ys[ui])
+            return out
         return point
 
     @jax.jit
@@ -561,7 +633,8 @@ def sweep(cfg: EngineConfig, workload: Workload, n_waves: int, *,
             for sd in seeds:
                 bi, i = where[(T, sd)]
                 (commits, aborts, lane_time, ext, roc, roa,
-                 off, adm, adrop, idrop, qsz, lhist) = per_bucket[bi]
+                 off, adm, adrop, idrop, qsz, lhist,
+                 acauses, *pw) = per_bucket[bi]
                 c, a = int(commits[i]), int(aborts[i])
                 rc, ra = int(roc[i]), int(roa[i])
                 wall = float(lane_time[i]) / T
@@ -575,13 +648,19 @@ def sweep(cfg: EngineConfig, workload: Workload, n_waves: int, *,
                         arrival_drops=int(adrop[i]),
                         inc_drops=int(idrop[i]), queued_final=int(qsz[i]),
                         p50_ttc=p50, p99_ttc=p99)
+                if per_wave:
+                    extra.update(per_wave_commits=pw[0][i],
+                                 per_wave_aborts=pw[1][i],
+                                 per_wave_causes=pw[2][i],
+                                 per_wave_us=pw[3][i])
                 points.append(SweepPoint(
                     cc=cc, granularity=g, lanes=T, seed=sd, commits=c,
                     aborts=a, abort_rate=a / max(c + a, 1),
                     throughput=c / max(wall, 1e-9), sim_time_us=wall,
                     ext_events=int(ext[i]), waves=n_waves,
                     ro_commits=rc, ro_aborts=ra,
-                    ro_abort_rate=ra / max(rc + ra, 1), **extra))
+                    ro_abort_rate=ra / max(rc + ra, 1),
+                    abort_causes=[int(x) for x in acauses[i]], **extra))
     return points
 
 
@@ -609,6 +688,7 @@ def run(cfg: EngineConfig, workload: Workload, n_waves: int,
 
     state, ys = go(state0)
     cw = ys[0]
+    ci, ui = (6, 7) if cfg.open_loop else (2, 3)
     commits = int(state.commits)
     aborts = int(state.aborts)
     ro_c, ro_a = int(state.ro_commits), int(state.ro_aborts)
@@ -629,7 +709,10 @@ def run(cfg: EngineConfig, workload: Workload, n_waves: int,
             queued_final=int(ol.queue.size),
             p50_ttc=p50, p99_ttc=p99,
             lat_hist=jax.device_get(ol.lat_hist),
-            trace=jax.device_get(ys[6]) if trace else None)
+            trace=jax.device_get(ys[8]) if trace else None)
+    hot = None
+    if cfg.track_conflicts:
+        hot = hot_records(state, k=16)
     return SimResult(
         commits=commits,
         aborts=aborts,
@@ -643,7 +726,26 @@ def run(cfg: EngineConfig, workload: Workload, n_waves: int,
         ro_commits=ro_c,
         ro_aborts=ro_a,
         ro_abort_rate=ro_a / max(ro_c + ro_a, 1),
+        abort_causes=[int(x) for x in state.abort_causes],
         per_wave_commits=cw,
+        per_wave_aborts=ys[1],
+        per_wave_causes=ys[ci],
+        per_wave_us=ys[ui],
+        hot_records=hot,
         final_state=state if keep_state else None,
         **extra,
     )
+
+
+def hot_records(state: EngineState, k: int = 16) -> list:
+    """Top-k hot cells of the conflict histogram (track_conflicts runs):
+    ``(record, group, total_conflict_hits, peak_same_wave_conflicts)``
+    sorted by total hits, zero-hit cells omitted."""
+    import numpy as np
+    hits = np.asarray(jax.device_get(state.conflict_hits))
+    peak = np.asarray(jax.device_get(state.conflict_peak))
+    G = hits.shape[1]
+    flat = hits.ravel()
+    order = np.argsort(flat, kind="stable")[::-1][:k]
+    return [(int(i // G), int(i % G), int(flat[i]), int(peak.ravel()[i]))
+            for i in order if flat[i] > 0]

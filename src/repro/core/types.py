@@ -67,6 +67,51 @@ CC_NAMES = {
 }
 CC_IDS = {v: k for k, v in CC_NAMES.items()}
 
+# Abort-cause taxonomy (DESIGN.md "Observability").  Every abort is
+# attributed to exactly ONE cause so per-cause counts sum to total aborts
+# at every layer (local sweep, distributed stats, open loop).  Codes are
+# ordered by precedence: when a lane carries several conflicting ops the
+# lane's cause is the MINIMUM over its per-op cause codes, so the most
+# structural cause (capacity drop) dominates the most incidental one
+# (read validation).  CAUSE_NONE is the min-identity for clean ops and
+# sits one past the histogram so scatter-adds of clean lanes drop.
+CAUSE_INC_CAP: int = 0         # open loop: terminal abort at the
+                               #   incarnation cap (txn leaves the system)
+CAUSE_CAPACITY: int = 1        # distributed: route-buffer capacity drop
+CAUSE_STALE_SNAPSHOT: int = 2  # MV ring reclamation: the reader's aged
+                               #   snapshot outlived the version ring
+CAUSE_LOCK_WOUND: int = 3      # eager lock conflict (2PL, SwissTM w-w,
+                               #   Adaptive's pessimistic path)
+CAUSE_WW: int = 4              # claim / write-write conflict
+                               #   (first-committer-wins)
+CAUSE_READ_VAL: int = 5        # commit-time read-validation failure
+                               #   (the paper's false-conflict channel)
+N_ABORT_CAUSES: int = 6
+CAUSE_NONE: int = N_ABORT_CAUSES  # sentinel: op not conflicting
+
+CAUSE_NAMES = {
+    CAUSE_INC_CAP: "inc_cap",
+    CAUSE_CAPACITY: "capacity",
+    CAUSE_STALE_SNAPSHOT: "stale_snapshot",
+    CAUSE_LOCK_WOUND: "lock_wound",
+    CAUSE_WW: "ww",
+    CAUSE_READ_VAL: "read_val",
+}
+
+
+def cause_counts(lane_cause: jax.Array, aborted: jax.Array) -> jax.Array:
+    """Histogram lane cause codes over aborted lanes -> int32[N_ABORT_CAUSES].
+
+    Non-aborted lanes are steered to CAUSE_NONE, which is out of bounds
+    for the histogram and drops on scatter — the counts therefore sum to
+    exactly ``aborted.sum()`` as long as every aborted lane carries a
+    real cause (< CAUSE_NONE), which each validator guarantees by
+    construction (cause codes are set under the same final conflict
+    masks that decide the abort)."""
+    idx = jnp.where(aborted, lane_cause, N_ABORT_CAUSES)
+    return jnp.zeros((N_ABORT_CAUSES,), jnp.int32).at[idx].add(
+        1, mode="drop")
+
 # Priority layout: (inverse-age << AGE_SHIFT) | lane-permutation rank.
 # Lower priority value = earlier in the wave serialization order.
 PRIO_LANE_BITS = 10  # up to 1024 lanes
@@ -184,7 +229,8 @@ class StoreState:
          data_fields=["rng", "wave", "store", "pending", "pending_live",
                       "age", "lane_time", "commits", "aborts",
                       "commits_by_type", "wasted_time", "ext_events",
-                      "ro_commits", "ro_aborts", "ol"],
+                      "ro_commits", "ro_aborts", "abort_causes",
+                      "conflict_hits", "conflict_peak", "ol"],
          meta_fields=[])
 @dataclasses.dataclass
 class EngineState:
@@ -205,6 +251,15 @@ class EngineState:
     ro_aborts: jax.Array    # int scalar: aborts of read-only transactions
                             #   (the MV headline metric: snapshot readers
                             #   never abort — DESIGN.md section 9)
+    abort_causes: jax.Array = None  # int32[N_ABORT_CAUSES] per-cause abort
+                            #   counts; sums to `aborts` exactly (the
+                            #   conservation invariant)
+    conflict_hits: jax.Array = None  # uint32[n_records, G] total conflicting
+                            #   ops per cell (track_conflicts only;
+                            #   [1, 1] placeholder otherwise)
+    conflict_peak: jax.Array = None  # uint32[n_records, G] max same-cell
+                            #   conflicting ops in any single wave
+                            #   (segment_count fed through ts_install_max)
     ol: Any = None          # core/admission.OpenLoopState: the open-loop
                             #   front-end (admission queue + goodput
                             #   counters + time-to-commit histograms);
@@ -310,6 +365,11 @@ class EngineConfig:
                                 # transaction (counted, never silent)
     lat_bins: int = 64          # time-to-commit histogram width in waves,
                                 # per txn class (last bin = overflow)
+    track_conflicts: bool = False  # maintain the hot-record conflict
+                                # histogram: per-cell total conflicting-op
+                                # hits plus the per-wave same-cell peak
+                                # (segment_count), surfaced as
+                                # SimResult.hot_records top-k
     cost: CostModel = dataclasses.field(default_factory=CostModel)
     # Adaptive CC state machine:
     adapt_up: float = 0.20      # abort-heat threshold -> pessimistic
@@ -438,5 +498,12 @@ def engine_state_init(cfg: EngineConfig, rng: jax.Array,
         ext_events=jnp.int32(0),
         ro_commits=jnp.int64(0) if jax.config.jax_enable_x64 else jnp.int32(0),
         ro_aborts=jnp.int64(0) if jax.config.jax_enable_x64 else jnp.int32(0),
+        abort_causes=jnp.zeros((N_ABORT_CAUSES,), jnp.int32),
+        conflict_hits=jnp.zeros(
+            (cfg.n_records, cfg.n_groups) if cfg.track_conflicts else (1, 1),
+            jnp.uint32),
+        conflict_peak=jnp.zeros(
+            (cfg.n_records, cfg.n_groups) if cfg.track_conflicts else (1, 1),
+            jnp.uint32),
         ol=ol,
     )

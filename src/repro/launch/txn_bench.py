@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 
 
@@ -29,8 +30,29 @@ def _make_workload(workload: str, *, scale: float = 1.0,
                              ro_frac=ro_frac, theta=theta)
 
 
+def _cost_fields(cc_name: str, lanes: int, granularity: int, slots: int,
+                 n_groups: int, mv_depth: int) -> dict:
+    """Per-op roofline cost-model columns (analysis/txn_cost.py): analytic
+    bytes/flops per transaction attempt and the mechanism's fraction of
+    the default chip's roofline.  Closed-form in the wave shape, so the
+    fields are backend-INDEPENDENT (CI's jnp-vs-pallas CLI parity diff
+    relies on that)."""
+    from repro.analysis import txn_cost as tc
+    cost = tc.txn_cost(cc_name, tc.WaveShape(
+        lanes=lanes, slots=slots, n_groups=n_groups,
+        granularity=granularity, mv_depth=mv_depth))
+    return {
+        "bytes_per_txn": round(cost["bytes_per_txn"], 1),
+        "flops_per_txn": round(cost["flops_per_txn"], 1),
+        "roofline_frac": round(cost["roofline_frac"], 6),
+        "roofline_bound": cost["bound"],
+        "roofline_chip": cost["chip"],
+    }
+
+
 def _row(workload: str, cc_name: str, p, wall_s: float,
-         backend: str) -> dict:
+         backend: str, *, slots: int = 0, n_groups: int = 2,
+         mv_depth: int = 0) -> dict:
     from repro.core import types as t
     from repro.core.backend import kernel_coverage
     row = {
@@ -49,6 +71,15 @@ def _row(workload: str, cc_name: str, p, wall_s: float,
         # attributable to an execution engine (DESIGN.md section 5).
         "kernel_ops": kernel_coverage(backend, t.CC_IDS[cc_name]),
     }
+    if getattr(p, "abort_causes", None) is not None:
+        # Per-cause abort breakdown (types.CAUSE_*), name-keyed in code
+        # order; the values sum to `aborts` exactly (the conservation
+        # invariant tests/test_abort_causes.py asserts).
+        row["abort_causes"] = {t.CAUSE_NAMES[i]: int(n)
+                               for i, n in enumerate(p.abort_causes)}
+    if slots:
+        row.update(_cost_fields(cc_name, p.lanes, p.granularity, slots,
+                                n_groups, mv_depth))
     if getattr(p, "open_loop", False):
         # Goodput (unique committed txns per simulated us) and the
         # per-txn-class time-to-commit percentiles (waves) the dashboard's
@@ -69,7 +100,8 @@ def run_grid(workload: str, ccs: list, grans, lanes: list, waves: int, *,
              backend: str = "jnp", mv_depth: int = 4, snapshot_age: int = 0,
              write_frac: float = 0.5, ro_frac: float = 0.0,
              theta: float = 0.9, arrival_rate: float = 0.0,
-             queue_cap: int = 0, max_incarnations: int = 0) -> list:
+             queue_cap: int = 0, max_incarnations: int = 0,
+             per_wave: bool = False, return_points: bool = False):
     """Run the whole benchmark grid in one jitted sweep; returns row dicts.
 
     ``wall_s`` in each row is the grid's wall time amortized over its rows
@@ -109,10 +141,17 @@ def run_grid(workload: str, ccs: list, grans, lanes: list, waves: int, *,
     t0 = time.time()
     points = sweep(cfg, wl, waves, ccs=[t.CC_IDS[c] for c in ccs],
                    grans=tuple(grans), lane_counts=tuple(lanes),
-                   seeds=(seed,))
+                   seeds=(seed,), per_wave=per_wave)
     wall = (time.time() - t0) / max(len(points), 1)
-    return [_row(workload, t.CC_NAMES[p.cc], p, wall, backend)
+    rows = [_row(workload, t.CC_NAMES[p.cc], p, wall, backend,
+                 slots=wl.slots, n_groups=wl.n_groups,
+                 mv_depth=cfg.mv_depth)
             for p in points]
+    if return_points:
+        # (rows, SweepPoints) — the points carry the per-wave timeline the
+        # Chrome-trace exporter consumes (analysis/trace.py).
+        return rows, points
+    return rows
 
 
 def run_one(workload: str, cc_name: str, gran: int, lanes: int, waves: int,
@@ -153,6 +192,11 @@ def run_one(workload: str, cc_name: str, gran: int, lanes: int, waves: int,
         "backend": backend,
         "kernel_ops": kernel_coverage(backend, t.CC_IDS[cc_name]),
     }
+    if res.abort_causes is not None:
+        row["abort_causes"] = {t.CAUSE_NAMES[i]: int(n)
+                               for i, n in enumerate(res.abort_causes)}
+    row.update(_cost_fields(cc_name, lanes, gran, wl.slots, wl.n_groups,
+                            cfg.mv_depth))
     if res.open_loop:
         row.update({
             "open_loop": True, "goodput": round(res.goodput, 4),
@@ -211,6 +255,15 @@ def main(argv=None):
     ap.add_argument("--theta", type=float, default=None,
                     help="YCSB Zipf skew (default 0.9)")
     ap.add_argument("--json", default=None)
+    ap.add_argument("--trace", nargs="?", const="reports/txn_trace.json",
+                    default=None, metavar="PATH",
+                    help="export the wave-level timeline as Chrome-trace "
+                         "JSON (analysis/trace.py; open in chrome://"
+                         "tracing or ui.perfetto.dev) — one process row "
+                         "per grid point, one slice per wave with commit/"
+                         "abort-cause deltas on the simulated-time axis; "
+                         "REPRO_TRACE=1 (or =<path>) enables the same "
+                         "without a flag")
     args = ap.parse_args(argv)
 
     ycsb_flags = (args.write_frac, args.ro_frac, args.theta)
@@ -230,18 +283,26 @@ def main(argv=None):
     elif args.arrival_rate <= 0:
         ap.error(f"--arrival-rate must be > 0 (got {args.arrival_rate}); "
                  "omit the flag for the closed-loop retry buffer")
+    trace_path = args.trace
+    if trace_path is None:
+        env = os.environ.get("REPRO_TRACE", "")
+        if env and env != "0":
+            trace_path = (env if env not in ("1", "true")
+                          else "reports/txn_trace.json")
     grans = {"coarse": (0,), "fine": (1,), "both": (0, 1)}[args.granularity]
-    rows = run_grid(args.workload, args.cc, grans, args.lanes, args.waves,
-                    scale=args.scale, n_keys=args.n_keys, seed=args.seed,
-                    backend=args.backend, mv_depth=args.mv_depth,
-                    snapshot_age=args.snapshot_age,
-                    write_frac=(0.5 if args.write_frac is None
-                                else args.write_frac),
-                    ro_frac=0.0 if args.ro_frac is None else args.ro_frac,
-                    theta=0.9 if args.theta is None else args.theta,
-                    arrival_rate=args.arrival_rate or 0.0,
-                    queue_cap=args.queue_cap or 0,
-                    max_incarnations=args.max_incarnations or 0)
+    rows, points = run_grid(
+        args.workload, args.cc, grans, args.lanes, args.waves,
+        scale=args.scale, n_keys=args.n_keys, seed=args.seed,
+        backend=args.backend, mv_depth=args.mv_depth,
+        snapshot_age=args.snapshot_age,
+        write_frac=(0.5 if args.write_frac is None
+                    else args.write_frac),
+        ro_frac=0.0 if args.ro_frac is None else args.ro_frac,
+        theta=0.9 if args.theta is None else args.theta,
+        arrival_rate=args.arrival_rate or 0.0,
+        queue_cap=args.queue_cap or 0,
+        max_incarnations=args.max_incarnations or 0,
+        per_wave=bool(trace_path), return_points=True)
     for r in rows:
         line = (f"{r['workload']} {r['cc']:9s} "
                 f"{'fine' if r['granularity'] else 'coarse'} "
@@ -256,6 +317,14 @@ def main(argv=None):
     if args.json:
         with open(args.json, "w") as f:
             json.dump(rows, f, indent=1)
+    if trace_path:
+        from repro.analysis.trace import sweep_trace, write_trace
+        d = os.path.dirname(trace_path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        write_trace(trace_path, sweep_trace(points))
+        print(f"wrote Chrome trace -> {trace_path} ({len(points)} grid "
+              "points; load in chrome://tracing or ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,233 @@
+"""Abort-cause taxonomy (core/types.py ABORT_CAUSE): the conservation
+invariant — per-cause counts sum EXACTLY to total aborts — for every
+mechanism x granularity x backend, locally and through the distributed
+stats vector at pipeline depths 1 and 2, plus the per-mechanism cause
+semantics and the open-loop incarnation-cap reclassification identity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, settings, st
+from repro.core import distributed as D
+from repro.core import types as t
+from repro.core.engine import hot_records, run, sweep
+from repro.core.types import EngineConfig
+from repro.workloads import PoissonArrivals, YCSBWorkload
+
+# Small but contended so every mechanism actually aborts.
+WL = YCSBWorkload.make(n_keys=64, theta=0.9)
+ALL_CCS = sorted(t.CC_NAMES)
+
+
+def _cfg(cc, gran=1, backend="jnp", lanes=16, mv_depth=3, **kw):
+    # mv_depth stays set even for single-version ccs: sweep() derives the
+    # MV mechanisms' configs from the base one.
+    return EngineConfig(
+        cc=cc, lanes=lanes, slots=WL.slots, n_records=WL.n_records,
+        n_groups=WL.n_groups, n_cols=WL.n_cols, n_txn_types=WL.n_txn_types,
+        granularity=gran, n_rings=WL.n_rings, backend=backend,
+        mv_depth=mv_depth, **kw)
+
+
+# ------------------------------------------------------- local engine
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+@pytest.mark.parametrize("gran", [0, 1])
+def test_local_conservation_every_mechanism(gran, backend):
+    """Acceptance criterion: sum(per-cause) == aborts for every mechanism
+    at both granularities on both backends, via the vmapped sweep."""
+    pts = sweep(_cfg(t.CC_OCC, gran, backend), WL, 12, ccs=ALL_CCS,
+                grans=(gran,), lane_counts=(16,))
+    assert len(pts) == len(ALL_CCS)
+    for p in pts:
+        assert p.abort_causes is not None
+        assert all(c >= 0 for c in p.abort_causes)
+        assert sum(p.abort_causes) == p.aborts, \
+            (t.CC_NAMES[p.cc], p.abort_causes, p.aborts)
+        assert p.aborts > 0, t.CC_NAMES[p.cc]   # contended: causes real
+
+
+def test_per_wave_causes_sum_to_totals():
+    """per_wave=True decomposes the same totals wave by wave: each wave's
+    cause row sums to that wave's aborts, and the rows sum to the point's
+    abort_causes."""
+    (p,) = sweep(_cfg(t.CC_OCC), WL, 10, ccs=[t.CC_OCC], grans=(1,),
+                 lane_counts=(16,), per_wave=True)
+    pw_causes = np.asarray(p.per_wave_causes)
+    pw_aborts = np.asarray(p.per_wave_aborts)
+    np.testing.assert_array_equal(pw_causes.sum(axis=1), pw_aborts)
+    np.testing.assert_array_equal(pw_causes.sum(axis=0),
+                                  np.asarray(p.abort_causes))
+
+
+def test_cause_semantics_per_mechanism():
+    """Which causes each mechanism can emit, closed-loop: occ/tictoc
+    aborts are read validation; 2pl aborts are wound locks; the
+    multi-version pair aborts on stale snapshots and write-write
+    first-committer-wins, never read validation (mvcc)."""
+    pts = {t.CC_NAMES[p.cc]: p
+           for p in sweep(_cfg(t.CC_OCC), WL, 12, ccs=ALL_CCS, grans=(1,),
+                          lane_counts=(16,))}
+    for name in ("occ", "tictoc"):
+        c = pts[name].abort_causes
+        assert c[t.CAUSE_READ_VAL] == pts[name].aborts, (name, c)
+    c = pts["2pl"].abort_causes
+    assert c[t.CAUSE_LOCK_WOUND] == pts["2pl"].aborts, c
+    c = pts["mvcc"].abort_causes
+    assert (c[t.CAUSE_STALE_SNAPSHOT] + c[t.CAUSE_WW]
+            == pts["mvcc"].aborts), c
+    assert c[t.CAUSE_READ_VAL] == 0, c
+
+
+def test_run_carries_causes_and_hot_records():
+    """run() returns the same invariant plus the top-k conflict histogram
+    (track_conflicts): hot records sorted by descending conflict count,
+    every entry a real record id with a positive count."""
+    res = run(_cfg(t.CC_OCC, track_conflicts=True), WL, 12, seed=2)
+    assert sum(res.abort_causes) == res.aborts > 0
+    assert res.per_wave_causes is not None
+    assert res.hot_records, "contended run must surface hot records"
+    counts = [hits for _, _, hits, _ in res.hot_records]
+    assert counts == sorted(counts, reverse=True)
+    assert all(hits >= peak > 0
+               for _, _, hits, peak in res.hot_records)
+    assert all(0 <= rec < WL.n_records and 0 <= grp < WL.n_groups
+               for rec, grp, _, _ in res.hot_records)
+
+
+def test_open_loop_inc_cap_identity_local():
+    """Open loop, depth-1 semantics: a terminal abort (incarnation cap)
+    reclassifies to CAUSE_INC_CAP, so causes[INC_CAP] == inc_drops
+    exactly, and the conservation sum still holds over ALL aborts."""
+    res = run(_cfg(t.CC_OCC, arrival_rate=16.0, queue_cap=64,
+                   max_incarnations=2, lat_bins=16), WL, 25, seed=3)
+    assert res.inc_drops > 0
+    assert res.abort_causes[t.CAUSE_INC_CAP] == res.inc_drops
+    assert sum(res.abort_causes) == res.aborts
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 2**16), max_inc=st.integers(0, 3))
+def test_property_causes_partition_aborts(seed, max_inc):
+    """Property (any seed / incarnation cap): each cause count is bounded
+    by total aborts and the counts partition them exactly."""
+    res = run(_cfg(t.CC_OCC, arrival_rate=12.0, queue_cap=48,
+                   max_incarnations=max_inc, lat_bins=8), WL, 15,
+              seed=seed)
+    assert all(0 <= c <= res.aborts for c in res.abort_causes)
+    assert sum(res.abort_causes) == res.aborts
+    assert res.abort_causes[t.CAUSE_INC_CAP] == res.inc_drops
+
+
+# ------------------------------------------------- distributed engine
+def _dist_inputs(rng, waves, T, K, N):
+    keys = jnp.asarray(rng.integers(0, N, (waves, T, K), dtype=np.int32))
+    groups = jnp.asarray(rng.integers(0, 2, (waves, T, K),
+                                      dtype=np.int32))
+    kinds = jnp.asarray(rng.choice([t.READ, t.WRITE],
+                                   (waves, T, K)).astype(np.int32))
+    prio = jnp.asarray(np.stack(
+        [np.random.default_rng(w).permutation(T)
+         for w in range(waves)]).astype(np.uint32))
+    return keys, groups, kinds, prio
+
+
+def _dist_stats(cc, backend, depth, waves=8):
+    mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+    ns = len(jax.devices())
+    N, T, K = 128, 8, 4
+    cfg = D.DistConfig(n_records=N, n_groups=2, lanes_per_shard=T,
+                       slots=K, cc=cc, backend=backend,
+                       mv_depth=3 if cc != "occ" else 0,
+                       pipeline_depth=depth, route_cap=2 * K)
+    keys, groups, kinds, prio = _dist_inputs(
+        np.random.default_rng(0), waves, ns * T, K, N)
+    run_fn = jax.jit(D.make_run_fn(cfg, mesh, waves))
+    _, _, stats = run_fn(keys, groups, kinds, prio,
+                         D.init_tables(cfg, mesh), jnp.uint32(0))
+    return np.asarray(stats).reshape(waves, ns, D.STATS_LEN).astype(
+        np.int64)
+
+
+@pytest.mark.parametrize("cc", ["occ", "mvcc", "mvocc"])
+def test_distributed_conservation_and_depth_parity(cc):
+    """Acceptance criterion: the stats vector's per-cause slots sum to
+    its abort slot PER WAVE PER SHARD, and the software-pipelined wave
+    (depth 2) reports bit-identical per-cause totals to the synchronous
+    one (depth 1)."""
+    s1 = _dist_stats(cc, "jnp", 1)
+    np.testing.assert_array_equal(
+        s1[:, :, D.STAT_CAUSES].sum(axis=2), s1[:, :, D.STAT_ABORTS])
+    assert s1[:, :, D.STAT_ABORTS].sum() > 0, "contended: causes real"
+    # capacity drops are forced by the small route_cap and classified
+    assert s1[:, :, D.STAT_CAUSE0 + t.CAUSE_CAPACITY].sum() > 0
+    s2 = _dist_stats(cc, "jnp", 2)
+    np.testing.assert_array_equal(
+        s2[:, :, D.STAT_CAUSES].sum(axis=2), s2[:, :, D.STAT_ABORTS])
+    np.testing.assert_array_equal(
+        s1[:, :, D.STAT_CAUSES].sum(axis=(0, 1)),
+        s2[:, :, D.STAT_CAUSES].sum(axis=(0, 1)))
+
+
+def test_distributed_backend_parity_on_causes():
+    """jnp and pallas(interpret) report identical per-cause counts."""
+    a = _dist_stats("occ", "jnp", 1, waves=4)
+    b = _dist_stats("occ", "pallas", 1, waves=4)
+    np.testing.assert_array_equal(a[:, :, D.STAT_CAUSES],
+                                  b[:, :, D.STAT_CAUSES])
+
+
+def _dist_gen(n_total, K, N, seed_base=900):
+    # Mixed reads+writes on a tiny keyspace: OCC aborts are READ
+    # validation (blind writes never abort), and the contention is high
+    # enough that retries hit the incarnation cap even on a single-device
+    # mesh.
+    def gen(w):
+        rng = np.random.default_rng(seed_base + w)
+        return (jnp.asarray(rng.integers(0, N, (n_total, K),
+                                         dtype=np.int32)),
+                jnp.asarray(rng.integers(0, 2, (n_total, K),
+                                         dtype=np.int32)),
+                jnp.asarray(rng.choice([t.READ, t.WRITE],
+                                       (n_total, K)).astype(np.int32)),
+                jnp.asarray(rng.permutation(n_total).astype(np.uint32)))
+    return gen
+
+
+@pytest.mark.parametrize("depth", [1, 2])
+def test_distributed_open_loop_causes(depth):
+    """Open loop through the sharded admission rings: conservation stays
+    exact at both depths; causes[INC_CAP] == inc_drops exactly at depth 1,
+    and bounded above by it when retries pipeline (a ring-overflow-
+    rejected retry keeps its validation cause, core/distributed.py)."""
+    mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+    ns = len(jax.devices())
+    N, T, K = 16, 8, 4
+    cfg = D.DistConfig(n_records=N, n_groups=2, lanes_per_shard=T,
+                       slots=K, cc="occ", pipeline_depth=depth,
+                       queue_cap=24, max_incarnations=1, lat_bins=8)
+    arr = PoissonArrivals(rate=0.9 * ns * T, seed=5).shard_counts(
+        18, ns, T)
+    s = D.run_open_loop(cfg, mesh, arr, _dist_gen(ns * T, K, N), 18)
+    assert sum(s["abort_causes"]) == s["aborts"]
+    assert s["inc_drops"] > 0
+    if cfg.depth(ns) == 1:
+        assert s["abort_causes"][t.CAUSE_INC_CAP] == s["inc_drops"]
+    else:
+        assert s["abort_causes"][t.CAUSE_INC_CAP] <= s["inc_drops"]
+
+
+# ------------------------------------------------------------ the enum
+def test_cause_enum_is_closed():
+    """CAUSE_NAMES covers exactly the N_ABORT_CAUSES codes, CAUSE_NONE
+    sits one past the end (the scatter-drop index cause_counts relies
+    on), and cause_counts drops it exactly."""
+    assert sorted(t.CAUSE_NAMES) == list(range(t.N_ABORT_CAUSES))
+    assert t.CAUSE_NONE == t.N_ABORT_CAUSES
+    lane_cause = jnp.asarray([t.CAUSE_WW, t.CAUSE_NONE, t.CAUSE_WW,
+                              t.CAUSE_READ_VAL], jnp.int32)
+    aborted = jnp.asarray([True, False, True, True])
+    got = np.asarray(t.cause_counts(lane_cause, aborted))
+    want = np.zeros(t.N_ABORT_CAUSES, np.int32)
+    want[t.CAUSE_WW], want[t.CAUSE_READ_VAL] = 2, 1
+    np.testing.assert_array_equal(got, want)

@@ -3,8 +3,8 @@ perf dashboard (peak-point selection, kernel-op attribution cells, the
 distributed txn_scaling section, and malformed-row resilience)."""
 import json
 
-from benchmarks.perf_dashboard import (_ops_cell, load_rows, main,
-                                       render_markdown)
+from benchmarks.perf_dashboard import (_causes_cell, _ops_cell, load_rows,
+                                       main, render_markdown)
 
 MECH_ROWS = [
     {"workload": "ycsb", "cc": "occ", "granularity": 1, "lanes": 16,
@@ -42,11 +42,13 @@ def test_ops_cell_attribution():
 def test_render_picks_peak_point_per_group():
     rows = [dict(r, _src="BENCH_a.json") for r in MECH_ROWS]
     md = render_markdown(rows, [])
+    # rows predating the cost model / cause taxonomy render '—' in the
+    # B/txn, flop/txn, roofline, and abort-causes columns
     assert "| ycsb | occ | fine | pallas | 25.500 | 64 | 20.00% " \
-           "| 3/3 pallas | BENCH_a.json |" in md
+           "| — | — | — | — | 3/3 pallas | BENCH_a.json |" in md
     assert "10.000" not in md                     # dominated point dropped
     assert "| ycsb | tictoc | coarse | jnp | 18.000 | 64 | 30.00% " \
-           "| xla | BENCH_a.json |" in md
+           "| — | — | — | — | xla | BENCH_a.json |" in md
 
 
 def test_render_distributed_section():
@@ -55,9 +57,9 @@ def test_render_distributed_section():
     # rows without the cc / read-only / pipeline-wire fields (pre-MV,
     # pre-pipeline txn_scaling files) default to occ and render unknown
     # splits as '?' and unknown depth/wire columns as '—'
-    assert "| 0 | occ | — | 50.0 | 900 | ? | ? | 0.0 | — | — | jnp | — " \
-           "| txn_scaling.json |" in md
-    assert "| 8 | mvcc | — | 12.5 | 850 | 120 | 3 | 64.0 | — | — " \
+    assert "| 0 | occ | — | 50.0 | 900 | ? | ? | 0.0 | — | — | — | jnp " \
+           "| — | txn_scaling.json |" in md
+    assert "| 8 | mvcc | — | 12.5 | 850 | 120 | 3 | 64.0 | — | — | — " \
            "| pallas | 4/4 pallas | txn_scaling.json |" in md
 
 
@@ -76,12 +78,85 @@ def test_render_distributed_depth_and_wire_columns():
             dict(base, pipeline_depth=1)]
     md = render_markdown([], rows)
     assert "| 8 | occ | 1 | 100.0 | 800 | 0 | 0 | 16.0 | 18.0 " \
-           "| 1024 / 4096 | jnp | — | txn_scaling.json |" in md
+           "| 1024 / 4096 | — | jnp | — | txn_scaling.json |" in md
     assert "| 8 | occ | 2 | 150.0 | 800 | 0 | 0 | 16.0 | 18.0 " \
-           "| 1024 / 4096 | jnp | — | txn_scaling.json |" in md
+           "| 1024 / 4096 | — | jnp | — | txn_scaling.json |" in md
     assert md.index("| 8 | occ | 1 |") < md.index("| 8 | occ | 2 |")
     # the legend explains the columns
     assert "verdict B/wave" in md and "depth" in md
+
+
+def test_causes_cell_shapes():
+    assert _causes_cell(None) == "—"
+    assert _causes_cell("bogus") == "—"
+    assert _causes_cell({"read_val": 56, "ww": 0}) == "read_val:56"
+    # txn_scaling rows store the code-ordered 6-list
+    assert _causes_cell([0, 3, 0, 0, 9, 2]) == "capacity:3 ww:9 read_val:2"
+    assert _causes_cell({"read_val": 0}) == "none"
+    assert _causes_cell({"read_val": "junk"}) == "—"
+
+
+def test_render_mech_cost_and_cause_columns():
+    """Rows carrying the ISSUE 8 observability fields render the per-cause
+    breakdown, the analytic B/txn + flop/txn, and the roofline fraction."""
+    r = dict(MECH_ROWS[1], _src="BENCH_a.json",
+             abort_causes={"inc_cap": 0, "capacity": 0, "stale_snapshot": 0,
+                           "lock_wound": 0, "ww": 0, "read_val": 56},
+             bytes_per_txn=512.0, flops_per_txn=128.0,
+             roofline_frac=0.00104, roofline_bound="memory",
+             roofline_chip="tpu_v5e")
+    md = render_markdown([r], [])
+    assert "| ycsb | occ | fine | pallas | 25.500 | 64 | 20.00% " \
+           "| read_val:56 | 512 | 128 | 0.10% (memory) | 3/3 pallas " \
+           "| BENCH_a.json |" in md
+
+
+def test_render_distributed_dedupes_repeat_runs():
+    """Regression (ISSUE 8 satellite): txn_scaling appends a row per run,
+    so three runs of one config stacked three near-identical rows in the
+    report.  The dashboard keys by (cc, shards, depth, backend) and keeps
+    only the latest (last-in-file) row; distinct depths/backends all
+    survive."""
+    base = {"shards": 1, "cc": "mvcc", "pipeline_depth": 1, "commits": 800,
+            "ro_commits": 0, "ro_aborts": 0, "coll_bytes_per_wave": 0,
+            "backend": "jnp", "kernel_ops": {}, "_src": "txn_scaling.json"}
+    rows = [dict(base, waves_per_s=10.0), dict(base, waves_per_s=20.0),
+            dict(base, waves_per_s=30.0),             # latest run wins
+            dict(base, pipeline_depth=2, waves_per_s=44.0),
+            dict(base, backend="pallas", waves_per_s=55.0)]
+    md = render_markdown([], rows)
+    dup = [ln for ln in md.splitlines()
+           if ln.startswith("| 1 | mvcc | 1 |") and "| jnp |" in ln]
+    assert len(dup) == 1, md
+    assert "| 30.0 |" in dup[0]
+    assert "| 10.0 |" not in md and "| 20.0 |" not in md
+    assert "| 44.0 |" in md and "| 55.0 |" in md     # other configs kept
+    assert "latest run wins" in md                   # legend explains it
+
+
+def test_render_distributed_open_loop_rows_disambiguated():
+    """The open-loop row family shares (cc, shards, depth) with the
+    closed-loop rows; mode + granularity join the dedupe key and the cc
+    cell so the three rows of one config no longer render as an
+    identical-looking stack."""
+    base = {"shards": 1, "cc": "mvcc", "pipeline_depth": 1, "commits": 800,
+            "waves_per_s": 73.8, "ro_commits": 0, "ro_aborts": 0,
+            "coll_bytes_per_wave": 0, "backend": "jnp", "kernel_ops": {},
+            "_src": "txn_scaling.json"}
+    rows = [base,
+            dict(base, mode="open_loop", granularity=0, waves_per_s=1.4),
+            dict(base, mode="open_loop", granularity=1, waves_per_s=1.6)]
+    md = render_markdown([], rows)
+    assert "| 1 | mvcc | 1 | 73.8 |" in md
+    assert "| 1 | mvcc open/coarse | 1 | 1.4 |" in md
+    assert "| 1 | mvcc open/fine | 1 | 1.6 |" in md
+
+
+def test_render_distributed_causes_column():
+    r = dict(DIST_ROWS[1], _src="txn_scaling.json",
+             abort_causes=[0, 60, 0, 0, 159, 0])
+    md = render_markdown([], [r])
+    assert "| capacity:60 ww:159 | pallas |" in md
 
 
 def test_string_throughput_compares_numerically():

@@ -106,7 +106,8 @@ def test_sweep_pallas_backend_parity():
 
 
 def test_txn_bench_grid_schema():
-    """txn_bench --json schema: the seed keys plus backend attribution."""
+    """txn_bench --json schema: the seed keys plus backend attribution and
+    the observability fields (per-cause aborts + analytic cost model)."""
     from repro.launch.txn_bench import run_grid
     rows = run_grid("ycsb", ["occ", "tictoc"], (0, 1), [4, 8], 4,
                     n_keys=512, backend="jnp")
@@ -114,11 +115,14 @@ def test_txn_bench_grid_schema():
     want = {"workload", "cc", "granularity", "lanes", "waves", "commits",
             "aborts", "abort_rate", "ro_commits", "ro_aborts",
             "ro_abort_rate", "throughput", "ext_events", "wall_s",
-            "backend", "kernel_ops"}
+            "backend", "kernel_ops", "abort_causes", "bytes_per_txn",
+            "flops_per_txn", "roofline_frac", "roofline_bound",
+            "roofline_chip"}
     for r in rows:
         assert set(r) == want
         assert r["backend"] == "jnp"
         assert r["commits"] + r["aborts"] == r["lanes"] * r["waves"]
+        assert sum(r["abort_causes"].values()) == r["aborts"]
         assert all(v == "xla" for v in r["kernel_ops"].values())
 
 

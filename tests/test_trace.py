@@ -1,0 +1,103 @@
+"""analysis/trace.py: the wave-level Chrome-trace exporter — event
+structure from real sweep points, the minimal schema validator CI runs on
+every emitted file, and the refuse-to-write-invalid guard."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.analysis.trace import (PH_COMPLETE, PH_COUNTER, PH_METADATA,
+                                  point_events, sweep_trace,
+                                  validate_chrome_trace, write_trace)
+from repro.core import types as t
+from repro.core.engine import sweep
+from repro.core.types import EngineConfig
+from repro.workloads import YCSBWorkload
+
+WL = YCSBWorkload.make(n_keys=64, theta=0.9)
+
+
+def _points(per_wave=True):
+    cfg = EngineConfig(cc=t.CC_OCC, lanes=8, slots=WL.slots,
+                       n_records=WL.n_records, n_groups=WL.n_groups,
+                       n_cols=WL.n_cols, n_txn_types=WL.n_txn_types,
+                       n_rings=WL.n_rings)
+    return sweep(cfg, WL, 6, ccs=[t.CC_OCC, t.CC_TICTOC], grans=(1,),
+                 lane_counts=(8,), per_wave=per_wave)
+
+
+def test_sweep_trace_valid_and_loadable(tmp_path):
+    """Acceptance criterion: the exported trace passes the schema check
+    (the shape chrome://tracing / Perfetto require) and round-trips
+    through JSON."""
+    trace = sweep_trace(_points())
+    assert validate_chrome_trace(trace) == []
+    path = write_trace(str(tmp_path / "trace.json"), trace)
+    again = json.loads(open(path).read())
+    assert validate_chrome_trace(again) == []
+    assert again["displayTimeUnit"] == "ms"
+
+
+def test_trace_structure_matches_points():
+    """One process row per grid point (M name + M thread + per-wave X/C
+    pairs), X args carry the wave's commit/abort/per-cause deltas, and
+    the cause args sum to the wave's aborts (the conservation invariant,
+    visible in the viewer)."""
+    pts = _points()
+    trace = sweep_trace(pts)
+    evs = trace["traceEvents"]
+    meta = [e for e in evs if e["ph"] == PH_METADATA
+            and e["name"] == "process_name"]
+    assert [m["args"]["name"] for m in meta] == ["occ/fine/T8",
+                                                "tictoc/fine/T8"]
+    xs = [e for e in evs if e["ph"] == PH_COMPLETE]
+    cs = [e for e in evs if e["ph"] == PH_COUNTER]
+    assert len(xs) == len(cs) == 2 * 6          # two points x six waves
+    for e in xs:
+        assert e["dur"] > 0
+        causes = sum(v for k, v in e["args"].items()
+                     if k.startswith("abort_"))
+        assert causes == e["args"]["aborts"]
+    p0 = [e for e in xs if e["pid"] == 1]
+    assert sum(e["args"]["commits"] for e in p0) == pts[0].commits
+    # ts is cumulative simulated us: strictly increasing within a row
+    ts = [e["ts"] for e in p0]
+    assert ts == sorted(ts) and len(set(ts)) == len(ts)
+
+
+def test_points_without_per_wave_data_are_skipped():
+    assert sweep_trace(_points(per_wave=False))["traceEvents"] == []
+
+
+def test_point_events_without_causes_or_us():
+    evs = point_events("x", 3, [5, 4], [1, 0], None)
+    xs = [e for e in evs if e["ph"] == PH_COMPLETE]
+    assert [e["dur"] for e in xs] == [1.0, 1.0]    # no us -> unit waves
+    assert "abort_ww" not in xs[0]["args"]
+
+
+def test_zero_duration_waves_get_min_width():
+    (e,) = [e for e in point_events("x", 1, [1], [0], np.asarray([0.0]))
+            if e["ph"] == PH_COMPLETE]
+    assert e["dur"] >= 1e-3
+
+
+def test_validator_rejects_broken_events():
+    ok = sweep_trace(_points())
+    assert validate_chrome_trace("nope") != []
+    assert validate_chrome_trace({}) != []
+    assert validate_chrome_trace({"traceEvents": "x"}) != []
+    assert validate_chrome_trace({"traceEvents": []}) != []
+    bad_ph = {"traceEvents": [dict(ok["traceEvents"][2], ph=7)]}
+    assert any("ph" in e for e in validate_chrome_trace(bad_ph))
+    no_ts = {"traceEvents": [{"ph": "X", "name": "w", "pid": 1, "tid": 0,
+                              "dur": 1.0, "ts": "soon"}]}
+    assert any("ts" in e for e in validate_chrome_trace(no_ts))
+    no_args = {"traceEvents": [{"ph": "M", "name": "process_name"}]}
+    assert any("args" in e for e in validate_chrome_trace(no_args))
+
+
+def test_write_trace_refuses_invalid(tmp_path):
+    with pytest.raises(ValueError, match="invalid Chrome trace"):
+        write_trace(str(tmp_path / "bad.json"), {"traceEvents": []})
+    assert not (tmp_path / "bad.json").exists()

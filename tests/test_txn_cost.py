@@ -1,0 +1,127 @@
+"""analysis/txn_cost.py: the per-op roofline cost model — WAVE_OPS pinned
+against the backend attribution tables (and the tictoc source), the
+granularity switch visible as a byte difference, and the memory-bound
+verdict on every chip in the shared peaks table."""
+import re
+
+import repro.analysis.peaks as peaks
+import repro.analysis.roofline as roofline
+from repro.analysis.txn_cost import (DIST_WAVE_OPS, WAVE_OPS, WaveShape,
+                                     op_costs, txn_cost, wave_cost)
+from repro.core import backend as kb
+from repro.core import types as t
+
+SHAPE = WaveShape(lanes=64, slots=16, n_groups=2, granularity=1, mv_depth=4)
+
+
+# ---------------------------------------------------- op-count pinning
+def test_wave_ops_pin_backend_attribution():
+    """WAVE_OPS mirrors each mechanism's backend call set.  CC_OPS
+    (core/backend.py) is the attribution table benchmark rows record, and
+    it additionally lists segment_count for every mechanism (the ENGINE's
+    per-wave install-contention counter, not a mechanism op) — so the op
+    SETS must agree modulo that one op.  A new backend call added to a
+    cc/*.py wave lands in CC_OPS and fails here until the cost model
+    learns its traffic."""
+    assert set(WAVE_OPS) == set(t.CC_IDS), "one entry per mechanism"
+    for name, ops in WAVE_OPS.items():
+        want = set(kb.CC_OPS[t.CC_IDS[name]])
+        assert set(ops) | {"segment_count"} == want | {"segment_count"}, \
+            (name, sorted(ops), sorted(want))
+        assert all(k >= 1 for k in ops.values()), name
+
+
+def test_dist_wave_ops_pin_backend_attribution():
+    assert set(DIST_WAVE_OPS["occ"]) == set(kb.DIST_OPS)
+    for cc in ("mvcc", "mvocc"):
+        assert set(DIST_WAVE_OPS[cc]) == set(kb.DIST_MV_OPS), cc
+
+
+def test_tictoc_counts_pin_source():
+    """The docstring's example claim — tictoc's 2 ts_gather + 2
+    segment_count + 3 ts_install_max — counted in cc/tictoc.py itself
+    (those calls are all local to the module)."""
+    src = open("src/repro/core/cc/tictoc.py").read()
+    for op in ("ts_gather", "segment_count", "ts_install_max"):
+        calls = len(re.findall(rf"be\.{op}\(", src))
+        assert calls == WAVE_OPS["tictoc"][op], (op, calls)
+
+
+def test_every_counted_op_has_a_descriptor():
+    costs = op_costs(SHAPE)
+    for table in (WAVE_OPS, DIST_WAVE_OPS):
+        for name, ops in table.items():
+            for op in ops:
+                assert op in costs, (name, op)
+
+
+# ---------------------------------------------------- cost-model shape
+def test_granularity_is_a_byte_difference():
+    """The paper's switch, in traffic terms: fine timestamps probe ONE
+    group word where coarse probes the whole row — strictly fewer bytes
+    per txn for every mechanism once n_groups > 1."""
+    for cc in WAVE_OPS:
+        fine = txn_cost(cc, SHAPE)
+        coarse = txn_cost(cc, WaveShape(lanes=64, slots=16, n_groups=2,
+                                        granularity=0, mv_depth=4))
+        assert fine["bytes_per_txn"] < coarse["bytes_per_txn"], cc
+
+
+def test_memory_bound_on_every_chip():
+    """Gather/scatter over uint32 words with a few compares per cell:
+    intensity sits far below every ridge in the shared peaks table."""
+    for chip in peaks.HW_PEAKS:
+        for cc in WAVE_OPS:
+            c = txn_cost(cc, SHAPE, chip=chip)
+            assert c["bound"] == "memory", (chip, cc)
+            assert 0.0 < c["roofline_frac"] < 0.05, (chip, cc, c)
+        for cc in DIST_WAVE_OPS:
+            c = txn_cost(cc, WaveShape(lanes=64, slots=16, n_shards=8,
+                                       route_cap=128, mv_depth=4),
+                         distributed=True, chip=chip)
+            assert c["bound"] == "memory", (chip, cc)
+
+
+def test_bytes_per_txn_lane_invariant():
+    """All ops are per-(lane x slot) linear except the distributed route
+    buffers, so LOCAL bytes-per-txn is lane-count invariant."""
+    a = txn_cost("occ", WaveShape(lanes=8, slots=16))
+    b = txn_cost("occ", WaveShape(lanes=256, slots=16))
+    assert a["bytes_per_txn"] == b["bytes_per_txn"]
+
+
+def test_mv_depth_raises_mv_gather_cost():
+    shallow = wave_cost("mvcc", WaveShape(lanes=64, slots=16, mv_depth=1))
+    deep = wave_cost("mvcc", WaveShape(lanes=64, slots=16, mv_depth=8))
+    assert deep["bytes_per_wave"] > shallow["bytes_per_wave"]
+
+
+def test_distributed_adds_route_and_verdict_traffic():
+    s = WaveShape(lanes=64, slots=16, n_shards=8, route_cap=128)
+    local = wave_cost("occ", s)
+    dist = wave_cost("occ", s, distributed=True)
+    assert dist["bytes_per_wave"] > local["bytes_per_wave"]
+    assert "route_pack" in dist["ops"] and "verdict_pack" in dist["ops"]
+
+
+def test_unknown_mechanism_raises():
+    try:
+        wave_cost("nope", SHAPE)
+    except KeyError as e:
+        assert "nope" in str(e)
+    else:
+        raise AssertionError("expected KeyError")
+
+
+# ---------------------------------------------------- shared peaks table
+def test_roofline_reexports_shared_peaks():
+    """ISSUE 8 satellite: the hardware peaks moved to analysis/peaks.py;
+    analysis/roofline.py must consume the SAME constants (single source of
+    truth for both the collective model and the txn cost model)."""
+    assert roofline.PEAK_FLOPS is peaks.PEAK_FLOPS
+    assert roofline.HBM_BW is peaks.HBM_BW
+    assert roofline.LINK_BW is peaks.LINK_BW
+    d = peaks.HW_PEAKS[peaks.DEFAULT_CHIP]
+    assert peaks.PEAK_FLOPS == d["peak_flops"]
+    assert peaks.ridge(peaks.DEFAULT_CHIP) == (d["peak_flops"]
+                                               / d["hbm_bw"])
