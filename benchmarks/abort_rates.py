@@ -28,7 +28,7 @@ def main(argv=None):
 
     scale = 1.0
     rows = sweep("tpcc", lanes=[64, 128], waves=args.waves, scale=scale,
-                 quiet=True)
+                 quiet=True, warm=True)
     save_rows(rows, args.json)
 
     print("lanes  cc        gran    abort%")
@@ -53,7 +53,7 @@ def main(argv=None):
     n_keys = 1_000_000 if args.full else 100_000
     mv_rows = sweep("ycsb", ccs=["occ", "mvcc", "mvocc"], lanes=[64, 128],
                     waves=args.waves, n_keys=n_keys, write_frac=0.8,
-                    ro_frac=0.2, theta=0.9, quiet=True)
+                    ro_frac=0.2, theta=0.9, quiet=True, warm=True)
     for r in mv_rows:
         r["variant"] = "ycsb_writeheavy_ro"
     save_rows(rows + mv_rows, args.json)

@@ -9,16 +9,42 @@ CCS = ["occ", "tictoc", "2pl", "swisstm", "adaptive", "mvcc", "mvocc"]
 LANES = [8, 16, 32, 64, 96, 128]
 
 
+def warm_then_time(fn, *args, **kw):
+    """The warm-then-time pattern of benchmarks/txn_scaling.py, shared:
+    call ``fn`` once to compile and fill every cache (blocking until the
+    result is ready), then time a second, fully-warm call.  Returns
+    ``(result, seconds)``; the seconds never include compile time — for
+    grid sweeps the second call re-executes the compiled-sweep memo
+    (core/engine.py _SWEEP_PROGRAMS) instead of re-tracing."""
+    import jax
+    jax.block_until_ready(fn(*args, **kw))
+    t0 = time.time()
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return out, time.time() - t0
+
+
 def sweep(workload: str, *, ccs=None, lanes=None, grans=(0, 1), waves=300,
           scale=1.0, n_keys=1_000_000, seed=1, quiet=False, backend="jnp",
-          **wl_kw):
+          warm=False, **wl_kw):
     """One jitted sweep over the whole grid (core/engine.py sweep).
     Extra keywords (write_frac, ro_frac, theta, mv_depth) pass through to
-    ``run_grid``."""
+    ``run_grid``.  ``warm=True`` runs the grid twice through
+    ``warm_then_time`` and rewrites each row's ``wall_s`` from the warm
+    second pass, so no emitted row includes compile time."""
     from repro.launch.txn_bench import run_grid
-    ret = run_grid(workload, list(ccs or CCS), tuple(grans),
-                   list(lanes or LANES), waves, scale=scale, n_keys=n_keys,
-                   seed=seed, backend=backend, **wl_kw)
+    grid_args = (workload, list(ccs or CCS), tuple(grans),
+                 list(lanes or LANES), waves)
+    grid_kw = dict(scale=scale, n_keys=n_keys, seed=seed, backend=backend,
+                   **wl_kw)
+    if warm:
+        ret, dt = warm_then_time(run_grid, *grid_args, **grid_kw)
+        rows = ret[0] if isinstance(ret, tuple) else ret
+        wall = round(dt / max(len(rows), 1), 4)
+        for r in rows:
+            r["wall_s"] = wall
+    else:
+        ret = run_grid(*grid_args, **grid_kw)
     # return_points=True (the trace exporters) makes run_grid return
     # (rows, SweepPoints); plain callers get the row list as before.
     rows = ret[0] if isinstance(ret, tuple) else ret

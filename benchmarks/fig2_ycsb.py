@@ -29,7 +29,7 @@ def main(argv=None):
     print(f"# Fig 2a (coarse) + 2b (fine), {n_keys} keys "
           f"[{args.backend} backend, one jitted grid]")
     rows = sweep("ycsb", waves=args.waves, n_keys=n_keys,
-                 backend=args.backend)
+                 backend=args.backend, warm=True)
     save_rows(rows, args.json)
 
     # ordering checks

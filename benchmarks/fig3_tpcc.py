@@ -31,7 +31,7 @@ def main(argv=None):
     print(f"# Fig 3a (coarse) + 3b (fine), 8 warehouses, scale={scale} "
           f"[{args.backend} backend, one jitted grid]")
     rows = sweep("tpcc", waves=args.waves, scale=scale,
-                 backend=args.backend)
+                 backend=args.backend, warm=True)
     save_rows(rows, args.json)
 
     occ96f = one(rows, cc="occ", granularity=1, lanes=96)["throughput"]

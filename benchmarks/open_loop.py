@@ -57,7 +57,7 @@ def main(argv=None):
         # the compiled scan); occ + mvcc at both granularities per sweep.
         got = sweep("ycsb", ccs=["occ", "mvcc"], lanes=[T],
                     waves=args.waves, n_keys=args.n_keys,
-                    backend=args.backend, quiet=True,
+                    backend=args.backend, quiet=True, warm=True,
                     arrival_rate=rate, queue_cap=4 * T,
                     max_incarnations=args.max_incarnations,
                     per_wave=bool(trace_path),

@@ -181,6 +181,19 @@ def _per_txn_cell(r: dict, key: str) -> str:
     return "—" if v is None else f"{v:g}"
 
 
+def _dma_rows_cell(r: dict) -> str:
+    """'1024 (/3 vs unfused)' — the fused probe chain's modeled touched-row
+    DMA visits per wave next to the unfused-chain cut
+    (analysis/txn_cost.py probe_chain); '—' outside the probe family."""
+    rows = _coerce(r.get("dma_rows_per_wave"))
+    if rows is None:
+        return "—"
+    unf = _coerce(r.get("dma_rows_per_wave_unfused"))
+    if unf and rows:
+        return f"{rows:g} (/{unf / rows:g} vs unfused)"
+    return f"{rows:g}"
+
+
 def render_markdown(mech: list, dist: list) -> str:
     out = ["# Perf dashboard", "",
            "Aggregated from benchmark JSON rows (BENCH_*.json + "
@@ -221,11 +234,17 @@ def render_markdown(mech: list, dist: list) -> str:
                 "roofline cost model (analysis/txn_cost.py) at the peak "
                 "point's wave shape; roofline = fraction of the modeled "
                 "chip's binding roof; abort causes sum exactly to the "
-                "abort count (core/types.py ABORT_CAUSE taxonomy).", "",
+                "abort count (core/types.py ABORT_CAUSE taxonomy); "
+                "launches/wave and DMA rows/wave are the fused probe "
+                "chain's modeled launch count and touched-row visits, "
+                "with the cut vs the unfused chain (probe-family "
+                "mechanisms only).", "",
                 "| workload | cc | granularity | backend | peak thpt "
                 "(txn/us) | @lanes | abort rate | abort causes | B/txn "
-                "| flop/txn | roofline | kernel ops | source |",
-                "|---|---|---|---|---|---|---|---|---|---|---|---|---|"]
+                "| flop/txn | roofline | launches/wave | DMA rows/wave "
+                "| kernel ops | source |",
+                "|---|---|---|---|---|---|---|---|---|---|---|---|---|"
+                "---|---|"]
         for key in sorted(groups, key=str):
             r = groups[key]
             out.append(
@@ -236,6 +255,8 @@ def render_markdown(mech: list, dist: list) -> str:
                 f"| {_per_txn_cell(r, 'bytes_per_txn')} "
                 f"| {_per_txn_cell(r, 'flops_per_txn')} "
                 f"| {_roofline_cell(r)} "
+                f"| {_per_txn_cell(r, 'launches_per_wave')} "
+                f"| {_dma_rows_cell(r)} "
                 f"| {_ops_cell(r.get('kernel_ops', {}))} "
                 f"| {_src_of(r)} |")
         out.append("")

@@ -1,6 +1,6 @@
 """Per-op roofline cost model of the transaction engine's backend surface.
 
-Every mechanism's wave is a fixed pipeline of the fourteen kernel-backend
+Every mechanism's wave is a fixed pipeline of the fifteen kernel-backend
 ops (core/backend.py); each op's traffic is analytic in the wave shape —
 T lanes x K op slots against uint32 claim/version tables of ``cells``
 words per op probe (``n_groups`` at coarse granularity, 1 at fine; the
@@ -15,10 +15,23 @@ the roofline of ``analysis/peaks.py`` (the shared hardware peak table):
     frac_of_roofline= min(1, intensity / ridge(chip))
     bound           = memory below the ridge, compute above
 
-The engine's ops are all gather/scatter over uint32 words with a handful
-of compares per cell, so intensities sit far below any chip's ridge: the
-model says (and the dashboard shows) the engine is **memory-bound
-everywhere**, and mechanism cost differences are byte differences.
+The engine's ops are gather/scatter over uint32 words with a handful of
+compares per cell — PLUS, for the in-wave-minimum family (segment_count,
+claim_probe, wave_commit), the all-pairs same-cell wave term: every op
+compares its (key, group) against every other op's, O((T*K)^2) compares
+per call.  At small waves that term is noise and the engine is
+**memory-bound everywhere**; at large waves (T*K in the thousands) the
+quadratic flops dominate the linear table bytes and the probe family
+climbs toward — and past — the ridge.  Both regimes are pinned in
+tests/test_txn_cost.py.
+
+``probe_chain`` models the fused-wave launch accounting (ISSUE 9): the
+unfused probe chain (claim/probe RMW, XLA verdict reduction, version
+bump — per claim table) is 2–4 launches per wave, each re-visiting the
+wave's touched-row working set; the fused ``wave_commit`` megakernel is
+ONE launch and ONE row visit.  ``launches_per_wave`` and
+``dma_rows_per_wave`` (visits x ops) are the dashboard columns showing
+the >= 2x modeled row-traffic cut per mechanism.
 
 The op-call counts per wave (``WAVE_OPS``) mirror the mechanism sources
 one-to-one — e.g. tictoc's 1 claim_probe + 2 ts_gather + 2 segment_count
@@ -89,8 +102,9 @@ def op_costs(s: WaveShape) -> dict:
         "validate_dual": OpCost(WORD * n * (1 + s.n_groups),
                                 2.0 * n * (1 + s.n_groups)),
         "probe": OpCost(WORD * n * c, 1.0 * n * c),
-        # fused min-install + probe: one RMW pass answers both
-        "claim_probe": OpCost(2 * WORD * n * c, 3.0 * n * c),
+        # fused min-install + probe: one RMW pass answers both; the
+        # in-wave min is the all-pairs same-cell term — O(n^2) compares
+        "claim_probe": OpCost(2 * WORD * n * c, 3.0 * n * c + 2.0 * n * n),
         # scatter-min RMW
         "claim_scatter": OpCost(2 * WORD * n * c, 1.0 * n * c),
         "ts_gather": OpCost(WORD * n * c, 1.0 * n),
@@ -98,8 +112,17 @@ def op_costs(s: WaveShape) -> dict:
         "commit_install": OpCost(2 * WORD * n * c, 1.0 * n * c),
         # scatter-max RMW
         "ts_install_max": OpCost(2 * WORD * n * c, 1.0 * n * c),
-        # sort-free per-cell counts: key read + counter scatter-add
-        "segment_count": OpCost(2 * WORD * n, 2.0 * n),
+        # sort-free per-cell counts: key read + counter scatter-add; the
+        # per-cell count is an all-pairs key-equality reduction — O(n^2)
+        "segment_count": OpCost(2 * WORD * n, 2.0 * n + 2.0 * n * n),
+        # ISSUE 9 megakernel: claim-row RMW (install + probe, like
+        # claim_probe) + the all-pairs wave term + the in-VMEM verdict
+        # reduction, all in one launch.  Dual-table mechanisms count the
+        # op twice (one per claim table); the version bump rides the same
+        # launch but is still listed as commit_install (its version-row
+        # traffic is unchanged by fusion).
+        "wave_commit": OpCost(2 * WORD * n * c,
+                              4.0 * n * c + 2.0 * n * n),
         # 3 int32 channels in, 3 [ns, cap] buffers out + offset scan
         "route_pack": OpCost(WORD * 3 * (n + ns * cap), 4.0 * n),
         # ring scan: D slots x cells begin-words + head read per op
@@ -113,15 +136,17 @@ def op_costs(s: WaveShape) -> dict:
 
 
 #: Backend-op calls per wave per LOCAL mechanism — a one-to-one mirror of
-#: each cc/*.py source (claim_and_probe -> claim_probe, write_claims /
-#: plain_write_claims -> claim_scatter, bump_versions -> commit_install).
+#: each cc/*.py source (claim_probe_commit -> wave_commit, once per claim
+#: table; write_claims / plain_write_claims -> claim_scatter;
+#: bump_versions -> commit_install, which the probe family's fused launch
+#: absorbs without changing its version-row traffic).
 WAVE_OPS = {
-    "occ": {"claim_probe": 1, "commit_install": 1},
-    "tictoc": {"claim_probe": 1, "ts_gather": 2, "segment_count": 2,
+    "occ": {"wave_commit": 1, "commit_install": 1},
+    "tictoc": {"wave_commit": 1, "ts_gather": 2, "segment_count": 2,
                "ts_install_max": 3},
-    "2pl": {"claim_probe": 2, "commit_install": 1},
-    "swisstm": {"claim_probe": 1, "commit_install": 1},
-    "adaptive": {"claim_probe": 2, "commit_install": 1},
+    "2pl": {"wave_commit": 2, "commit_install": 1},
+    "swisstm": {"wave_commit": 1, "commit_install": 1},
+    "adaptive": {"wave_commit": 2, "commit_install": 1},
     "autogran": {"claim_scatter": 1, "validate_dual": 1,
                  "commit_install": 1},
     "mvcc": {"claim_scatter": 2, "validate": 2, "mv_gather": 1,
@@ -134,13 +159,48 @@ WAVE_OPS = {
 #: (core/distributed.py _make_phases; wire bytes live in
 #: distributed.wire_bytes_per_wave, not here).
 DIST_WAVE_OPS = {
-    "occ": {"route_pack": 1, "claim_probe": 1, "verdict_pack": 2,
+    "occ": {"route_pack": 1, "wave_commit": 1, "verdict_pack": 2,
             "verdict_unpack": 2, "commit_install": 1},
     "mvcc": {"route_pack": 1, "claim_probe": 2, "mv_gather": 1,
              "verdict_pack": 2, "verdict_unpack": 2, "mv_install": 1},
     "mvocc": {"route_pack": 1, "claim_probe": 2, "mv_gather": 1,
               "verdict_pack": 2, "verdict_unpack": 2, "mv_install": 1},
 }
+
+#: Launches in the UNFUSED probe chain per wave — the claim/probe RMW
+#: pass(es), the XLA verdict reduction, and the version bump that
+#: ``wave_commit`` collapses into ONE launch (base.claim_probe_commit's
+#: fuse_wave=False path).  occ/swisstm: claim_probe + verdict + bump = 3;
+#: tictoc: claim_probe + verdict = 2 (no bump — ts_install_max owns the
+#: timestamp writes); 2pl/adaptive: two claim tables + verdict + bump = 4.
+PROBE_CHAIN_LAUNCHES = {
+    "occ": 3,
+    "tictoc": 2,
+    "2pl": 4,
+    "swisstm": 3,
+    "adaptive": 4,
+}
+
+
+def probe_chain(cc: str, s: WaveShape, fused: bool = True) -> dict:
+    """Launch/row-traffic accounting of mechanism ``cc``'s probe chain at
+    shape ``s`` — the ISSUE 9 dashboard columns.
+
+    Each launch in the unfused chain re-visits the wave's touched-row
+    working set (the claim RMW fetches it, the verdict pass re-reads the
+    probe outputs derived from it, the bump re-fetches the version rows):
+    ``dma_rows_per_wave`` = visits x (T*K) row slots.  Fused, the whole
+    chain is ONE launch and each touched row rides ONE DMA round-trip —
+    the >= 2x modeled row-traffic cut per mechanism.
+    """
+    if cc not in PROBE_CHAIN_LAUNCHES:
+        raise KeyError(f"{cc!r} is not a probe-family mechanism (expected "
+                       f"one of {sorted(PROBE_CHAIN_LAUNCHES)})")
+    visits = 1 if fused else PROBE_CHAIN_LAUNCHES[cc]
+    return {
+        "launches_per_wave": visits,
+        "dma_rows_per_wave": visits * s.ops,
+    }
 
 
 def wave_cost(cc: str, s: WaveShape, distributed: bool = False) -> dict:

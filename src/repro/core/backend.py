@@ -2,7 +2,7 @@
 
 Every concurrency-control mechanism in ``core/cc/`` — and the distributed
 engine's shard-local wave (``core/distributed.py``) — touches shared state
-through exactly fourteen ops, the full surface a wave needs (DESIGN.md
+through exactly fifteen ops, the full surface a wave needs (DESIGN.md
 sections 5, 9 and 10):
 
     validate        read-set verdicts vs the writer-claim table (OCC rule;
@@ -14,6 +14,15 @@ sections 5, 9 and 10):
                     strongest-claimant probe (the probe family — OCC,
                     TicToc, 2PL, SwissTM, Adaptive — and the distributed
                     owner step; half the launches and claim-row DMAs)
+    wave_commit     the probe-family MEGAKERNEL (kernels/wave_commit.py):
+                    one launch with aliased claim/version tables installs
+                    the wave's write claims, answers every op's
+                    strongest-claimant probe, reduces per-op conflicts to
+                    lane verdicts in VMEM, and bumps versions for
+                    committed writes — each touched row rides ONE DMA per
+                    wave where the unfused claim_probe -> verdict ->
+                    commit_install chain re-fetched it 2-3 times
+                    (EngineConfig.fuse_wave routes the probe family here)
     ts_gather       per-op (wts | rts) observation; coarse = row max (TicToc)
     claim_scatter   pack + scatter-min claim words (install-only callers:
                     AutoGran's verdict path, the MV claim channels)
@@ -49,7 +58,12 @@ Both decode the one claim-word layout in ``core/claimword.py`` and are
 bit-identical (tests/test_backend_parity.py, tests/test_kernels.py).  CC
 mechanisms hold no ``cfg.backend`` branches: they call ``resolve(cfg)`` once
 per wave and use only this surface, so a new mechanism gets TPU execution for
-free and a new backend only has to implement these fourteen ops.
+free and a new backend only has to implement these fifteen ops.
+
+``resolve`` honors ``cfg.lane_block`` on the pallas backend: the row-DMA
+kernels tile the wave into LB-lane blocks (kernels/wave_commit.py
+``pick_lane_block``; 0 = auto from table width) and the override threads
+through every lane-block kernel call.
 """
 from __future__ import annotations
 
@@ -89,6 +103,18 @@ class JnpBackend:
         from repro.kernels import ref
         return ref.claim_probe_fused(table, keys, groups, prio, mask, wave,
                                      fine)
+
+    def wave_commit(self, claim_w, claim_r, wts, keys, groups, prio, do_w,
+                    do_r, check_w, check_w2, check_r, extra, wave,
+                    fine: bool, dual: bool, bump: bool):
+        """The fused probe-family wave: claim install + probe + lane
+        verdicts + version bumps in one pass.  Returns (claim_w', claim_r',
+        wts', conflict bool[T, K], commit bool[T]); claim_r/wts ride only
+        when dual/bump."""
+        from repro.kernels import ref
+        return ref.wave_commit(claim_w, claim_r, wts, keys, groups, prio,
+                               do_w, do_r, check_w, check_w2, check_r,
+                               extra, wave, fine, dual, bump)
 
     def route_pack(self, owner, vals, n_dest: int, cap: int, fills):
         """Sort-free per-destination fixed-capacity buffer pack."""
@@ -143,31 +169,51 @@ class JnpBackend:
 
 
 class PallasBackend:
-    """TPU-native kernels (compiled on TPU, interpret mode elsewhere)."""
+    """TPU-native kernels (compiled on TPU, interpret mode elsewhere).
+
+    ``lane_block`` threads the lane-block tiling override (LB lanes per
+    grid step; 0 = auto) into every row-DMA kernel — see
+    kernels/wave_commit.pick_lane_block and ``resolve``."""
     name = "pallas"
     use_pallas = True
+
+    def __init__(self, lane_block: int = 0):
+        self.lane_block = lane_block
 
     def validate(self, claim_w, keys, groups, myprio, check, wave,
                  fine: bool):
         from repro.kernels import ops
         return ops.occ_validate(claim_w, keys, groups, myprio, check,
-                                inv_wave(wave), fine, use_pallas=True)
+                                inv_wave(wave), fine,
+                                lane_block=self.lane_block, use_pallas=True)
 
     def validate_dual(self, claim_w, keys, groups, myprio, check, wave):
         from repro.kernels import ops
         return ops.occ_validate_dual(claim_w, keys, groups, myprio, check,
-                                     inv_wave(wave), use_pallas=True)
+                                     inv_wave(wave),
+                                     lane_block=self.lane_block,
+                                     use_pallas=True)
 
     def probe(self, table, keys, groups, wave, fine: bool):
         from repro.kernels import ops
         return ops.claim_probe(table, keys, groups, inv_wave(wave), fine,
-                               use_pallas=True)
+                               lane_block=self.lane_block, use_pallas=True)
 
     def claim_probe(self, table, keys, groups, prio, wave, mask,
                     fine: bool):
         from repro.kernels import ops
         return ops.claim_probe_fused(table, keys, groups, prio, mask, wave,
-                                     fine, use_pallas=True)
+                                     fine, lane_block=self.lane_block,
+                                     use_pallas=True)
+
+    def wave_commit(self, claim_w, claim_r, wts, keys, groups, prio, do_w,
+                    do_r, check_w, check_w2, check_r, extra, wave,
+                    fine: bool, dual: bool, bump: bool):
+        from repro.kernels import ops
+        return ops.wave_commit(claim_w, claim_r, wts, keys, groups, prio,
+                               do_w, do_r, check_w, check_w2, check_r,
+                               extra, wave, fine, dual, bump,
+                               lane_block=self.lane_block, use_pallas=True)
 
     def route_pack(self, owner, vals, n_dest: int, cap: int, fills):
         from repro.kernels import ops
@@ -199,7 +245,8 @@ class PallasBackend:
 
     def mv_gather(self, begin, keys, groups, ts, fine: bool):
         from repro.kernels import ops
-        return ops.mv_gather(begin, keys, groups, ts, fine, use_pallas=True)
+        return ops.mv_gather(begin, keys, groups, ts, fine,
+                             lane_block=self.lane_block, use_pallas=True)
 
     def mv_install(self, begin, head, keys, groups, do, ts):
         from repro.kernels import ops
@@ -224,17 +271,22 @@ _BACKENDS = {"jnp": JnpBackend(), "pallas": PallasBackend()}
 #: cost model counts same-row committers/readers through it each wave
 #: (core/engine.py make_wave_step), on top of TicToc's extension chains.
 #: The probe family (OCC's read validation included) runs on the fused
-#: ``claim_probe`` op — the separate claim_scatter + probe pair is gone
-#: from their waves; ``claim_scatter`` remains listed only where a
-#: mechanism still installs claims it never probes as priorities
-#: (AutoGran's verdict path, the MV first-committer-wins channels).
+#: ``wave_commit`` megakernel — the claim_probe -> verdict ->
+#: commit_install chain in ONE launch (EngineConfig.fuse_wave; the
+#: unfused chain remains behind fuse_wave=False).  ``commit_install``
+#: stays listed for the bumping mechanisms: its version-bump traffic
+#: rides the fused launch but is still attributed to the op (the cost
+#: model splits it out — analysis/txn_cost.py).  ``claim_scatter``
+#: remains listed only where a mechanism still installs claims it never
+#: probes as priorities (AutoGran's verdict path, the MV
+#: first-committer-wins channels).
 CC_OPS = {
-    t.CC_OCC: ("claim_probe", "commit_install", "segment_count"),
-    t.CC_TICTOC: ("claim_probe", "ts_gather", "ts_install_max",
+    t.CC_OCC: ("wave_commit", "commit_install", "segment_count"),
+    t.CC_TICTOC: ("wave_commit", "ts_gather", "ts_install_max",
                   "segment_count"),
-    t.CC_2PL: ("claim_probe", "commit_install", "segment_count"),
-    t.CC_SWISS: ("claim_probe", "commit_install", "segment_count"),
-    t.CC_ADAPTIVE: ("claim_probe", "commit_install", "segment_count"),
+    t.CC_2PL: ("wave_commit", "commit_install", "segment_count"),
+    t.CC_SWISS: ("wave_commit", "commit_install", "segment_count"),
+    t.CC_ADAPTIVE: ("wave_commit", "commit_install", "segment_count"),
     t.CC_AUTOGRAN: ("validate_dual", "claim_scatter", "commit_install",
                     "segment_count"),
     t.CC_MVCC: ("validate", "claim_scatter", "mv_gather", "mv_install",
@@ -246,12 +298,15 @@ CC_OPS = {
 #: The surface ops one shard-local distributed wave routes through the
 #: backend (core/distributed.py), per mechanism: the sort-free exchange
 #: pack, the verdict bit-pack/unpack pair riding every verdict and commit
-#: return channel, and the fused owner-side claim install + probe for
-#: everyone, plus the install return-trip — ``commit_install`` version
-#: bumps for occ, ``mv_gather`` snapshot reads + ``mv_install`` ring
-#: publishes for the multi-version pair.  Recorded by
+#: return channel, and the owner-side claim step — occ's runs as the
+#: fused ``wave_commit`` (DistConfig.fuse_wave; claim install + probe +
+#: verdicts in one table pass), the multi-version pair keeps the
+#: ``claim_probe`` primitive (two claim channels + the ring gather can't
+#: share one launch) — plus the install return-trip: ``commit_install``
+#: version bumps for occ, ``mv_gather`` snapshot reads + ``mv_install``
+#: ring publishes for the multi-version pair.  Recorded by
 #: benchmarks/txn_scaling.py rows.
-DIST_OPS = ("route_pack", "verdict_pack", "verdict_unpack", "claim_probe",
+DIST_OPS = ("route_pack", "verdict_pack", "verdict_unpack", "wave_commit",
             "commit_install")
 DIST_MV_OPS = ("route_pack", "verdict_pack", "verdict_unpack",
                "claim_probe", "mv_gather", "mv_install")
@@ -259,7 +314,14 @@ DIST_MV_OPS = ("route_pack", "verdict_pack", "verdict_unpack",
 
 def resolve(cfg) -> JnpBackend | PallasBackend:
     """Config (EngineConfig / DistConfig — anything with a validated
-    ``backend`` field) -> the backend singleton."""
+    ``backend`` field) -> the backend singleton.  A nonzero
+    ``cfg.lane_block`` override on the pallas backend gets a dedicated
+    instance threading the tiling into the lane-block kernels (the
+    backends are stateless otherwise — DESIGN.md section 5)."""
+    if cfg.backend == "pallas":
+        lb = getattr(cfg, "lane_block", 0)
+        if lb:
+            return PallasBackend(lane_block=lb)
     return _BACKENDS[cfg.backend]
 
 

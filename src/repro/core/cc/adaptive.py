@@ -9,11 +9,14 @@ abort-heat EWMA exceeds ``adapt_up`` and relaxes back when it decays below
 ``adapt_down``.  Heat decay is lazy (claims.lazy_decayed) so the state machine
 costs O(touched records), not O(table), per wave.
 
-Each claim table is acquired and probed by one fused ``claim_probe`` pass
-on the kernel-backend surface (core/backend.py) — Pallas kernels or XLA
+Both claim tables are acquired, probed, and verdict-reduced by ONE fused
+``wave_commit`` pass on the kernel-backend surface
+(base.claim_probe_commit, core/backend.py) — Pallas kernels or XLA
 gather/scatter per ``EngineConfig.backend`` (DESIGN.md section 5); the
 reader channel's install mask is narrowed to pessimistic records (visible
-reads), while its probe still answers for every op.
+reads), while its probe still answers for every op.  The mode bits ride
+in the verdict masks: optimistic reads carry the OCC window thinning,
+pessimistic ops the 2PL phase-overlap thinning.
 """
 from __future__ import annotations
 
@@ -33,26 +36,25 @@ def wave_validate(store: StoreState, batch: TxnBatch, prio, wave,
     live = batch.live()
     rd = batch.is_read() & live
     wr = batch.is_write() & live
-    myp = base.my_prio_per_op(batch, prio)
 
     kp = jnp.where(batch.op_key >= 0, batch.op_key, OOB_KEY)
     pess = store.pess_mode.at[kp].get(mode="fill",
                                       fill_value=False)  # [T, K]
-
-    store, wprio = base.claim_and_probe(store, batch, prio, wave, cfg, fine)
-    # Visible (lock-acquiring) reads only on pessimistic records.
-    store, rprio = base.claim_and_probe(store, batch, prio, wave, cfg, fine,
-                                        table="r", mask=pess)
 
     T, K = batch.op_key.shape
     u = claims.hash01(wave, claims.lane_op_ids(T, K))
     lock_ok = u < cfg.cost.phase_overlap     # phase-overlap thinning
     uo = claims.hash01(wave + jnp.uint32(77),
                        claims.lane_op_ids(T, K))
-    conflict = ((rd & ~pess & (wprio < myp) & (uo < cfg.cost.opt_overlap))
-                | (rd & pess & (wprio < myp) & lock_ok)   # r-lock vs w-lock
-                | (wr & pess & (wprio < myp) & lock_ok)   # w-lock vs w-lock
-                | (wr & pess & (rprio < myp) & lock_ok))  # w-lock vs r-lock
+    # Writer-table channel: optimistic reads (OCC rule, window-thinned) +
+    # pessimistic r-lock-vs-w-lock and w-lock-vs-w-lock; reader-table
+    # channel: pessimistic w-lock-vs-r-lock.  Visible (lock-acquiring)
+    # reads install only on pessimistic records (do_r_mask).
+    check_w = ((rd & ~pess & (uo < cfg.cost.opt_overlap))
+               | ((rd | wr) & pess & lock_ok))
+    store, conflict = base.claim_probe_commit(
+        store, batch, prio, wave, cfg, fine, check_w=check_w,
+        check_r=wr & pess & lock_ok, dual=True, do_r_mask=pess)
     # Pessimistic-mode conflicts are failed eager lock acquisitions;
     # optimistic-mode conflicts are commit-time read-validation failures.
     cause = jnp.where(pess, jnp.int32(t.CAUSE_LOCK_WOUND),
@@ -88,5 +90,4 @@ def wave_validate(store: StoreState, batch: TxnBatch, prio, wave,
 
     store = dataclasses.replace(store, abort_heat=heat, heat_wave=heat_wave,
                                 pess_mode=pess_mode)
-    store = base.bump_versions(store, batch, res.commit, cfg)
     return store, res

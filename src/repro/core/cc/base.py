@@ -6,11 +6,17 @@ claim_scatter / commit_install / ts_install_max, resolved once per wave from
 ``EngineConfig.backend``.  No mechanism in this package branches on the
 backend itself — that is the whole point of the layer (DESIGN.md section 5).
 
-The probe family (OCC, TicToc, 2PL, SwissTM, Adaptive) claims and probes
-through ONE fused op (``claim_and_probe`` below — the backend's
-``claim_probe``): one kernel pass over the claim table installs the wave's
-claim words AND answers every op's strongest-claimant probe, where the
-mechanisms previously launched claim_scatter and probe back to back.
+The probe family (OCC, TicToc, 2PL, SwissTM, Adaptive) runs its WHOLE
+claim -> verdict -> install chain through ONE backend op
+(``claim_probe_commit`` below — the backend's ``wave_commit`` megakernel,
+kernels/wave_commit.py): a single launch with aliased claim/version tables
+installs the wave's write claims, answers every op's strongest-claimant
+probe, reduces the per-op conflicts to lane verdicts, and bumps versions
+for committed writes — each touched row rides one DMA per wave.
+``EngineConfig.fuse_wave=False`` falls back to the unfused chain (the
+fused ``claim_probe`` per table + XLA verdict compare + ``commit_install``),
+bit-identical by construction: both paths evaluate the same mask algebra
+over the same primitives (guard-tested in tests/test_wave_commit.py).
 """
 from __future__ import annotations
 
@@ -134,6 +140,87 @@ def claim_and_probe(store: StoreState, batch: TxnBatch, prio: jax.Array,
             getattr(store, field), batch.op_key, batch.op_group,
             my_prio_per_op(batch, prio), wave, m, fine)
     return dataclasses.replace(store, **{field: tbl}), wprio
+
+
+def claim_probe_commit(store: StoreState, batch: TxnBatch, prio: jax.Array,
+                       wave: jax.Array, cfg: EngineConfig,
+                       fine: bool | None = None, *,
+                       check_w: jax.Array, check_w2: jax.Array | None = None,
+                       check_r: jax.Array | None = None,
+                       extra: jax.Array | None = None, dual: bool = False,
+                       do_r_mask: jax.Array | None = None, bump: bool = True
+                       ) -> tuple[StoreState, jax.Array]:
+    """The probe family's whole wave in one call: claim install + probe +
+    per-op conflicts (+ version bumps for committed writes).
+
+    The mechanism hands over its verdict MASKS — probe-independent factors
+    it precomputes (op kinds, thinning hashes, mode bits) — and the probe
+    compare happens inside:
+
+      conflict = check_w  & (wprio < myprio)                 # strongest-
+               | check_w2 & (wprio != NO_PRIO != myprio)     #   claimant
+               | check_r  & (rprio < myprio)                 #   channels
+               | extra
+
+    with ``wprio``/``rprio`` the post-install strongest-claimant probes of
+    the writer / reader claim tables (the reader channel rides only when
+    ``dual``; its install mask is live reads narrowed by ``do_r_mask``).
+    ``bump`` +1s ``store.wts`` for committed write ops (bump_versions
+    semantics).  Returns ``(store', conflict bool[T, K])``.
+
+    ``cfg.fuse_wave`` selects the route: the backend's ``wave_commit``
+    megakernel (one launch, one DMA per touched row), or the unfused
+    ``claim_probe`` -> XLA verdict -> ``commit_install`` chain.  Both
+    evaluate the same mask algebra over the same primitives, so they are
+    bit-identical — tests/test_wave_commit.py pins it across mechanisms,
+    granularities, and backends."""
+    if fine is None:
+        fine = is_fine(cfg)
+    be = kb.resolve(cfg)
+    live = batch.live()
+    do_w = batch.is_write() & live
+    do_r = None
+    if dual:
+        do_r = batch.is_read() & live
+        if do_r_mask is not None:
+            do_r = do_r & do_r_mask
+    myp = my_prio_per_op(batch, prio)
+
+    if getattr(cfg, "fuse_wave", True):
+        with jax.named_scope("repro:wave_commit"):
+            cw, cr, wts, conflict, _ = be.wave_commit(
+                store.claim_w, store.claim_r if dual else None,
+                store.wts if bump else None, batch.op_key, batch.op_group,
+                myp, do_w, do_r, check_w, check_w2, check_r, extra, wave,
+                fine, dual, bump)
+        repl = {"claim_w": cw}
+        if dual:
+            repl["claim_r"] = cr
+        if bump:
+            repl["wts"] = wts
+        return dataclasses.replace(store, **repl), conflict
+
+    # Unfused: the pre-megakernel chain, term by term.
+    with jax.named_scope("repro:claim"):
+        cw, wprio = be.claim_probe(store.claim_w, batch.op_key,
+                                   batch.op_group, myp, wave, do_w, fine)
+    store = dataclasses.replace(store, claim_w=cw)
+    conflict = check_w & (wprio < myp)
+    if check_w2 is not None:
+        conflict = conflict | (check_w2 & (wprio != claims.NO_PRIO)
+                               & (wprio != myp))
+    if dual:
+        with jax.named_scope("repro:claim"):
+            cr, rprio = be.claim_probe(store.claim_r, batch.op_key,
+                                       batch.op_group, myp, wave, do_r,
+                                       fine)
+        store = dataclasses.replace(store, claim_r=cr)
+        conflict = conflict | (check_r & (rprio < myp))
+    if extra is not None:
+        conflict = conflict | extra
+    if bump:
+        store = bump_versions(store, batch, ~conflict.any(axis=1), cfg)
+    return store, conflict
 
 
 def write_claims(store: StoreState, batch: TxnBatch, prio: jax.Array,

@@ -11,18 +11,17 @@ Timestamp granularity is the probe width: coarse probes treat a claim on any
 column group of the record as a conflict (one timestamp per row), fine probes
 look only at the op's own group — the paper's mechanism.
 
-All shared-state access (claim install + probe, version install) routes
-through the kernel-backend surface of core/backend.py — Pallas kernels or
-XLA gather/scatter, selected by ``EngineConfig.backend`` (DESIGN.md
-section 5).  The claim scatter and the read-set probe are ONE fused
-``claim_probe`` op (base.claim_and_probe): a single pass over the writer
-claim table installs the wave's write claims and yields every op's
-strongest-claimant priority; the OCC verdict is then just the strictness
-compare against the lane's own priority.
+All shared-state access (claim install + probe, verdicts, version install)
+routes through the kernel-backend surface of core/backend.py — Pallas
+kernels or XLA gather/scatter, selected by ``EngineConfig.backend``
+(DESIGN.md section 5).  The whole wave is ONE fused ``wave_commit`` op
+(base.claim_probe_commit): a single pass over the writer claim table
+installs the wave's write claims, compares every read's
+strongest-claimant priority against the lane's own, and bumps versions
+for the committed writes (``fuse_wave=False`` falls back to the unfused
+claim_probe + commit_install chain, bit-identically).
 """
 from __future__ import annotations
-
-import jax.numpy as jnp
 
 from repro.core import claims
 from repro.core import types as t
@@ -32,14 +31,16 @@ from repro.core.types import EngineConfig, StoreState, TxnBatch
 
 def wave_validate(store: StoreState, batch: TxnBatch, prio, wave,
                   cfg: EngineConfig):
-    store, wprio = base.claim_and_probe(store, batch, prio, wave, cfg)
-    check = batch.is_read() & batch.live()
-    conflict = check & (wprio < base.my_prio_per_op(batch, prio))
     T, K = batch.op_key.shape
     u = claims.hash01(wave, claims.lane_op_ids(T, K))
-    conflict = conflict & (u < cfg.cost.opt_overlap)   # window thinning
+    # Probe-independent verdict mask: live reads, window-thinned (a writer
+    # install only lands in the read's vulnerability window w.p.
+    # opt_overlap); the megakernel ANDs in the strictness compare.
+    check = (batch.is_read() & batch.live()
+             & (u < cfg.cost.opt_overlap))
+    store, conflict = base.claim_probe_commit(store, batch, prio, wave, cfg,
+                                              check_w=check)
     # Every OCC abort is a commit-time read-validation failure.
     res = base.result_from_conflicts(batch, conflict, eager=False,
                                      cause_op=t.CAUSE_READ_VAL)
-    store = base.bump_versions(store, batch, res.commit, cfg)
     return store, res

@@ -10,10 +10,13 @@ eagerly (at the op acquiring the write lock); read-write conflicts are found
 at commit-time validation like OCC, so a read-invalidated lane wastes its full
 execution.
 
-Claim install and probe are ONE fused ``claim_probe`` pass over the
-writer-claim table on the kernel-backend surface (core/backend.py) —
-Pallas kernels or XLA gather/scatter per ``EngineConfig.backend``
-(DESIGN.md section 5).
+Claim install, probe, verdicts, and version bumps are ONE fused
+``wave_commit`` pass over the writer-claim table on the kernel-backend
+surface (base.claim_probe_commit, core/backend.py) — Pallas kernels or
+XLA gather/scatter per ``EngineConfig.backend`` (DESIGN.md section 5).
+The eager/late split (which conflicts cut work early) falls out of the
+returned conflict mask: write ops' conflicts are exactly the eager
+write-lock losses, since the read and write channels are disjoint.
 """
 from __future__ import annotations
 
@@ -33,20 +36,21 @@ def wave_validate(store: StoreState, batch: TxnBatch, prio, wave,
     live = batch.live()
     rd = batch.is_read() & live
     wr = batch.is_write() & live
-    myp = base.my_prio_per_op(batch, prio)
 
-    store, wprio = base.claim_and_probe(store, batch, prio, wave, cfg, fine)
-
-    ww = wr & (wprio < myp)   # eager: lost the write lock to an older txn
-    rw = rd & (wprio < myp)   # late: read invalidated at commit validation
+    # Probe-independent mask: eager write-lock losses (phase-overlap
+    # thinned, see two_pl.py) and commit-time read invalidations (window
+    # thinned) share the writer-table strongest-claimant compare, so one
+    # check_w channel carries both.
     uo = claims.hash01(wave + jnp.uint32(77),
                        claims.lane_op_ids(*batch.op_key.shape))
-    rw = rw & (uo < cfg.cost.opt_overlap)              # window thinning
-    # Phase-overlap thinning on the eager lock part (see two_pl.py).
     T, K = batch.op_key.shape
     u = claims.hash01(wave, claims.lane_op_ids(T, K))
-    ww = ww & (u < cfg.cost.phase_overlap)
-    conflict = ww | rw
+    check_w = ((wr & (u < cfg.cost.phase_overlap))
+               | (rd & (uo < cfg.cost.opt_overlap)))
+    store, conflict = base.claim_probe_commit(store, batch, prio, wave, cfg,
+                                              fine, check_w=check_w)
+    # rd/wr are disjoint, so a write op's conflict IS an eager lock loss.
+    ww = conflict & wr
     # Eager write-lock losses are lock-wounds (the CM wounds the younger
     # txn); invisible-read invalidations are read-validation failures.
     cause = jnp.where(ww, jnp.int32(t.CAUSE_LOCK_WOUND),
@@ -58,5 +62,4 @@ def wave_validate(store: StoreState, batch: TxnBatch, prio, wave,
     K = batch.slots
     first_ww = claims.first_true_index(ww, K)
     res = dataclasses.replace(res, first_conflict=first_ww)
-    store = base.bump_versions(store, batch, res.commit, cfg)
     return store, res

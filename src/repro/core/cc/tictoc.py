@@ -19,11 +19,11 @@ Figures 2a/3a).  Per the paper's section 3.2 we model the 128-bit
 more than OCC due to overflow — and STO's non-waiting deadlock prevention.
 
 Shared-state access routes through the kernel-backend surface
-(core/backend.py): the claim install and probe are ONE fused
-``claim_probe`` op (one pass over the writer-claim table instead of the
-old claim_scatter + probe pair), the (wts, rts) observation its
-``ts_gather`` row-gather (coarse = row max), the monotone timestamp
-installs its ``ts_install_max`` scatter-max, and the same-cell
+(core/backend.py): claim install + probe + both read-abort verdict
+channels are ONE fused ``wave_commit`` op (base.claim_probe_commit; TicToc
+installs no version bumps, its timestamps move separately), the (wts, rts)
+observation its ``ts_gather`` row-gather (coarse = row max), the monotone
+timestamp installs its ``ts_install_max`` scatter-max, and the same-cell
 extender/committer counts its ``segment_count`` (the all-pairs kernel that
 closed the pallas path's last XLA sort) — Pallas kernels on
 ``backend="pallas"``, XLA gather/scatter on ``"jnp"``, bit-identical either
@@ -49,12 +49,11 @@ def wave_validate(store: StoreState, batch: TxnBatch, prio, wave,
     live = batch.live()
     rd = batch.is_read() & live
     wr = batch.is_write() & live
-    myp = base.my_prio_per_op(batch, prio)
-
-    store, wprio = base.claim_and_probe(store, batch, prio, wave, cfg, fine)
 
     # (wts, rts) observation honoring granularity: coarse sees one timestamp
     # per record = the row max (any group modification constrains the row).
+    # Reads the pre-wave tables — TicToc installs timestamps separately
+    # below, so the fused claim pass never touches them (bump=False).
     wts_op = be.ts_gather(store.wts, batch.op_key, batch.op_group, fine)
     rts_op = be.ts_gather(store.rts, batch.op_key, batch.op_group, fine)
 
@@ -62,23 +61,28 @@ def wave_validate(store: StoreState, batch: TxnBatch, prio, wave,
     ts_term = jnp.where(wr, rts_op + 1, jnp.where(rd, wts_op, 0))
     commit_ts = ts_term.max(axis=1)  # [T]
 
-    # Read validation: a concurrent (same-wave, earlier-priority) writer bumps
-    # wts past rts; the read survives iff it can serialize at commit_ts <= rts.
-    conflict = rd & (wprio < myp) & (commit_ts[:, None] > rts_op)
+    # Read validation: a concurrent (same-wave, earlier-priority) writer
+    # bumps wts past rts; the read survives iff it can serialize at
+    # commit_ts <= rts.  Probe-independent mask (window-thinned); the
+    # megakernel ANDs in the strictness compare.
+    ext_need = rd & (commit_ts[:, None] > rts_op)
     u = claims.hash01(wave, claims.lane_op_ids(*batch.op_key.shape))
-    conflict = conflict & (u < cfg.cost.opt_overlap)   # window thinning
+    check_w = ext_need & (u < cfg.cost.opt_overlap)
 
     # Extension failure: extending rts requires a CAS on the version word;
     # if another transaction holds the cell's write lock at that moment the
     # non-waiting policy aborts the reader ("leading to more aborts",
     # paper section 4.2).  This is what collapses TicToc under high
     # contention: the hotter the cell, the likelier its lock is held.
-    ext_need = rd & (commit_ts[:, None] > rts_op)
-    other_writer = (wprio != claims.NO_PRIO) & (wprio != myp)
+    # The any-OTHER-writer compare (wprio != NO_PRIO, != myp) is the
+    # megakernel's second writer channel (check_w2).
     u2 = claims.hash01(wave + jnp.uint32(131),
                        claims.lane_op_ids(*batch.op_key.shape))
-    ext_fail = ext_need & other_writer & (u2 < cfg.cost.phase_overlap)
-    conflict = conflict | ext_fail
+    check_w2 = ext_need & (u2 < cfg.cost.phase_overlap)
+
+    store, conflict = base.claim_probe_commit(store, batch, prio, wave, cfg,
+                                              fine, check_w=check_w,
+                                              check_w2=check_w2, bump=False)
     # Both abort channels (no-room-to-time-travel and the failed rts
     # extension CAS) invalidate a READ — one read-validation cause.
     res = base.result_from_conflicts(batch, conflict, eager=False,

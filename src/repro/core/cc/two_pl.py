@@ -11,11 +11,13 @@ the overhead the paper's cost discussion attributes to pessimistic mechanisms
 Lock compatibility: R/R compatible; R/W, W/R, W/W conflict.  Non-waiting =
 the lower-priority lane of a conflicting pair aborts immediately.
 
-Lock claims and probes route through the kernel-backend surface
-(core/backend.py) — Pallas kernels or XLA gather/scatter per
-``EngineConfig.backend`` (DESIGN.md section 5).  Each lock table (writer
-claims, reader claims) is acquired AND probed by one fused ``claim_probe``
-op, so a 2PL wave makes exactly two claim-table passes instead of four.
+Lock claims, probes, verdicts, and version bumps route through the
+kernel-backend surface (core/backend.py) — Pallas kernels or XLA
+gather/scatter per ``EngineConfig.backend`` (DESIGN.md section 5).  Both
+lock tables (writer claims via check_w, reader claims via the dual
+check_r channel) are acquired AND probed by ONE fused ``wave_commit`` op
+(base.claim_probe_commit), so a 2PL wave makes exactly one launch where
+it previously chained four table passes.
 """
 from __future__ import annotations
 
@@ -31,24 +33,21 @@ def wave_validate(store: StoreState, batch: TxnBatch, prio, wave,
     live = batch.live()
     rd = batch.is_read() & live
     wr = batch.is_write() & live
-    myp = base.my_prio_per_op(batch, prio)
 
-    store, wprio = base.claim_and_probe(store, batch, prio, wave, cfg, fine)
-    store, rprio = base.claim_and_probe(store, batch, prio, wave, cfg, fine,
-                                        table="r")
-
-    conflict = ((rd & (wprio < myp))                      # read vs writer lock
-                | (wr & (wprio < myp))                    # write vs writer lock
-                | (wr & (rprio < myp)))                   # write vs reader lock
     # Phase-overlap thinning: the lockstep wave over-aligns lock-hold
     # windows; in real time two conflicting holds only overlap part of the
     # time (DESIGN.md section 4).
     T, K = batch.op_key.shape
     u = claims.hash01(wave, claims.lane_op_ids(T, K))
-    conflict = conflict & (u < cfg.cost.phase_overlap)
+    lock_ok = u < cfg.cost.phase_overlap
+    # read vs writer lock | write vs writer lock (check_w), write vs
+    # reader lock (the dual check_r channel); the megakernel ANDs in the
+    # strictness compares against both tables' probes.
+    store, conflict = base.claim_probe_commit(
+        store, batch, prio, wave, cfg, fine,
+        check_w=(rd | wr) & lock_ok, check_r=wr & lock_ok, dual=True)
     # All three terms are failed eager lock acquisitions: the younger lane
     # of the pair is wounded.
     res = base.result_from_conflicts(batch, conflict, eager=True,
                                      cause_op=t.CAUSE_LOCK_WOUND)
-    store = base.bump_versions(store, batch, res.commit, cfg)
     return store, res

@@ -203,6 +203,13 @@ class DistConfig:
                                    # past it a txn drops (counted)
     lat_bins: int = 32             # per-shard time-to-commit histogram
                                    # width in waves (last bin = overflow)
+    fuse_wave: bool = True         # owner claim step runs as the fused
+                                   # wave_commit op (one table pass answers
+                                   # the probe AND installs the claims);
+                                   # False = claim_probe + XLA verdict
+                                   # compare.  Bit-identical either way.
+    lane_block: int = 0            # lanes per pallas grid step, 0 = auto
+                                   # (EngineConfig.lane_block semantics)
 
     def __post_init__(self):
         if self.backend not in ("jnp", "pallas"):
@@ -211,6 +218,9 @@ class DistConfig:
         if self.cc not in DIST_CCS:
             raise ValueError(f"unknown distributed cc {self.cc!r} "
                              f"(expected one of {DIST_CCS})")
+        if self.lane_block < 0:
+            raise ValueError(
+                f"lane_block must be >= 0 (0 = auto), got {self.lane_block}")
         if self.cc in DIST_MV_CCS and self.mv_depth < 1:
             raise ValueError(
                 f"cc={self.cc!r} needs the multi-version ring: set "
@@ -464,12 +474,21 @@ def _make_phases(cfg: DistConfig, mesh):
         is_w = r_live & ((r_kind == t.WRITE) | (r_kind == t.ADD))
         is_r = r_live & (r_kind == t.READ)
         if not mv:
-            # Single-version OCC: fused claim install + probe, ONE table
-            # pass; verdict bit 0 = read claimed by a stronger lane.
+            # Single-version OCC: ONE table pass; verdict bit 0 = read
+            # claimed by a stronger lane.  Fused (default): the
+            # wave_commit megakernel answers the verdicts directly from
+            # its in-VMEM reduction; unfused: claim_probe + XLA compare.
+            # Bit-identical — the kernel evaluates the same mask algebra.
             wts, claim_w = tables
-            claim_w, wprio = be.claim_probe(claim_w, rk, r_grp, r_prio,
-                                            wave_idx, is_w, fine)
-            v = (is_r & (wprio < r_prio)).astype(jnp.int8)
+            if cfg.fuse_wave:
+                claim_w, _, _, conflict, _ = be.wave_commit(
+                    claim_w, None, None, rk, r_grp, r_prio, is_w, None,
+                    is_r, None, None, None, wave_idx, fine, False, False)
+                v = conflict.astype(jnp.int8)
+            else:
+                claim_w, wprio = be.claim_probe(claim_w, rk, r_grp, r_prio,
+                                                wave_idx, is_w, fine)
+                v = (is_r & (wprio < r_prio)).astype(jnp.int8)
             tables = (wts, claim_w)
         else:
             # The local fcw_conflicts + mv snapshot check (cc/mvcc.py),

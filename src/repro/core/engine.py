@@ -4,11 +4,13 @@ One *wave* simulates all T threads each running one transaction concurrently
 (DESIGN.md section 2).  The executor is a single jitted ``lax.scan`` whose
 carry is the whole engine state (store, retry buffer, metrics), so a full
 benchmark datapoint (thousands of waves) is one XLA program.  Every
-shared-state touch inside the scan body goes through the twelve-op
-kernel-backend surface (core/backend.py): the validators' claim+probe runs
-as the fused ``claim_probe`` pass and the cost model's same-row contention
-counts as ``segment_count``, so the compiled wave carries no per-wave sort
-and no duplicated claim-table traffic on either backend.
+shared-state touch inside the scan body goes through the fifteen-op
+kernel-backend surface (core/backend.py): the probe family's whole
+claim+probe+verdict+bump wave runs as the single ``wave_commit`` megakernel
+(``claim_probe`` remains the unfused ``fuse_wave=False`` chain) and the cost
+model's same-row contention counts as ``segment_count``, so the compiled wave
+carries no per-wave sort and no duplicated claim-table traffic on either
+backend.
 
 Throughput model
 ----------------
@@ -552,6 +554,13 @@ def lane_buckets(lane_counts: Sequence[int],
     return buckets
 
 
+#: Compiled-sweep memo: {static grid spec: (jitted program, workload)}.
+#: The workload strong-ref pins the id() in the key; insertion-ordered
+#: FIFO eviction bounds the executables (and workloads) kept alive.
+_SWEEP_PROGRAMS: dict = {}
+_SWEEP_PROGRAMS_CAP = 8
+
+
 def sweep(cfg: EngineConfig, workload: Workload, n_waves: int, *,
           ccs: Sequence[int], grans: Sequence[int] = (0, 1),
           lane_counts: Sequence[int] = (16, 64, 128),
@@ -585,6 +594,24 @@ def sweep(cfg: EngineConfig, workload: Workload, n_waves: int, *,
         (jnp.repeat(jnp.asarray(b, jnp.int32), len(seeds)),
          jnp.tile(jnp.asarray(seeds, jnp.uint32), len(b)))
         for b in buckets)
+
+    # Everything the jitted program closes over, as a memo key: re-sweeping
+    # the SAME grid in one process must re-execute the cached executable,
+    # not re-trace — that is what makes the benchmarks' shared
+    # warm-then-time helper (benchmarks/common.py) actually exclude
+    # compile time from the timed call.  Keyed on workload IDENTITY (the
+    # value holds a strong ref so the id can never be recycled); the
+    # launch layer's lru-cached workload maker gives identical grid specs
+    # the same object.
+    memo_key = (id(workload), dataclasses.astuple(cfg), n_waves,
+                tuple(combos), tuple(tuple(b) for b in buckets),
+                tuple(seeds), per_wave)
+    cached = _SWEEP_PROGRAMS.get(memo_key)
+    if cached is not None:
+        go = cached[0]
+        raw = jax.device_get(go(grids))
+        return _sweep_points(cfg, raw, combos, buckets, lane_counts, seeds,
+                             n_waves, per_wave)
 
     def point_fn(ccfg, T_pad):
         mk = make_open_wave_step if ccfg.open_loop else make_wave_step
@@ -621,7 +648,18 @@ def sweep(cfg: EngineConfig, workload: Workload, n_waves: int, *,
             out.append(per_bucket)
         return out
 
+    _SWEEP_PROGRAMS[memo_key] = (go, workload)
+    while len(_SWEEP_PROGRAMS) > _SWEEP_PROGRAMS_CAP:
+        _SWEEP_PROGRAMS.pop(next(iter(_SWEEP_PROGRAMS)))
     raw = jax.device_get(go(grids))
+    return _sweep_points(cfg, raw, combos, buckets, lane_counts, seeds,
+                         n_waves, per_wave)
+
+
+def _sweep_points(cfg, raw, combos, buckets, lane_counts, seeds, n_waves,
+                  per_wave) -> list:
+    """Reassemble sweep()'s raw per-bucket outputs into SweepPoints in
+    grid order (shared by the traced and memo-hit paths)."""
     # Index (T, seed) -> (bucket, position) to reassemble rows in grid order.
     where = {}
     for bi, b in enumerate(buckets):

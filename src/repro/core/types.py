@@ -385,11 +385,29 @@ class EngineConfig:
                                 # Both read the same claim words
                                 # (core/claimword.py) and are bit-identical —
                                 # see DESIGN.md section 5.
+    fuse_wave: bool = True      # Probe family (occ/tictoc/2pl/swisstm/
+                                # adaptive) runs its whole claim -> verdict ->
+                                # install chain as the ONE fused wave_commit
+                                # op (kernels/wave_commit.py): each touched
+                                # row rides one DMA per wave.  False = the
+                                # unfused claim_probe + commit_install chain;
+                                # bit-identical either way (DESIGN.md
+                                # section 5, tests/test_wave_commit.py).
+    lane_block: int = 0         # Lanes per pallas grid step (LB): the
+                                # kernels tile (T, K) into (T // LB) lane
+                                # blocks, LB*K row DMAs in flight per step.
+                                # 0 = auto from the table width
+                                # (kernels/wave_commit.pick_lane_block);
+                                # explicit values snap down to a divisor of
+                                # `lanes`.  jnp backend ignores it.
 
     def __post_init__(self):
         if self.backend not in ("jnp", "pallas"):
             raise ValueError(f"unknown backend {self.backend!r} "
                              "(expected 'jnp' or 'pallas')")
+        if self.lane_block < 0:
+            raise ValueError(
+                f"lane_block must be >= 0 (0 = auto), got {self.lane_block}")
         if self.mv_depth < 0:
             raise ValueError(f"mv_depth must be >= 0, got {self.mv_depth}")
         if self.cc in MV_CCS and self.mv_depth < 1:

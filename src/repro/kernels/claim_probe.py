@@ -5,27 +5,33 @@ validation, and the distributed owner step) all ran the same two-kernel
 sequence on the hottest table each wave: ``claim_scatter`` (RMW every write
 op's claim row) followed by ``probe`` (DMA every op's claim row again).
 This kernel does both in ONE sequential grid pass — half the kernel
-launches and half the claim-table HBM row round-trips.
+launches and half the claim-table HBM row round-trips.  (The probe family
+itself now rides the full ``wave_commit`` megakernel; this op remains the
+fused install+probe primitive for callers that need the raw priorities —
+the distributed owner step on the unfused path, `fuse_wave=False`.)
 
-Like ``mv_install`` it is dual-purpose per grid step: the claim table is
-aliased input/output, each step DMAs its op's row once, min-installs the
-packed claim word (write ops), and answers the op's strongest-claimant
-probe.  The subtlety is that the probe must see claims installed by *later*
-grid steps too (the jnp semantics probe the fully-installed table).  The
-sequential grid only shows a step its predecessors' installs — so the
-kernel completes the picture from VMEM: the whole wave's (key, group, prio,
-mask) vectors ride along as full blocks (they are tiny, segment_count
-style), and an all-pairs same-cell min over them yields the strongest
-*same-wave* claimant of the op's cell.  min(row probe, wave min) then
-equals the post-install probe, because under the claim-word monotonicity
-precondition (no table word tagged newer than this wave — see
-ref.claim_probe_fused) every claim that could change the row's probe this
-wave is in the VMEM wave vectors.  Min is commutative and idempotent, so
-grid order is unobservable: bit-identical to the two-phase jnp path.
+The grid is LANE BLOCKS (kernels/wave_commit.py): ``(T // LB,)`` with an
+LB-lane x K-slot block per step.  The claim table sits in ANY memory space
+and rows move by explicit ``make_async_copy`` DMAs into VMEM scratch — the
+whole block's row stream in flight at once — then the probe and install
+math runs vectorized over the block.  The probe must see claims installed
+by *later* grid steps too (the jnp semantics probe the fully-installed
+table), so the kernel completes the picture from VMEM: the whole wave's
+(key, group, prio, mask) vectors ride along as full blocks, and an
+all-pairs same-cell min over them yields the strongest *same-wave*
+claimant of each op's cell.  min(row probe, wave min) then equals the
+post-install probe, because under the claim-word monotonicity precondition
+(no table word tagged newer than this wave — see ref.claim_probe_fused)
+every claim that could change the row's probe this wave is in the VMEM
+wave vectors.  The same wave min makes the block's writebacks FINAL rows
+(min(fetched row, strongest same-wave word per cell)) — idempotent, so
+same-row ops within a block write identical bytes and writeback order is
+unobservable; bit-identical to the two-phase jnp path.
 
 Granularity is the probe width as everywhere (DESIGN.md section 2): fine
 matches the op's (record, group) cell, coarse matches any group of the
-record — on both the row probe and the all-pairs wave term.
+record — on both the row probe and the all-pairs wave term.  Installs are
+always fine (claims scatter to the op's own cell).
 """
 from __future__ import annotations
 
@@ -36,90 +42,79 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.claimword import (EMPTY_WORD, NO_PRIO, PRIO16_MASK,
-                                  WAVE_SHIFT, live_prio)
+from repro.core.claimword import PRIO16_MASK
+from repro.kernels.wave_commit import (_install_rows, _probe, _row_dmas,
+                                       _start, _wait, pick_lane_block)
 
-_SENT = 0x7FFFFFFF  # cell id of masked ops in the all-pairs compare
 
-
-def _kernel(fine: bool, G: int, keys_ref, ivw_ref, grp_ref, prio_ref,
-            do_ref, allk_ref, allg_ref, allp_ref, alldo_ref, row_ref,
-            tbl_ref, out_ref):
-    # Accumulate through the aliased *output* ref (see occ_commit.py).
-    del row_ref
+def _claim_probe_fused_kernel(fine, G, LB, K, keys_ref, ivw_ref, kv, grp,
+                              prio, do, tbl_in, tbl_out, out_b, rows_s,
+                              new_s, sem_r, sem_w):
+    # RMW through the aliased *output* ref (see occ_commit.py).
+    del tbl_in
+    LBK = LB * K
     ivw = ivw_ref[0]
-    t, k = pl.program_id(0), pl.program_id(1)
-    key = keys_ref[t, k]
-    g = grp_ref[0, 0]
-    row = tbl_ref[0, :]                               # uint32[G]
-    pr = live_prio(row, ivw)
+    t0 = pl.program_id(0) * LB
 
-    # Same-wave claimants of my cell, from the in-VMEM wave vectors.
-    allp = (allp_ref[...] & jnp.uint32(PRIO16_MASK)).reshape(-1)
-    if fine:
-        table_prio = jnp.where(jnp.arange(G, dtype=jnp.int32) == g, pr,
-                               NO_PRIO).min()
-        all_cell = jnp.where(alldo_ref[...],
-                             allk_ref[...] * G + allg_ref[...],
-                             jnp.int32(_SENT)).reshape(-1)
-        hit = all_cell == key * G + g
-    else:
-        table_prio = pr.min()
-        all_key = jnp.where(alldo_ref[...], allk_ref[...],
-                            jnp.int32(_SENT)).reshape(-1)
-        hit = all_key == key
-    wave_prio = jnp.where(hit, allp, jnp.uint32(NO_PRIO)).min()
-    wprio = jnp.minimum(table_prio, wave_prio)
-    out_ref[0, 0] = jnp.where(key >= 0, wprio, jnp.uint32(NO_PRIO))
+    _row_dmas(_start, keys_ref, tbl_out, rows_s, sem_r, t0, LB, K)
+    _row_dmas(_wait, keys_ref, tbl_out, rows_s, sem_r, t0, LB, K)
 
-    # Install this op's claim word (packed in registers, claim_scatter.py).
-    word = ((ivw << WAVE_SHIFT)
-            | (prio_ref[0, 0] & jnp.uint32(PRIO16_MASK)))
-    sel = (jnp.arange(G, dtype=jnp.int32) == g) & do_ref[0, 0]
-    tbl_ref[0, :] = jnp.minimum(row, jnp.where(sel, word,
-                                               jnp.uint32(EMPTY_WORD)))
+    kraw = jax.lax.dynamic_slice(kv[...], (t0, 0), (LB, K)).reshape(LBK)
+    kcl = jnp.maximum(kraw, 0)
+    gb = jax.lax.dynamic_slice(grp[...], (t0, 0), (LB, K)).reshape(LBK)
+    allk = kv[...].reshape(-1)
+    allg = grp[...].reshape(-1)
+    allp16 = (prio[...] & jnp.uint32(PRIO16_MASK)).reshape(-1)
+    alldo = do[...].reshape(-1)
+
+    rows = rows_s[...]
+    wprio = _probe(rows, ivw, kcl, kraw, gb, allk, allg, allp16, alldo,
+                   fine, G)
+    out_b[...] = wprio.reshape(LB, K)
+
+    new_s[...] = _install_rows(rows, ivw, kcl, allk, allg, allp16, alldo, G)
+    _row_dmas(_start, keys_ref, tbl_out, new_s, sem_w, t0, LB, K,
+              to_table=True)
+    _row_dmas(_wait, keys_ref, tbl_out, new_s, sem_w, t0, LB, K,
+              to_table=True)
 
 
 def claim_probe_fused_pallas(table: jax.Array, keys: jax.Array,
                              groups: jax.Array, prio: jax.Array,
                              do: jax.Array, inv_wave: jax.Array, fine: bool,
-                             interpret: bool = False
+                             lane_block: int = 0, interpret: bool = False
                              ) -> tuple[jax.Array, jax.Array]:
     """(table', wprio uint32[T, K]) — see ref.claim_probe_fused."""
     T, K = keys.shape
     G = table.shape[1]
+    LB = pick_lane_block(T, K, G, lane_block)
+    LBK = LB * K
     ivw = jnp.reshape(inv_wave.astype(jnp.uint32), (1,))
     do = do & (keys >= 0)
     p16 = prio.astype(jnp.uint32)
-    full = pl.BlockSpec((T, K), lambda t, k, keys, ivw: (0, 0))
+    full = pl.BlockSpec((T, K), lambda i, keys, ivw: (0, 0))
+    any_spec = pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,  # keys, inv_wave
-        grid=(T, K),
-        in_specs=[
-            pl.BlockSpec((1, 1), lambda t, k, keys, ivw: (t, k)),   # groups
-            pl.BlockSpec((1, 1), lambda t, k, keys, ivw: (t, k)),   # prio
-            pl.BlockSpec((1, 1), lambda t, k, keys, ivw: (t, k)),   # do
-            full,                                                   # wave keys
-            full,                                                   # wave grps
-            full,                                                   # wave prio
-            full,                                                   # wave mask
-            pl.BlockSpec((1, G),
-                         lambda t, k, keys, ivw: (jnp.maximum(keys[t, k], 0),
-                                                  0)),
-        ],
+        grid=(T // LB,),
+        in_specs=[full, full, full, full, any_spec],
         out_specs=(
-            pl.BlockSpec((1, G),
-                         lambda t, k, keys, ivw: (jnp.maximum(keys[t, k], 0),
-                                                  0)),
-            pl.BlockSpec((1, 1), lambda t, k, keys, ivw: (t, k)),
+            any_spec,
+            pl.BlockSpec((LB, K), lambda i, keys, ivw: (i, 0)),
         ),
+        scratch_shapes=[
+            pltpu.VMEM((LBK, G), jnp.uint32),
+            pltpu.VMEM((LBK, G), jnp.uint32),
+            pltpu.SemaphoreType.DMA((LBK,)),
+            pltpu.SemaphoreType.DMA((LBK,)),
+        ],
     )
     return pl.pallas_call(
-        functools.partial(_kernel, fine, G),
+        functools.partial(_claim_probe_fused_kernel, fine, G, LB, K),
         grid_spec=grid_spec,
         out_shape=(jax.ShapeDtypeStruct(table.shape, table.dtype),
                    jax.ShapeDtypeStruct((T, K), jnp.uint32)),
-        input_output_aliases={9: 0},  # table is operand 9 counting prefetch
+        input_output_aliases={6: 0},  # table is operand 6 counting prefetch
         interpret=interpret,
-    )(keys, ivw, groups, p16, do, keys, groups, p16, do, table)
+    )(keys, ivw, keys, groups, p16, do, table)

@@ -3,11 +3,13 @@
 A multi-version read walks the record's version chain for the newest version
 visible at its snapshot timestamp.  On the paper's CPU platform that is a
 pointer chase per read; here the chain is a fixed-depth ring
-(core/mvstore.py), so the TPU-native formulation is the same scalar-prefetch
-DMA as the claim-table gathers (kernels/occ_validate.py): op keys are
-prefetched into SMEM, each grid step DMAs one record's whole begin-timestamp
-ring [D, G] HBM->VMEM, and the VPU does the visibility scan — all D slots
-compared at once instead of a serial chain walk.
+(core/mvstore.py), so the TPU-native formulation is the same lane-block
+row-DMA grid as the claim-table gathers (kernels/occ_validate.py): op keys
+are prefetched into SMEM, each ``(T // LB,)`` grid step DMAs its block's
+LB*K whole begin-timestamp rings [D, G] HBM->VMEM (the whole read stream in
+flight at once — kernels/wave_commit.py), and the VPU does the visibility
+scan vectorized over the block — all D slots of all block ops compared at
+once instead of a serial chain walk.
 
 Granularity is the visibility width (DESIGN.md section 9): fine checks the
 op's own group's begin timestamp per slot, coarse reduces each slot over the
@@ -30,54 +32,60 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.wave_commit import (_row_dmas, _start, _wait,
+                                       pick_lane_block)
 
-def _kernel(fine: bool, D: int, G: int, keys_ref, ts_ref, grp_ref, row_ref,
-            slot_ref, ok_ref):
-    row = row_ref[0]                                      # uint32[D, G]
+
+def _kernel(fine, D, G, LB, K, keys_ref, ts_ref, kv_b, grp_b, tbl, slot_b,
+            ok_b, rows_s, sem):
+    LBK = LB * K
+    t0 = pl.program_id(0) * LB
+    _row_dmas(_start, keys_ref, tbl, rows_s, sem, t0, LB, K)
+    _row_dmas(_wait, keys_ref, tbl, rows_s, sem, t0, LB, K)
+
+    rows = rows_s[...]                                   # uint32[LBK, D, G]
     ts = ts_ref[0]
     if fine:
-        g = grp_ref[0, 0]
-        sel = jnp.arange(G, dtype=jnp.int32)[None, :] == g
-        eff = jnp.where(sel, row, jnp.uint32(0)).max(axis=1)
+        gb = grp_b[...].reshape(LBK)
+        sel = (jnp.arange(G, dtype=jnp.int32)[None, None, :]
+               == gb[:, None, None])
+        eff = jnp.where(sel, rows, jnp.uint32(0)).max(axis=2)
     else:
-        eff = row.max(axis=1)                             # uint32[D]
+        eff = rows.max(axis=2)                           # uint32[LBK, D]
     score = jnp.where(eff <= ts, eff + jnp.uint32(1), jnp.uint32(0))
-    best = score.max()
-    slot = jnp.where(score == best, jnp.arange(D, dtype=jnp.int32), D).min()
-    t, k = pl.program_id(0), pl.program_id(1)
-    live = keys_ref[t, k] >= 0
-    slot_ref[0, 0] = jnp.where(live, slot, 0)
-    ok_ref[0, 0] = live & (best > 0)
+    best = score.max(axis=1)                             # (LBK,)
+    slot = jnp.where(score == best[:, None],
+                     jnp.arange(D, dtype=jnp.int32)[None, :], D).min(axis=1)
+    live = kv_b[...].reshape(LBK) >= 0
+    slot_b[...] = jnp.where(live, slot, 0).reshape(LB, K)
+    ok_b[...] = (live & (best > 0)).reshape(LB, K)
 
 
 def mv_gather_pallas(begin: jax.Array, keys: jax.Array, groups: jax.Array,
-                     ts: jax.Array, fine: bool,
+                     ts: jax.Array, fine: bool, lane_block: int = 0,
                      interpret: bool = False
                      ) -> tuple[jax.Array, jax.Array]:
     """(slot int32[T, K], ok bool[T, K]) — see ref.mv_gather."""
     T, K = keys.shape
     D, G = begin.shape[1], begin.shape[2]
+    LB = pick_lane_block(T, K, G * D, lane_block)
+    LBK = LB * K
     tsa = jnp.reshape(ts.astype(jnp.uint32), (1,))
+    blk = pl.BlockSpec((LB, K), lambda i, keys, ts: (i, 0))
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,  # keys, ts drive the index_maps
-        grid=(T, K),
-        in_specs=[
-            pl.BlockSpec((1, 1), lambda t, k, keys, ts: (t, k)),   # groups
-            # One record's whole begin ring per op, DMA'd by prefetched key.
-            pl.BlockSpec((1, D, G),
-                         lambda t, k, keys, ts: (jnp.maximum(keys[t, k], 0),
-                                                 0, 0)),
-        ],
-        out_specs=(
-            pl.BlockSpec((1, 1), lambda t, k, keys, ts: (t, k)),
-            pl.BlockSpec((1, 1), lambda t, k, keys, ts: (t, k)),
-        ),
+        num_scalar_prefetch=2,  # keys, ts
+        grid=(T // LB,),
+        in_specs=[blk, blk,
+                  pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)],
+        out_specs=(blk, blk),
+        scratch_shapes=[pltpu.VMEM((LBK, D, G), jnp.uint32),
+                        pltpu.SemaphoreType.DMA((LBK,))],
     )
     return pl.pallas_call(
-        functools.partial(_kernel, fine, D, G),
+        functools.partial(_kernel, fine, D, G, LB, K),
         grid_spec=grid_spec,
         out_shape=(jax.ShapeDtypeStruct((T, K), jnp.int32),
                    jax.ShapeDtypeStruct((T, K), jnp.bool_)),
         interpret=interpret,
-    )(keys, tsa, groups, begin)
+    )(keys, tsa, keys, groups, begin)

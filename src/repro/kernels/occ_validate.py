@@ -3,9 +3,18 @@
 The hot loop of optimistic commit: for every read op, fetch the claimed-writer
 word of its (record, group) cell and compare priorities.  On the paper's CPU
 platform this is a pointer chase per read; the TPU-native formulation is a
-scalar-prefetch-driven DMA: op keys are prefetched into SMEM, each grid step
-DMAs one version-table row HBM->VMEM (BlockSpec index_map reads the key), and
-the VPU does the tag/priority compare.
+scalar-prefetch-driven DMA: op keys are prefetched into SMEM and claim rows
+move HBM->VMEM by explicit ``make_async_copy`` row DMAs, then the VPU does
+the tag/priority compare.
+
+The grid is LANE BLOCKS (kernels/wave_commit.py): ``(T // LB,)`` with an
+LB-lane x K-slot block per step instead of the old one-op-per-step
+``(T, K)`` grid.  A step issues the row fetches for all LB*K ops of its
+block back-to-back (the whole read stream in flight at once), waits once,
+and runs the compares fully vectorized over the block — amortizing the
+per-step grid overhead that dominated at one row DMA per step.  ``LB`` is
+auto-chosen from the table width (``pick_lane_block``) with an
+``EngineConfig.lane_block`` override; LB=1 recovers the per-op tiling.
 
 Granularity is the compare width (DESIGN.md section 2): fine compares the
 op's own group column, coarse reduces over the whole row (G is small — one
@@ -13,7 +22,7 @@ op's own group column, coarse reduces over the whole row (G is small — one
 it is identical for both granularities, matching the paper's "fine-grained
 timestamps have no measurable overhead").
 
-Three kernels share the one row-DMA grid:
+Three kernels share the one lane-block row-DMA grid:
 
 - ``occ_validate_pallas`` — conflict bool at one granularity (OCC's hot loop);
 - ``occ_validate_dual_pallas`` — fine AND coarse verdicts from the same row
@@ -33,141 +42,128 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.claimword import NO_PRIO, live_prio
+from repro.kernels.wave_commit import (_row_dmas, _start, _wait,
+                                       pick_lane_block)
 
 
-def _kernel(fine: bool, G: int,
-            keys_ref, ivw_ref, grp_ref, prio_ref, chk_ref, row_ref, out_ref):
-    row = row_ref[0, :]                                   # uint32[G]
-    pr = live_prio(row, ivw_ref[0])
+def _table_prio(rows, ivw, gb, fine, G):
+    """Strongest live claimant per block op from its fetched row."""
+    pr = live_prio(rows, ivw)                            # (LBK, G)
     if fine:
-        g = grp_ref[0, 0]
-        sel = jnp.arange(G, dtype=jnp.int32) == g
-        wprio = jnp.where(sel, pr, NO_PRIO).min()
-    else:
-        wprio = pr.min()
-    out_ref[0, 0] = chk_ref[0, 0] & (wprio < prio_ref[0, 0])
+        sel = jnp.arange(G, dtype=jnp.int32)[None, :] == gb[:, None]
+        return jnp.where(sel, pr, jnp.uint32(NO_PRIO)).min(axis=1)
+    return pr.min(axis=1)
+
+
+def _kernel(fine, G, LB, K, keys_ref, ivw_ref, grp_b, prio_b, chk_b, tbl,
+            out_b, rows_s, sem):
+    LBK = LB * K
+    t0 = pl.program_id(0) * LB
+    _row_dmas(_start, keys_ref, tbl, rows_s, sem, t0, LB, K)
+    _row_dmas(_wait, keys_ref, tbl, rows_s, sem, t0, LB, K)
+    gb = grp_b[...].reshape(LBK)
+    wprio = _table_prio(rows_s[...], ivw_ref[0], gb, fine, G)
+    conf = chk_b[...].reshape(LBK) & (wprio < prio_b[...].reshape(LBK))
+    out_b[...] = conf.reshape(LB, K)
+
+
+def _val_specs(T, K, G, LB, n_scalar_ins, n_outs):
+    """Shared lane-block grid spec: blocked per-op scalars, ANY table,
+    blocked outputs, row scratch + DMA semaphores."""
+    LBK = LB * K
+    blk = pl.BlockSpec((LB, K), lambda i, keys, ivw: (i, 0))
+    return pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(T // LB,),
+        in_specs=[blk] * n_scalar_ins
+        + [pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)],
+        out_specs=blk if n_outs == 1 else (blk,) * n_outs,
+        scratch_shapes=[pltpu.VMEM((LBK, G), jnp.uint32),
+                        pltpu.SemaphoreType.DMA((LBK,))],
+    )
 
 
 def occ_validate_pallas(claim_w: jax.Array, keys: jax.Array,
                         groups: jax.Array, myprio: jax.Array,
                         check: jax.Array, inv_wave: jax.Array, fine: bool,
+                        lane_block: int = 0,
                         interpret: bool = False) -> jax.Array:
-    """conflict bool[T, K] — see ref.occ_validate for the oracle."""
+    """conflict bool[T, K] — see ref.occ_validate for the oracle.  Masked
+    ops (key < 0) clamp their DMA to row 0; ``check`` zeroes their result."""
     T, K = keys.shape
     G = claim_w.shape[1]
+    LB = pick_lane_block(T, K, G, lane_block)
     ivw = jnp.reshape(inv_wave.astype(jnp.uint32), (1,))
-
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,  # keys, inv_wave drive the index_maps
-        grid=(T, K),
-        in_specs=[
-            pl.BlockSpec((1, 1), lambda t, k, keys, ivw: (t, k)),   # groups
-            pl.BlockSpec((1, 1), lambda t, k, keys, ivw: (t, k)),   # myprio
-            pl.BlockSpec((1, 1), lambda t, k, keys, ivw: (t, k)),   # check
-            # One version-table row per op, DMA'd by prefetched key.  Masked
-            # ops (key < 0) clamp to row 0; `check` zeroes their result.
-            pl.BlockSpec((1, G),
-                         lambda t, k, keys, ivw: (jnp.maximum(keys[t, k], 0),
-                                                  0)),
-        ],
-        out_specs=pl.BlockSpec((1, 1), lambda t, k, keys, ivw: (t, k)),
-    )
     return pl.pallas_call(
-        functools.partial(_kernel, fine, G),
-        grid_spec=grid_spec,
+        functools.partial(_kernel, fine, G, LB, K),
+        grid_spec=_val_specs(T, K, G, LB, 3, 1),
         out_shape=jax.ShapeDtypeStruct((T, K), jnp.bool_),
         interpret=interpret,
     )(keys, ivw, groups, myprio.astype(jnp.uint32), check, claim_w)
 
 
-def _dual_kernel(G: int, keys_ref, ivw_ref, grp_ref, prio_ref, chk_ref,
-                 row_ref, fine_ref, coarse_ref):
-    row = row_ref[0, :]                                   # uint32[G]
-    pr = live_prio(row, ivw_ref[0])
-    g = grp_ref[0, 0]
-    sel = jnp.arange(G, dtype=jnp.int32) == g
-    fprio = jnp.where(sel, pr, NO_PRIO).min()
-    cprio = pr.min()
-    chk = chk_ref[0, 0]
-    myp = prio_ref[0, 0]
-    fine_ref[0, 0] = chk & (fprio < myp)
-    coarse_ref[0, 0] = chk & (cprio < myp)
+def _dual_kernel(G, LB, K, keys_ref, ivw_ref, grp_b, prio_b, chk_b, tbl,
+                 fine_b, coarse_b, rows_s, sem):
+    LBK = LB * K
+    t0 = pl.program_id(0) * LB
+    _row_dmas(_start, keys_ref, tbl, rows_s, sem, t0, LB, K)
+    _row_dmas(_wait, keys_ref, tbl, rows_s, sem, t0, LB, K)
+    pr = live_prio(rows_s[...], ivw_ref[0])              # (LBK, G)
+    gb = grp_b[...].reshape(LBK)
+    sel = jnp.arange(G, dtype=jnp.int32)[None, :] == gb[:, None]
+    fprio = jnp.where(sel, pr, jnp.uint32(NO_PRIO)).min(axis=1)
+    cprio = pr.min(axis=1)
+    chk = chk_b[...].reshape(LBK)
+    myp = prio_b[...].reshape(LBK)
+    fine_b[...] = (chk & (fprio < myp)).reshape(LB, K)
+    coarse_b[...] = (chk & (cprio < myp)).reshape(LB, K)
 
 
 def occ_validate_dual_pallas(claim_w: jax.Array, keys: jax.Array,
                              groups: jax.Array, myprio: jax.Array,
                              check: jax.Array, inv_wave: jax.Array,
-                             interpret: bool = False
+                             lane_block: int = 0, interpret: bool = False
                              ) -> tuple[jax.Array, jax.Array]:
     """(fine, coarse) conflict bool[T, K] from ONE row DMA per op — the
     AutoGran double probe without the double fetch."""
     T, K = keys.shape
     G = claim_w.shape[1]
+    LB = pick_lane_block(T, K, G, lane_block)
     ivw = jnp.reshape(inv_wave.astype(jnp.uint32), (1,))
-
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,  # keys, inv_wave
-        grid=(T, K),
-        in_specs=[
-            pl.BlockSpec((1, 1), lambda t, k, keys, ivw: (t, k)),   # groups
-            pl.BlockSpec((1, 1), lambda t, k, keys, ivw: (t, k)),   # myprio
-            pl.BlockSpec((1, 1), lambda t, k, keys, ivw: (t, k)),   # check
-            pl.BlockSpec((1, G),
-                         lambda t, k, keys, ivw: (jnp.maximum(keys[t, k], 0),
-                                                  0)),
-        ],
-        out_specs=(
-            pl.BlockSpec((1, 1), lambda t, k, keys, ivw: (t, k)),
-            pl.BlockSpec((1, 1), lambda t, k, keys, ivw: (t, k)),
-        ),
-    )
     return pl.pallas_call(
-        functools.partial(_dual_kernel, G),
-        grid_spec=grid_spec,
+        functools.partial(_dual_kernel, G, LB, K),
+        grid_spec=_val_specs(T, K, G, LB, 3, 2),
         out_shape=(jax.ShapeDtypeStruct((T, K), jnp.bool_),
                    jax.ShapeDtypeStruct((T, K), jnp.bool_)),
         interpret=interpret,
     )(keys, ivw, groups, myprio.astype(jnp.uint32), check, claim_w)
 
 
-def _probe_kernel(fine: bool, G: int, keys_ref, ivw_ref, grp_ref, row_ref,
-                  out_ref):
-    row = row_ref[0, :]                                   # uint32[G]
-    pr = live_prio(row, ivw_ref[0])
-    if fine:
-        g = grp_ref[0, 0]
-        sel = jnp.arange(G, dtype=jnp.int32) == g
-        wprio = jnp.where(sel, pr, NO_PRIO).min()
-    else:
-        wprio = pr.min()
-    t, k = pl.program_id(0), pl.program_id(1)
-    live = keys_ref[t, k] >= 0
-    out_ref[0, 0] = jnp.where(live, wprio, jnp.uint32(NO_PRIO))
+def _probe_kernel(fine, G, LB, K, keys_ref, ivw_ref, kv_b, grp_b, tbl,
+                  out_b, rows_s, sem):
+    LBK = LB * K
+    t0 = pl.program_id(0) * LB
+    _row_dmas(_start, keys_ref, tbl, rows_s, sem, t0, LB, K)
+    _row_dmas(_wait, keys_ref, tbl, rows_s, sem, t0, LB, K)
+    gb = grp_b[...].reshape(LBK)
+    wprio = _table_prio(rows_s[...], ivw_ref[0], gb, fine, G)
+    live = kv_b[...].reshape(LBK) >= 0
+    out_b[...] = jnp.where(live, wprio,
+                           jnp.uint32(NO_PRIO)).reshape(LB, K)
 
 
 def claim_probe_pallas(table: jax.Array, keys: jax.Array, groups: jax.Array,
-                       inv_wave: jax.Array, fine: bool,
+                       inv_wave: jax.Array, fine: bool, lane_block: int = 0,
                        interpret: bool = False) -> jax.Array:
     """Strongest live claimant prio16 per op (uint32[T, K]; NO_PRIO when the
     cell is unclaimed this wave or the op is masked) — see ref.claim_probe."""
     T, K = keys.shape
     G = table.shape[1]
+    LB = pick_lane_block(T, K, G, lane_block)
     ivw = jnp.reshape(inv_wave.astype(jnp.uint32), (1,))
-
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,  # keys, inv_wave
-        grid=(T, K),
-        in_specs=[
-            pl.BlockSpec((1, 1), lambda t, k, keys, ivw: (t, k)),   # groups
-            pl.BlockSpec((1, G),
-                         lambda t, k, keys, ivw: (jnp.maximum(keys[t, k], 0),
-                                                  0)),
-        ],
-        out_specs=pl.BlockSpec((1, 1), lambda t, k, keys, ivw: (t, k)),
-    )
     return pl.pallas_call(
-        functools.partial(_probe_kernel, fine, G),
-        grid_spec=grid_spec,
+        functools.partial(_probe_kernel, fine, G, LB, K),
+        grid_spec=_val_specs(T, K, G, LB, 2, 1),
         out_shape=jax.ShapeDtypeStruct((T, K), jnp.uint32),
         interpret=interpret,
-    )(keys, ivw, groups, table)
+    )(keys, ivw, keys, groups, table)

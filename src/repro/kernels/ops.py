@@ -39,6 +39,7 @@ from repro.kernels.ts_gather import ts_gather_pallas
 from repro.kernels.ts_install import ts_install_max_pallas
 from repro.kernels.verdict_pack import (verdict_pack_pallas,
                                         verdict_unpack_pallas)
+from repro.kernels.wave_commit import wave_commit_pallas
 
 
 def _force() -> str:
@@ -72,28 +73,32 @@ def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
 
 # ------------------------------------------------------------------ OCC
 def occ_validate(claim_w, keys, groups, myprio, check, inv_wave, fine: bool,
-                 use_pallas=None):
+                 lane_block: int = 0, use_pallas=None):
     if _use_pallas(use_pallas):
         return occ_validate_pallas(claim_w, keys, groups,
                                    myprio.astype(jnp.uint32), check,
-                                   inv_wave, fine, interpret=_interp())
+                                   inv_wave, fine, lane_block=lane_block,
+                                   interpret=_interp())
     return ref.occ_validate(claim_w, keys, groups, myprio, check,
                             inv_wave, fine)
 
 
 def occ_validate_dual(claim_w, keys, groups, myprio, check, inv_wave,
-                      use_pallas=None):
+                      lane_block: int = 0, use_pallas=None):
     if _use_pallas(use_pallas):
         return occ_validate_dual_pallas(claim_w, keys, groups,
                                         myprio.astype(jnp.uint32), check,
-                                        inv_wave, interpret=_interp())
+                                        inv_wave, lane_block=lane_block,
+                                        interpret=_interp())
     return ref.occ_validate_dual(claim_w, keys, groups, myprio, check,
                                  inv_wave)
 
 
-def claim_probe(table, keys, groups, inv_wave, fine: bool, use_pallas=None):
+def claim_probe(table, keys, groups, inv_wave, fine: bool,
+                lane_block: int = 0, use_pallas=None):
     if _use_pallas(use_pallas):
         return claim_probe_pallas(table, keys, groups, inv_wave, fine,
+                                  lane_block=lane_block,
                                   interpret=_interp())
     return ref.claim_probe(table, keys, groups, inv_wave, fine)
 
@@ -129,15 +134,37 @@ def claim_scatter(table, keys, groups, prio, do, wave, use_pallas=None):
 
 
 def claim_probe_fused(table, keys, groups, prio, do, wave, fine: bool,
-                      use_pallas=None):
+                      lane_block: int = 0, use_pallas=None):
     if _use_pallas(use_pallas):
         # Same debug-mode precondition check as the jnp oracle path (eager
         # calls only; free under jit — see ref.check_claim_tag_monotone).
         ref.check_claim_tag_monotone(table, keys, wave)
         return claim_probe_fused_pallas(table, keys, groups, prio, do,
                                         _inv_wave(wave), fine,
+                                        lane_block=lane_block,
                                         interpret=_interp())
     return ref.claim_probe_fused(table, keys, groups, prio, do, wave, fine)
+
+
+def wave_commit(claim_w, claim_r, wts, keys, groups, prio, do_w, do_r,
+                check_w, check_w2, check_r, extra, wave, fine: bool,
+                dual: bool, bump: bool, lane_block: int = 0,
+                use_pallas=None):
+    """Op fifteen: the fused probe-family wave (claim install + probe +
+    lane verdicts + version bumps, one launch) — see ref.wave_commit."""
+    if _use_pallas(use_pallas):
+        ref.check_claim_tag_monotone(claim_w, keys, wave)
+        if dual:
+            ref.check_claim_tag_monotone(claim_r, keys, wave)
+        return wave_commit_pallas(claim_w, claim_r, wts, keys, groups,
+                                  prio.astype(jnp.uint32), do_w, do_r,
+                                  check_w, check_w2, check_r, extra,
+                                  _inv_wave(wave), fine, dual, bump,
+                                  lane_block=lane_block,
+                                  interpret=_interp())
+    return ref.wave_commit(claim_w, claim_r, wts, keys, groups, prio, do_w,
+                           do_r, check_w, check_w2, check_r, extra, wave,
+                           fine, dual, bump)
 
 
 def route_pack(owner, vals, n_dest: int, cap: int, fills, use_pallas=None):
@@ -167,9 +194,11 @@ def segment_count(keys, groups, G: int, mask, use_pallas=None):
 
 
 # ------------------------------------------------------- multi-version store
-def mv_gather(begin, keys, groups, ts, fine: bool, use_pallas=None):
+def mv_gather(begin, keys, groups, ts, fine: bool, lane_block: int = 0,
+              use_pallas=None):
     if _use_pallas(use_pallas):
         return mv_gather_pallas(begin, keys, groups, ts, fine,
+                                lane_block=lane_block,
                                 interpret=_interp())
     return ref.mv_gather(begin, keys, groups, ts, fine)
 

@@ -181,6 +181,56 @@ def claim_probe_fused(table: jax.Array, keys: jax.Array, groups: jax.Array,
     return table, claim_probe(table, keys, groups, inv_wave(wave), fine)
 
 
+def wave_commit(claim_w: jax.Array, claim_r, wts, keys: jax.Array,
+                groups: jax.Array, prio: jax.Array, do_w: jax.Array, do_r,
+                check_w: jax.Array, check_w2, check_r, extra,
+                wave: jax.Array, fine: bool, dual: bool, bump: bool):
+    """Op fifteen: the fused probe-family wave — claim install + probe +
+    lane verdicts + version bumps in one logical pass.
+
+    Composes the existing primitives, so the fused engine path is
+    bit-identical to the unfused one *by construction*:
+
+      1. ``claim_probe_fused`` on the writer table (install ``do_w`` ops'
+         claim words, probe every op) -> ``wprio``;
+      2. ``dual``: the same on the reader table with ``do_r`` -> ``rprio``
+         (2PL / Adaptive visible reads);
+      3. per-op conflicts from the caller's pre-thinned check masks:
+         ``check_w``    ->  stronger writer claim     (wprio  < prio)
+         ``check_w2``   ->  ANY other writer claim    (wprio != NO_PRIO
+                            and wprio != prio; TicToc's extension channel)
+         ``check_r``    ->  stronger reader claim     (rprio  < prio)
+         ``extra``      ->  caller-computed conflicts OR'd in verbatim;
+      4. lane verdict ``commit = ~conflict.any(axis=1)``;
+      5. ``bump``: +1 version per committed ``do_w`` op (``occ_commit``).
+
+    ``check_w2``/``check_r``/``extra`` may be None (skipped); ``claim_r``/
+    ``do_r`` are required iff ``dual``, ``wts`` iff ``bump``.  Returns
+    ``(claim_w', claim_r', wts', conflict bool[T, K], commit bool[T])``
+    with None passed through for unused tables.
+
+    Precondition: the monotone wave tag of ``claim_probe_fused`` on every
+    claim table touched (checked eagerly by ``check_claim_tag_monotone``;
+    ``REPRO_PRECONDITION_CHECKS=0`` opts out).
+    """
+    claim_w, wprio = claim_probe_fused(claim_w, keys, groups, prio, do_w,
+                                       wave, fine)
+    conflict = check_w & (wprio < prio)
+    if check_w2 is not None:
+        conflict |= (check_w2 & (wprio != jnp.uint32(NO_PRIO))
+                     & (wprio != prio))
+    if dual:
+        claim_r, rprio = claim_probe_fused(claim_r, keys, groups, prio,
+                                           do_r, wave, fine)
+        conflict |= check_r & (rprio < prio)
+    if extra is not None:
+        conflict |= extra
+    commit = ~conflict.any(axis=1)
+    if bump:
+        wts = occ_commit(wts, keys, groups, do_w & commit[:, None])
+    return claim_w, claim_r, wts, conflict, commit
+
+
 def route_pack(owner: jax.Array, vals: jax.Array, n_dest: int, cap: int,
                fills) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Sort-free routing pack: per-destination fixed-capacity buffers.

@@ -1,0 +1,324 @@
+"""Op fifteen: the lane-block megakernel for the probe-family wave.
+
+One ``pallas_call`` replaces the whole claim -> verdict -> install chain
+(``claim_probe`` launch, XLA verdict compare, ``commit_install`` launch)
+that the probe family ran per wave: in a single launch with the claim and
+version tables aliased in/out, the kernel installs the wave's write
+claims, answers every op's strongest-claimant probe, reduces the per-op
+conflicts to lane verdicts in VMEM, and bumps versions for the committed
+writes — each touched row rides ONE DMA per wave instead of 2-3
+(DESIGN.md section 5).
+
+Tiling.  The grid is LANE BLOCKS — ``(T // LB,)`` with an ``LB``-lane x
+K-slot block per step — instead of the one-op-per-step ``(T, K)`` grid of
+the older kernels.  Tables sit in ANY/HBM memory space and rows move by
+explicit ``make_async_copy`` DMAs into VMEM scratch: a step issues the
+row fetches for all LB*K ops of its block back-to-back (the whole read
+stream is in flight at once — double buffering generalized to depth
+LB*K), waits once, runs the block's probe/verdict/install math fully
+vectorized, and streams the writeback DMAs out.  ``LB`` is auto-chosen
+from the table width (wider rows -> smaller blocks, bounded by the
+all-pairs tile's VMEM footprint) with an ``EngineConfig.lane_block``
+override; ``pick_lane_block`` snaps to a divisor of T, so LB=1
+degenerates to the old per-op tiling.
+
+Correctness under the block tiling.  A block's row fetches all happen
+before any of its writebacks, so two same-row ops in one block read the
+same pre-block row state — the kernel therefore writes back *final*
+values, not increments applied to possibly-stale reads:
+
+  - claim install: ``min(fetched row, strongest same-wave claim word per
+    cell)`` with the wave term computed from the full in-VMEM wave
+    vectors (the all-pairs trick of ``claim_probe.py``).  Every same-row
+    op writes the identical final row (min is idempotent), so writeback
+    order within a block is unobservable.
+  - version bump: ``fetched row + same-block committed-write count per
+    cell``.  Lane verdicts are block-local by construction (a block holds
+    whole lanes), so the count is complete within the block; same-row ops
+    again write identical bytes.  Cross-block accumulation is ordered by
+    the sequential grid (a step's writebacks are waited before the step
+    ends, so the next block's fetches see them).
+
+Probes see later blocks' installs through the same all-pairs wave term as
+``claim_probe.py`` — sound under the monotone-wave-tag precondition
+checked by ``ref.check_claim_tag_monotone``.  Masked ops clamp to row 0
+but compute the SAME final row 0 as any real row-0 op in the block
+(matching on clamped keys), so their redundant writebacks are harmless.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.claimword import (EMPTY_WORD, NO_PRIO, PRIO16_MASK,
+                                  WAVE_SHIFT, live_prio)
+
+_SENT = 0x7FFFFFFF  # cell id of masked ops in the all-pairs compare
+
+#: VMEM budget for the all-pairs tile ((T*K) x (LB*K) int32 compares) the
+#: auto lane-block chooser fits under.
+_PAIR_TILE_BYTES = 1 << 20
+
+
+def pick_lane_block(T: int, K: int, G: int, override: int = 0) -> int:
+    """Lanes per grid step.  Auto mode fits the (T*K) x (LB*K) all-pairs
+    tile under ``_PAIR_TILE_BYTES`` and caps the row scratch by the table
+    width G (wider rows -> smaller blocks); an explicit ``override``
+    (EngineConfig.lane_block) wins.  Either way the result snaps DOWN to
+    a divisor of T, so the grid tiles exactly and LB=1 recovers the
+    per-op tiling."""
+    if override:
+        lb = max(1, min(int(override), T))
+    else:
+        lb = max(1, _PAIR_TILE_BYTES // max(4 * T * K * K, 1))
+        lb = min(lb, T, max(256 // max(G, 1), 1))
+    while T % lb:
+        lb -= 1
+    return lb
+
+
+def _start(copy):
+    copy.start()
+
+
+def _wait(copy):
+    copy.wait()
+
+
+def _row_dmas(action, keys_ref, tbl_ref, buf_ref, sem_ref, t0, LB, K,
+              to_table: bool = False):
+    """Issue (or wait) one row copy per block op: table row <-> scratch
+    row j.  All LB*K copies of a stream are in flight together."""
+
+    def body(j, _):
+        t = t0 + j // K
+        key = jnp.maximum(keys_ref[t, j % K], 0)
+        if to_table:
+            copy = pltpu.make_async_copy(buf_ref.at[j], tbl_ref.at[key],
+                                         sem_ref.at[j])
+        else:
+            copy = pltpu.make_async_copy(tbl_ref.at[key], buf_ref.at[j],
+                                         sem_ref.at[j])
+        action(copy)
+        return 0
+
+    jax.lax.fori_loop(0, LB * K, body, 0)
+
+
+def _probe(rows, ivw, kcl, kraw, gb, allk, allg, allp16, alldo, fine, G):
+    """Strongest-claimant prio16 per block op: min(fetched-row probe,
+    same-wave all-pairs term) — claim_probe.py's math, vectorized over
+    the lane block.  NO_PRIO for masked (kraw < 0) ops."""
+    pr = live_prio(rows, ivw)                          # (LBK, G)
+    garange = jnp.arange(G, dtype=jnp.int32)
+    if fine:
+        tprio = jnp.where(garange[None, :] == gb[:, None], pr,
+                          jnp.uint32(NO_PRIO)).min(axis=1)
+        all_cell = jnp.where(alldo, allk * G + allg, jnp.int32(_SENT))
+        hit = all_cell[:, None] == (kcl * G + gb)[None, :]
+    else:
+        tprio = pr.min(axis=1)
+        all_key = jnp.where(alldo, allk, jnp.int32(_SENT))
+        hit = all_key[:, None] == kcl[None, :]
+    wave_prio = jnp.where(hit, allp16[:, None],
+                          jnp.uint32(NO_PRIO)).min(axis=0)
+    return jnp.where(kraw >= 0, jnp.minimum(tprio, wave_prio),
+                     jnp.uint32(NO_PRIO))
+
+
+def _install_rows(rows, ivw, kcl, allk, allg, allp16, alldo, G):
+    """Final claim rows for the block: min(fetched row, strongest
+    same-wave claim word per cell) — always fine resolution (claims are
+    scattered fine regardless of granularity).  Identical for every
+    same-row op, so block writeback order is unobservable."""
+    word_all = (ivw << WAVE_SHIFT) | allp16            # (TK,) uint32
+    key_hit = (allk[:, None] == kcl[None, :]) & alldo[:, None]
+    cols = []
+    for g in range(G):
+        gm = key_hit & (allg[:, None] == g)
+        wmin = jnp.where(gm, word_all[:, None],
+                         jnp.uint32(EMPTY_WORD)).min(axis=0)
+        cols.append(jnp.minimum(rows[:, g], wmin))
+    return jnp.stack(cols, axis=1)
+
+
+def _bump_rows(rows, kcl, gb, bump_ops, G):
+    """Final version rows: fetched row + same-block committed-write count
+    per cell.  Complete within the block (lane verdicts are block-local);
+    identical bytes for every same-row op."""
+    key_eq = kcl[:, None] == kcl[None, :]              # (LBK, LBK)
+    cols = []
+    for g in range(G):
+        cnt = (key_eq & bump_ops[None, :]
+               & (gb[None, :] == g)).sum(axis=1).astype(jnp.uint32)
+        cols.append(rows[:, g] + cnt)
+    return jnp.stack(cols, axis=1)
+
+
+def _wave_commit_kernel(fine, G, LB, K, T, dual, bump, *refs):
+    LBK = LB * K
+    it = iter(refs)
+    keys_ref, ivw_ref = next(it), next(it)
+    (kv, grp, prio, dow, dor, cw, c2, crm, ex) = (next(it)
+                                                  for _ in range(9))
+    cw_in = next(it)
+    cr_in = next(it) if dual else None
+    wts_in = next(it) if bump else None
+    conf_out, commit_out, cwo = next(it), next(it), next(it)
+    cro = next(it) if dual else None
+    wtso = next(it) if bump else None
+    rw, nw, sem_rw, sem_ww = (next(it) for _ in range(4))
+    if dual:
+        rr, nr, sem_rr, sem_wr = (next(it) for _ in range(4))
+    if bump:
+        rv, nv, sem_rv, sem_wv = (next(it) for _ in range(4))
+    del cw_in, cr_in, wts_in  # RMW through the aliased OUTPUT refs
+
+    ivw = ivw_ref[0]
+    t0 = pl.program_id(0) * LB
+
+    # ---- fetch: every block op's row(s), all copies in flight at once
+    _row_dmas(_start, keys_ref, cwo, rw, sem_rw, t0, LB, K)
+    if dual:
+        _row_dmas(_start, keys_ref, cro, rr, sem_rr, t0, LB, K)
+    if bump:
+        _row_dmas(_start, keys_ref, wtso, rv, sem_rv, t0, LB, K)
+    _row_dmas(_wait, keys_ref, cwo, rw, sem_rw, t0, LB, K)
+    if dual:
+        _row_dmas(_wait, keys_ref, cro, rr, sem_rr, t0, LB, K)
+    if bump:
+        _row_dmas(_wait, keys_ref, wtso, rv, sem_rv, t0, LB, K)
+
+    # ---- block views (dynamic slice of the full in-VMEM wave vectors)
+    def blk(ref, dtype=None):
+        x = jax.lax.dynamic_slice(ref[...], (t0, 0), (LB, K)).reshape(LBK)
+        return x if dtype is None else x.astype(dtype)
+
+    kraw = blk(kv)
+    kcl = jnp.maximum(kraw, 0)
+    gb = blk(grp)
+    pbu = blk(prio).astype(jnp.uint32)
+    dwb = blk(dow)
+    allk = kv[...].reshape(-1)
+    allg = grp[...].reshape(-1)
+    allp16 = (prio[...].astype(jnp.uint32)
+              & jnp.uint32(PRIO16_MASK)).reshape(-1)
+    alldow = dow[...].reshape(-1)
+
+    # ---- probe + per-op conflicts + lane verdicts, fully vectorized
+    wprio = _probe(rw[...], ivw, kcl, kraw, gb, allk, allg, allp16,
+                   alldow, fine, G)
+    conf = blk(cw) & (wprio < pbu)
+    conf |= blk(c2) & (wprio != jnp.uint32(NO_PRIO)) & (wprio != pbu)
+    if dual:
+        rprio = _probe(rr[...], ivw, kcl, kraw, gb, allk, allg, allp16,
+                       dor[...].reshape(-1), fine, G)
+        conf |= blk(crm) & (rprio < pbu)
+    conf |= blk(ex)
+    confm = conf.reshape(LB, K)
+    commit = ~confm.any(axis=1)                        # (LB,)
+    conf_out[...] = confm
+    commit_out[...] = commit[:, None]
+
+    # ---- install writebacks: final rows, streamed back to the tables
+    nw[...] = _install_rows(rw[...], ivw, kcl, allk, allg, allp16,
+                            alldow, G)
+    _row_dmas(_start, keys_ref, cwo, nw, sem_ww, t0, LB, K, to_table=True)
+    if dual:
+        alldor = dor[...].reshape(-1)
+        nr[...] = _install_rows(rr[...], ivw, kcl, allk, allg, allp16,
+                                alldor, G)
+        _row_dmas(_start, keys_ref, cro, nr, sem_wr, t0, LB, K,
+                  to_table=True)
+    if bump:
+        bump_ops = dwb & jnp.broadcast_to(commit[:, None],
+                                          (LB, K)).reshape(LBK)
+        nv[...] = _bump_rows(rv[...], kcl, gb, bump_ops, G)
+        _row_dmas(_start, keys_ref, wtso, nv, sem_wv, t0, LB, K,
+                  to_table=True)
+    # Writebacks must land before the next block fetches (sequential
+    # grid): wait them out before the step ends.
+    _row_dmas(_wait, keys_ref, cwo, nw, sem_ww, t0, LB, K, to_table=True)
+    if dual:
+        _row_dmas(_wait, keys_ref, cro, nr, sem_wr, t0, LB, K,
+                  to_table=True)
+    if bump:
+        _row_dmas(_wait, keys_ref, wtso, nv, sem_wv, t0, LB, K,
+                  to_table=True)
+
+
+def wave_commit_pallas(claim_w: jax.Array, claim_r, wts, keys: jax.Array,
+                       groups: jax.Array, prio: jax.Array, do_w: jax.Array,
+                       do_r, check_w: jax.Array, check_w2, check_r, extra,
+                       inv_wave: jax.Array, fine: bool, dual: bool,
+                       bump: bool, lane_block: int = 0,
+                       interpret: bool = False):
+    """(claim_w', claim_r', wts', conflict bool[T,K], commit bool[T]) —
+    see ref.wave_commit (None passed through for absent tables)."""
+    T, K = keys.shape
+    G = claim_w.shape[1]
+    LB = pick_lane_block(T, K, G, lane_block)
+    LBK = LB * K
+    ivw = jnp.reshape(inv_wave.astype(jnp.uint32), (1,))
+    do_w = do_w & (keys >= 0)
+    zeros = jnp.zeros((T, K), jnp.bool_)
+    do_r = (do_r & (keys >= 0)) if dual else zeros
+    check_w2 = zeros if check_w2 is None else check_w2
+    check_r = zeros if check_r is None else check_r
+    extra = zeros if extra is None else extra
+    p16 = prio.astype(jnp.uint32)
+
+    full = pl.BlockSpec((T, K), lambda i, keys, ivw: (0, 0))
+    any_spec = pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)
+    n_tbl = 1 + int(dual) + int(bump)
+    in_specs = [full] * 9 + [any_spec] * n_tbl
+    out_specs = [pl.BlockSpec((LB, K), lambda i, keys, ivw: (i, 0)),
+                 pl.BlockSpec((LB, 1), lambda i, keys, ivw: (i, 0))] \
+        + [any_spec] * n_tbl
+    out_shape = [jax.ShapeDtypeStruct((T, K), jnp.bool_),
+                 jax.ShapeDtypeStruct((T, 1), jnp.bool_),
+                 jax.ShapeDtypeStruct(claim_w.shape, claim_w.dtype)]
+    tables = [claim_w]
+    aliases = {11: 2}
+    if dual:
+        out_shape.append(jax.ShapeDtypeStruct(claim_r.shape, claim_r.dtype))
+        tables.append(claim_r)
+        aliases[12] = 3
+    if bump:
+        out_shape.append(jax.ShapeDtypeStruct(wts.shape, wts.dtype))
+        tables.append(wts)
+        aliases[11 + n_tbl - 1] = 2 + n_tbl - 1
+
+    def tbl_scratch():
+        return [pltpu.VMEM((LBK, G), jnp.uint32),
+                pltpu.VMEM((LBK, G), jnp.uint32),
+                pltpu.SemaphoreType.DMA((LBK,)),
+                pltpu.SemaphoreType.DMA((LBK,))]
+
+    scratch = tbl_scratch() * n_tbl
+
+    outs = pl.pallas_call(
+        functools.partial(_wave_commit_kernel, fine, G, LB, K, T, dual,
+                          bump),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,   # keys, inv_wave
+            grid=(T // LB,),
+            in_specs=in_specs,
+            out_specs=out_specs,
+            scratch_shapes=scratch,
+        ),
+        out_shape=out_shape,
+        input_output_aliases=aliases,
+        interpret=interpret,
+    )(keys, ivw, keys, groups, p16, do_w, do_r, check_w, check_w2,
+      check_r, extra, *tables)
+
+    conflict, commit = outs[0], outs[1][:, 0]
+    claim_w = outs[2]
+    claim_r = outs[3] if dual else None
+    wts = outs[2 + n_tbl - 1] if bump else None
+    return claim_w, claim_r, wts, conflict, commit

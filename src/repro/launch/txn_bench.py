@@ -5,9 +5,9 @@
 
 The whole cc x granularity x lanes grid compiles to ONE XLA program
 (core/engine.py sweep, vmapped in lane buckets); ``--backend pallas`` routes
-every CC shared-state op (the fused claim_probe pass, validate/gather,
+every CC shared-state op (the wave_commit megakernel, validate/gather,
 commit/timestamp scatters) through the TPU-native kernels via the
-twelve-op backend surface of core/backend.py (interpret mode on CPU — see
+fifteen-op backend surface of core/backend.py (interpret mode on CPU — see
 DESIGN.md section 5).  Each JSON row records the resolved backend and
 per-op kernel coverage (CC_OPS), which benchmarks/perf_dashboard.py
 aggregates into reports/perf_dashboard.md.
@@ -15,14 +15,20 @@ aggregates into reports/perf_dashboard.md.
 from __future__ import annotations
 
 import argparse
+import functools
 import json
 import os
 import time
 
 
+@functools.lru_cache(maxsize=32)
 def _make_workload(workload: str, *, scale: float = 1.0,
                    n_keys: int = 1_000_000, write_frac: float = 0.5,
                    ro_frac: float = 0.0, theta: float = 0.9):
+    """Workloads are deterministic in their parameters and read-only once
+    built, so identical grid points share ONE object — which also keys the
+    compiled-sweep memo (core/engine.py), letting a re-run of the same
+    grid (benchmarks/common.py warm_then_time) skip tracing entirely."""
     from repro.workloads import TPCCWorkload, YCSBWorkload
     if workload == "tpcc":
         return TPCCWorkload.make(n_warehouses=8, scale=scale)
@@ -38,16 +44,29 @@ def _cost_fields(cc_name: str, lanes: int, granularity: int, slots: int,
     fields are backend-INDEPENDENT (CI's jnp-vs-pallas CLI parity diff
     relies on that)."""
     from repro.analysis import txn_cost as tc
-    cost = tc.txn_cost(cc_name, tc.WaveShape(
-        lanes=lanes, slots=slots, n_groups=n_groups,
-        granularity=granularity, mv_depth=mv_depth))
-    return {
+    shape = tc.WaveShape(lanes=lanes, slots=slots, n_groups=n_groups,
+                         granularity=granularity, mv_depth=mv_depth)
+    cost = tc.txn_cost(cc_name, shape)
+    fields = {
         "bytes_per_txn": round(cost["bytes_per_txn"], 1),
         "flops_per_txn": round(cost["flops_per_txn"], 1),
         "roofline_frac": round(cost["roofline_frac"], 6),
         "roofline_bound": cost["bound"],
         "roofline_chip": cost["chip"],
     }
+    if cc_name in tc.PROBE_CHAIN_LAUNCHES:
+        # ISSUE 9 fused-wave accounting: launches and touched-row DMA
+        # visits of the probe chain per wave, fused (the shipped default)
+        # next to the unfused baseline — the dashboard's row-traffic-cut
+        # columns.
+        chain = tc.probe_chain(cc_name, shape, fused=True)
+        unfused = tc.probe_chain(cc_name, shape, fused=False)
+        fields.update({
+            "launches_per_wave": chain["launches_per_wave"],
+            "dma_rows_per_wave": chain["dma_rows_per_wave"],
+            "dma_rows_per_wave_unfused": unfused["dma_rows_per_wave"],
+        })
+    return fields
 
 
 def _row(workload: str, cc_name: str, p, wall_s: float,

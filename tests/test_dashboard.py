@@ -42,13 +42,14 @@ def test_ops_cell_attribution():
 def test_render_picks_peak_point_per_group():
     rows = [dict(r, _src="BENCH_a.json") for r in MECH_ROWS]
     md = render_markdown(rows, [])
-    # rows predating the cost model / cause taxonomy render '—' in the
-    # B/txn, flop/txn, roofline, and abort-causes columns
+    # rows predating the cost model / cause taxonomy / megakernel render
+    # '—' in the B/txn, flop/txn, roofline, abort-causes, launches/wave,
+    # and DMA-rows/wave columns
     assert "| ycsb | occ | fine | pallas | 25.500 | 64 | 20.00% " \
-           "| — | — | — | — | 3/3 pallas | BENCH_a.json |" in md
+           "| — | — | — | — | — | — | 3/3 pallas | BENCH_a.json |" in md
     assert "10.000" not in md                     # dominated point dropped
     assert "| ycsb | tictoc | coarse | jnp | 18.000 | 64 | 30.00% " \
-           "| — | — | — | — | xla | BENCH_a.json |" in md
+           "| — | — | — | — | — | — | xla | BENCH_a.json |" in md
 
 
 def test_render_distributed_section():
@@ -107,8 +108,20 @@ def test_render_mech_cost_and_cause_columns():
              roofline_chip="tpu_v5e")
     md = render_markdown([r], [])
     assert "| ycsb | occ | fine | pallas | 25.500 | 64 | 20.00% " \
-           "| read_val:56 | 512 | 128 | 0.10% (memory) | 3/3 pallas " \
-           "| BENCH_a.json |" in md
+           "| read_val:56 | 512 | 128 | 0.10% (memory) | — | — " \
+           "| 3/3 pallas | BENCH_a.json |" in md
+
+
+def test_render_mech_fusion_columns():
+    """Probe-family rows carrying the ISSUE 9 megakernel fields render
+    launches/wave and DMA rows/wave with the modeled cut vs unfused."""
+    r = dict(MECH_ROWS[1], _src="BENCH_a.json",
+             launches_per_wave=1, dma_rows_per_wave=1024,
+             dma_rows_per_wave_unfused=3072)
+    md = render_markdown([r], [])
+    assert "| 20.00% | — | — | — | — | 1 | 1024 (/3 vs unfused) " \
+           "| 3/3 pallas | BENCH_a.json |" in md
+    assert "launches/wave" in md and "DMA rows/wave" in md
 
 
 def test_render_distributed_dedupes_repeat_runs():

@@ -117,7 +117,8 @@ def test_txn_bench_grid_schema():
             "ro_abort_rate", "throughput", "ext_events", "wall_s",
             "backend", "kernel_ops", "abort_causes", "bytes_per_txn",
             "flops_per_txn", "roofline_frac", "roofline_bound",
-            "roofline_chip"}
+            "roofline_chip", "launches_per_wave", "dma_rows_per_wave",
+            "dma_rows_per_wave_unfused"}
     for r in rows:
         assert set(r) == want
         assert r["backend"] == "jnp"
@@ -129,9 +130,10 @@ def test_txn_bench_grid_schema():
 def test_txn_bench_kernel_ops_attribution():
     """Pallas rows must name the ops that actually ran as kernels, per
     mechanism: the probe family (OCC, TicToc, 2PL, SwissTM, Adaptive) runs
-    the FUSED claim_probe — the separate claim_scatter + probe pair is gone
-    from their coverage — while AutoGran keeps validate_dual and the
-    multi-version pair keeps its claim channels + mv ring ops."""
+    the FUSED wave_commit megakernel — claim install, probe, verdicts, and
+    version bumps in one launch (ISSUE 9) — while AutoGran keeps
+    validate_dual and the multi-version pair keeps its claim channels +
+    mv ring ops."""
     from repro.core.backend import dist_kernel_coverage, kernel_coverage
     occ_ops = kernel_coverage("pallas", t.CC_OCC)
     tic_ops = kernel_coverage("pallas", t.CC_TICTOC)
@@ -139,9 +141,9 @@ def test_txn_bench_kernel_ops_attribution():
     mv_ops = kernel_coverage("pallas", t.CC_MVCC)
     # every mechanism's wave also counts same-row contention through
     # segment_count (the engine cost model) — no XLA sort on the pallas path
-    assert occ_ops == {"claim_probe": "pallas", "commit_install": "pallas",
+    assert occ_ops == {"wave_commit": "pallas", "commit_install": "pallas",
                        "segment_count": "pallas"}
-    assert tic_ops == {"claim_probe": "pallas", "ts_gather": "pallas",
+    assert tic_ops == {"wave_commit": "pallas", "ts_gather": "pallas",
                        "ts_install_max": "pallas", "segment_count": "pallas"}
     assert ag_ops == {"validate_dual": "pallas", "claim_scatter": "pallas",
                       "commit_install": "pallas", "segment_count": "pallas"}
@@ -157,7 +159,7 @@ def test_txn_bench_kernel_ops_attribution():
     # commit bits bit-packed through the verdict_pack/verdict_unpack pair
     assert dist_kernel_coverage("pallas") == {
         "route_pack": "pallas", "verdict_pack": "pallas",
-        "verdict_unpack": "pallas", "claim_probe": "pallas",
+        "verdict_unpack": "pallas", "wave_commit": "pallas",
         "commit_install": "pallas"}
     for cc in ("mvcc", "mvocc"):
         assert dist_kernel_coverage("pallas", cc) == {

@@ -67,19 +67,77 @@ def test_granularity_is_a_byte_difference():
         assert fine["bytes_per_txn"] < coarse["bytes_per_txn"], cc
 
 
-def test_memory_bound_on_every_chip():
-    """Gather/scatter over uint32 words with a few compares per cell:
-    intensity sits far below every ridge in the shared peaks table."""
+def test_memory_bound_at_small_waves_on_every_chip():
+    """Gather/scatter over uint32 words with a few compares per cell: at
+    SMALL waves (where the all-pairs wave term is noise) intensity sits
+    far below every ridge in the shared peaks table.  Large waves are the
+    quad-dominance test below — the probe family's O(n^2) in-wave-min
+    term changes the regime there."""
+    small = WaveShape(lanes=8, slots=4, n_groups=2, granularity=1,
+                      mv_depth=4)
     for chip in peaks.HW_PEAKS:
         for cc in WAVE_OPS:
-            c = txn_cost(cc, SHAPE, chip=chip)
+            c = txn_cost(cc, small, chip=chip)
             assert c["bound"] == "memory", (chip, cc)
             assert 0.0 < c["roofline_frac"] < 0.05, (chip, cc, c)
         for cc in DIST_WAVE_OPS:
-            c = txn_cost(cc, WaveShape(lanes=64, slots=16, n_shards=8,
-                                       route_cap=128, mv_depth=4),
+            c = txn_cost(cc, WaveShape(lanes=16, slots=8, n_shards=8,
+                                       route_cap=64, mv_depth=4),
                          distributed=True, chip=chip)
             assert c["bound"] == "memory", (chip, cc)
+
+
+def test_quadratic_wave_term_pinned():
+    """ISSUE 9 satellite: the in-wave min of segment_count / claim_probe /
+    wave_commit is an all-pairs same-cell compare — 2*n^2 flops on top of
+    the linear per-cell work, pinned termwise here."""
+    n, c = SHAPE.ops, SHAPE.cells
+    costs = op_costs(SHAPE)
+    assert costs["segment_count"].flops_per_call == 2.0 * n + 2.0 * n * n
+    assert costs["claim_probe"].flops_per_call == 3.0 * n * c + 2.0 * n * n
+    assert costs["wave_commit"].flops_per_call == 4.0 * n * c + 2.0 * n * n
+    # The quadratic term is per-CALL, not per-cell: granularity must not
+    # change it (only the linear table-word traffic narrows at fine).
+    coarse = op_costs(WaveShape(lanes=64, slots=16, n_groups=2,
+                                granularity=0))
+    assert coarse["wave_commit"].flops_per_call == \
+        4.0 * n * 2 + 2.0 * n * n
+
+
+def test_quad_term_dominates_at_large_waves():
+    """When it dominates (DESIGN.md section 5): large waves.  At n = T*K
+    = 1024 the 2*n^2 all-pairs compares are >90% of the probe family's
+    flops and intensity is a sizable fraction of the ridge — orders of
+    magnitude above the small-wave regime, though the bytes still win on
+    the chips in the peaks table."""
+    n = SHAPE.ops
+    wc = op_costs(SHAPE)["wave_commit"]
+    assert 2.0 * n * n / wc.flops_per_call > 0.9
+    big = txn_cost("occ", SHAPE)
+    small = txn_cost("occ", WaveShape(lanes=8, slots=4, n_groups=2,
+                                      granularity=1))
+    assert big["roofline_frac"] > 0.25
+    assert big["intensity"] > 20 * small["intensity"]
+
+
+def test_probe_chain_launch_and_row_accounting():
+    """ISSUE 9 acceptance: fused probe chain = ONE launch and ONE row
+    visit per wave; the unfused chain's modeled DMA-row traffic is >= 2x
+    for every probe-family mechanism."""
+    from repro.analysis.txn_cost import PROBE_CHAIN_LAUNCHES, probe_chain
+    for cc, launches in PROBE_CHAIN_LAUNCHES.items():
+        fused = probe_chain(cc, SHAPE, fused=True)
+        unfused = probe_chain(cc, SHAPE, fused=False)
+        assert fused["launches_per_wave"] == 1, cc
+        assert unfused["launches_per_wave"] == launches, cc
+        assert fused["dma_rows_per_wave"] == SHAPE.ops, cc
+        assert unfused["dma_rows_per_wave"] >= 2 * fused["dma_rows_per_wave"], cc
+    try:
+        probe_chain("mvcc", SHAPE)
+    except KeyError as e:
+        assert "mvcc" in str(e)
+    else:
+        raise AssertionError("mvcc is not probe-family")
 
 
 def test_bytes_per_txn_lane_invariant():
