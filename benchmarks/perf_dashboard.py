@@ -147,13 +147,15 @@ def _src_of(r) -> str:
 #: import-free of jax-loading modules (it renders list-shaped cause rows
 #: from txn_scaling too).
 _CAUSE_ORDER = ("inc_cap", "capacity", "stale_snapshot", "lock_wound",
-                "ww", "read_val")
+                "ww", "read_val", "phantom")
 
 
 def _causes_cell(v) -> str:
     """Abort-cause breakdown cell: nonzero '<cause>:<n>' entries in code
     order.  Accepts the bench rows' name-keyed dict or txn_scaling's
-    code-ordered list; '—' when absent/malformed, 'none' when all zero."""
+    code-ordered list; '—' when absent/malformed, 'none' when all zero.
+    Pre-scan rows (before the phantom cause existed) simply lack the
+    trailing entry — both shapes tolerate that without warning."""
     if isinstance(v, dict):
         pairs = [(k, _coerce(v.get(k))) for k in _CAUSE_ORDER if k in v]
     elif isinstance(v, (list, tuple)):
@@ -164,6 +166,22 @@ def _causes_cell(v) -> str:
         return "—"
     nz = [f"{k}:{n:g}" for k, n in pairs if n]
     return " ".join(nz) if nz else "none"
+
+
+def _scan_cell(r: dict) -> str:
+    """Interval-read shape of the row: 'ext=N' (plus the workload's
+    scan_frac x scan_len when the row carries them, e.g. scan_mix.py
+    rows).  Pre-scan JSON rows have none of these fields and extent-1
+    rows are pure point workloads — both render '—' (the default), never
+    a warning."""
+    ext = _coerce(r.get("max_extent"))
+    if ext is None or ext <= 1:
+        return "—"
+    cell = f"ext={ext:g}"
+    sf, sl = _coerce(r.get("scan_frac")), _coerce(r.get("scan_len"))
+    if sf is not None and sl is not None:
+        cell += f" ({sf:g}×{sl:g})"
+    return cell
 
 
 def _roofline_cell(r: dict) -> str:
@@ -220,8 +238,12 @@ def render_markdown(mech: list, dist: list) -> str:
     if mech_ok:
         groups: dict = {}
         for r in mech_ok:
+            # max_extent separates scan mixes from point mixes (they are
+            # different workloads, not competing lane counts); pre-scan
+            # rows default to the point shape, extent 1.
             key = (r.get("workload", "?"), r.get("cc", "?"),
-                   r.get("granularity", 1), r.get("backend", "?"))
+                   r.get("granularity", 1), r.get("backend", "?"),
+                   _fnum(r, "max_extent", 1))
             best = groups.get(key)
             # Coerced comparison: string throughputs ("0.9" vs "12.3")
             # must rank numerically, never lexically.
@@ -229,7 +251,7 @@ def render_markdown(mech: list, dist: list) -> str:
                                 > _fnum(best, "throughput")):
                 groups[key] = r
         out += ["## Mechanisms (peak-throughput point per "
-                "workload × cc × granularity × backend)", "",
+                "workload × cc × granularity × backend × scan shape)", "",
                 "B/txn and flop/txn are the analytic per-transaction "
                 "roofline cost model (analysis/txn_cost.py) at the peak "
                 "point's wave shape; roofline = fraction of the modeled "
@@ -240,11 +262,12 @@ def render_markdown(mech: list, dist: list) -> str:
                 "with the cut vs the unfused chain (probe-family "
                 "mechanisms only).", "",
                 "| workload | cc | granularity | backend | peak thpt "
-                "(txn/us) | @lanes | abort rate | abort causes | B/txn "
+                "(txn/us) | @lanes | abort rate | abort causes | scan "
+                "| B/txn "
                 "| flop/txn | roofline | launches/wave | DMA rows/wave "
                 "| kernel ops | source |",
                 "|---|---|---|---|---|---|---|---|---|---|---|---|---|"
-                "---|---|"]
+                "---|---|---|"]
         for key in sorted(groups, key=str):
             r = groups[key]
             out.append(
@@ -252,6 +275,7 @@ def render_markdown(mech: list, dist: list) -> str:
                 f"| {_fnum(r, 'throughput'):.3f} | {r.get('lanes', '?')} "
                 f"| {100 * _fnum(r, 'abort_rate'):.2f}% "
                 f"| {_causes_cell(r.get('abort_causes'))} "
+                f"| {_scan_cell(r)} "
                 f"| {_per_txn_cell(r, 'bytes_per_txn')} "
                 f"| {_per_txn_cell(r, 'flops_per_txn')} "
                 f"| {_roofline_cell(r)} "
@@ -266,7 +290,8 @@ def render_markdown(mech: list, dist: list) -> str:
         groups = {}
         for r in open_rows:
             key = (r.get("workload", "?"), r.get("cc", "?"),
-                   r.get("granularity", 1), r.get("backend", "?"))
+                   r.get("granularity", 1), r.get("backend", "?"),
+                   _fnum(r, "max_extent", 1))
             best = groups.get(key)
             if best is None or (_fnum(r, "goodput")
                                 > _fnum(best, "goodput")):

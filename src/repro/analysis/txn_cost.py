@@ -1,11 +1,15 @@
 """Per-op roofline cost model of the transaction engine's backend surface.
 
-Every mechanism's wave is a fixed pipeline of the fifteen kernel-backend
-ops (core/backend.py); each op's traffic is analytic in the wave shape —
-T lanes x K op slots against uint32 claim/version tables of ``cells``
-words per op probe (``n_groups`` at coarse granularity, 1 at fine; the
-paper's switch is literally the probe width, which is why coarse and fine
-have different bytes-per-txn here).  From the per-op descriptors we roll
+Every mechanism's wave is a fixed pipeline drawn from the
+``backend.N_OPS``-op kernel surface (core/backend.py); each op's traffic
+is analytic in the wave shape — T lanes x K op slots against uint32
+claim/version tables of ``cells`` words per op probe (``n_groups`` at
+coarse granularity, 1 at fine; the paper's switch is literally the probe
+width, which is why coarse and fine have different bytes-per-txn here).
+Interval reads (``max_extent > 1``) add the ``iterate_validate`` pass,
+whose traffic scales with the per-op scan span — ``max_extent`` rows at
+fine granularity, the bucket-expanded span at coarse (the same
+``scan_span`` law as kernels/ref.py).  From the per-op descriptors we roll
 up bytes/flops per wave per mechanism, divide by the lane count for the
 dashboard's **bytes-per-txn / flops-per-txn** columns (per *attempt* — an
 aborted incarnation pays the same traffic), and place each mechanism on
@@ -71,6 +75,8 @@ class WaveShape:
     mv_depth: int = 0          # version-ring depth D (mv mechanisms)
     n_shards: int = 1          # distributed: mesh size
     route_cap: int = 0         # distributed: per-destination buffer cap
+    max_extent: int = 1        # interval reads: static scan-length bound
+    bucket_size: int = 8       # coarse bucket-claim width B (records)
 
     @property
     def ops(self) -> int:
@@ -83,6 +89,18 @@ class WaveShape:
         paper's timestamp-granularity switch."""
         fine = self.granularity == 1 and self.n_groups > 1
         return 1 if fine else self.n_groups
+
+    @property
+    def scan_span(self) -> int:
+        """Rows an ``iterate_validate`` probe walks per scan op — the
+        same law as kernels/ref.py ``scan_span``: the raw extent bound at
+        fine granularity, the worst-case bucket expansion
+        ``(1 + ceil((ext-1)/B)) * B`` at coarse (an interval can straddle
+        one more bucket than its length suggests)."""
+        if self.max_extent <= 1 or self.granularity == 1:
+            return self.max_extent
+        b = self.bucket_size
+        return (1 + -(-(self.max_extent - 1) // b)) * b
 
 
 def op_costs(s: WaveShape) -> dict:
@@ -102,6 +120,14 @@ def op_costs(s: WaveShape) -> dict:
         "validate_dual": OpCost(WORD * n * (1 + s.n_groups),
                                 2.0 * n * (1 + s.n_groups)),
         "probe": OpCost(WORD * n * c, 1.0 * n * c),
+        # interval (phantom) validation: each op walks its scan span —
+        # ``max_extent`` rows at fine, the bucket-expanded span at coarse
+        # — reading ``cells`` claim words per row with a decode + strict
+        # priority compare.  At max_extent == 1 this degenerates exactly
+        # to ``validate`` (the extent-1 bit-identity guard, in traffic
+        # terms).
+        "iterate_validate": OpCost(WORD * n * s.scan_span * c,
+                                   2.0 * n * s.scan_span * c),
         # fused min-install + probe: one RMW pass answers both; the
         # in-wave min is the all-pairs same-cell term — O(n^2) compares
         "claim_probe": OpCost(2 * WORD * n * c, 3.0 * n * c + 2.0 * n * n),
@@ -140,19 +166,26 @@ def op_costs(s: WaveShape) -> dict:
 #: table; write_claims / plain_write_claims -> claim_scatter;
 #: bump_versions -> commit_install, which the probe family's fused launch
 #: absorbs without changing its version-row traffic).
+#: Every mechanism that validates scans makes ONE phantom pass per wave
+#: (base.phantom_validate, inside claim_probe_commit or appended after
+#: the point verdicts) — iterate_validate: 1 across the board.  mvcc is
+#: the deliberate absence: snapshot scans read a consistent cut and SI
+#: admits phantoms by design (cc/mvcc.py).
 WAVE_OPS = {
-    "occ": {"wave_commit": 1, "commit_install": 1},
+    "occ": {"wave_commit": 1, "commit_install": 1, "iterate_validate": 1},
     "tictoc": {"wave_commit": 1, "ts_gather": 2, "segment_count": 2,
-               "ts_install_max": 3},
-    "2pl": {"wave_commit": 2, "commit_install": 1},
-    "swisstm": {"wave_commit": 1, "commit_install": 1},
-    "adaptive": {"wave_commit": 2, "commit_install": 1},
+               "ts_install_max": 3, "iterate_validate": 1},
+    "2pl": {"wave_commit": 2, "commit_install": 1, "iterate_validate": 1},
+    "swisstm": {"wave_commit": 1, "commit_install": 1,
+                "iterate_validate": 1},
+    "adaptive": {"wave_commit": 2, "commit_install": 1,
+                 "iterate_validate": 1},
     "autogran": {"claim_scatter": 1, "validate_dual": 1,
-                 "commit_install": 1},
+                 "commit_install": 1, "iterate_validate": 1},
     "mvcc": {"claim_scatter": 2, "validate": 2, "mv_gather": 1,
              "mv_install": 1},
     "mvocc": {"claim_scatter": 2, "validate": 3, "mv_gather": 1,
-              "mv_install": 1},
+              "mv_install": 1, "iterate_validate": 1},
 }
 
 #: Shard-local op calls per wave of the routed DISTRIBUTED wave
@@ -160,11 +193,13 @@ WAVE_OPS = {
 #: distributed.wire_bytes_per_wave, not here).
 DIST_WAVE_OPS = {
     "occ": {"route_pack": 1, "wave_commit": 1, "verdict_pack": 2,
-            "verdict_unpack": 2, "commit_install": 1},
+            "verdict_unpack": 2, "commit_install": 1,
+            "iterate_validate": 1},
     "mvcc": {"route_pack": 1, "claim_probe": 2, "mv_gather": 1,
              "verdict_pack": 2, "verdict_unpack": 2, "mv_install": 1},
     "mvocc": {"route_pack": 1, "claim_probe": 2, "mv_gather": 1,
-              "verdict_pack": 2, "verdict_unpack": 2, "mv_install": 1},
+              "verdict_pack": 2, "verdict_unpack": 2, "mv_install": 1,
+              "iterate_validate": 1},
 }
 
 #: Launches in the UNFUSED probe chain per wave — the claim/probe RMW

@@ -52,8 +52,8 @@ MIN_LAT_BINS = 2
 
 @partial(jax.tree_util.register_dataclass,
          data_fields=["op_key", "op_group", "op_col", "op_kind", "op_val",
-                      "txn_type", "n_ops", "admit_wave", "incarnation",
-                      "txn_id", "head", "size"],
+                      "txn_type", "n_ops", "op_extent", "admit_wave",
+                      "incarnation", "txn_id", "head", "size"],
          meta_fields=[])
 @dataclasses.dataclass
 class QueueState:
@@ -73,6 +73,9 @@ class QueueState:
     op_val: jax.Array       # f32[C, K]
     txn_type: jax.Array     # int32[C]
     n_ops: jax.Array        # int32[C]
+    op_extent: jax.Array    # int32[C, K]  interval width per op (1 = point;
+                            #   re-enqueued incarnations keep it bit-identical
+                            #   like every other op column)
     admit_wave: jax.Array   # int32[C]  wave of FIRST admission (kept on retry)
     incarnation: jax.Array  # int32[C]  execution attempt counter
     txn_id: jax.Array       # int32[C]  unique admission serial number
@@ -95,7 +98,9 @@ def queue_init(cap: int, slots: int) -> QueueState:
         op_key=jnp.full((cap, slots), -1, jnp.int32),
         op_group=zi2, op_col=zi2, op_kind=zi2,
         op_val=jnp.zeros((cap, slots), jnp.float32),
-        txn_type=zi1, n_ops=zi1, admit_wave=zi1, incarnation=zi1,
+        txn_type=zi1, n_ops=zi1,
+        op_extent=jnp.ones((cap, slots), jnp.int32),
+        admit_wave=zi1, incarnation=zi1,
         txn_id=zi1,
         head=jnp.int32(0), size=jnp.int32(0))
 
@@ -136,17 +141,19 @@ def enqueue(q: QueueState, batch: TxnBatch, admit_wave: jax.Array,
     tabs, size, n_acc, n_ovf = ring_enqueue(
         q.cap, q.head, q.size, mask,
         (q.op_key, q.op_group, q.op_col, q.op_kind, q.op_val,
-         q.txn_type, q.n_ops, q.admit_wave, q.incarnation, q.txn_id),
+         q.txn_type, q.n_ops, q.op_extent, q.admit_wave, q.incarnation,
+         q.txn_id),
         (batch.op_key, batch.op_group, batch.op_col, batch.op_kind,
-         batch.op_val, batch.txn_type, batch.n_ops,
+         batch.op_val, batch.txn_type, batch.n_ops, batch.op_extent,
          admit_wave.astype(jnp.int32), incarnation.astype(jnp.int32),
          txn_id.astype(jnp.int32)))
-    (op_key, op_group, op_col, op_kind, op_val, txn_type, n_ops,
+    (op_key, op_group, op_col, op_kind, op_val, txn_type, n_ops, op_ext,
      admit_w, incarn, tid) = tabs
     q = dataclasses.replace(
         q, op_key=op_key, op_group=op_group, op_col=op_col,
         op_kind=op_kind, op_val=op_val, txn_type=txn_type, n_ops=n_ops,
-        admit_wave=admit_w, incarnation=incarn, txn_id=tid, size=size)
+        op_extent=op_ext, admit_wave=admit_w, incarnation=incarn,
+        txn_id=tid, size=size)
     return q, n_acc, n_ovf
 
 
@@ -180,7 +187,8 @@ def dequeue(q: QueueState, lanes: int, n_active=None) -> tuple[
         op_kind=take2(q.op_kind, t.NOP),
         op_val=jnp.where(got[:, None], q.op_val[pos, :], 0.0),
         txn_type=take1(q.txn_type),
-        n_ops=take1(q.n_ops))
+        n_ops=take1(q.n_ops),
+        op_extent=take2(q.op_extent, 1))
     admit_wave = take1(q.admit_wave)
     incarnation = take1(q.incarnation)
     txn_id = take1(q.txn_id, -1)

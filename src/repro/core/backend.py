@@ -2,8 +2,9 @@
 
 Every concurrency-control mechanism in ``core/cc/`` — and the distributed
 engine's shard-local wave (``core/distributed.py``) — touches shared state
-through exactly fifteen ops, the full surface a wave needs (DESIGN.md
-sections 5, 9 and 10):
+through exactly ``N_OPS`` ops (``SURFACE_OPS`` below — doc strings
+elsewhere cite the constant, pinned by tests/test_backend_surface.py), the
+full surface a wave needs (DESIGN.md sections 5, 9 and 10):
 
     validate        read-set verdicts vs the writer-claim table (OCC rule;
                     mvcc/mvocc's first-committer-wins channels)
@@ -23,6 +24,15 @@ sections 5, 9 and 10):
                     wave where the unfused claim_probe -> verdict ->
                     commit_install chain re-fetched it 2-3 times
                     (EngineConfig.fuse_wave routes the probe family here)
+    iterate_validate  interval (scan) validation — phantom protection for
+                    extent-carrying ops: conflict when any record of the
+                    op's validated interval carries a live same-wave claim
+                    stronger than the lane; fine = the exact interval at
+                    the op's group column (per-gap timestamps), coarse =
+                    the bucket-expanded interval with the whole-row
+                    compare (bucket-interval claims, one word per
+                    EngineConfig.bucket_size records) — DESIGN.md
+                    section 13
     ts_gather       per-op (wts | rts) observation; coarse = row max (TicToc)
     claim_scatter   pack + scatter-min claim words (install-only callers:
                     AutoGran's verdict path, the MV claim channels)
@@ -58,7 +68,7 @@ Both decode the one claim-word layout in ``core/claimword.py`` and are
 bit-identical (tests/test_backend_parity.py, tests/test_kernels.py).  CC
 mechanisms hold no ``cfg.backend`` branches: they call ``resolve(cfg)`` once
 per wave and use only this surface, so a new mechanism gets TPU execution for
-free and a new backend only has to implement these fifteen ops.
+free and a new backend only has to implement these ``N_OPS`` ops.
 
 ``resolve`` honors ``cfg.lane_block`` on the pallas backend: the row-DMA
 kernels tile the wave into LB-lane blocks (kernels/wave_commit.py
@@ -70,6 +80,21 @@ from __future__ import annotations
 from repro.core import claims
 from repro.core import types as t
 from repro.core.claimword import inv_wave
+
+#: The canonical kernel-backend surface: every op both backends implement
+#: as a method, in DESIGN.md section 5 table order.  ``N_OPS`` is THE
+#: op count — README.md, DESIGN.md, core/engine.py and launch/txn_bench.py
+#: cite it instead of a hard-coded number word, and
+#: tests/test_backend_surface.py pins the docs, the backends' method
+#: surfaces and the CC_OPS/DIST_OPS subsets to this tuple.
+SURFACE_OPS = ("validate", "validate_dual", "probe", "claim_probe",
+               "wave_commit", "iterate_validate", "ts_gather",
+               "claim_scatter", "commit_install", "ts_install_max",
+               "segment_count", "route_pack", "mv_gather", "mv_install",
+               "verdict_pack", "verdict_unpack")
+
+#: Op count of the backend surface (sixteen as of the iterate_validate PR).
+N_OPS = len(SURFACE_OPS)
 
 
 class JnpBackend:
@@ -115,6 +140,16 @@ class JnpBackend:
         return ref.wave_commit(claim_w, claim_r, wts, keys, groups, prio,
                                do_w, do_r, check_w, check_w2, check_r,
                                extra, wave, fine, dual, bump)
+
+    def iterate_validate(self, table, keys, extents, groups, myprio, check,
+                         wave, fine: bool, bucket_size: int, ext_cap: int):
+        """Interval (scan) validation: conflict bool[T, K] where any record
+        of ``[key, key + extent)`` (bucket-expanded when coarse) carries a
+        live same-wave claim stronger than the lane — the phantom check."""
+        from repro.kernels import ref
+        return ref.iterate_validate(table, keys, extents, groups, myprio,
+                                    check, inv_wave(wave), fine,
+                                    bucket_size, ext_cap)
 
     def route_pack(self, owner, vals, n_dest: int, cap: int, fills):
         """Sort-free per-destination fixed-capacity buffer pack."""
@@ -215,6 +250,15 @@ class PallasBackend:
                                extra, wave, fine, dual, bump,
                                lane_block=self.lane_block, use_pallas=True)
 
+    def iterate_validate(self, table, keys, extents, groups, myprio, check,
+                         wave, fine: bool, bucket_size: int, ext_cap: int):
+        from repro.kernels import ops
+        return ops.iterate_validate(table, keys, extents, groups, myprio,
+                                    check, inv_wave(wave), fine,
+                                    bucket_size, ext_cap,
+                                    lane_block=self.lane_block,
+                                    use_pallas=True)
+
     def route_pack(self, owner, vals, n_dest: int, cap: int, fills):
         from repro.kernels import ops
         return ops.route_pack(owner, vals, n_dest, cap, fills,
@@ -279,20 +323,29 @@ _BACKENDS = {"jnp": JnpBackend(), "pallas": PallasBackend()}
 #: model splits it out — analysis/txn_cost.py).  ``claim_scatter``
 #: remains listed only where a mechanism still installs claims it never
 #: probes as priorities (AutoGran's verdict path, the MV
-#: first-committer-wins channels).
+#: first-committer-wins channels).  ``iterate_validate`` is listed for
+#: every mechanism that phantom-protects scans (extent > 1 ops): the
+#: probe family and AutoGran validate intervals against the post-install
+#: write-claim table, mvocc against its wave claim channel; mvcc alone
+#: omits it — snapshot-isolation scans read a stable snapshot and are
+#: never re-validated (DESIGN.md section 13).
 CC_OPS = {
-    t.CC_OCC: ("wave_commit", "commit_install", "segment_count"),
-    t.CC_TICTOC: ("wave_commit", "ts_gather", "ts_install_max",
-                  "segment_count"),
-    t.CC_2PL: ("wave_commit", "commit_install", "segment_count"),
-    t.CC_SWISS: ("wave_commit", "commit_install", "segment_count"),
-    t.CC_ADAPTIVE: ("wave_commit", "commit_install", "segment_count"),
-    t.CC_AUTOGRAN: ("validate_dual", "claim_scatter", "commit_install",
+    t.CC_OCC: ("wave_commit", "iterate_validate", "commit_install",
+               "segment_count"),
+    t.CC_TICTOC: ("wave_commit", "iterate_validate", "ts_gather",
+                  "ts_install_max", "segment_count"),
+    t.CC_2PL: ("wave_commit", "iterate_validate", "commit_install",
+               "segment_count"),
+    t.CC_SWISS: ("wave_commit", "iterate_validate", "commit_install",
+                 "segment_count"),
+    t.CC_ADAPTIVE: ("wave_commit", "iterate_validate", "commit_install",
                     "segment_count"),
+    t.CC_AUTOGRAN: ("validate_dual", "iterate_validate", "claim_scatter",
+                    "commit_install", "segment_count"),
     t.CC_MVCC: ("validate", "claim_scatter", "mv_gather", "mv_install",
                 "segment_count"),
-    t.CC_MVOCC: ("validate", "claim_scatter", "mv_gather", "mv_install",
-                 "segment_count"),
+    t.CC_MVOCC: ("validate", "iterate_validate", "claim_scatter",
+                 "mv_gather", "mv_install", "segment_count"),
 }
 
 #: The surface ops one shard-local distributed wave routes through the
@@ -304,12 +357,17 @@ CC_OPS = {
 #: ``claim_probe`` primitive (two claim channels + the ring gather can't
 #: share one launch) — plus the install return-trip: ``commit_install``
 #: version bumps for occ, ``mv_gather`` snapshot reads + ``mv_install``
-#: ring publishes for the multi-version pair.  Recorded by
-#: benchmarks/txn_scaling.py rows.
+#: ring publishes for the multi-version pair.  Scan fragments validate on
+#: their owner shard through ``iterate_validate`` (intervals split at
+#: range-shard boundaries; verdicts AND-reduce back on the sender —
+#: DESIGN.md section 13).  Recorded by benchmarks/txn_scaling.py rows.
 DIST_OPS = ("route_pack", "verdict_pack", "verdict_unpack", "wave_commit",
-            "commit_install")
+            "iterate_validate", "commit_install")
 DIST_MV_OPS = ("route_pack", "verdict_pack", "verdict_unpack",
                "claim_probe", "mv_gather", "mv_install")
+#: mvocc adds the interval pass; mvcc does NOT — its scans read the
+#: snapshot's consistent cut and never re-validate (cc/mvcc.py).
+DIST_MVOCC_OPS = DIST_MV_OPS + ("iterate_validate",)
 
 
 def resolve(cfg) -> JnpBackend | PallasBackend:
@@ -336,5 +394,5 @@ def dist_kernel_coverage(backend_name: str, cc: str = "occ") -> dict:
     """Kernel attribution for the distributed wave's shard-local ops
     (``cc`` is the DistConfig mechanism string: occ / mvcc / mvocc)."""
     engine = "pallas" if backend_name == "pallas" else "xla"
-    ops = DIST_MV_OPS if cc in ("mvcc", "mvocc") else DIST_OPS
+    ops = {"mvcc": DIST_MV_OPS, "mvocc": DIST_MVOCC_OPS}.get(cc, DIST_OPS)
     return {op: engine for op in ops}

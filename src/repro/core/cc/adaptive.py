@@ -61,10 +61,12 @@ def wave_validate(store: StoreState, batch: TxnBatch, prio, wave,
                       jnp.int32(t.CAUSE_READ_VAL))
     res = base.result_from_conflicts(batch, conflict, eager=True,
                                      cause_op=cause)
-    # Eager detection only on pessimistic ops; optimistic conflicts surface at
-    # commit-time validation (full work wasted).
+    # Eager detection only on pessimistic ops; optimistic conflicts surface
+    # at commit-time validation (full work wasted).  Scan ops are always
+    # commit-time regardless of the record's mode — they take no locks.
     K = batch.slots
-    first_pess = claims.first_true_index(conflict & pess, K)
+    first_pess = claims.first_true_index(
+        conflict & pess & ~batch.is_scan(), K)
     res = dataclasses.replace(
         res,
         first_conflict=first_pess,

@@ -39,7 +39,7 @@ def wave_validate(store: StoreState, batch: TxnBatch, prio, wave,
     # Two probe widths, one claim table, ONE row fetch: the record's
     # fine_mode bit picks which verdict applies.
     myp = base.my_prio_per_op(batch, prio)
-    check = batch.is_read() & batch.live()
+    check = batch.is_read() & batch.live() & ~batch.is_scan()
     conflict_fine, conflict_coarse = kb.resolve(cfg).validate_dual(
         store.claim_w, batch.op_key, batch.op_group, myp, check, wave)
 
@@ -48,6 +48,11 @@ def wave_validate(store: StoreState, batch: TxnBatch, prio, wave,
     conflict = jnp.where(is_fine_rec, conflict_fine, conflict_coarse)
     u = claims.hash01(wave, claims.lane_op_ids(*batch.op_key.shape))
     conflict = conflict & (u < cfg.cost.opt_overlap)   # window thinning
+    # Scans validate through the unthinned interval pass, always at the
+    # COARSE (bucket-claim) layout: an interval spans records of mixed
+    # promotion state, and the bucket expansion never misses a phantom.
+    conflict = conflict | base.phantom_validate(store, batch, prio, wave,
+                                                cfg, fine=False)
     # OCC rule at either probe width: all aborts are read validation.
     res = base.result_from_conflicts(batch, conflict, eager=False,
                                      cause_op=t.CAUSE_READ_VAL)

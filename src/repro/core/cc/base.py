@@ -1,9 +1,9 @@
 """Shared pieces of the CC mechanism implementations.
 
 All shared-state access goes through the kernel-backend surface
-(``core/backend.py``): claim_probe / validate / validate_dual / ts_gather /
-claim_scatter / commit_install / ts_install_max, resolved once per wave from
-``EngineConfig.backend``.  No mechanism in this package branches on the
+(``core/backend.py``): claim_probe / validate / validate_dual /
+iterate_validate / ts_gather / claim_scatter / commit_install /
+ts_install_max, resolved once per wave from ``EngineConfig.backend``.  No mechanism in this package branches on the
 backend itself — that is the whole point of the layer (DESIGN.md section 5).
 
 The probe family (OCC, TicToc, 2PL, SwissTM, Adaptive) runs its WHOLE
@@ -69,13 +69,19 @@ def result_from_conflicts(batch: TxnBatch, conflict_op: jax.Array,
     ``cause_op`` is either one ABORT_CAUSE code for every conflicting op
     (mechanisms with a single abort channel) or an int32[T, K] array of
     codes; either way it is forced to CAUSE_NONE off the conflict mask so
-    the per-lane min only sees real causes."""
+    the per-lane min only sees real causes.
+
+    Scan ops (extent > 1) validate ONLY through the interval pass
+    (``phantom_validate`` — they are excluded from every point verdict
+    channel), so a conflicting scan op IS a lost interval validation: its
+    cause is forced to CAUSE_PHANTOM here, once, for every mechanism."""
     T, K = batch.op_key.shape
     commit = ~conflict_op.any(axis=1)
     if isinstance(cause_op, int):
         cause_op = jnp.full((T, K), cause_op, jnp.int32)
-    cause_op = jnp.where(conflict_op, cause_op.astype(jnp.int32),
-                         jnp.int32(t.CAUSE_NONE))
+    cause_op = jnp.where(batch.is_scan(), jnp.int32(t.CAUSE_PHANTOM),
+                         cause_op.astype(jnp.int32))
+    cause_op = jnp.where(conflict_op, cause_op, jnp.int32(t.CAUSE_NONE))
     return ValidationResult(
         commit=commit,
         conflict_op=conflict_op,
@@ -109,6 +115,42 @@ def bump_versions(store: StoreState, batch: TxnBatch, commit: jax.Array,
 def my_prio_per_op(batch: TxnBatch, prio: jax.Array) -> jax.Array:
     return jnp.broadcast_to(prio[:, None].astype(jnp.uint32),
                             batch.op_key.shape)
+
+
+def phantom_validate(store: StoreState, batch: TxnBatch, prio: jax.Array,
+                     wave: jax.Array, cfg: EngineConfig,
+                     fine: bool | None = None, *,
+                     mask: jax.Array | None = None) -> jax.Array:
+    """Interval (scan) validation: the phantom check (DESIGN.md section 13).
+
+    Routes the backend's ``iterate_validate`` op against the POST-install
+    writer-claim table: a live scan op (extent > 1, read kind) conflicts
+    when any record of its validated interval — the exact
+    ``[key, key + extent)`` at the op's group column under fine (per-gap
+    timestamps), the bucket-expanded interval under coarse
+    (bucket-interval claims, one word per ``cfg.bucket_size`` records) —
+    carries a live same-wave claim stronger than the lane.  The monotone
+    wave tags make the post-install table show exactly this wave's
+    writers, i.e. precisely the installs the scan's wave-start snapshot
+    could have missed; scans validate UNTHINNED (an iterator's
+    vulnerability window spans the whole wave), which is what the
+    sequential-replay phantom oracle demands — no committed scan may miss
+    a committed same-wave insert/write inside its interval.
+
+    Returns conflict bool[T, K]; all-False (and compiled out — the row
+    loop unrolls to ``cfg.max_extent``) when the config admits no scans."""
+    if cfg.max_extent <= 1:
+        return jnp.zeros(batch.op_key.shape, jnp.bool_)
+    if fine is None:
+        fine = is_fine(cfg)
+    check = batch.is_scan() & batch.is_read() & batch.live()
+    if mask is not None:
+        check = check & mask
+    with jax.named_scope("repro:iterate_validate"):
+        return kb.resolve(cfg).iterate_validate(
+            store.claim_w, batch.op_key, batch.op_extent, batch.op_group,
+            my_prio_per_op(batch, prio), check, wave, fine,
+            cfg.bucket_size, cfg.max_extent)
 
 
 def claim_and_probe(store: StoreState, batch: TxnBatch, prio: jax.Array,
@@ -173,32 +215,57 @@ def claim_probe_commit(store: StoreState, batch: TxnBatch, prio: jax.Array,
     ``claim_probe`` -> XLA verdict -> ``commit_install`` chain.  Both
     evaluate the same mask algebra over the same primitives, so they are
     bit-identical — tests/test_wave_commit.py pins it across mechanisms,
-    granularities, and backends."""
+    granularities, and backends.
+
+    Scan support (``cfg.max_extent > 1``): scan ops are carved out of every
+    point channel — no read-claim installs, no point verdicts — and
+    validated by ONE extra ``iterate_validate`` pass over the post-install
+    writer-claim table (``phantom_validate``); version bumps then move
+    AFTER the phantom verdicts so a phantom-aborted lane never advances
+    versions.  At ``max_extent == 1`` none of this traces and both paths
+    are bit-identical to the pre-extent code."""
     if fine is None:
         fine = is_fine(cfg)
     be = kb.resolve(cfg)
     live = batch.live()
     do_w = batch.is_write() & live
+    scan = batch.is_scan() if cfg.max_extent > 1 else None
+    if scan is not None:
+        check_w = check_w & ~scan
+        if check_w2 is not None:
+            check_w2 = check_w2 & ~scan
+        if check_r is not None:
+            check_r = check_r & ~scan
     do_r = None
     if dual:
         do_r = batch.is_read() & live
         if do_r_mask is not None:
             do_r = do_r & do_r_mask
+        if scan is not None:
+            do_r = do_r & ~scan
     myp = my_prio_per_op(batch, prio)
 
     if getattr(cfg, "fuse_wave", True):
+        fuse_bump = bump and scan is None
         with jax.named_scope("repro:wave_commit"):
             cw, cr, wts, conflict, _ = be.wave_commit(
                 store.claim_w, store.claim_r if dual else None,
-                store.wts if bump else None, batch.op_key, batch.op_group,
-                myp, do_w, do_r, check_w, check_w2, check_r, extra, wave,
-                fine, dual, bump)
+                store.wts if fuse_bump else None, batch.op_key,
+                batch.op_group, myp, do_w, do_r, check_w, check_w2,
+                check_r, extra, wave, fine, dual, fuse_bump)
         repl = {"claim_w": cw}
         if dual:
             repl["claim_r"] = cr
-        if bump:
+        if fuse_bump:
             repl["wts"] = wts
-        return dataclasses.replace(store, **repl), conflict
+        store = dataclasses.replace(store, **repl)
+        if scan is not None:
+            conflict = conflict | phantom_validate(store, batch, prio,
+                                                   wave, cfg, fine)
+            if bump:
+                store = bump_versions(store, batch,
+                                      ~conflict.any(axis=1), cfg)
+        return store, conflict
 
     # Unfused: the pre-megakernel chain, term by term.
     with jax.named_scope("repro:claim"):
@@ -218,6 +285,9 @@ def claim_probe_commit(store: StoreState, batch: TxnBatch, prio: jax.Array,
         conflict = conflict | (check_r & (rprio < myp))
     if extra is not None:
         conflict = conflict | extra
+    if scan is not None:
+        conflict = conflict | phantom_validate(store, batch, prio, wave,
+                                               cfg, fine)
     if bump:
         store = bump_versions(store, batch, ~conflict.any(axis=1), cfg)
     return store, conflict

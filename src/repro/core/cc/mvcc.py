@@ -25,6 +25,14 @@ cleanly rather than read a recycled slot (``mv_gather``'s ok flag).  With
 wave-fresh snapshots this never fires — which is precisely the mechanism's
 zero read-only abort rate the abort_rates benchmark demonstrates.
 
+Scan (interval) reads follow the same snapshot rule: an iterator over
+``[key, key + extent)`` reads the snapshot's versions of every record in
+the interval, which is a consistent cut — so MVCC scans are NEVER
+re-validated and never abort with CAUSE_PHANTOM.  That is snapshot
+isolation's answer, not serializability's: phantom anomalies are admitted
+exactly like write skew (``cc/mvocc.py`` adds the interval re-validation
+that closes both — DESIGN.md section 13).
+
 Committed writes claim one ring slot per record per wave and publish their
 begin timestamps through the backend's ``mv_install`` op.  Note MVCC is
 snapshot isolation, not serializability (write skew is admitted —

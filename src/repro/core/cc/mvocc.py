@@ -50,11 +50,18 @@ def wave_validate(store: StoreState, batch: TxnBatch, prio, wave,
     # Commit-time read validation, update transactions only: read-only
     # lanes serialize at their snapshot and skip the probe entirely.
     has_write = (batch.is_write() & live).any(axis=1)
-    crd = be.validate(store.claim_w, batch.op_key, batch.op_group, myp, rd,
-                      wave, fine)
+    crd = be.validate(store.claim_w, batch.op_key, batch.op_group, myp,
+                      rd & ~batch.is_scan(), wave, fine)
     conflict = conflict | (crd & has_write[:, None])
     u = claims.hash01(wave, claims.lane_op_ids(*batch.op_key.shape))
     conflict = conflict & (u < cfg.cost.opt_overlap)   # window thinning
+    # Scan (interval) reads of update transactions re-validate UNTHINNED
+    # through the interval pass against the wave's write claims — the
+    # Hekaton iterator re-scan; read-only lanes keep the snapshot
+    # exemption (their snapshot is a consistent cut even for intervals).
+    conflict = conflict | base.phantom_validate(store, batch, prio, wave,
+                                                cfg, fine,
+                                                mask=has_write[:, None])
 
     _, ok = be.mv_gather(store.mv_begin, batch.op_key, batch.op_group,
                          mvstore.snapshot_ts(wave, cfg.snapshot_age), fine)

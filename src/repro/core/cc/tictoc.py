@@ -64,8 +64,11 @@ def wave_validate(store: StoreState, batch: TxnBatch, prio, wave,
     # Read validation: a concurrent (same-wave, earlier-priority) writer
     # bumps wts past rts; the read survives iff it can serialize at
     # commit_ts <= rts.  Probe-independent mask (window-thinned); the
-    # megakernel ANDs in the strictness compare.
-    ext_need = rd & (commit_ts[:, None] > rts_op)
+    # megakernel ANDs in the strictness compare.  Scan ops never ride the
+    # timestamp channels: an iterator cannot CAS-extend rts over an
+    # interval, so scans validate solely through the unthinned interval
+    # pass (base.claim_probe_commit's phantom check).
+    ext_need = rd & (commit_ts[:, None] > rts_op) & ~batch.is_scan()
     u = claims.hash01(wave, claims.lane_op_ids(*batch.op_key.shape))
     check_w = ext_need & (u < cfg.cost.opt_overlap)
 

@@ -21,6 +21,8 @@ it previously chained four table passes.
 """
 from __future__ import annotations
 
+import dataclasses
+
 from repro.core import claims
 from repro.core import types as t
 from repro.core.cc import base
@@ -46,8 +48,12 @@ def wave_validate(store: StoreState, batch: TxnBatch, prio, wave,
     store, conflict = base.claim_probe_commit(
         store, batch, prio, wave, cfg, fine,
         check_w=(rd | wr) & lock_ok, check_r=wr & lock_ok, dual=True)
-    # All three terms are failed eager lock acquisitions: the younger lane
-    # of the pair is wounded.
+    # All three point terms are failed eager lock acquisitions: the younger
+    # lane of the pair is wounded.  Scan ops take no locks — they validate
+    # optimistically at commit (the interval pass), so a phantom conflict
+    # never cuts work early: first_conflict only counts lock losses.
     res = base.result_from_conflicts(batch, conflict, eager=True,
                                      cause_op=t.CAUSE_LOCK_WOUND)
+    first_lock = claims.first_true_index(conflict & ~batch.is_scan(), K)
+    res = dataclasses.replace(res, first_conflict=first_lock)
     return store, res

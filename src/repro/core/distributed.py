@@ -90,6 +90,25 @@ Granularity (the paper's mechanism) is carried per op exactly as in the
 local engine: coarse probes the whole row (and the MV visibility check
 reduces each ring slot over the row), fine probes the op's group.
 
+Interval (scan) ops — ``max_extent > 1`` (DESIGN.md section 13)
+---------------------------------------------------------------
+The caller packs each op's extent into the kind channel's high bits
+(``kind = kinds & 3``, ``extent = max(kinds >> 2, 1)``), so every wave
+signature, the admission ring, and the pipeline carries are untouched —
+a re-enqueued incarnation automatically retries the identical interval.
+``route`` splits an interval at its range-shard boundary into at most two
+fragments (``max_extent <= rec_per`` is enforced), each riding the wire
+with its width in meta bits 19..30 (0 for point ops — pure-point waves
+stay byte-identical).  Owners validate scan fragments with the
+``iterate_validate`` op against the post-install claim shard (fine:
+per-row probes at the op's group; coarse: bucket-expanded row-min,
+``rec_per % bucket_size == 0`` keeps expansion inside the shard); the
+verdict rides the existing bits and the SENDER — who kept the packed
+kinds — classifies scan conflicts as ``CAUSE_PHANTOM`` and AND-reduces
+fragment verdicts per lane.  Aged snapshots are rejected with
+``max_extent > 1`` exactly like the local engine (and independently at
+``pipeline_depth >= 2``, the pre-existing rule).
+
 In-wave conflict semantics match the local engine (DESIGN.md sections 2
 and 9): a single-version read aborts iff a *higher-priority* lane claimed
 its cell this wave, regardless of that lane's own fate — STO's non-waiting
@@ -139,10 +158,11 @@ TOPOLOGIES = ("flat", "axiswise")
 #: Slots 6..9 are the open-loop front-end counters (make_open_wave_fn);
 #: the closed wave reports zeros there.  ADMITTED / ARRIVAL_DROPS /
 #: INC_DROPS are per-wave deltas the driver accumulates; QUEUED is the
-#: post-wave queue-occupancy snapshot (NOT a delta).  Slots 10..15 are
-#: the per-cause abort counts, indexed by types.CAUSE_* code; they sum
-#: to the ABORTS slot exactly, at every shard count and pipeline depth
-#: (the conservation invariant tests/test_abort_causes.py asserts).
+#: post-wave queue-occupancy snapshot (NOT a delta).  Slots 10 onward are
+#: the N_ABORT_CAUSES per-cause abort counts, indexed by types.CAUSE_*
+#: code; they sum to the ABORTS slot exactly, at every shard count and
+#: pipeline depth (the conservation invariant
+#: tests/test_abort_causes.py asserts).
 STATS_LEN = 10 + t.N_ABORT_CAUSES
 STAT_COMMITS, STAT_ABORTS, STAT_DROPPED_LANES, STAT_DROPPED_OPS, \
     STAT_RO_COMMITS, STAT_RO_ABORTS, STAT_ADMITTED, STAT_ARRIVAL_DROPS, \
@@ -203,6 +223,21 @@ class DistConfig:
                                    # past it a txn drops (counted)
     lat_bins: int = 32             # per-shard time-to-commit histogram
                                    # width in waves (last bin = overflow)
+    max_extent: int = 1            # widest op interval [key, key+extent):
+                                   # 1 = point ops only (the wire and the
+                                   # compiled wave are byte-identical to
+                                   # the pre-scan engine); > 1 enables
+                                   # interval (scan) ops — routed by
+                                   # splitting each interval at its range-
+                                   # shard boundary (route), validated
+                                   # owner-side by iterate_validate, abort
+                                   # cause CAUSE_PHANTOM (DESIGN.md
+                                   # section 13)
+    bucket_size: int = 8           # coarse interval-claim bucket width B
+                                   # (records per claim word on the scan
+                                   # path; rec_per must divide by it so
+                                   # bucket expansion never crosses a
+                                   # shard boundary)
     fuse_wave: bool = True         # owner claim step runs as the fused
                                    # wave_commit op (one table pass answers
                                    # the probe AND installs the claims);
@@ -290,6 +325,27 @@ class DistConfig:
                 f"max_incarnations={self.max_incarnations} shapes the "
                 "open-loop admission queue only — set queue_cap >= 1 "
                 "(the open-loop switch) to use it")
+        if self.max_extent < 1:
+            raise ValueError(
+                f"max_extent must be >= 1 (1 = point ops), got "
+                f"{self.max_extent}")
+        if self.max_extent > 0xFFF:
+            raise ValueError(
+                f"max_extent={self.max_extent} does not fit the wire: the "
+                "meta word carries a fragment's scan width in bits 19..30 "
+                "(group | kind << 1 | prio16 << 3 | width << 19), so "
+                "intervals cap at 4095 records")
+        if self.bucket_size < 1:
+            raise ValueError(
+                f"bucket_size must be >= 1, got {self.bucket_size}")
+        if self.max_extent > 1 and self.snapshot_age > 0:
+            raise ValueError(
+                f"max_extent={self.max_extent} with snapshot_age="
+                f"{self.snapshot_age}: interval validation runs against "
+                "the CURRENT wave's claim tables, but an aged snapshot "
+                "serializes in the past — a scan validated today cannot "
+                "protect a cut taken waves ago (the local engine rejects "
+                "this identically; EngineConfig)")
 
     @property
     def open_loop(self) -> bool:
@@ -305,10 +361,13 @@ class DistConfig:
         transaction to a single shard always fits (the invariant the
         explicit-cap validation enforces).  Always a multiple of 8 (auto
         rounds up, explicit is validated) so Pallas lane tiling never sees
-        ragged exchange buffers."""
+        ragged exchange buffers.  Interval configs (max_extent > 1) double
+        the fair share: every op routes up to TWO fragments (one per side
+        of a range-shard boundary)."""
         if self.route_cap:
             return self.route_cap
-        fair = self.lanes_per_shard * self.slots / max(n_shards, 1)
+        nfrag = 2 if self.max_extent > 1 else 1
+        fair = nfrag * self.lanes_per_shard * self.slots / max(n_shards, 1)
         return -(-max(8, int(4 * fair), self.slots) // 8) * 8
 
     def depth(self, n_shards: int) -> int:
@@ -428,35 +487,85 @@ def _make_phases(cfg: DistConfig, mesh):
     fine = cfg.granularity == 1 and G > 1
     be = kb.resolve(cfg)
     mv = cfg.is_mv
+    # Interval (scan) support: the caller's kind channel packs each op's
+    # extent in bits 2+ (kind = kinds & 3, extent = max(kinds >> 2, 1) —
+    # point workloads leave the high bits zero, so nothing changes for
+    # them).  An interval splits into at most TWO fragments at its
+    # range-shard boundary, doubling the flat-op axis.
+    scans = cfg.max_extent > 1
+    nfrag = 2 if scans else 1
+    if scans and cfg.max_extent > rec_per:
+        raise ValueError(
+            f"max_extent={cfg.max_extent} > rec_per={rec_per}: an "
+            "interval may cross at most ONE range-shard boundary (two "
+            "fragments) — shrink the interval or the shard count")
+    if scans and not fine and rec_per % cfg.bucket_size:
+        raise ValueError(
+            f"bucket_size={cfg.bucket_size} does not divide rec_per="
+            f"{rec_per}: coarse interval validation expands fragments to "
+            "bucket boundaries, which must never cross a shard boundary")
 
     def route(keys, groups, kinds, prio):
         # keys/groups/kinds: [T, K] local lanes; prio: [T]
-        live = (kinds != t.NOP) & (keys >= 0)
+        kind = (kinds & 3) if scans else kinds
+        live = (kind != t.NOP) & (keys >= 0)
         owner = jnp.where(live, keys // rec_per, ns)         # dest shard
         lkey = jnp.where(live, keys % rec_per, NO_OP)
         # Pack (group | kind | prio16) into ONE int32 rider word — 2 words
         # per op on the wire; the lane id never travels (the sender keeps
-        # the slot->lane map).
-        meta = (groups | (kinds << 1)
+        # the slot->lane map).  Scan fragments add their width in bits
+        # 19..30 (0 = point op, keeping pure-point waves byte-identical).
+        meta = (groups | (kind << 1)
                 | (jnp.broadcast_to(prio[:, None], (T, K)).astype(jnp.int32)
                    << 3))
         lane = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[:, None],
                                 (T, K))
-        vals = jnp.stack([lkey.reshape(-1), meta.reshape(-1),
-                          lane.reshape(-1)])
-        buf, pos, took = be.route_pack(owner.reshape(-1), vals, ns, cap,
+        kflat = kinds.reshape(-1)
+        if scans:
+            # Split each interval [key, key + ext) at its range-shard
+            # boundary: fragment 1 stays with the start key's owner,
+            # fragment 2 (the remainder, possibly empty) routes to the
+            # NEXT shard and starts at its row 0.  Verdicts AND-reduce
+            # back on the sender like any other op of the lane.
+            ext = jnp.maximum(kinds >> 2, 1)
+            is_sc = (kinds >> 2) > 1
+            bound = (keys // rec_per + 1) * rec_per
+            w1 = jnp.minimum(keys + ext, bound) - keys
+            w2 = keys + ext - jnp.minimum(keys + ext, bound)
+            meta = meta | (jnp.where(live & is_sc, w1, 0) << 19)
+            live2 = live & is_sc & (w2 > 0)
+            owner2 = jnp.where(live2, owner + 1, ns)
+            lkey2 = jnp.where(live2, 0, NO_OP)
+            meta2 = jnp.where(live2, (meta & ((1 << 19) - 1)) | (w2 << 19),
+                              META_FILL)
+            owner_f = jnp.concatenate([owner.reshape(-1),
+                                       owner2.reshape(-1)])
+            vals = jnp.stack([
+                jnp.concatenate([lkey.reshape(-1), lkey2.reshape(-1)]),
+                jnp.concatenate([meta.reshape(-1), meta2.reshape(-1)]),
+                jnp.concatenate([lane.reshape(-1), lane.reshape(-1)])])
+            kflat = jnp.concatenate(
+                [kflat, jnp.where(live2, kinds, t.NOP).reshape(-1)])
+        else:
+            owner_f = owner.reshape(-1)
+            vals = jnp.stack([lkey.reshape(-1), meta.reshape(-1),
+                              lane.reshape(-1)])
+        buf, pos, took = be.route_pack(owner_f, vals, ns, cap,
                                        (NO_OP, META_FILL, LANE_FILL))
         b_key, b_meta, b_lane = buf[0], buf[1], buf[2]
         # capacity-dropped ops abort their lane (no scatter: took is
         # flat-op aligned, so a reshape + any does the lane reduce)
-        dropped_op = ~took & (owner.reshape(-1) < ns)
-        lane_dropped = dropped_op.reshape(T, K).any(axis=1)
-        has_write = (live & ((kinds == t.WRITE)
-                             | (kinds == t.ADD))).any(axis=1)
+        dropped_op = ~took & (owner_f < ns)
+        if scans:
+            lane_dropped = dropped_op.reshape(2, T, K).any(axis=(0, 2))
+        else:
+            lane_dropped = dropped_op.reshape(T, K).any(axis=1)
+        has_write = (live & ((kind == t.WRITE)
+                             | (kind == t.ADD))).any(axis=1)
         out = jnp.concatenate([b_key, b_meta], axis=-1)      # [ns, 2*cap]
-        send = (jnp.clip(owner.reshape(-1), 0, ns - 1),
+        send = (jnp.clip(owner_f, 0, ns - 1),
                 jnp.clip(pos, 0, cap - 1), took, b_lane,
-                lane_dropped, has_write, dropped_op, kinds.reshape(-1))
+                lane_dropped, has_write, dropped_op, kflat)
         return out, send
 
     def _decode(r_buf):
@@ -473,6 +582,19 @@ def _make_phases(cfg: DistConfig, mesh):
         rk, r_grp, r_kind, r_prio, r_live = _decode(r_buf)
         is_w = r_live & ((r_kind == t.WRITE) | (r_kind == t.ADD))
         is_r = r_live & (r_kind == t.READ)
+        if scans:
+            # Scan fragments (meta width bits > 0) leave the point verdict
+            # channel and validate their whole local interval against the
+            # POST-install claim shard instead — op sixteen,
+            # iterate_validate (DESIGN.md section 13).  The owner never
+            # learns lane composition, so the phantom verdict rides the
+            # existing bits and the SENDER classifies CAUSE_PHANTOM by
+            # the op's packed kind.
+            r_w = (r_buf[:, cap:] >> 19) & 0xFFF
+            is_sc = r_live & (r_w > 0)
+            is_rp = is_r & ~is_sc
+        else:
+            is_rp = is_r
         if not mv:
             # Single-version OCC: ONE table pass; verdict bit 0 = read
             # claimed by a stronger lane.  Fused (default): the
@@ -483,12 +605,17 @@ def _make_phases(cfg: DistConfig, mesh):
             if cfg.fuse_wave:
                 claim_w, _, _, conflict, _ = be.wave_commit(
                     claim_w, None, None, rk, r_grp, r_prio, is_w, None,
-                    is_r, None, None, None, wave_idx, fine, False, False)
+                    is_rp, None, None, None, wave_idx, fine, False, False)
                 v = conflict.astype(jnp.int8)
             else:
                 claim_w, wprio = be.claim_probe(claim_w, rk, r_grp, r_prio,
                                                 wave_idx, is_w, fine)
-                v = (is_r & (wprio < r_prio)).astype(jnp.int8)
+                v = (is_rp & (wprio < r_prio)).astype(jnp.int8)
+            if scans:
+                ph = be.iterate_validate(
+                    claim_w, rk, jnp.maximum(r_w, 1), r_grp, r_prio,
+                    is_sc, wave_idx, fine, cfg.bucket_size, cfg.max_extent)
+                v = v | ph.astype(jnp.int8)
             tables = (wts, claim_w)
         else:
             # The local fcw_conflicts + mv snapshot check (cc/mvcc.py),
@@ -512,8 +639,15 @@ def _make_phases(cfg: DistConfig, mesh):
                       | (is_r & ~ok))
             # bit 1: read-validation — only mvocc applies it, and only to
             # update lanes; the sender owns that mask (lane composition
-            # never travels).
-            rdval = is_r & (wprio_w < r_prio)
+            # never travels).  Scan fragments re-route through the
+            # interval pass (mvocc only — mvcc scans read a consistent
+            # snapshot cut and never re-validate; cc/mvcc.py).
+            rdval = is_rp & (wprio_w < r_prio)
+            if scans and cfg.cc == "mvocc":
+                ph = be.iterate_validate(
+                    claim_w, rk, jnp.maximum(r_w, 1), r_grp, r_prio,
+                    is_sc, wave_idx, fine, cfg.bucket_size, cfg.max_extent)
+                rdval = rdval | ph
             v = uncond.astype(jnp.int8) | (rdval.astype(jnp.int8) << 1)
             tables = (claim_w, claim_r, mv_begin, mv_head)
         return tables, be.verdict_pack(v)
@@ -523,6 +657,11 @@ def _make_phases(cfg: DistConfig, mesh):
         # scatter-free, the inverse of route_pack's placement.
         (owner_c, pos_c, took, b_lane, lane_dropped, has_write, dropped_op,
          kind_f) = send
+        if scans:
+            # The kind channel packs extents (route); a conflict on a scan
+            # fragment IS a phantom — no extra wire bit needed.
+            is_sc_f = (kind_f >> 2) > 1
+            kind_f = kind_f & 3
         vv = be.verdict_unpack(v_words, cap)[owner_c, pos_c]
         bit0 = ((vv & 1) > 0) & took
         op_conf = bit0
@@ -532,15 +671,23 @@ def _make_phases(cfg: DistConfig, mesh):
         if not mv:
             cause = jnp.where(bit0, jnp.int32(t.CAUSE_READ_VAL),
                               jnp.int32(t.CAUSE_NONE))
+            if scans:
+                cause = jnp.where(bit0 & is_sc_f,
+                                  jnp.int32(t.CAUSE_PHANTOM), cause)
         else:
             cause = jnp.full_like(kind_f, t.CAUSE_NONE)
             if cfg.cc == "mvocc":
                 hw_op = jnp.broadcast_to(has_write[:, None],
                                          (T, K)).reshape(-1)
+                if scans:
+                    hw_op = jnp.concatenate([hw_op, hw_op])
                 rdval = ((vv & 2) > 0) & hw_op & took
                 op_conf = op_conf | rdval
                 cause = jnp.where(rdval, jnp.int32(t.CAUSE_READ_VAL),
                                   cause)
+                if scans:
+                    cause = jnp.where(rdval & is_sc_f,
+                                      jnp.int32(t.CAUSE_PHANTOM), cause)
             # bit 0 on a write op is a first-committer-wins w-w loss; on a
             # read op it is snapshot reclamation (cc/mvcc.py's disjoint
             # channels) — reclamation outranks the mvocc read validation.
@@ -549,8 +696,15 @@ def _make_phases(cfg: DistConfig, mesh):
             cause = jnp.where(bit0 & ~is_wr,
                               jnp.int32(t.CAUSE_STALE_SNAPSHOT), cause)
         cause = jnp.where(dropped_op, jnp.int32(t.CAUSE_CAPACITY), cause)
-        commit = ~op_conf.reshape(T, K).any(axis=1) & ~lane_dropped
-        lane_cause = cause.reshape(T, K).min(axis=1)
+        if scans:
+            # Fragment verdicts AND-reduce per lane (both fragments of an
+            # interval must survive); causes min-reduce like any op.
+            commit = (~op_conf.reshape(2, T, K).any(axis=(0, 2))
+                      & ~lane_dropped)
+            lane_cause = cause.reshape(2, T, K).min(axis=(0, 2))
+        else:
+            commit = ~op_conf.reshape(T, K).any(axis=1) & ~lane_dropped
+            lane_cause = cause.reshape(T, K).min(axis=1)
         b_commit = jnp.where(
             b_lane >= 0,
             commit[jnp.clip(b_lane, 0, T - 1)].astype(jnp.int8),
@@ -622,18 +776,21 @@ def _pipe_carry_init(cfg: DistConfig, ns: int, tables):
     cap = cfg.cap(ns)
     T, K = cfg.lanes_per_shard, cfg.slots
     W = verdict_words(cap)
+    # Interval configs route up to two fragments per op (_make_phases), so
+    # the flat-op coordinate axis doubles.
+    M = T * K * (2 if cfg.max_extent > 1 else 1)
     rb = jnp.concatenate([jnp.full((ns, cap), NO_OP, jnp.int32),
                           jnp.full((ns, cap), META_FILL, jnp.int32)],
                          axis=-1)
     vz = jnp.zeros((ns, W), jnp.int32)
-    st = (jnp.zeros((T * K,), jnp.int32),              # owner (clipped)
-          jnp.zeros((T * K,), jnp.int32),              # pos (clipped)
-          jnp.zeros((T * K,), jnp.bool_),              # took
+    st = (jnp.zeros((M,), jnp.int32),                  # owner (clipped)
+          jnp.zeros((M,), jnp.int32),                  # pos (clipped)
+          jnp.zeros((M,), jnp.bool_),                  # took
           jnp.full((ns, cap), LANE_FILL, jnp.int32),   # b_lane
           jnp.zeros((T,), jnp.bool_),                  # lane_dropped
           jnp.zeros((T,), jnp.bool_),                  # has_write
-          jnp.zeros((T * K,), jnp.bool_),              # dropped_op
-          jnp.full((T * K,), t.NOP, jnp.int32))        # kinds_flat
+          jnp.zeros((M,), jnp.bool_),                  # dropped_op
+          jnp.full((M,), t.NOP, jnp.int32))            # kinds_flat
     return (tables, rb, rb, rb, vz, vz, st, st)
 
 

@@ -4,7 +4,7 @@ One *wave* simulates all T threads each running one transaction concurrently
 (DESIGN.md section 2).  The executor is a single jitted ``lax.scan`` whose
 carry is the whole engine state (store, retry buffer, metrics), so a full
 benchmark datapoint (thousands of waves) is one XLA program.  Every
-shared-state touch inside the scan body goes through the fifteen-op
+shared-state touch inside the scan body goes through the ``backend.N_OPS``-op
 kernel-backend surface (core/backend.py): the probe family's whole
 claim+probe+verdict+bump wave runs as the single ``wave_commit`` megakernel
 (``claim_probe`` remains the unfused ``fuse_wave=False`` chain) and the cost
@@ -153,6 +153,17 @@ def _lane_cost(cfg: EngineConfig, batch: TxnBatch, commit: jax.Array,
         jnp.float32)
     has_write = (batch.is_write() & batch.live()).any(axis=1)
     t_exec = c.c_txn + n_ops * c.c_op * kappa
+    if cfg.max_extent > 1:
+        # Interval reads: a scan op touches ``extent`` rows, so both its
+        # execution work and its commit-time validation (iterate_validate
+        # walks the whole interval) scale with the extent.  Gated on the
+        # static max_extent so point configs trace the exact pre-scan
+        # cost graph (bit-identity guard in tests).
+        rd = batch.is_read() & batch.live()
+        ext = batch.extent().astype(jnp.float32)
+        n_reads = jnp.where(rd, ext, 0.0).sum(axis=1)
+        t_exec = t_exec + jnp.where(rd, ext - 1.0, 0.0).sum(axis=1) \
+            * c.c_op * kappa
     if _optimistic(cfg):
         val_reads = n_reads
         if cfg.cc == t.CC_MVOCC:
@@ -197,8 +208,8 @@ def _conflict_histogram(cfg: EngineConfig, hits: jax.Array, peak: jax.Array,
     """Hot-record accounting (cfg.track_conflicts): per-cell conflicting-op
     totals via the backend's ``commit_install`` +1 scatter, and the
     per-wave same-cell conflict peak via ``segment_count`` maxed into the
-    table through ``ts_install_max`` — everything stays on the 14-op
-    surface, so both backends agree bit-for-bit.  Cells are always fine
+    table through ``ts_install_max`` — everything stays on the
+    ``backend.N_OPS``-op surface, so both backends agree bit-for-bit.  Cells are always fine
     resolution (claims are scattered fine regardless of granularity)."""
     be = kb.resolve(cfg)
     conf = res.conflict_op & batch.live()

@@ -20,6 +20,13 @@ Each transaction is a fixed-length list of K operation slots:
                          increment; in the write set for versioning purposes
                          but never aborts against other ADDs)
   op_val   f32[T, K]     value or delta for WRITE/ADD
+  op_extent int32[T, K]  interval width: the op covers records
+                         [op_key, op_key + op_extent).  extent 1 is a point
+                         op (every pre-scan call site); extent > 1 is a
+                         range SCAN, validated at commit through the
+                         iterate_validate backend op so concurrently
+                         claimed rows inside the interval abort the scan
+                         with CAUSE_PHANTOM (DESIGN.md section 13)
 
 Priorities
 ----------
@@ -86,7 +93,12 @@ CAUSE_WW: int = 4              # claim / write-write conflict
                                #   (first-committer-wins)
 CAUSE_READ_VAL: int = 5        # commit-time read-validation failure
                                #   (the paper's false-conflict channel)
-N_ABORT_CAUSES: int = 6
+CAUSE_PHANTOM: int = 6         # interval (scan) validation failure: a
+                               #   concurrent writer claimed a record inside
+                               #   a committed scan's [key, key+extent)
+                               #   interval (iterate_validate; DESIGN.md
+                               #   section 13)
+N_ABORT_CAUSES: int = 7
 CAUSE_NONE: int = N_ABORT_CAUSES  # sentinel: op not conflicting
 
 CAUSE_NAMES = {
@@ -96,6 +108,7 @@ CAUSE_NAMES = {
     CAUSE_LOCK_WOUND: "lock_wound",
     CAUSE_WW: "ww",
     CAUSE_READ_VAL: "read_val",
+    CAUSE_PHANTOM: "phantom",
 }
 
 
@@ -133,7 +146,7 @@ def field(**kw):
 
 @partial(jax.tree_util.register_dataclass,
          data_fields=["op_key", "op_group", "op_col", "op_kind", "op_val",
-                      "txn_type", "n_ops"],
+                      "txn_type", "n_ops", "op_extent"],
          meta_fields=[])
 @dataclasses.dataclass
 class TxnBatch:
@@ -145,6 +158,14 @@ class TxnBatch:
     op_val: jax.Array    # f32[T, K]
     txn_type: jax.Array  # int32[T]      workload-defined transaction type
     n_ops: jax.Array     # int32[T]      number of live ops (for the cost model)
+    op_extent: jax.Array = None  # int32[T, K]  interval width
+                          #   [key, key+extent); 1 = point op.  Defaults
+                          #   to all-ones (every op a point op) so
+                          #   pre-extent construction sites stay valid.
+
+    def __post_init__(self):
+        if self.op_extent is None:
+            self.op_extent = jnp.ones_like(self.op_key)
 
     @property
     def lanes(self) -> int:
@@ -169,6 +190,15 @@ class TxnBatch:
 
     def live(self) -> jax.Array:
         return (self.op_kind != NOP) & (self.op_key >= 0)
+
+    def is_scan(self) -> jax.Array:
+        """Interval ops (extent > 1) — validated via iterate_validate."""
+        return self.op_extent > 1
+
+    def extent(self) -> jax.Array:
+        """Effective interval width, clamped to >= 1 so legacy callers
+        that fill op_extent with zeros still mean point ops."""
+        return jnp.maximum(self.op_extent, 1)
 
 
 @partial(jax.tree_util.register_dataclass,
@@ -400,6 +430,22 @@ class EngineConfig:
                                 # (kernels/wave_commit.pick_lane_block);
                                 # explicit values snap down to a divisor of
                                 # `lanes`.  jnp backend ignores it.
+    max_extent: int = 1         # Widest op interval the workload emits
+                                # ([key, key+extent) — TxnBatch.op_extent).
+                                # 1 = point ops only: the scan validation
+                                # pass is compiled OUT and the wave is
+                                # bit-identical to the pre-extent engine.
+                                # > 1 compiles the iterate_validate pass
+                                # (static loop bound; DESIGN.md section 13).
+    bucket_size: int = 8        # Coarse-granularity interval claims: one
+                                # claim word stands for `bucket_size`
+                                # consecutive records, so a coarse scan
+                                # validates the bucket-expanded interval
+                                # [floor(key/B)*B, ceil((key+extent)/B)*B)
+                                # — fewer probes, more false phantoms (the
+                                # granularity trade-off, now for intervals).
+                                # Fine granularity probes every gap row and
+                                # ignores this knob.
 
     def __post_init__(self):
         if self.backend not in ("jnp", "pallas"):
@@ -443,6 +489,26 @@ class EngineConfig:
                 f"{self.max_incarnations} shape the open-loop admission "
                 "queue only: set arrival_rate > 0 (closed-loop lanes "
                 "retry in place and never queue)")
+        if self.max_extent < 1:
+            raise ValueError(
+                f"max_extent must be >= 1 (1 = point ops), got "
+                f"{self.max_extent}")
+        if self.max_extent > self.n_records:
+            raise ValueError(
+                f"max_extent={self.max_extent} exceeds n_records="
+                f"{self.n_records}: no interval can be wider than the "
+                "record space")
+        if self.bucket_size < 1:
+            raise ValueError(
+                f"bucket_size must be >= 1, got {self.bucket_size}")
+        if self.max_extent > 1 and self.snapshot_age > 0:
+            raise ValueError(
+                f"max_extent={self.max_extent} with snapshot_age="
+                f"{self.snapshot_age}: scans validate intervals against "
+                "the CURRENT wave's claim tables, which aged snapshots "
+                "have already drifted past — scan workloads need "
+                "wave-fresh snapshots (the pipeline_depth >= 2 analogue "
+                "of this rule lives in DistConfig)")
 
     @property
     def open_loop(self) -> bool:
@@ -456,6 +522,7 @@ def txn_batch_zeros(lanes: int, slots: int) -> TxnBatch:
         op_key=jnp.full((lanes, slots), -1, jnp.int32),
         op_group=zi, op_col=zi, op_kind=zi,
         op_val=jnp.zeros((lanes, slots), jnp.float32),
+        op_extent=jnp.ones((lanes, slots), jnp.int32),
         txn_type=jnp.zeros((lanes,), jnp.int32),
         n_ops=jnp.zeros((lanes,), jnp.int32),
     )

@@ -1,0 +1,152 @@
+"""Op sixteen: interval (scan) validation — phantom protection.
+
+Hekaton-style iterator validation for extent-carrying ops: every scan op
+covers ``[key, key + extent)`` and must abort if any record of its
+validated interval carries a live same-wave claim stronger than the
+scanning lane (DESIGN.md section 13).  Run against the POST-install claim
+table, the monotone wave tags make this exactly the phantom check — the
+only claims visible are this wave's writers, i.e. precisely the installs
+the scan's wave-start snapshot could have missed.
+
+The grid reuses the lane-block row-DMA idiom of occ_validate.py, scaled
+by the interval width: ``(T // LB,)`` steps, and each step issues
+``LB*K*span`` row fetches back-to-back (span = the STATIC per-op row
+bound from ``ref.scan_span``) before one wait and a fully vectorized
+compare.  Granularity is the interval-claim layout, not just the compare
+width:
+
+- fine (per-gap timestamps): rows ``key .. key+extent-1`` probed at the
+  op's own group column — only a writer of the scanned column group
+  inside the exact interval kills the scan;
+- coarse (bucket-interval claims, one claim word per ``bucket_size``
+  records): the bucket-EXPANDED interval is probed with the whole-row
+  compare; a bucket's claim word is the min over its member rows, so the
+  kernel fetches the bucket's rows and min-reduces — writers anywhere in
+  a touched bucket abort the scan (false phantoms at the bucket edges).
+
+Masked ops (check False or key < 0) and rows past the table edge clamp
+their DMA to row 0 and are masked out of the compare.  ``LB`` has its own
+chooser (``pick_scan_block``): the row scratch scales by span, so scan
+blocks are narrower than the point-op kernels' for the same table width.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.claimword import NO_PRIO, live_prio
+from repro.kernels.ref import scan_span
+from repro.kernels.wave_commit import _start, _wait
+
+#: VMEM budget for the (LB*K*span, G) row scratch the auto chooser fits.
+_SCAN_TILE_BYTES = 1 << 19
+
+
+def pick_scan_block(T: int, K: int, G: int, span: int,
+                    override: int = 0) -> int:
+    """Lanes per grid step for the interval kernel.  Auto mode fits the
+    row scratch (LB*K*span rows of G words) under ``_SCAN_TILE_BYTES``;
+    an explicit override (EngineConfig.lane_block) wins.  Either way the
+    result snaps DOWN to a divisor of T."""
+    if override:
+        lb = max(1, min(int(override), T))
+    else:
+        lb = max(1, _SCAN_TILE_BYTES // max(4 * K * span * G, 1))
+        lb = min(lb, T)
+    while T % lb:
+        lb -= 1
+    return lb
+
+
+def _interval_dmas(action, keys_ref, tbl_ref, buf_ref, sem_ref, t0, LB, K,
+                   span, B, fine, N):
+    """Issue (or wait) the span row copies of every block op: scratch row
+    ``op*span + j`` holds interval row j of block op ``op``.  All
+    LB*K*span copies of a stream are in flight together."""
+
+    def body(i, _):
+        op = i // span
+        t = t0 + op // K
+        key = keys_ref[t, op % K]
+        start = key if fine else (key // B) * B
+        row = start + i % span
+        ok = (key >= 0) & (row >= 0) & (row < N)
+        row = jnp.where(ok, row, 0)
+        copy = pltpu.make_async_copy(tbl_ref.at[row], buf_ref.at[i],
+                                     sem_ref.at[i])
+        action(copy)
+        return 0
+
+    jax.lax.fori_loop(0, LB * K * span, body, 0)
+
+
+def _kernel(fine, G, LB, K, span, B, N, keys_ref, ivw_ref, kv_b, ext_b,
+            grp_b, prio_b, chk_b, tbl, out_b, rows_s, sem):
+    LBK = LB * K
+    t0 = pl.program_id(0) * LB
+    _interval_dmas(_start, keys_ref, tbl, rows_s, sem, t0, LB, K, span, B,
+                   fine, N)
+    _interval_dmas(_wait, keys_ref, tbl, rows_s, sem, t0, LB, K, span, B,
+                   fine, N)
+    kv = kv_b[...].reshape(LBK)
+    ext = jnp.maximum(ext_b[...].reshape(LBK), 1)
+    if fine:
+        start = kv
+        width = ext
+    else:
+        start = (kv // B) * B
+        width = ((kv + ext + B - 1) // B) * B - start
+    pr = live_prio(rows_s[...], ivw_ref[0])            # (LBK*span, G)
+    if fine:
+        gb = grp_b[...].reshape(LBK)
+        gbf = jnp.broadcast_to(gb[:, None], (LBK, span)).reshape(LBK * span)
+        sel = jnp.arange(G, dtype=jnp.int32)[None, :] == gbf[:, None]
+        wprio = jnp.where(sel, pr, jnp.uint32(NO_PRIO)).min(axis=1)
+    else:
+        wprio = pr.min(axis=1)
+    wprio = wprio.reshape(LBK, span)
+    jidx = jnp.broadcast_to(jnp.arange(span, dtype=jnp.int32)[None, :],
+                            (LBK, span))
+    row = start[:, None] + jidx
+    act = ((jidx < width[:, None]) & (kv[:, None] >= 0)
+           & (row >= 0) & (row < N))
+    conf = (chk_b[...].reshape(LBK)[:, None] & act
+            & (wprio < prio_b[...].reshape(LBK)[:, None])).any(axis=1)
+    out_b[...] = conf.reshape(LB, K)
+
+
+def iterate_validate_pallas(table: jax.Array, keys: jax.Array,
+                            extents: jax.Array, groups: jax.Array,
+                            myprio: jax.Array, check: jax.Array,
+                            inv_wave: jax.Array, fine: bool,
+                            bucket_size: int, ext_cap: int,
+                            lane_block: int = 0,
+                            interpret: bool = False) -> jax.Array:
+    """conflict bool[T, K] — see ref.iterate_validate for the oracle."""
+    T, K = keys.shape
+    N, G = table.shape
+    span = scan_span(ext_cap, fine, bucket_size)
+    LB = pick_scan_block(T, K, G, span, lane_block)
+    ivw = jnp.reshape(inv_wave.astype(jnp.uint32), (1,))
+    LBK = LB * K
+    blk = pl.BlockSpec((LB, K), lambda i, keys, ivw: (i, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(T // LB,),
+        in_specs=[blk] * 5
+        + [pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)],
+        out_specs=blk,
+        scratch_shapes=[pltpu.VMEM((LBK * span, G), jnp.uint32),
+                        pltpu.SemaphoreType.DMA((LBK * span,))],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, fine, G, LB, K, span, bucket_size, N),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((T, K), jnp.bool_),
+        interpret=interpret,
+    )(keys, ivw, keys, extents, groups, myprio.astype(jnp.uint32), check,
+      table)

@@ -25,6 +25,7 @@ from repro.kernels import ref
 from repro.kernels.claim_probe import claim_probe_fused_pallas
 from repro.kernels.claim_scatter import claim_scatter_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.iterate_validate import iterate_validate_pallas
 from repro.kernels.occ_commit import occ_commit_pallas
 from repro.kernels.mv_gather import mv_gather_pallas
 from repro.kernels.mv_install import mv_install_pallas
@@ -165,6 +166,22 @@ def wave_commit(claim_w, claim_r, wts, keys, groups, prio, do_w, do_r,
     return ref.wave_commit(claim_w, claim_r, wts, keys, groups, prio, do_w,
                            do_r, check_w, check_w2, check_r, extra, wave,
                            fine, dual, bump)
+
+
+def iterate_validate(table, keys, extents, groups, myprio, check, inv_wave,
+                     fine: bool, bucket_size: int, ext_cap: int,
+                     lane_block: int = 0, use_pallas=None):
+    """Op sixteen: interval (scan) validation — conflict bool[T, K] for
+    every masked op whose ``[key, key + extent)`` interval carries a live
+    same-wave claim stronger than the lane.  See ref.iterate_validate."""
+    if _use_pallas(use_pallas):
+        return iterate_validate_pallas(table, keys, extents, groups,
+                                       myprio.astype(jnp.uint32), check,
+                                       inv_wave, fine, bucket_size, ext_cap,
+                                       lane_block=lane_block,
+                                       interpret=_interp())
+    return ref.iterate_validate(table, keys, extents, groups, myprio, check,
+                                inv_wave, fine, bucket_size, ext_cap)
 
 
 def route_pack(owner, vals, n_dest: int, cap: int, fills, use_pallas=None):

@@ -231,6 +231,74 @@ def wave_commit(claim_w: jax.Array, claim_r, wts, keys: jax.Array,
     return claim_w, claim_r, wts, conflict, commit
 
 
+def scan_span(ext_cap: int, fine: bool, bucket_size: int) -> int:
+    """STATIC per-op row bound of iterate_validate: ext_cap rows for the
+    fine (exact-interval) layout; for coarse the bucket expansion of a
+    worst-aligned interval — a 1-row first bucket plus ceil((ext_cap-1)/B)
+    further buckets of B rows each."""
+    if fine or ext_cap <= 1:
+        return ext_cap
+    return (1 + -(-(ext_cap - 1) // bucket_size)) * bucket_size
+
+
+def iterate_validate(table: jax.Array, keys: jax.Array, extents: jax.Array,
+                     groups: jax.Array, myprio: jax.Array, check: jax.Array,
+                     inv_wave: jax.Array, fine: bool, bucket_size: int,
+                     ext_cap: int) -> jax.Array:
+    """Op sixteen: interval (scan) validation against a claim table.
+
+    Each masked op covers the record interval ``[key, key + extent)``
+    (``TxnBatch.op_extent``; extent 1 = a point op) and conflicts when ANY
+    record of its validated interval carries a live same-wave claim
+    stronger than ``myprio`` — the phantom check of Hekaton-style iterator
+    validation, run against the POST-install claim table so it sees
+    exactly this wave's writers (monotone wave tags hide earlier waves,
+    whose installs the scan's wave-start snapshot already observed).
+
+    Granularity is the interval-claim layout (DESIGN.md section 13):
+
+    - ``fine``: per-gap timestamps — every row of ``[key, key+extent)`` is
+      probed at the op's own group column, so only a writer of the scanned
+      column group inside the exact interval aborts the scan;
+    - coarse: bucket-interval claims, one claim word per ``bucket_size``
+      consecutive records — the scan validates the bucket-EXPANDED
+      interval ``[floor(key/B)*B, ceil((key+extent)/B)*B)`` with the
+      whole-row (any-group) compare; a bucket's claim word is the min over
+      its member rows' words, so writers anywhere in a touched bucket
+      abort the scan (false phantoms at the bucket edges — the
+      granularity trade-off, now for intervals).
+
+    ``ext_cap`` is the STATIC bound on any extent (EngineConfig.max_extent)
+    — the row loop unrolls to it, so the op costs nothing at ext_cap == 1
+    call sites (the engine compiles the pass out entirely there).  Rows
+    past the table edge read EMPTY_WORD (no conflict); masked ops
+    (``check`` False or key < 0) never conflict.  Returns bool[T, K].
+    """
+    ext = jnp.maximum(extents, 1)
+    if fine:
+        start = keys
+        width = ext
+    else:
+        B = bucket_size
+        start = (keys // B) * B
+        width = ((keys + ext + B - 1) // B) * B - start
+    span = scan_span(ext_cap, fine, bucket_size)
+    conflict = jnp.zeros(keys.shape, jnp.bool_)
+    for j in range(span):
+        row = start + j
+        active = check & (keys >= 0) & (j < width)
+        k = jnp.where(active, row, OOB_KEY)
+        rows = table.at[k, :].get(mode="fill", fill_value=EMPTY_WORD)
+        pr = live_prio(rows, inv_wave)
+        if fine:
+            wprio = jnp.take_along_axis(pr, groups[..., None],
+                                        axis=-1)[..., 0]
+        else:
+            wprio = pr.min(axis=-1)
+        conflict |= active & (wprio < myprio)
+    return conflict
+
+
 def route_pack(owner: jax.Array, vals: jax.Array, n_dest: int, cap: int,
                fills) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Sort-free routing pack: per-destination fixed-capacity buffers.

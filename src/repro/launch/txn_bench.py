@@ -7,7 +7,7 @@ The whole cc x granularity x lanes grid compiles to ONE XLA program
 (core/engine.py sweep, vmapped in lane buckets); ``--backend pallas`` routes
 every CC shared-state op (the wave_commit megakernel, validate/gather,
 commit/timestamp scatters) through the TPU-native kernels via the
-fifteen-op backend surface of core/backend.py (interpret mode on CPU — see
+``backend.N_OPS``-op backend surface of core/backend.py (interpret mode on CPU — see
 DESIGN.md section 5).  Each JSON row records the resolved backend and
 per-op kernel coverage (CC_OPS), which benchmarks/perf_dashboard.py
 aggregates into reports/perf_dashboard.md.
@@ -24,20 +24,24 @@ import time
 @functools.lru_cache(maxsize=32)
 def _make_workload(workload: str, *, scale: float = 1.0,
                    n_keys: int = 1_000_000, write_frac: float = 0.5,
-                   ro_frac: float = 0.0, theta: float = 0.9):
+                   ro_frac: float = 0.0, theta: float = 0.9,
+                   scan_frac: float = 0.0, scan_len: int = 0):
     """Workloads are deterministic in their parameters and read-only once
     built, so identical grid points share ONE object — which also keys the
     compiled-sweep memo (core/engine.py), letting a re-run of the same
     grid (benchmarks/common.py warm_then_time) skip tracing entirely."""
     from repro.workloads import TPCCWorkload, YCSBWorkload
     if workload == "tpcc":
-        return TPCCWorkload.make(n_warehouses=8, scale=scale)
+        return TPCCWorkload.make(n_warehouses=8, scale=scale,
+                                 scan_len=scan_len)
     return YCSBWorkload.make(n_keys=n_keys, write_frac=write_frac,
-                             ro_frac=ro_frac, theta=theta)
+                             ro_frac=ro_frac, theta=theta,
+                             scan_frac=scan_frac, scan_len=scan_len or 8)
 
 
 def _cost_fields(cc_name: str, lanes: int, granularity: int, slots: int,
-                 n_groups: int, mv_depth: int) -> dict:
+                 n_groups: int, mv_depth: int, max_extent: int = 1,
+                 bucket_size: int = 8) -> dict:
     """Per-op roofline cost-model columns (analysis/txn_cost.py): analytic
     bytes/flops per transaction attempt and the mechanism's fraction of
     the default chip's roofline.  Closed-form in the wave shape, so the
@@ -45,7 +49,8 @@ def _cost_fields(cc_name: str, lanes: int, granularity: int, slots: int,
     relies on that)."""
     from repro.analysis import txn_cost as tc
     shape = tc.WaveShape(lanes=lanes, slots=slots, n_groups=n_groups,
-                         granularity=granularity, mv_depth=mv_depth)
+                         granularity=granularity, mv_depth=mv_depth,
+                         max_extent=max_extent, bucket_size=bucket_size)
     cost = tc.txn_cost(cc_name, shape)
     fields = {
         "bytes_per_txn": round(cost["bytes_per_txn"], 1),
@@ -71,7 +76,8 @@ def _cost_fields(cc_name: str, lanes: int, granularity: int, slots: int,
 
 def _row(workload: str, cc_name: str, p, wall_s: float,
          backend: str, *, slots: int = 0, n_groups: int = 2,
-         mv_depth: int = 0) -> dict:
+         mv_depth: int = 0, max_extent: int = 1,
+         bucket_size: int = 8) -> dict:
     from repro.core import types as t
     from repro.core.backend import kernel_coverage
     row = {
@@ -89,6 +95,10 @@ def _row(workload: str, cc_name: str, p, wall_s: float,
         # Pallas kernels vs XLA — makes BENCH_*.json trajectories
         # attributable to an execution engine (DESIGN.md section 5).
         "kernel_ops": kernel_coverage(backend, t.CC_IDS[cc_name]),
+        # Interval-read shape of the run; extent-1 rows are pure point
+        # workloads (perf_dashboard.py defaults missing values to 1 for
+        # pre-scan JSON rows).
+        "max_extent": max_extent,
     }
     if getattr(p, "abort_causes", None) is not None:
         # Per-cause abort breakdown (types.CAUSE_*), name-keyed in code
@@ -98,7 +108,8 @@ def _row(workload: str, cc_name: str, p, wall_s: float,
                                for i, n in enumerate(p.abort_causes)}
     if slots:
         row.update(_cost_fields(cc_name, p.lanes, p.granularity, slots,
-                                n_groups, mv_depth))
+                                n_groups, mv_depth, max_extent,
+                                bucket_size))
     if getattr(p, "open_loop", False):
         # Goodput (unique committed txns per simulated us) and the
         # per-txn-class time-to-commit percentiles (waves) the dashboard's
@@ -118,7 +129,8 @@ def run_grid(workload: str, ccs: list, grans, lanes: list, waves: int, *,
              scale: float = 1.0, n_keys: int = 1_000_000, seed: int = 0,
              backend: str = "jnp", mv_depth: int = 4, snapshot_age: int = 0,
              write_frac: float = 0.5, ro_frac: float = 0.0,
-             theta: float = 0.9, arrival_rate: float = 0.0,
+             theta: float = 0.9, scan_frac: float = 0.0, scan_len: int = 0,
+             arrival_rate: float = 0.0,
              queue_cap: int = 0, max_incarnations: int = 0,
              per_wave: bool = False, return_points: bool = False):
     """Run the whole benchmark grid in one jitted sweep; returns row dicts.
@@ -138,7 +150,8 @@ def run_grid(workload: str, ccs: list, grans, lanes: list, waves: int, *,
     from repro.core.engine import sweep
 
     wl = _make_workload(workload, scale=scale, n_keys=n_keys,
-                        write_frac=write_frac, ro_frac=ro_frac, theta=theta)
+                        write_frac=write_frac, ro_frac=ro_frac, theta=theta,
+                        scan_frac=scan_frac, scan_len=scan_len)
     need_mv = any(t.CC_IDS[c] in t.MV_CCS for c in ccs)
     if snapshot_age and not all(t.CC_IDS[c] in t.MV_CCS for c in ccs):
         raise ValueError("snapshot_age > 0 needs an all-MV cc grid "
@@ -155,6 +168,7 @@ def run_grid(workload: str, ccs: list, grans, lanes: list, waves: int, *,
         n_records=wl.n_records, n_groups=wl.n_groups, n_cols=wl.n_cols,
         n_txn_types=wl.n_txn_types, n_rings=wl.n_rings, backend=backend,
         mv_depth=mv_depth if need_mv else 0, snapshot_age=snapshot_age,
+        max_extent=wl.max_extent,
         arrival_rate=arrival_rate, queue_cap=queue_cap,
         max_incarnations=max_incarnations)
     t0 = time.time()
@@ -164,7 +178,8 @@ def run_grid(workload: str, ccs: list, grans, lanes: list, waves: int, *,
     wall = (time.time() - t0) / max(len(points), 1)
     rows = [_row(workload, t.CC_NAMES[p.cc], p, wall, backend,
                  slots=wl.slots, n_groups=wl.n_groups,
-                 mv_depth=cfg.mv_depth)
+                 mv_depth=cfg.mv_depth, max_extent=cfg.max_extent,
+                 bucket_size=cfg.bucket_size)
             for p in points]
     if return_points:
         # (rows, SweepPoints) — the points carry the per-wave timeline the
@@ -176,13 +191,15 @@ def run_grid(workload: str, ccs: list, grans, lanes: list, waves: int, *,
 def run_one(workload: str, cc_name: str, gran: int, lanes: int, waves: int,
             *, scale: float = 1.0, n_keys: int = 1_000_000, seed: int = 0,
             backend: str = "jnp", mv_depth: int = 4, snapshot_age: int = 0,
+            scan_frac: float = 0.0, scan_len: int = 0,
             arrival_rate: float = 0.0, queue_cap: int = 0,
             max_incarnations: int = 0):
     """Single grid point (one compiled run; prefer run_grid for grids)."""
     from repro.core import types as t
     from repro.core.engine import run
 
-    wl = _make_workload(workload, scale=scale, n_keys=n_keys)
+    wl = _make_workload(workload, scale=scale, n_keys=n_keys,
+                        scan_frac=scan_frac, scan_len=scan_len)
     if arrival_rate > 0:
         queue_cap = queue_cap or 4 * lanes
         max_incarnations = max_incarnations or 8
@@ -192,7 +209,8 @@ def run_one(workload: str, cc_name: str, gran: int, lanes: int, waves: int,
         n_txn_types=wl.n_txn_types, granularity=gran, n_rings=wl.n_rings,
         backend=backend,
         mv_depth=mv_depth if t.CC_IDS[cc_name] in t.MV_CCS else 0,
-        snapshot_age=snapshot_age, arrival_rate=arrival_rate,
+        snapshot_age=snapshot_age, max_extent=wl.max_extent,
+        arrival_rate=arrival_rate,
         queue_cap=queue_cap, max_incarnations=max_incarnations)
     from repro.core.backend import kernel_coverage
     t0 = time.time()
@@ -210,12 +228,13 @@ def run_one(workload: str, cc_name: str, gran: int, lanes: int, waves: int,
         "wall_s": round(wall, 2),
         "backend": backend,
         "kernel_ops": kernel_coverage(backend, t.CC_IDS[cc_name]),
+        "max_extent": cfg.max_extent,
     }
     if res.abort_causes is not None:
         row["abort_causes"] = {t.CAUSE_NAMES[i]: int(n)
                                for i, n in enumerate(res.abort_causes)}
     row.update(_cost_fields(cc_name, lanes, gran, wl.slots, wl.n_groups,
-                            cfg.mv_depth))
+                            cfg.mv_depth, cfg.max_extent, cfg.bucket_size))
     if res.open_loop:
         row.update({
             "open_loop": True, "goodput": round(res.goodput, 4),
@@ -273,6 +292,16 @@ def main(argv=None):
                          "(default 0)")
     ap.add_argument("--theta", type=float, default=None,
                     help="YCSB Zipf skew (default 0.9)")
+    ap.add_argument("--scan-frac", type=float, default=None,
+                    help="YCSB fraction of short-range-scan transactions "
+                         "(YCSB-E style; adds the interval-read txn class "
+                         "and switches the engine to extent-carrying ops)")
+    ap.add_argument("--scan-len", type=int, default=None,
+                    help="interval width of a scan op in records: the YCSB "
+                         "scan class's range (default 8; needs "
+                         "--scan-frac > 0) or, for TPC-C, switches on the "
+                         "Order-status/Stock-level scan classes at this "
+                         "stock window")
     ap.add_argument("--json", default=None)
     ap.add_argument("--trace", nargs="?", const="reports/txn_trace.json",
                     default=None, metavar="PATH",
@@ -289,6 +318,23 @@ def main(argv=None):
     if args.workload == "tpcc" and any(v is not None for v in ycsb_flags):
         ap.error("--write-frac/--ro-frac/--theta shape the ycsb workload "
                  "only; TPC-C's mix is fixed by the standard")
+    # Presence validation: each scan flag must name a scan class the
+    # chosen workload actually has.  YCSB's class is switched by
+    # --scan-frac (with --scan-len as its width); TPC-C's mix is fixed by
+    # the standard, so only --scan-len (the Stock-level window) applies.
+    if args.scan_frac is not None:
+        if args.workload == "tpcc":
+            ap.error("--scan-frac shapes the ycsb scan class only; TPC-C's "
+                     "mix is fixed by the standard (--scan-len switches on "
+                     "its Order-status/Stock-level scans)")
+        if not 0 < args.scan_frac <= 1:
+            ap.error(f"--scan-frac must be in (0, 1], got {args.scan_frac}")
+    if args.scan_len is not None:
+        if args.scan_len < 1:
+            ap.error(f"--scan-len must be >= 1, got {args.scan_len}")
+        if args.workload == "ycsb" and args.scan_frac is None:
+            ap.error("--scan-len sizes the ycsb scan class: set "
+                     "--scan-frac > 0 to add scan transactions to the mix")
     if args.snapshot_age:
         from repro.core import types as t
         if not all(t.CC_IDS[c] in t.MV_CCS for c in args.cc):
@@ -318,6 +364,8 @@ def main(argv=None):
                     else args.write_frac),
         ro_frac=0.0 if args.ro_frac is None else args.ro_frac,
         theta=0.9 if args.theta is None else args.theta,
+        scan_frac=args.scan_frac or 0.0,
+        scan_len=args.scan_len or 0,
         arrival_rate=args.arrival_rate or 0.0,
         queue_cap=args.queue_cap or 0,
         max_incarnations=args.max_incarnations or 0,

@@ -1,5 +1,7 @@
 """TPC-C (New-order, Payment, Order-status — 92% of the standard mix, the
-three the paper implements), laid out for vectorized wave execution.
+three the paper implements; ``scan_len > 0`` adds a Stock-level-style
+fourth type and turns Order-status's order-line reads into one interval
+scan), laid out for vectorized wave execution.
 
 Tables live in one flat record space (dense arithmetic keys replace the
 Masstree index — see DESIGN.md section 2):
@@ -36,9 +38,12 @@ from repro.core.types import StoreState, TxnBatch, store_init
 from repro.workloads.zipf import nurand
 
 # Transaction types.
-NEW_ORDER, PAYMENT, ORDER_STATUS = 0, 1, 2
+NEW_ORDER, PAYMENT, ORDER_STATUS, STOCK_LEVEL = 0, 1, 2, 3
 # Renormalized standard mix (45/43/4 out of the 92% the paper implements).
 MIX = (45 / 92, 43 / 92, 4 / 92)
+# With the scan classes on (scan_len > 0): Stock-level joins at its
+# standard 4% weight — 45/43/4/4 renormalized.
+MIX_SCAN = (45 / 96, 43 / 96, 4 / 96, 4 / 96)
 
 MAX_ITEMS = 15
 SLOTS = 64
@@ -60,18 +65,35 @@ class TPCCWorkload:
     n_cust_per_d: int = 3000
     n_items: int = 100_000
     o_cap: int = 1024              # order-ring capacity per district
+    #: 0 (default) = the historical three-type point-op mix, bit-for-bit.
+    #: > 0 turns on the scan classes: Order-status reads its order lines as
+    #: ONE interval scan (extent MAX_ITEMS — the OL keys are consecutive by
+    #: construction), and a Stock-level-style type joins the mix scanning
+    #: ``scan_len`` consecutive stock rows of the home warehouse.
+    scan_len: int = 0
 
     n_groups: int = 2
     n_txn_types: int = 3
 
+    def __post_init__(self):
+        if self.scan_len > 0:
+            if self.scan_len > self.n_items:
+                raise ValueError(
+                    f"scan_len {self.scan_len} exceeds n_items "
+                    f"{self.n_items}")
+            if self.n_txn_types < 4:
+                object.__setattr__(self, "n_txn_types", 4)
+
     @staticmethod
-    def make(n_warehouses: int = 8, scale: float = 1.0) -> "TPCCWorkload":
+    def make(n_warehouses: int = 8, scale: float = 1.0,
+             scan_len: int = 0) -> "TPCCWorkload":
         """scale < 1 shrinks the per-warehouse tables (for tests)."""
         return TPCCWorkload(
             n_warehouses=n_warehouses,
             n_cust_per_d=max(int(3000 * scale), 8),
             n_items=max(int(100_000 * scale), 16),
             o_cap=max(int(1024 * scale), 16),
+            scan_len=scan_len,
         )
 
     # ---- layout ----
@@ -116,6 +138,13 @@ class TPCCWorkload:
     @property
     def slots(self) -> int: return SLOTS
 
+    @property
+    def max_extent(self) -> int:
+        """Widest interval any generated op carries (EngineConfig.max_extent
+        anchor): the Order-status OL scan is extent MAX_ITEMS, the
+        Stock-level window is ``scan_len``; 1 when scans are off."""
+        return max(MAX_ITEMS, self.scan_len) if self.scan_len > 0 else 1
+
     def init_store(self, track_values: bool = False,
                    mv_depth: int = 0) -> StoreState:
         return store_init(self.n_records, self.n_groups,
@@ -140,11 +169,20 @@ class TPCCWorkload:
     def gen(self, rng: jax.Array, wave: jax.Array, lanes: int,
             ring_tails: jax.Array):
         T, K = lanes, SLOTS
-        (r_type, r_w, r_d, r_c, r_it, r_nit, r_q, r_rem, r_rw, r_rd
-         ) = jax.random.split(rng, 10)
-
-        txn_type = jax.random.choice(
-            r_type, 3, (T,), p=jnp.array(MIX, jnp.float32)).astype(jnp.int32)
+        # The extra split only exists in scan mode, so scan_len=0 draws the
+        # historical PRNG stream bit-for-bit.
+        if self.scan_len > 0:
+            (r_type, r_w, r_d, r_c, r_it, r_nit, r_q, r_rem, r_rw, r_rd,
+             r_sl) = jax.random.split(rng, 11)
+            txn_type = jax.random.choice(
+                r_type, 4, (T,),
+                p=jnp.array(MIX_SCAN, jnp.float32)).astype(jnp.int32)
+        else:
+            (r_type, r_w, r_d, r_c, r_it, r_nit, r_q, r_rem, r_rw, r_rd
+             ) = jax.random.split(rng, 10)
+            txn_type = jax.random.choice(
+                r_type, 3, (T,),
+                p=jnp.array(MIX, jnp.float32)).astype(jnp.int32)
         w = jax.random.randint(r_w, (T,), 0, self.n_warehouses)
         d = jax.random.randint(r_d, (T,), 0, self.n_districts)
         c = nurand(r_c, 1023, 0, self.n_cust_per_d - 1, 259, (T,))
@@ -174,13 +212,18 @@ class TPCCWorkload:
         no = self._gen_new_order(T, w, d, c, items, n_it, qty, ring, o_pos)
         pay = self._gen_payment(T, w, d, c_w, c_d, c)
         os_ = self._gen_order_status(T, w, d, c, ring, ring_tails)
+        variants = [no, pay, os_]
+        if self.scan_len > 0:
+            i0 = jax.random.randint(r_sl, (T,), 0,
+                                    self.n_items - self.scan_len + 1)
+            variants.append(self._gen_stock_level(T, w, d, i0))
 
         batch = jax.tree.map(
             lambda *xs: jnp.take_along_axis(
                 jnp.stack(xs),
                 txn_type.reshape((1, T) + (1,) * (xs[0].ndim - 1)),
                 axis=0)[0],
-            no, pay, os_)
+            *variants)
         batch = dataclasses.replace(batch, txn_type=txn_type)
         return batch, new_tails
 
@@ -191,6 +234,7 @@ class TPCCWorkload:
             op_col=jnp.zeros((T, SLOTS), jnp.int32),
             op_kind=jnp.zeros((T, SLOTS), jnp.int32),
             op_val=jnp.zeros((T, SLOTS), jnp.float32),
+            op_extent=jnp.ones((T, SLOTS), jnp.int32),
         )
 
     @staticmethod
@@ -246,9 +290,32 @@ class TPCCWorkload:
         self._set(f, 0, ck, C_INFO, t.READ, G_RARE)
         self._set(f, 1, ck, C_BAL, t.READ, G_HOT)
         self._set(f, 2, self.o_key(ring, last), 0, t.READ, G_RARE)
-        olk = self.ol_key(ring[:, None], last[:, None],
-                          jnp.arange(MAX_ITEMS)[None, :])
-        self._set(f, slice(3, 18), olk, 0, t.READ, G_RARE,
-                  mask=jnp.ones((T, MAX_ITEMS), jnp.bool_))
+        if self.scan_len > 0:
+            # The order's MAX_ITEMS order-line keys are consecutive by
+            # construction (ol_key is j-major), so the per-slot point reads
+            # collapse into ONE interval scan — the iterator a real
+            # Order-status runs, phantom-protected via iterate_validate.
+            self._set(f, 3, self.ol_key(ring, last, 0), 0, t.READ, G_RARE)
+            f["op_extent"] = f["op_extent"].at[:, 3].set(MAX_ITEMS)
+            n_ops = 4
+        else:
+            olk = self.ol_key(ring[:, None], last[:, None],
+                              jnp.arange(MAX_ITEMS)[None, :])
+            self._set(f, slice(3, 18), olk, 0, t.READ, G_RARE,
+                      mask=jnp.ones((T, MAX_ITEMS), jnp.bool_))
+            n_ops = 18
         return TxnBatch(txn_type=jnp.full((T,), 2, jnp.int32),
-                        n_ops=jnp.full((T,), 18, jnp.int32), **f)
+                        n_ops=jnp.full((T,), n_ops, jnp.int32), **f)
+
+    def _gen_stock_level(self, T, w, d, i0):
+        """Stock-level style: read the district, then scan ``scan_len``
+        consecutive stock rows of the home warehouse (the standard
+        transaction's recent-order stock check, flattened to one window
+        over the dense stock keys).  Read-only — under MV it serializes at
+        its snapshot; single-version mechanisms phantom-protect the scan."""
+        f = self._empty(T)
+        self._set(f, 0, self.d_key(w, d), D_TAX, t.READ, G_RARE)
+        self._set(f, 1, self.s_key(w, i0), S_QTY, t.READ, G_RARE)
+        f["op_extent"] = f["op_extent"].at[:, 1].set(self.scan_len)
+        return TxnBatch(txn_type=jnp.full((T,), STOCK_LEVEL, jnp.int32),
+                        n_ops=jnp.full((T,), 2, jnp.int32), **f)

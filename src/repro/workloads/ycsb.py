@@ -15,6 +15,15 @@ protect: under mvcc/mvocc these lanes read their snapshot and never abort,
 while single-version OCC aborts them on any conflicting concurrent write
 (benchmarks/abort_rates.py).  ``ro_frac=0`` (the default) draws the exact
 PRNG stream this workload always had.
+
+``scan_frac`` mixes in short-range SCAN transactions (YCSB-E style): one
+interval READ of ``scan_len`` consecutive keys (op_extent = scan_len,
+start Zipfian like every other key, clamped to stay in-table) plus one
+point WRITE, so scan lanes are update transactions and every serializable
+mechanism must phantom-protect the interval (iterate_validate /
+CAUSE_PHANTOM — DESIGN.md section 13).  The scan class is its own
+txn_type (after the read-only class when both exist); ``scan_frac=0``
+(the default) again draws the historical PRNG stream bit-for-bit.
 """
 from __future__ import annotations
 
@@ -35,6 +44,8 @@ class YCSBWorkload:
     ops_per_txn: int = 16
     write_frac: float = 0.5
     ro_frac: float = 0.0           # fraction of read-only transactions
+    scan_frac: float = 0.0         # fraction of short-range-scan txns
+    scan_len: int = 8              # interval width of a scan op (extent)
     theta: float = 0.9
     zipf: ZipfSampler = None  # type: ignore[assignment]
 
@@ -44,20 +55,27 @@ class YCSBWorkload:
     n_txn_types: int = 1
 
     def __post_init__(self):
-        # The read-only class is its own txn_type; derive the count here so
-        # direct dataclass construction can't desync it from gen()'s output
-        # (a txn_type beyond n_txn_types would silently corrupt the
-        # engine's commits_by_type scatter).
-        if self.ro_frac > 0 and self.n_txn_types < 2:
-            object.__setattr__(self, "n_txn_types", 2)
+        # The read-only and scan classes are their own txn_types; derive
+        # the count here so direct dataclass construction can't desync it
+        # from gen()'s output (a txn_type beyond n_txn_types would
+        # silently corrupt the engine's commits_by_type scatter).
+        n_types = 1 + (self.ro_frac > 0) + (self.scan_frac > 0)
+        if self.n_txn_types < n_types:
+            object.__setattr__(self, "n_txn_types", n_types)
+        if self.scan_frac > 0:
+            if not 1 <= self.scan_len <= self.n_keys:
+                raise ValueError(
+                    f"scan_len must be in [1, n_keys], got {self.scan_len}")
 
     @staticmethod
     def make(n_keys: int = 10_000_000, theta: float = 0.9,
              ops_per_txn: int = 16, write_frac: float = 0.5,
-             ro_frac: float = 0.0) -> "YCSBWorkload":
+             ro_frac: float = 0.0, scan_frac: float = 0.0,
+             scan_len: int = 8) -> "YCSBWorkload":
         return YCSBWorkload(n_keys=n_keys, theta=theta,
                             ops_per_txn=ops_per_txn, write_frac=write_frac,
-                            ro_frac=ro_frac,
+                            ro_frac=ro_frac, scan_frac=scan_frac,
+                            scan_len=scan_len,
                             zipf=ZipfSampler.make(n_keys, theta))
 
     @property
@@ -72,6 +90,12 @@ class YCSBWorkload:
     def slots(self) -> int:
         return self.ops_per_txn
 
+    @property
+    def max_extent(self) -> int:
+        """Widest interval any generated op carries (EngineConfig.max_extent
+        anchor): scan_len when the scan class exists, else 1 (all point)."""
+        return self.scan_len if self.scan_frac > 0 else 1
+
     def init_store(self, track_values: bool = False,
                    mv_depth: int = 0) -> StoreState:
         return store_init(self.n_records, self.n_groups,
@@ -81,25 +105,57 @@ class YCSBWorkload:
     def gen(self, rng: jax.Array, wave: jax.Array, lanes: int,
             ring_tails: jax.Array):
         K = self.ops_per_txn
+        # Extra splits only when the optional classes exist, so the default
+        # workload (and every pre-scan ro_frac mix) draws its historical
+        # PRNG stream unchanged.
+        n_split = 4 + (self.ro_frac > 0) + (self.scan_frac > 0)
+        parts = list(jax.random.split(rng, n_split))
+        rk, rc, rw, rv = parts[:4]
         if self.ro_frac > 0:
-            # Extra split only when the read-only class exists, so the
-            # default workload draws its historical PRNG stream unchanged.
-            rk, rc, rw, rv, rro = jax.random.split(rng, 5)
-            is_ro = jax.random.uniform(rro, (lanes,)) < self.ro_frac
+            is_ro = jax.random.uniform(parts[4], (lanes,)) < self.ro_frac
         else:
-            rk, rc, rw, rv = jax.random.split(rng, 4)
             is_ro = jnp.zeros((lanes,), jnp.bool_)
+        if self.scan_frac > 0:
+            is_sc = (jax.random.uniform(parts[-1], (lanes,))
+                     < self.scan_frac) & ~is_ro
+        else:
+            is_sc = jnp.zeros((lanes,), jnp.bool_)
         keys = self.zipf.sample(rk, (lanes, K))
         cols = jax.random.randint(rc, (lanes, K), 0, self.n_cols_schema)
         is_w = jax.random.uniform(rw, (lanes, K)) < self.write_frac
         is_w = is_w & ~is_ro[:, None]
+        op_key = keys
+        op_kind = jnp.where(is_w, t.WRITE, t.READ).astype(jnp.int32)
+        op_extent = jnp.ones((lanes, K), jnp.int32)
+        n_ops = jnp.full((lanes,), K, jnp.int32)
+        scan_type = jnp.int32(1 + (self.ro_frac > 0))
+        txn_type = jnp.where(is_sc, scan_type, is_ro.astype(jnp.int32))
+        if self.scan_frac > 0:
+            # Scan txn: op 0 = one interval READ of scan_len consecutive
+            # keys (Zipfian start, clamped in-table), op 1 = one point
+            # WRITE (an update txn — serializable mechanisms must phantom-
+            # protect it), the rest masked out.
+            col = jnp.arange(K, dtype=jnp.int32)[None, :]
+            sc = is_sc[:, None]
+            start = jnp.minimum(keys[:, :1], self.n_keys - self.scan_len)
+            op_key = jnp.where(
+                sc, jnp.where(col == 0, start,
+                              jnp.where(col == 1, keys[:, 1:2], -1)),
+                op_key)
+            op_kind = jnp.where(
+                sc & (col == 1), t.WRITE,
+                jnp.where(sc, t.READ, op_kind)).astype(jnp.int32)
+            op_extent = jnp.where(sc & (col == 0),
+                                  jnp.int32(self.scan_len), op_extent)
+            n_ops = jnp.where(is_sc, 2, n_ops)
         batch = TxnBatch(
-            op_key=keys,
+            op_key=op_key,
             op_group=(cols % 2).astype(jnp.int32),  # the paper's parity split
             op_col=cols.astype(jnp.int32),
-            op_kind=jnp.where(is_w, t.WRITE, t.READ).astype(jnp.int32),
+            op_kind=op_kind,
             op_val=jax.random.uniform(rv, (lanes, K)),
-            txn_type=is_ro.astype(jnp.int32),
-            n_ops=jnp.full((lanes,), K, jnp.int32),
+            txn_type=txn_type,
+            n_ops=n_ops,
+            op_extent=op_extent,
         )
         return batch, ring_tails

@@ -1,0 +1,65 @@
+"""The backend surface has ONE op count — ``backend.N_OPS`` — and every
+consumer derives from it: the op registries, both backend classes, the
+mechanism coverage maps, and the counts quoted in README.md / DESIGN.md
+(which used to hard-code "fifteen" and drifted the moment op sixteen
+landed).  This module pins all of them together."""
+import re
+
+from repro.core import backend as kb
+from repro.core import types as t
+
+
+def test_n_ops_is_the_surface():
+    assert kb.N_OPS == len(kb.SURFACE_OPS) == 16
+    assert len(set(kb.SURFACE_OPS)) == kb.N_OPS
+    assert "iterate_validate" in kb.SURFACE_OPS
+
+
+def test_backends_implement_every_surface_op():
+    for cls in (kb.JnpBackend, kb.PallasBackend):
+        missing = [op for op in kb.SURFACE_OPS if not callable(
+            getattr(cls, op, None))]
+        assert not missing, (cls.__name__, missing)
+
+
+def test_registries_subset_surface():
+    surface = set(kb.SURFACE_OPS)
+    for cc, ops in kb.CC_OPS.items():
+        assert set(ops) <= surface, t.CC_NAMES.get(cc, cc)
+    for ops in (kb.DIST_OPS, kb.DIST_MV_OPS, kb.DIST_MVOCC_OPS):
+        assert set(ops) <= surface
+
+
+def test_iterate_validate_coverage_policy():
+    """Every mechanism validates scans EXCEPT mvcc (snapshot isolation
+    admits phantoms — the negative control), locally and distributed."""
+    for cc, ops in kb.CC_OPS.items():
+        name = t.CC_NAMES.get(cc, cc)
+        if name == "mvcc":
+            assert "iterate_validate" not in ops
+        else:
+            assert "iterate_validate" in ops, name
+    assert "iterate_validate" in kb.DIST_OPS
+    assert "iterate_validate" in kb.DIST_MVOCC_OPS
+    assert "iterate_validate" not in kb.DIST_MV_OPS
+
+
+def test_docs_quote_the_real_op_count():
+    """README.md and DESIGN.md cite the op count as ``N_OPS (= <n>)``;
+    every citation must match kb.N_OPS so docs can't silently drift when
+    op seventeen lands."""
+    import pathlib
+    root = pathlib.Path(__file__).resolve().parent.parent
+    for doc in ("README.md", "DESIGN.md"):
+        text = (root / doc).read_text()
+        counts = re.findall(r"N_OPS.{0,3}\(=\s*(\d+)\)", text)
+        assert counts, f"{doc} no longer cites backend.N_OPS"
+        assert all(int(c) == kb.N_OPS for c in counts), (doc, counts)
+
+
+def test_dashboard_cause_order_tracks_taxonomy():
+    """perf_dashboard renders abort causes in taxonomy order; adding a
+    cause (as CAUSE_PHANTOM did) must extend the dashboard too."""
+    from benchmarks.perf_dashboard import _CAUSE_ORDER
+    assert tuple(_CAUSE_ORDER) == tuple(
+        t.CAUSE_NAMES[i] for i in range(t.N_ABORT_CAUSES))

@@ -42,14 +42,14 @@ def test_ops_cell_attribution():
 def test_render_picks_peak_point_per_group():
     rows = [dict(r, _src="BENCH_a.json") for r in MECH_ROWS]
     md = render_markdown(rows, [])
-    # rows predating the cost model / cause taxonomy / megakernel render
-    # '—' in the B/txn, flop/txn, roofline, abort-causes, launches/wave,
-    # and DMA-rows/wave columns
+    # rows predating the cost model / cause taxonomy / megakernel / scan
+    # era render '—' in the abort-causes, scan, B/txn, flop/txn,
+    # roofline, launches/wave, and DMA-rows/wave columns
     assert "| ycsb | occ | fine | pallas | 25.500 | 64 | 20.00% " \
-           "| — | — | — | — | — | — | 3/3 pallas | BENCH_a.json |" in md
+           "| — | — | — | — | — | — | — | 3/3 pallas | BENCH_a.json |" in md
     assert "10.000" not in md                     # dominated point dropped
     assert "| ycsb | tictoc | coarse | jnp | 18.000 | 64 | 30.00% " \
-           "| — | — | — | — | — | — | xla | BENCH_a.json |" in md
+           "| — | — | — | — | — | — | — | xla | BENCH_a.json |" in md
 
 
 def test_render_distributed_section():
@@ -108,7 +108,7 @@ def test_render_mech_cost_and_cause_columns():
              roofline_chip="tpu_v5e")
     md = render_markdown([r], [])
     assert "| ycsb | occ | fine | pallas | 25.500 | 64 | 20.00% " \
-           "| read_val:56 | 512 | 128 | 0.10% (memory) | — | — " \
+           "| read_val:56 | — | 512 | 128 | 0.10% (memory) | — | — " \
            "| 3/3 pallas | BENCH_a.json |" in md
 
 
@@ -119,7 +119,7 @@ def test_render_mech_fusion_columns():
              launches_per_wave=1, dma_rows_per_wave=1024,
              dma_rows_per_wave_unfused=3072)
     md = render_markdown([r], [])
-    assert "| 20.00% | — | — | — | — | 1 | 1024 (/3 vs unfused) " \
+    assert "| 20.00% | — | — | — | — | — | 1 | 1024 (/3 vs unfused) " \
            "| 3/3 pallas | BENCH_a.json |" in md
     assert "launches/wave" in md and "DMA rows/wave" in md
 
@@ -289,3 +289,34 @@ def test_main_no_rows(tmp_path):
     out = tmp_path / "dash.md"
     assert main([str(tmp_path / "nothing_*.json"), "--out", str(out)]) == 0
     assert "No benchmark rows found" in out.read_text()
+
+
+def test_pre_scan_rows_render_unchanged():
+    """Regression (ISSUE 10 satellite): JSON rows written before the
+    interval era — no max_extent / scan_frac / scan_len, a 6-cause
+    abort_causes dict without 'phantom' — must render with a '—' scan
+    cell and NO skipped-row warning."""
+    r = dict(MECH_ROWS[1], _src="BENCH_pr9.json",
+             abort_causes={"inc_cap": 0, "capacity": 0,
+                           "stale_snapshot": 0, "lock_wound": 0,
+                           "ww": 2, "read_val": 56})
+    md = render_markdown([r], [])
+    assert "## Skipped rows" not in md
+    assert "| ww:2 read_val:56 | — |" in md
+    # the code-ordered 6-list (pre-phantom txn_scaling files) also parses
+    assert _causes_cell([0, 0, 0, 0, 2, 56]) == "ww:2 read_val:56"
+
+
+def test_scan_rows_render_and_keep_own_peak_group():
+    """A scan-mix row shares (workload, cc, gran, backend) with a faster
+    point row; max_extent joins the peak-group key so BOTH render — the
+    scan row with its 'ext=L (frac x len)' cell."""
+    point = dict(MECH_ROWS[1], _src="BENCH_a.json", throughput=25.5)
+    scan = dict(MECH_ROWS[1], _src="scan_mix.json", throughput=9.25,
+                max_extent=16, scan_frac=0.5, scan_len=16,
+                abort_causes={"read_val": 3, "phantom": 41})
+    md = render_markdown([point, scan], [])
+    assert "| 25.500 | 64 | " in md                 # point peak survives
+    assert "| 9.250 | 64 | " in md                  # scan row not dominated
+    assert "| ext=16 (0.5×16) |" in md
+    assert "phantom:41" in md

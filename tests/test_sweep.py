@@ -118,7 +118,7 @@ def test_txn_bench_grid_schema():
             "backend", "kernel_ops", "abort_causes", "bytes_per_txn",
             "flops_per_txn", "roofline_frac", "roofline_bound",
             "roofline_chip", "launches_per_wave", "dma_rows_per_wave",
-            "dma_rows_per_wave_unfused"}
+            "dma_rows_per_wave_unfused", "max_extent"}
     for r in rows:
         assert set(r) == want
         assert r["backend"] == "jnp"
@@ -140,17 +140,26 @@ def test_txn_bench_kernel_ops_attribution():
     ag_ops = kernel_coverage("pallas", t.CC_AUTOGRAN)
     mv_ops = kernel_coverage("pallas", t.CC_MVCC)
     # every mechanism's wave also counts same-row contention through
-    # segment_count (the engine cost model) — no XLA sort on the pallas path
-    assert occ_ops == {"wave_commit": "pallas", "commit_install": "pallas",
+    # segment_count (the engine cost model) — no XLA sort on the pallas
+    # path; every scan-validating mechanism (all but mvcc) also runs the
+    # iterate_validate interval pass (ISSUE 10)
+    assert occ_ops == {"wave_commit": "pallas",
+                       "iterate_validate": "pallas",
+                       "commit_install": "pallas",
                        "segment_count": "pallas"}
-    assert tic_ops == {"wave_commit": "pallas", "ts_gather": "pallas",
+    assert tic_ops == {"wave_commit": "pallas",
+                       "iterate_validate": "pallas",
+                       "ts_gather": "pallas",
                        "ts_install_max": "pallas", "segment_count": "pallas"}
-    assert ag_ops == {"validate_dual": "pallas", "claim_scatter": "pallas",
+    assert ag_ops == {"validate_dual": "pallas",
+                      "iterate_validate": "pallas",
+                      "claim_scatter": "pallas",
                       "commit_install": "pallas", "segment_count": "pallas"}
     assert mv_ops == {"validate": "pallas", "claim_scatter": "pallas",
                       "mv_gather": "pallas", "mv_install": "pallas",
                       "segment_count": "pallas"}
-    assert kernel_coverage("pallas", t.CC_MVOCC) == mv_ops
+    assert kernel_coverage("pallas", t.CC_MVOCC) == dict(
+        mv_ops, iterate_validate="pallas")
     for cc in (t.CC_2PL, t.CC_SWISS, t.CC_ADAPTIVE):
         assert kernel_coverage("pallas", cc) == occ_ops
     # the distributed wave's shard-local coverage (benchmarks/txn_scaling):
@@ -160,11 +169,14 @@ def test_txn_bench_kernel_ops_attribution():
     assert dist_kernel_coverage("pallas") == {
         "route_pack": "pallas", "verdict_pack": "pallas",
         "verdict_unpack": "pallas", "wave_commit": "pallas",
-        "commit_install": "pallas"}
-    for cc in ("mvcc", "mvocc"):
-        assert dist_kernel_coverage("pallas", cc) == {
-            "route_pack": "pallas", "verdict_pack": "pallas",
-            "verdict_unpack": "pallas", "claim_probe": "pallas",
-            "mv_gather": "pallas", "mv_install": "pallas"}
+        "iterate_validate": "pallas", "commit_install": "pallas"}
+    dist_mv = {"route_pack": "pallas", "verdict_pack": "pallas",
+               "verdict_unpack": "pallas", "claim_probe": "pallas",
+               "mv_gather": "pallas", "mv_install": "pallas"}
+    # mvcc never validates intervals (snapshot cut); mvocc adds the
+    # owner-side interval pass
+    assert dist_kernel_coverage("pallas", "mvcc") == dist_mv
+    assert dist_kernel_coverage("pallas", "mvocc") == dict(
+        dist_mv, iterate_validate="pallas")
     assert set(dist_kernel_coverage("jnp").values()) == {"xla"}
     assert set(dist_kernel_coverage("jnp", "mvcc").values()) == {"xla"}

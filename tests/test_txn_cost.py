@@ -33,8 +33,8 @@ def test_wave_ops_pin_backend_attribution():
 
 def test_dist_wave_ops_pin_backend_attribution():
     assert set(DIST_WAVE_OPS["occ"]) == set(kb.DIST_OPS)
-    for cc in ("mvcc", "mvocc"):
-        assert set(DIST_WAVE_OPS[cc]) == set(kb.DIST_MV_OPS), cc
+    assert set(DIST_WAVE_OPS["mvcc"]) == set(kb.DIST_MV_OPS)
+    assert set(DIST_WAVE_OPS["mvocc"]) == set(kb.DIST_MVOCC_OPS)
 
 
 def test_tictoc_counts_pin_source():

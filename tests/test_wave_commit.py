@@ -317,7 +317,7 @@ def test_fused_wave_single_launch_guard(cc):
 
 
 def test_wave_commit_in_backend_surface():
-    """The op is part of the fifteen-op surface: both backends expose it,
+    """The op is part of the ``backend.N_OPS``-op surface: both backends expose it,
     CC_OPS attributes it to every probe-family mechanism, and the
     distributed occ op list routes through it."""
     from repro.core import backend as kb
